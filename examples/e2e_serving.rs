@@ -1,0 +1,95 @@
+//! End-to-end driver (the repo's headline validation run, recorded in
+//! EXPERIMENTS.md):
+//!
+//!   1. train DRLGO (HiCut + MADDPG via the AOT `maddpg_train`
+//!      executable) on a dynamic PubMed scenario,
+//!   2. load the pre-trained GCN artifact and serve a stream of
+//!      batched inference requests through the router + fleet,
+//!   3. report training convergence, system cost vs the GM/RM
+//!      baselines, and serving latency/throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serving`
+//! (smaller/larger: E2E_EPISODES / E2E_REQUESTS env vars).
+
+use graphedge::bench::{fmt_secs, Table};
+use graphedge::coordinator::Controller;
+use graphedge::drl::{baselines, MaddpgConfig, Method};
+use graphedge::net::SystemParams;
+use graphedge::serving::serve_run;
+use graphedge::util::metrics::GLOBAL as METRICS;
+use graphedge::util::rng::Rng;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> graphedge::Result<()> {
+    graphedge::util::logging::init();
+    let episodes = env_usize("E2E_EPISODES", 60);
+    let requests = env_usize("E2E_REQUESTS", 1000);
+    let (users, assocs) = (300, 4800);
+
+    let ctrl = Controller::new(SystemParams::default())?;
+
+    // ---- 1. train DRLGO on a churning scenario ----
+    println!("[1/3] training DRLGO: {episodes} episodes on pubmed (N={users}, E={assocs})");
+    let t0 = std::time::Instant::now();
+    let cfg = MaddpgConfig { episodes, ..MaddpgConfig::default() };
+    let (mut drlgo, _env, curve) = ctrl.train_drlgo("pubmed", false, users, assocs, &cfg)?;
+    println!(
+        "    trained in {} — reward {:.1} → {:.1} (cost {:.2} → {:.2})",
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        curve.first().unwrap().reward,
+        curve.last().unwrap().reward,
+        curve.first().unwrap().system_cost,
+        curve.last().unwrap().system_cost,
+    );
+
+    // ---- 2. offloading quality vs baselines on fresh scenarios ----
+    println!("[2/3] evaluating offloading policies (3 fresh scenarios each)");
+    let mut table = Table::new(
+        "e2e: system cost (mean of 3 scenarios, pubmed N=300 E=4800)",
+        &["method", "T_all (s)", "I_all (J)", "C", "cross-Mb", "decision"],
+    );
+    for method in [Method::Drlgo, Method::Greedy, Method::Random] {
+        let (mut t_all, mut i_all, mut c, mut cross, mut dec) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for rep in 0..3u64 {
+            let mut rng = Rng::seed_from(1000 + rep);
+            let mut env = ctrl.make_env(method, "pubmed", users, assocs, &mut rng)?;
+            let t0 = std::time::Instant::now();
+            match method {
+                Method::Drlgo => drlgo.policy_offload(&mut env)?,
+                Method::Greedy => baselines::run_greedy(&mut env),
+                Method::Random => baselines::run_random(&mut env, &mut rng),
+                _ => unreachable!(),
+            }
+            dec += t0.elapsed().as_secs_f64() / 3.0;
+            let cost = env.evaluate();
+            t_all += cost.t_all() / 3.0;
+            i_all += cost.i_all() / 3.0;
+            c += cost.total() / 3.0;
+            cross += cost.cross_mb / 3.0;
+        }
+        table.row(vec![
+            method.name().into(),
+            format!("{t_all:.4}"),
+            format!("{i_all:.4}"),
+            format!("{c:.4}"),
+            format!("{cross:.1}"),
+            fmt_secs(dec),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // ---- 3. online batched serving through the router + fleet ----
+    println!("[3/3] serving {requests} batched requests (gcn/pubmed)");
+    let stats = serve_run(&ctrl, "pubmed", "gcn", 200, 1200, requests, 5)?;
+    println!("    requests      {}", stats.requests);
+    println!("    batches       {} (mean size {:.1})", stats.batches, stats.mean_batch);
+    println!("    throughput    {:.1} req/s", stats.requests as f64 / stats.total_s);
+    println!("    latency p50   {:.3} ms", stats.latency_p50_s * 1e3);
+    println!("    latency p99   {:.3} ms", stats.latency_p99_s * 1e3);
+    println!("    accuracy      {:.3}", stats.accuracy);
+    print!("{}", METRICS.report());
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Partition explorer: HiCut vs the max-flow min-cut baseline across
+//! graph families (uniform random, preferential attachment, clustered
+//! communities) — cut quality and runtime side by side.
+//!
+//! Run: `cargo run --release --example partition_explorer`
+
+use graphedge::bench::{fmt_secs, Table};
+use graphedge::graph::generate::{preferential_attachment, random_weights, uniform_random};
+use graphedge::graph::Graph;
+use graphedge::partition::{hicut, mincut_partition};
+use graphedge::util::rng::Rng;
+
+/// Dense communities joined by sparse bridges.
+fn clustered(communities: usize, size: usize, rng: &mut Rng) -> Graph {
+    let mut g = Graph::new(communities * size);
+    for c in 0..communities {
+        let base = c * size;
+        for i in 0..size {
+            for j in (i + 1)..size {
+                if rng.chance(0.4) {
+                    g.add_edge(base + i, base + j);
+                }
+            }
+        }
+    }
+    for c in 0..communities - 1 {
+        g.add_edge(c * size, (c + 1) * size);
+    }
+    g
+}
+
+fn main() {
+    let mut rng = Rng::seed_from(5);
+    let graphs: Vec<(&str, Graph)> = vec![
+        ("uniform(2000, 20000)", uniform_random(2000, 20_000, &mut rng)),
+        ("pref-attach(2000, d=10)", preferential_attachment(2000, 10, &mut rng)),
+        ("clustered(40 x 50)", clustered(40, 50, &mut rng)),
+    ];
+    let mut t = Table::new(
+        "HiCut vs min-cut across graph families",
+        &["graph", "method", "time", "subgraphs", "cut edges", "locality"],
+    );
+    for (name, g) in &graphs {
+        let w = random_weights(g, 1, 100, &mut rng);
+        let t0 = std::time::Instant::now();
+        let hp = hicut(g, &|_| true);
+        let t_hi = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let mp = mincut_partition(g, &w, 25, &mut rng);
+        let t_mc = t0.elapsed().as_secs_f64();
+        for (method, time, p) in
+            [("HiCut", t_hi, &hp), ("min-cut [36]", t_mc, &mp)]
+        {
+            t.row(vec![
+                name.to_string(),
+                method.into(),
+                fmt_secs(time),
+                p.len().to_string(),
+                p.cut_edges(g).to_string(),
+                format!("{:.3}", p.locality(g)),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,267 @@
+"""AOT pipeline: lower every L1/L2 computation to HLO text artifacts.
+
+This is the single entry point of the Python compile path
+(``make artifacts`` → ``python -m compile.aot --out ../artifacts``).
+It produces everything the Rust runtime needs and nothing else ever
+imports Python again:
+
+  artifacts/
+    data/{citeseer,cora,pubmed}.geb        synthetic datasets
+    models/<model>_<dataset>.hlo.txt       12 GNN forward executables
+    models/<model>_<dataset>.weights.gta   pre-trained parameters
+    drl/actor_fwd.hlo.txt                  MADDPG rollout forward
+    drl/maddpg_train.hlo.txt               full M-agent MADDPG update
+    drl/ppo_fwd.hlo.txt                    PTOM rollout forward
+    drl/ppo_train.hlo.txt                  PTOM PPO update
+    drl/drl_init.gta                       initial params + Adam state
+    manifest.json                          shapes/order of all bindings
+
+Interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the `xla` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import drl
+from . import model as model_mod
+from . import train_gnn
+from .gta import write_gta
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_to_file(fn, specs, path):
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(path, "w") as f:
+        f.write(text)
+    return text
+
+
+# ---------------------------------------------------------------------------
+# GNN executables
+# ---------------------------------------------------------------------------
+
+GRAPH_INPUT_SHAPES = {
+    "x": None,  # [N_MAX, feat_pad] — filled per dataset
+    "a_norm": (model_mod.N_MAX, model_mod.N_MAX),
+    "adj": (model_mod.N_MAX, model_mod.N_MAX),
+    "inv_deg": (model_mod.N_MAX, 1),
+}
+
+
+def gnn_entry(model, dataset, out_dir, weights, manifest):
+    ds = model_mod.DATASETS[dataset]
+    feat_pad = ds["feat_pad"]
+    fwd = model_mod.FORWARDS[model]
+    graph_inputs = model_mod.MODEL_INPUTS[model]
+    pspecs = model_mod.param_specs(model, feat_pad)
+
+    specs, inputs_meta = [], []
+    for gi in graph_inputs:
+        shape = (model_mod.N_MAX, feat_pad) if gi == "x" \
+            else GRAPH_INPUT_SHAPES[gi]
+        specs.append(spec(shape))
+        inputs_meta.append({"name": gi, "shape": list(shape)})
+    for name, shape in pspecs:
+        specs.append(spec(shape))
+        inputs_meta.append({"name": name, "shape": list(shape)})
+
+    key = f"{model}_{dataset}"
+    hlo_path = os.path.join(out_dir, "models", f"{key}.hlo.txt")
+    wpath = os.path.join(out_dir, "models", f"{key}.weights.gta")
+
+    def wrapped(*args):
+        return (fwd(*args),)
+
+    lower_to_file(wrapped, specs, hlo_path)
+    write_gta(wpath, [(n, np.asarray(p)) for (n, _), p in
+                      zip(pspecs, weights)])
+
+    manifest["executables"][key] = {
+        "path": f"models/{key}.hlo.txt",
+        "weights": f"models/{key}.weights.gta",
+        "graph_inputs": list(graph_inputs),
+        "inputs": inputs_meta,
+        "outputs": [{"name": "logits",
+                     "shape": [model_mod.N_MAX, model_mod.C_PAD]}],
+    }
+
+
+# ---------------------------------------------------------------------------
+# DRL executables
+# ---------------------------------------------------------------------------
+
+def drl_entries(out_dir, manifest, seed=11):
+    M, OBS, ACT, ST, B = drl.M, drl.OBS, drl.ACT, drl.STATE, drl.BATCH
+    Pa, Pc, Pp = drl.P_ACTOR, drl.P_CRITIC, drl.P_PPO
+    dd = os.path.join(out_dir, "drl")
+
+    def emit(name, fn, shapes, outs):
+        lower_to_file(fn, [spec(s, dt) for s, dt in shapes],
+                      os.path.join(dd, f"{name}.hlo.txt"))
+        manifest["executables"][name] = {
+            "path": f"drl/{name}.hlo.txt",
+            "inputs": [{"name": n, "shape": list(s)}
+                       for (s, _), n in zip(shapes, outs["in"])],
+            "outputs": [{"name": n} for n in outs["out"]],
+        }
+
+    emit("actor_fwd", drl.actor_fwd,
+         [((M, Pa), F32), ((M, OBS), F32)],
+         {"in": ["actor", "obs"], "out": ["actions"]})
+
+    train_shapes = [
+        ((M, Pa), F32), ((M, Pc), F32), ((M, Pa), F32), ((M, Pc), F32),
+        ((M, Pa), F32), ((M, Pa), F32), ((M, Pc), F32), ((M, Pc), F32),
+        ((), F32),
+        ((B, ST), F32), ((B, M, ACT), F32), ((B, M), F32), ((B, ST), F32),
+        ((B, M), F32), ((B, M, OBS), F32), ((B, M, OBS), F32),
+    ]
+    emit("maddpg_train", drl.maddpg_train, train_shapes,
+         {"in": ["actor", "critic", "t_actor", "t_critic",
+                 "m_a", "v_a", "m_c", "v_c", "step",
+                 "s", "a", "r", "s2", "done", "obs", "obs2"],
+          "out": ["actor", "critic", "t_actor", "t_critic",
+                  "m_a", "v_a", "m_c", "v_c", "step",
+                  "critic_loss", "actor_loss"]})
+
+    emit("ppo_fwd", drl.ppo_fwd,
+         [((Pp,), F32), ((1, ST), F32)],
+         {"in": ["ppo", "s"], "out": ["logits", "value"]})
+
+    emit("ppo_train", drl.ppo_train,
+         [((Pp,), F32), ((Pp,), F32), ((Pp,), F32), ((), F32),
+          ((B, ST), F32), ((B, M), F32), ((B,), F32), ((B,), F32),
+          ((B,), F32)],
+         {"in": ["ppo", "m_p", "v_p", "step", "s", "act_onehot",
+                 "old_logp", "adv", "ret"],
+          "out": ["ppo", "m_p", "v_p", "step",
+                  "policy_loss", "value_loss", "entropy"]})
+
+    # Initial parameters + optimizer state.
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 2 * M + 1)
+    actor = np.stack([np.asarray(drl.init_mlp(keys[i], drl.ACTOR_SHAPES))
+                      for i in range(M)])
+    critic = np.stack([np.asarray(drl.init_mlp(keys[M + i], drl.CRITIC_SHAPES))
+                       for i in range(M)])
+    ppo = np.asarray(drl.init_mlp(keys[-1], drl.PPO_SHAPES))
+    write_gta(os.path.join(dd, "drl_init.gta"), [
+        ("actor", actor), ("critic", critic),
+        ("t_actor", actor.copy()), ("t_critic", critic.copy()),
+        ("m_a", np.zeros_like(actor)), ("v_a", np.zeros_like(actor)),
+        ("m_c", np.zeros_like(critic)), ("v_c", np.zeros_like(critic)),
+        ("step", np.zeros((), np.float32)),
+        ("ppo", ppo),
+        ("ppo_m", np.zeros_like(ppo)), ("ppo_v", np.zeros_like(ppo)),
+        ("ppo_step", np.zeros((), np.float32)),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def input_fingerprint():
+    """Hash of every compile-path source file, stored in the manifest so
+    `make artifacts` can skip rebuilds when nothing changed."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-pretrain", action="store_true",
+                    help="use random GNN weights (fast dev builds)")
+    args = ap.parse_args()
+    out = args.out
+    for sub in ("data", "models", "drl"):
+        os.makedirs(os.path.join(out, sub), exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "fingerprint": input_fingerprint(),
+        "constants": {
+            "n_max": model_mod.N_MAX, "hidden": model_mod.HIDDEN,
+            "c_pad": model_mod.C_PAD,
+            "m_agents": drl.M, "obs_dim": drl.OBS, "act_dim": drl.ACT,
+            "state_dim": drl.STATE, "batch": drl.BATCH,
+            "p_actor": drl.P_ACTOR, "p_critic": drl.P_CRITIC,
+            "p_ppo": drl.P_PPO,
+        },
+        "datasets": {},
+        "executables": {},
+        "accuracy": {},
+    }
+
+    print("[aot] generating synthetic datasets ...")
+    datasets = {}
+    for name in data_mod.SPECS:
+        d = data_mod.generate(name)
+        path = os.path.join(out, "data", f"{name}.geb")
+        data_mod.write_geb(path, d)
+        datasets[name] = d
+        ds = model_mod.DATASETS[name]
+        manifest["datasets"][name] = {
+            "path": f"data/{name}.geb", "n": d["n"], "e": d["e"],
+            "feat": ds["feat"], "feat_pad": ds["feat_pad"],
+            "classes": ds["classes"],
+        }
+        print(f"  {name}: |V|={d['n']} |E|={d['e']} F={d['f']} C={d['c']}")
+
+    print("[aot] pre-training + lowering GNN executables ...")
+    for dataset, d in datasets.items():
+        for model in model_mod.MODELS:
+            if args.skip_pretrain:
+                params = train_gnn.init_params(
+                    model, model_mod.DATASETS[dataset]["feat_pad"],
+                    jax.random.PRNGKey(1))
+                acc = 0.0
+            else:
+                params, acc = train_gnn.pretrain(model, dataset, d)
+            manifest["accuracy"][f"{model}_{dataset}"] = round(acc, 4)
+            gnn_entry(model, dataset, out, params, manifest)
+
+    print("[aot] lowering DRL executables ...")
+    drl_entries(out, manifest)
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {out}/manifest.json "
+          f"({len(manifest['executables'])} executables)")
+
+
+if __name__ == "__main__":
+    main()

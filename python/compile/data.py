@@ -1,0 +1,200 @@
+"""Synthetic citation-network datasets + the GEB binary format.
+
+The paper evaluates on CiteSeer, Cora and PubMed (PyG downloads).  This
+environment has no network access, so we substitute deterministic
+synthetic citation graphs with the same vertex/edge/feature/class
+statistics (see DESIGN.md §Substitutions — every experiment metric is a
+*system* cost driven by topology and data sizes, which are matched):
+
+  * |V|, |E|, feature dim (capped at 1500 per §6.1), class count match
+    the real datasets exactly.
+  * Edges come from a homophilous preferential-attachment process,
+    reproducing the heavy-tailed degree distributions plotted in Fig. 5.
+  * Features are class-correlated sparse bag-of-words, so the GNNs
+    pre-trained at artifact-build time reach the paper's 60–80%
+    node-classification accuracy band (§6.1) and serving runs a real
+    workload.
+
+GEB layout (little-endian; reader: ``rust/src/graph/geb.rs``):
+
+    magic   b"GEB1"
+    u32     N (vertices), u32 E (undirected edges),
+    u32     F (real feature dim), u32 C (classes)
+    u8×N    labels
+    u32×(N+1)  feature CSR row pointers
+    u16×nnz    feature column indices (value = 1.0, rows L2-normalized
+               at load time)
+    u32×2E     edge endpoint pairs (u, v), u < v
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GEB1"
+
+#: name -> (vertices, undirected edges, feature dim (capped), classes)
+#: Real-dataset statistics from the paper §6.1; CiteSeer's 3703-dim
+#: features are capped at 1500 ("dimensions greater than 1500 are
+#: considered 1500").
+SPECS = {
+    "citeseer": (3327, 4552, 1500, 6),
+    "cora": (2708, 5278, 1433, 7),
+    "pubmed": (19717, 44324, 500, 3),
+}
+# NOTE: the paper quotes directed citation-link counts (9104, 10556,
+# 88648); PyG stores each link twice.  We generate the undirected
+# half-counts so |E| matches after symmetrization.
+
+#: Homophily: probability a candidate endpoint of the same class is
+#: accepted vs a different-class one (citation graphs are homophilous;
+#: this is what lets 2-layer GNNs hit the paper's accuracy band).
+P_SAME, P_DIFF = 0.9, 0.15
+#: Bag-of-words sparsity: nonzeros per document ~ U[20, 60).
+NNZ_LO, NNZ_HI = 20, 60
+#: Fraction of a document's words drawn from its class signature.  Kept
+#: moderate (plus overlapping signatures below) so pre-training lands in
+#: the paper's 60–80% accuracy band instead of saturating.
+SIGNATURE_FRAC = 0.5
+
+
+def generate(name, seed=0xC0FFEE):
+    """Generate one synthetic dataset; returns a dict of arrays."""
+    n, e, f, c = SPECS[name]
+    rng = np.random.default_rng((seed, hash(name) & 0xFFFFFFFF))
+    labels = rng.integers(0, c, size=n).astype(np.uint8)
+
+    edges = _preferential_attachment(rng, labels, n, e)
+
+    # Class signatures: overlapping index pools per class (stride is
+    # half the signature size, so adjacent classes share ~50% of their
+    # vocabulary — this is what keeps the task in the 60–80% band).
+    pool = rng.permutation(f)
+    sig_size = max(f // c, 32)
+    stride = max(sig_size // 2, 1)
+    signatures = [
+        np.concatenate([pool, pool])[(i * stride) % f:][:sig_size]
+        for i in range(c)
+    ]
+    row_ptr = np.zeros(n + 1, dtype=np.uint32)
+    cols = []
+    for i in range(n):
+        k = int(rng.integers(NNZ_LO, NNZ_HI))
+        k_sig = int(k * SIGNATURE_FRAC)
+        sig = signatures[labels[i]]
+        chosen = set(rng.choice(sig, size=min(k_sig, len(sig)), replace=False).tolist())
+        while len(chosen) < k:
+            chosen.add(int(rng.integers(0, f)))
+        idx = np.sort(np.fromiter(chosen, dtype=np.uint16))
+        cols.append(idx)
+        row_ptr[i + 1] = row_ptr[i] + len(idx)
+    col_idx = np.concatenate(cols).astype(np.uint16)
+
+    return {
+        "n": n, "e": len(edges), "f": f, "c": c,
+        "labels": labels,
+        "row_ptr": row_ptr,
+        "col_idx": col_idx,
+        "edges": np.asarray(edges, dtype=np.uint32),
+    }
+
+
+def _preferential_attachment(rng, labels, n, e_target):
+    """Homophilous Barabási–Albert-style growth.
+
+    Each incoming vertex attaches ``m = ceil(E/N)``-ish edges to
+    existing vertices sampled proportionally to degree, with a
+    homophily accept/reject on class agreement.  Produces the
+    heavy-tailed degree distribution of citation networks (Fig. 5).
+    """
+    m = max(1, round(e_target / n))
+    # Seed clique over the first m+1 vertices.
+    edges = set()
+    endpoint_pool = []  # repeated endpoints ~ degree-proportional sampling
+    seed_sz = m + 1
+    for i in range(seed_sz):
+        for j in range(i + 1, seed_sz):
+            edges.add((i, j))
+            endpoint_pool += [i, j]
+    pool = np.asarray(endpoint_pool, dtype=np.int64)
+    pool_list = pool.tolist()
+
+    for v in range(seed_sz, n):
+        targets = set()
+        tries = 0
+        want = m if len(edges) + (n - v) * m <= e_target + n else max(1, m - 1)
+        while len(targets) < want and tries < 50 * m:
+            tries += 1
+            u = pool_list[int(rng.integers(0, len(pool_list)))]
+            if u == v or u in targets:
+                continue
+            p = P_SAME if labels[u] == labels[v] else P_DIFF
+            if rng.random() < p:
+                targets.add(u)
+        if not targets:  # fall back: uniform neighbor
+            targets.add(int(rng.integers(0, v)))
+        for u in targets:
+            a, b = (u, v) if u < v else (v, u)
+            edges.add((a, b))
+            pool_list += [u, v]
+
+    edges = sorted(edges)
+    # Trim or top-up to hit the exact edge count.
+    if len(edges) > e_target:
+        keep = rng.choice(len(edges), size=e_target, replace=False)
+        edges = [edges[i] for i in np.sort(keep)]
+    while len(edges) < e_target:
+        u = int(rng.integers(0, n))
+        v = int(rng.integers(0, n))
+        if u == v:
+            continue
+        a, b = min(u, v), max(u, v)
+        if (a, b) not in set(edges):
+            edges.append((a, b))
+    return sorted(set(edges))[:e_target]
+
+
+def write_geb(path, d):
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(struct.pack("<IIII", d["n"], d["e"], d["f"], d["c"]))
+        fh.write(d["labels"].astype(np.uint8).tobytes())
+        fh.write(d["row_ptr"].astype(np.uint32).tobytes())
+        fh.write(d["col_idx"].astype(np.uint16).tobytes())
+        fh.write(d["edges"].astype(np.uint32).tobytes())
+
+
+def read_geb(path):
+    """Python-side reader (tests + pretraining)."""
+    with open(path, "rb") as fh:
+        assert fh.read(4) == MAGIC, "bad GEB magic"
+        n, e, f, c = struct.unpack("<IIII", fh.read(16))
+        labels = np.frombuffer(fh.read(n), dtype=np.uint8)
+        row_ptr = np.frombuffer(fh.read(4 * (n + 1)), dtype=np.uint32)
+        nnz = int(row_ptr[-1])
+        col_idx = np.frombuffer(fh.read(2 * nnz), dtype=np.uint16)
+        edges = np.frombuffer(fh.read(8 * e), dtype=np.uint32).reshape(e, 2)
+    return {"n": n, "e": e, "f": f, "c": c, "labels": labels,
+            "row_ptr": row_ptr, "col_idx": col_idx, "edges": edges}
+
+
+def dense_features(d, feat_pad, rows=None):
+    """Expand sparse BoW rows to a dense, L2-row-normalized f32 matrix."""
+    rows = range(d["n"]) if rows is None else rows
+    out = np.zeros((len(rows), feat_pad), dtype=np.float32)
+    rp, ci = d["row_ptr"], d["col_idx"]
+    for k, i in enumerate(rows):
+        idx = ci[rp[i]:rp[i + 1]].astype(np.int64)
+        out[k, idx] = 1.0
+        norm = np.linalg.norm(out[k])
+        if norm > 0:
+            out[k] /= norm
+    return out
+
+
+def adjacency_lists(d):
+    adj = [[] for _ in range(d["n"])]
+    for u, v in d["edges"]:
+        adj[u].append(int(v))
+        adj[v].append(int(u))
+    return adj

@@ -1,0 +1,254 @@
+"""Layer-2 DRL compute graphs: MADDPG (DRLGO) and PPO (PTOM baseline).
+
+The entire training math — forward passes, gradients, Adam, soft target
+updates — is expressed here as *pure functions over flat parameter
+vectors* and AOT-lowered to HLO.  The Rust L3 driver owns the replay
+buffer, the MAMDP environment, and the parameter literals; every
+training step is one PJRT execution of ``maddpg_train`` (all M agents
+updated in a single vmapped call) or ``ppo_train``.
+
+Flat-vector parameter convention: each network's parameters live in one
+1-D f32 vector, unflattened inside JAX with static slices (free after
+fusion).  This keeps the Rust-side literal plumbing to a handful of
+tensors instead of ~70.
+
+Architecture (paper §6.1): every network has three hidden layers of 64
+neurons.  Hyper-parameters are baked into the lowering from Table 2:
+actor/critic lr 3e-4, γ = 0.99, τ = 0.01, batch 256.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Dimensions (must match rust/src/drl/env.rs — checked via the manifest)
+# ---------------------------------------------------------------------------
+
+M = 4            #: number of edge servers / agents (2000m plane, 500m cells)
+OBS = 18         #: per-agent observation dim (see rust drl::env docs)
+ACT = 2          #: paper Eq. (22): two-dimensional agent action in [0,1]^2
+HID = 64         #: hidden width (§6.1)
+STATE = M * OBS  #: global state = concat of local observations (Eq. 19)
+BATCH = 256      #: experience mini-batch (Table 2)
+
+LR = 3e-4
+GAMMA = 0.99
+TAU = 0.01
+PPO_CLIP = 0.2
+PPO_VCOEF = 0.5
+PPO_ENTCOEF = 0.01
+PPO_ACTIONS = M  #: PTOM picks one of M servers per user
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def mlp_shapes(in_dim, out_dim):
+    """Shapes of a 3-hidden-layer MLP: in->64->64->64->out."""
+    dims = [in_dim, HID, HID, HID, out_dim]
+    shapes = []
+    for a, b in zip(dims[:-1], dims[1:]):
+        shapes.append((a, b))
+        shapes.append((b,))
+    return shapes
+
+
+def flat_size(shapes):
+    return sum(int(jnp.prod(jnp.asarray(s))) for s in shapes)
+
+
+ACTOR_SHAPES = mlp_shapes(OBS, ACT)
+CRITIC_SHAPES = mlp_shapes(STATE + M * ACT, 1)
+PPO_SHAPES = mlp_shapes(STATE, PPO_ACTIONS + 1)
+
+P_ACTOR = flat_size(ACTOR_SHAPES)
+P_CRITIC = flat_size(CRITIC_SHAPES)
+P_PPO = flat_size(PPO_SHAPES)
+
+
+def unflatten(flat, shapes):
+    """Static-slice a flat vector into the given shapes."""
+    out, off = [], 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        out.append(flat[off:off + n].reshape(s))
+        off += n
+    return out
+
+
+def mlp_apply(flat, shapes, x, out_act="none"):
+    """Apply the MLP stored in ``flat``; ReLU hidden activations."""
+    ps = unflatten(flat, shapes)
+    h = x
+    n_layers = len(ps) // 2
+    for i in range(n_layers):
+        w, b = ps[2 * i], ps[2 * i + 1]
+        h = h @ w + b
+        if i < n_layers - 1:
+            h = jnp.maximum(h, 0.0)
+    if out_act == "sigmoid":
+        h = jax.nn.sigmoid(h)
+    elif out_act == "tanh":
+        h = jnp.tanh(h)
+    return h
+
+
+def init_mlp(key, shapes):
+    """He-uniform init, biases zero, returned flat."""
+    parts = []
+    for s in shapes:
+        key, sub = jax.random.split(key)
+        if len(s) == 2:
+            bound = jnp.sqrt(6.0 / s[0])
+            parts.append(jax.random.uniform(sub, s, jnp.float32, -bound, bound).reshape(-1))
+        else:
+            parts.append(jnp.zeros(s, jnp.float32).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def adam_update(p, g, m, v, step):
+    """One Adam step on flat vectors; returns (p', m', v')."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1 ** step)
+    vhat = v / (1.0 - ADAM_B2 ** step)
+    return p - LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+
+# ---------------------------------------------------------------------------
+# Actor / critic forwards
+# ---------------------------------------------------------------------------
+
+def actor_apply(flat, obs):
+    """π_m(O_m): [*, OBS] -> [*, ACT] in [0,1]^2 (Eq. 22)."""
+    return mlp_apply(flat, ACTOR_SHAPES, obs, out_act="sigmoid")
+
+
+def critic_apply(flat, state, actions_flat):
+    """Q_m(S, A): centralized critic over global state + all actions."""
+    x = jnp.concatenate([state, actions_flat], axis=-1)
+    return mlp_apply(flat, CRITIC_SHAPES, x)[..., 0]
+
+
+def actor_fwd(actor_flat, obs):
+    """Per-env-step action selection for all M agents at once.
+
+    actor_flat [M, P_ACTOR], obs [M, OBS] -> [M, ACT].
+    """
+    return (jax.vmap(actor_apply)(actor_flat, obs),)
+
+
+# ---------------------------------------------------------------------------
+# MADDPG train step (Algorithm 2 lines 15–20, all agents in one call)
+# ---------------------------------------------------------------------------
+
+def maddpg_train(
+    actor, critic, t_actor, t_critic,
+    m_a, v_a, m_c, v_c, step,
+    s, a, r, s2, done, obs, obs2,
+):
+    """One full MADDPG update for all M agents.
+
+    Args (all f32 unless noted):
+      actor, t_actor   [M, P_ACTOR]      current / target actor params
+      critic, t_critic [M, P_CRITIC]     current / target critic params
+      m_a, v_a         [M, P_ACTOR]      Adam moments (actor)
+      m_c, v_c         [M, P_CRITIC]     Adam moments (critic)
+      step             []                Adam timestep (1-based, float)
+      s, s2            [B, STATE]        global state / next state
+      a                [B, M, ACT]       executed global action
+      r                [B, M]            per-agent rewards (Eq. 24)
+      done             [B, M]            terminal flags (0/1)
+      obs, obs2        [B, M, OBS]       local observations / next
+
+    Returns: (actor', critic', t_actor', t_critic', m_a', v_a', m_c',
+              v_c', step', critic_loss [M], actor_loss [M]).
+    """
+    step = step + 1.0
+
+    # Target actions for every agent from the *target* actor networks:
+    # A' = {π'_1(O'_1), ..., π'_M(O'_M)}   (Eq. 30's A').
+    a2 = jax.vmap(
+        lambda p, o: actor_apply(p, o), in_axes=(0, 1), out_axes=1
+    )(t_actor, obs2)                                  # [B, M, ACT]
+    a2_flat = a2.reshape(a2.shape[0], M * ACT)
+    a_flat = a.reshape(a.shape[0], M * ACT)
+
+    def critic_loss_fn(c_flat, tc_flat, r_m, done_m):
+        q_next = critic_apply(tc_flat, s2, a2_flat)
+        y = r_m + (1.0 - done_m) * GAMMA * q_next      # Eq. (30)
+        y = jax.lax.stop_gradient(y)
+        q = critic_apply(c_flat, s, a_flat)
+        return jnp.mean((q - y) ** 2)                  # Eq. (29)
+
+    def actor_loss_fn(a_flat_m, c_flat, m_idx):
+        my_obs = obs[:, m_idx, :]
+        new_a_m = actor_apply(a_flat_m, my_obs)        # [B, ACT]
+        # Replace agent m's slice of the joint action (Eq. 28).
+        joint = a.at[:, m_idx, :].set(new_a_m).reshape(a.shape[0], M * ACT)
+        q = critic_apply(c_flat, s, joint)
+        return -jnp.mean(q)
+
+    def update_one(m_idx, act_p, cri_p, tact_p, tcri_p, ma, va, mc, vc):
+        r_m = r[:, m_idx]
+        d_m = done[:, m_idx]
+        closs, cgrad = jax.value_and_grad(critic_loss_fn)(cri_p, tcri_p, r_m, d_m)
+        cri_p2, mc2, vc2 = adam_update(cri_p, cgrad, mc, vc, step)
+        aloss, agrad = jax.value_and_grad(actor_loss_fn)(act_p, cri_p2, m_idx)
+        act_p2, ma2, va2 = adam_update(act_p, agrad, ma, va, step)
+        # Soft target updates (Eqs. 31–32).
+        tact2 = TAU * act_p2 + (1.0 - TAU) * tact_p
+        tcri2 = TAU * cri_p2 + (1.0 - TAU) * tcri_p
+        return act_p2, cri_p2, tact2, tcri2, ma2, va2, mc2, vc2, closs, aloss
+
+    outs = [update_one(m_idx, actor[m_idx], critic[m_idx], t_actor[m_idx],
+                       t_critic[m_idx], m_a[m_idx], v_a[m_idx],
+                       m_c[m_idx], v_c[m_idx])
+            for m_idx in range(M)]
+
+    stack = lambda i: jnp.stack([o[i] for o in outs])
+    return (stack(0), stack(1), stack(2), stack(3), stack(4), stack(5),
+            stack(6), stack(7), step, stack(8), stack(9))
+
+
+# ---------------------------------------------------------------------------
+# PPO (PTOM) — single agent over the global state
+# ---------------------------------------------------------------------------
+
+def ppo_apply(flat, s):
+    """Policy logits over M servers + state value: [*, M+1]."""
+    return mlp_apply(flat, PPO_SHAPES, s)
+
+
+def ppo_fwd(flat, s):
+    """Rollout forward: s [B, STATE] -> (logits [B, M], value [B])."""
+    out = ppo_apply(flat, s)
+    return out[..., :PPO_ACTIONS], out[..., PPO_ACTIONS]
+
+
+def ppo_train(flat, m_p, v_p, step, s, act_onehot, old_logp, adv, ret):
+    """One clipped-surrogate PPO epoch over a fixed batch.
+
+    s [B, STATE], act_onehot [B, M], old_logp [B], adv [B], ret [B].
+    Returns (flat', m', v', step', policy_loss, value_loss, entropy).
+    """
+    step = step + 1.0
+
+    def loss_fn(p):
+        logits, value = ppo_fwd(p, s)
+        logp_all = jax.nn.log_softmax(logits, axis=-1)
+        logp = jnp.sum(logp_all * act_onehot, axis=-1)
+        ratio = jnp.exp(logp - old_logp)
+        clipped = jnp.clip(ratio, 1.0 - PPO_CLIP, 1.0 + PPO_CLIP)
+        pl_loss = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+        v_loss = jnp.mean((value - ret) ** 2)
+        probs = jnp.exp(logp_all)
+        entropy = -jnp.mean(jnp.sum(probs * logp_all, axis=-1))
+        total = pl_loss + PPO_VCOEF * v_loss - PPO_ENTCOEF * entropy
+        return total, (pl_loss, v_loss, entropy)
+
+    (_, (pl_loss, v_loss, ent)), grad = jax.value_and_grad(
+        loss_fn, has_aux=True)(flat)
+    flat2, m2, v2 = adam_update(flat, grad, m_p, v_p, step)
+    return flat2, m2, v2, step, pl_loss, v_loss, ent

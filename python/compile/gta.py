@@ -1,0 +1,71 @@
+"""GTA — the GraphEdge Tensor Archive format (writer side).
+
+A deliberately tiny, dependency-free binary container for named f32/i32
+tensors, used to ship pre-trained GNN weights and DRL initial parameters
+from the Python compile path to the Rust runtime (reader:
+``rust/src/tensor/gta.rs``).
+
+Layout (little-endian):
+
+    magic  b"GTA1"
+    u32    tensor count
+    per tensor:
+        u16   name length, then UTF-8 name bytes
+        u8    dtype (0 = f32, 1 = i32)
+        u8    ndim
+        u32×ndim  dims
+        raw   data (row-major, packed)
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GTA1"
+DTYPE_F32 = 0
+DTYPE_I32 = 1
+
+
+def write_gta(path, tensors):
+    """Write ``tensors`` (list of (name, np.ndarray)) to ``path``.
+
+    Arrays are converted to f32 unless integer-typed (then i32).
+    Order is preserved — the Rust runtime binds executable parameter
+    inputs positionally from the archive order.
+    """
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.asarray(arr)
+            if np.issubdtype(arr.dtype, np.integer):
+                arr = arr.astype(np.int32)
+                dtype = DTYPE_I32
+            else:
+                arr = arr.astype(np.float32)
+                dtype = DTYPE_F32
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", dtype, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes(order="C"))
+
+
+def read_gta(path):
+    """Reader (python side, used only by tests for round-trip checks)."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad GTA magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            dtype, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            np_dtype = np.float32 if dtype == DTYPE_F32 else np.int32
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype=np_dtype).reshape(dims)
+            out.append((name, data))
+    return out

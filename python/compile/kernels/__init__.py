@@ -1,0 +1,30 @@
+"""Layer-1 Pallas kernels for GraphEdge GNN inference.
+
+Every kernel here is authored for a TPU-shaped memory hierarchy (VMEM
+tiles via BlockSpec, MXU-friendly dense contractions) but executed in
+``interpret=True`` mode so the lowered HLO runs on the CPU PJRT plugin
+(real-TPU lowering emits Mosaic custom-calls the CPU client cannot run).
+
+Kernels:
+  - :func:`matmul`            blocked dense matmul with k-loop accumulation
+  - :func:`matmul_bias_act`   matmul fused with bias + activation epilogue
+  - :func:`mean_agg`          neighborhood mean aggregation (SAGE)
+  - :func:`attn_scores`       pairwise additive-attention logits (GAT)
+  - :func:`masked_softmax`    row softmax over adjacency-masked logits (GAT)
+
+The pure-jnp oracle for each kernel lives in :mod:`ref` and is the
+correctness ground truth exercised by ``python/tests``.
+"""
+
+from .matmul import matmul, matmul_bias_act, pick_block
+from .sage import mean_agg
+from .gat import attn_scores, masked_softmax
+
+__all__ = [
+    "matmul",
+    "matmul_bias_act",
+    "mean_agg",
+    "attn_scores",
+    "masked_softmax",
+    "pick_block",
+]

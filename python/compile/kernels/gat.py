@@ -1,0 +1,86 @@
+"""GAT attention Pallas kernels.
+
+Additive (GATv1) attention over a dense padded adjacency:
+
+  ``e[i, j] = LeakyReLU(s_l[i] + s_r[j])``          (:func:`attn_scores`)
+  ``att[i, :] = softmax over {j : adj[i, j] = 1}``  (:func:`masked_softmax`)
+
+where ``s_l = (X W) @ a_l`` and ``s_r = (X W) @ a_r`` are computed by L2
+with the matmul kernel.  ``attn_scores`` tiles the [N, N] score matrix;
+``masked_softmax`` processes whole rows per tile (N_max = 320 columns
+fit VMEM comfortably) so max/sum reductions stay on-chip.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block, BM
+
+#: LeakyReLU negative slope used by GAT.
+NEG_SLOPE = 0.2
+#: Additive mask value for non-edges (large negative, exp() underflows).
+MASK_VALUE = -1e30
+
+
+def _attn_scores_kernel(sl_ref, sr_ref, o_ref):
+    # sl tile: (bm, 1) column of left scores; sr tile: (1, bn) row of
+    # right scores (pre-transposed by the caller's BlockSpec on a
+    # [1, N] input).  Outer broadcast add, then LeakyReLU.
+    e = sl_ref[...] + sr_ref[...]
+    o_ref[...] = jnp.where(e >= 0.0, e, NEG_SLOPE * e)
+
+
+def attn_scores(sl: jax.Array, sr: jax.Array) -> jax.Array:
+    """``LeakyReLU(sl + sr^T)`` for column vectors sl, sr of shape [N, 1]."""
+    n = sl.shape[0]
+    assert sl.shape == (n, 1) and sr.shape == (n, 1), (sl.shape, sr.shape)
+    srt = sr.reshape(1, n)
+    bm = pick_block(n, BM)
+    bn = pick_block(n, BM)
+    grid = (n // bm, n // bn)
+    return pl.pallas_call(
+        _attn_scores_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(sl, srt)
+
+
+def _masked_softmax_kernel(s_ref, m_ref, o_ref):
+    s = s_ref[...]
+    mask = m_ref[...] > 0.0
+    s = jnp.where(mask, s, MASK_VALUE)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s) * mask.astype(jnp.float32)
+    # Padded rows have no edges at all: denominator epsilon keeps them 0.
+    o_ref[...] = e / (jnp.sum(e, axis=-1, keepdims=True) + 1e-9)
+
+
+def masked_softmax(scores: jax.Array, adj: jax.Array) -> jax.Array:
+    """Row-wise softmax of ``scores`` restricted to ``adj != 0`` entries.
+
+    Rows with no edges (padding) come out all-zero rather than NaN.
+    Each grid step owns ``bm`` complete rows so the reduction never
+    crosses tiles.
+    """
+    n, n2 = scores.shape
+    assert n == n2 and adj.shape == (n, n)
+    bm = pick_block(n, BM)
+    grid = (n // bm,)
+    return pl.pallas_call(
+        _masked_softmax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(scores, adj)

@@ -1,0 +1,142 @@
+"""Blocked dense matmul Pallas kernels.
+
+These are the workhorse contractions of GraphEdge's GNN layers: the
+feature transform ``X @ W`` (K up to 1536) and the neighborhood
+aggregation ``A_hat @ P`` (K = N_max = 320).
+
+TPU adaptation notes (see DESIGN.md §Hardware-Adaptation): the grid is
+(row-tile i, col-tile j, contraction-tile k).  Each (i, j) output tile
+lives in VMEM for the whole k loop (Pallas revisits the same out block
+while only the k coordinate advances), so HBM traffic is one read of
+each X/W tile and a single write of the output tile — the schedule a
+CUDA kernel would express with a threadblock loop over shared-memory
+staging buffers.  ``jnp.dot(..., preferred_element_type=f32)`` targets
+the MXU with an f32 accumulator.  On CPU we run ``interpret=True``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default tile sizes (§Perf-tuned).  A full 320-row block, 512-lane
+#: output tiles and 512-deep contraction blocks keep every tile pair
+#: under ~1.7 MB — comfortably double-bufferable in a 16 MB VMEM — while
+#: cutting the grid from hundreds of steps to a handful (the original
+#: 64/64/128 tiling spent >90% of CPU-interpret time on grid overhead;
+#: see EXPERIMENTS.md §Perf: 62 ms → 5 ms per GCN forward).
+BM, BN, BK = 320, 512, 512
+
+#: Tile candidates tried by :func:`pick_block`, largest first.  Includes
+#: the 5·2^k family because N_MAX = 320.
+_CANDIDATES = (512, 384, 320, 256, 192, 160, 128, 96, 64, 48, 32, 16, 8, 4, 2)
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest candidate tile <= ``preferred`` that divides ``dim``.
+
+    L2 pads every tensor so that a reasonable tile always exists; this
+    helper keeps BlockSpecs exact (no ragged masking needed inside the
+    kernel body).
+    """
+    for c in _CANDIDATES:
+        if c <= preferred and dim % c == 0:
+            return c
+    return 1
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    """out[i, j] += x[i, k] @ y[k, j], accumulated over the k grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _mm_epilogue_kernel(x_ref, y_ref, b_ref, o_ref, *, act: str, nsteps: int):
+    """Matmul with a fused bias-add + activation applied on the last
+    contraction step, so the epilogue happens while the output tile is
+    still resident in VMEM."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _epilogue():
+        v = o_ref[...] + b_ref[...]
+        if act == "relu":
+            v = jnp.maximum(v, 0.0)
+        elif act == "sigmoid":
+            v = jax.nn.sigmoid(v)
+        elif act == "none":
+            pass
+        else:  # pragma: no cover - guarded by matmul_bias_act
+            raise ValueError(f"unknown activation {act!r}")
+        o_ref[...] = v
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``x @ y`` via the blocked Pallas kernel.
+
+    Shapes must tile cleanly (guaranteed by L2's padding); result f32.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {y.shape}"
+    bm, bn, bk = pick_block(m, BM), pick_block(n, BN), pick_block(k, BK)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def matmul_bias_act(
+    x: jax.Array, y: jax.Array, b: jax.Array, act: str = "none"
+) -> jax.Array:
+    """``act(x @ y + b)`` with the bias/activation fused into the last
+    contraction step of the blocked matmul.
+
+    ``b`` has shape ``(1, n)`` (kept 2-D so the BlockSpec stays rank-
+    consistent with the output tile).  ``act`` in {"none","relu","sigmoid"}.
+    """
+    if act not in ("none", "relu", "sigmoid"):
+        raise ValueError(f"unknown activation {act!r}")
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {y.shape}"
+    assert b.shape == (1, n), f"bias must be (1, {n}), got {b.shape}"
+    bm, bn, bk = pick_block(m, BM), pick_block(n, BN), pick_block(k, BK)
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(
+        _mm_epilogue_kernel, act=act, nsteps=k // bk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y, b)

@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for every Pallas kernel and every composed GNN layer.
+
+This module is the correctness ground truth of the whole stack:
+
+  * ``python/tests/test_kernels.py`` sweeps the Pallas kernels against
+    these oracles with hypothesis-generated shapes/values.
+  * ``python/tests/test_model.py`` checks the L2 model forwards
+    (kernel-composed) against the layer oracles here.
+  * GNN pre-training (``train_gnn.py``) trains *through* these oracles
+    (differentiable plain-jnp), and serving runs the Pallas version —
+    the tests above are what make that substitution sound.
+
+No pallas imports allowed in this file.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_SLOPE = 0.2
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level oracles
+# ---------------------------------------------------------------------------
+
+def matmul(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def matmul_bias_act(x, y, b, act="none"):
+    v = jnp.dot(x, y, preferred_element_type=jnp.float32) + b
+    if act == "relu":
+        v = jnp.maximum(v, 0.0)
+    elif act == "sigmoid":
+        v = jax.nn.sigmoid(v)
+    elif act != "none":
+        raise ValueError(act)
+    return v
+
+
+def mean_agg(adj, x, inv_deg):
+    return jnp.dot(adj, x, preferred_element_type=jnp.float32) * inv_deg
+
+
+def attn_scores(sl, sr):
+    e = sl + sr.reshape(1, -1)
+    return jnp.where(e >= 0.0, e, NEG_SLOPE * e)
+
+
+def masked_softmax(scores, adj):
+    mask = adj > 0.0
+    s = jnp.where(mask, scores, -1e30)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s) * mask.astype(jnp.float32)
+    return e / (jnp.sum(e, axis=-1, keepdims=True) + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Layer-level oracles (what the L2 model composes out of kernels)
+# ---------------------------------------------------------------------------
+
+def gcn_layer(a_norm, x, w, b, act="relu"):
+    """One GCN layer: ``act(A_hat @ X @ W + b)`` (Kipf & Welling, Eq. 1)."""
+    return matmul_bias_act(a_norm, jnp.dot(x, w), b, act)
+
+
+def gcn_forward(a_norm, x, w0, b0, w1, b1):
+    """Two-layer GCN, paper Eq. (2): softmax omitted (argmax-invariant)."""
+    h = gcn_layer(a_norm, x, w0, b0, act="relu")
+    return gcn_layer(a_norm, h, w1, b1, act="none")
+
+
+def sage_layer(adj, inv_deg, x, w_self, w_neigh, b, act="relu"):
+    """GraphSAGE-mean layer: ``act(X W_self + mean_N(X) W_neigh + b)``."""
+    neigh = mean_agg(adj, x, inv_deg)
+    v = jnp.dot(x, w_self) + jnp.dot(neigh, w_neigh) + b
+    if act == "relu":
+        v = jnp.maximum(v, 0.0)
+    return v
+
+
+def sage_forward(adj, inv_deg, x, ws0, wn0, b0, ws1, wn1, b1):
+    h = sage_layer(adj, inv_deg, x, ws0, wn0, b0, act="relu")
+    return sage_layer(adj, inv_deg, h, ws1, wn1, b1, act="none")
+
+
+def gat_layer(adj, x, w, a_l, a_r, b, act="relu"):
+    """Single-head GATv1 layer over a dense masked adjacency."""
+    h = jnp.dot(x, w)
+    sl = jnp.dot(h, a_l).reshape(-1, 1)
+    sr = jnp.dot(h, a_r).reshape(-1, 1)
+    att = masked_softmax(attn_scores(sl, sr), adj)
+    v = jnp.dot(att, h) + b
+    if act == "relu":
+        v = jnp.maximum(v, 0.0)
+    return v
+
+
+def gat_forward(adj, x, w0, al0, ar0, b0, w1, al1, ar1, b1):
+    h = gat_layer(adj, x, w0, al0, ar0, b0, act="relu")
+    return gat_layer(adj, h, w1, al1, ar1, b1, act="none")
+
+
+def sgc_forward(a_norm, x, w, b, k=2):
+    """SGC (Wu et al., 2019): ``A_hat^K X W + b`` — no nonlinearity."""
+    p = x
+    for _ in range(k):
+        p = jnp.dot(a_norm, p)
+    return jnp.dot(p, w) + b
+
+
+# ---------------------------------------------------------------------------
+# Graph-operator helpers shared by oracle users
+# ---------------------------------------------------------------------------
+
+def sym_norm_adj(adj_with_self_loops):
+    """``D^-1/2 (A + I) D^-1/2`` with 0 rows for padded vertices."""
+    deg = jnp.sum(adj_with_self_loops, axis=1)
+    inv_sqrt = jnp.where(deg > 0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12)), 0.0)
+    return adj_with_self_loops * inv_sqrt[:, None] * inv_sqrt[None, :]
+
+
+def inv_degree(adj):
+    deg = jnp.sum(adj, axis=1, keepdims=True)
+    return jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1e-12), 0.0)

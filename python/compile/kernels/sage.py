@@ -1,0 +1,63 @@
+"""GraphSAGE mean-aggregation Pallas kernel.
+
+``mean_agg(adj, x, inv_deg) = diag(inv_deg) @ (adj @ x)`` — the mean of
+every vertex's neighborhood features (self-loops included by L2), which
+is the aggregator of GraphSAGE-mean (Hamilton et al., 2017).
+
+The degree normalization is fused into the final contraction step so
+the scaled tile is produced while still VMEM-resident, instead of a
+second full pass over the [N, F] aggregate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block, BM, BN, BK
+
+
+def _mean_agg_kernel(a_ref, x_ref, d_ref, o_ref, *, nsteps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _scale():
+        # d_ref is the (bm, 1) column of reciprocal degrees for this
+        # row tile; broadcast-multiply the finished aggregate.
+        o_ref[...] = o_ref[...] * d_ref[...]
+
+
+def mean_agg(adj: jax.Array, x: jax.Array, inv_deg: jax.Array) -> jax.Array:
+    """Neighborhood mean: ``(adj @ x) * inv_deg``.
+
+    Args:
+      adj: [N, N] 0/1 adjacency (self-loops per the caller's convention).
+      x: [N, F] vertex features.
+      inv_deg: [N, 1] reciprocal row degree (0 for isolated/padded rows).
+    """
+    n, n2 = adj.shape
+    nx, f = x.shape
+    assert n == n2 == nx, f"shape mismatch adj={adj.shape} x={x.shape}"
+    assert inv_deg.shape == (n, 1), f"inv_deg must be ({n},1)"
+    bm, bn, bk = pick_block(n, BM), pick_block(f, BN), pick_block(n, BK)
+    grid = (n // bm, f // bn, n // bk)
+    kernel = functools.partial(_mean_agg_kernel, nsteps=n // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        interpret=True,
+    )(adj, x, inv_deg)

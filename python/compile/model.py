@@ -1,0 +1,137 @@
+"""Layer-2 JAX GNN model definitions (compile-time only).
+
+Each forward is a pure function over *padded, fixed-shape* inputs so it
+can be AOT-lowered once per (model, dataset) pair and executed from the
+Rust runtime with no Python anywhere near the request path.
+
+Common input signature (all models):
+
+    forward(x, a_norm, adj, inv_deg, *params) -> logits [N_MAX, C_PAD]
+
+  x        [N_MAX, F_pad]   row-normalized bag-of-words features, zero
+                            rows for padding vertices
+  a_norm   [N_MAX, N_MAX]   D^-1/2 (A+I) D^-1/2 (zero rows/cols padding)
+  adj      [N_MAX, N_MAX]   0/1 adjacency with self-loops
+  inv_deg  [N_MAX, 1]       1/deg over `adj` (0 for padded rows)
+
+All four inputs are produced by the Rust serving layer for every batch;
+unused ones per model are still bound (uniform runtime plumbing) but
+dropped by XLA's DCE after lowering, so they cost nothing at run time —
+except they'd be dead *arguments*; to keep executables minimal each
+model variant lowers only the inputs it reads (see `MODEL_INPUTS`).
+
+Hidden width and class padding follow the paper's setup (§6.1: 64
+neurons per layer; CiteSeer/Cora/PubMed have 6/7/3 classes, padded to 8
+lanes for tiling).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import (
+    attn_scores,
+    masked_softmax,
+    matmul,
+    matmul_bias_act,
+    mean_agg,
+)
+
+#: Padded vertex count: max users per scenario is 300 (Table 2), +halo
+#: margin, rounded to 64-lane tiles.
+N_MAX = 320
+#: Hidden width (paper §6.1: every layer 64 neurons).
+HIDDEN = 64
+#: Class logits padded to one 8-lane tile.
+C_PAD = 8
+
+#: Dataset specs: (real feature dim capped at 1500 per §6.1, padded
+#: feature dim for tiling, real class count).
+DATASETS = {
+    "citeseer": {"feat": 1500, "feat_pad": 1536, "classes": 6},
+    "cora": {"feat": 1433, "feat_pad": 1536, "classes": 7},
+    "pubmed": {"feat": 500, "feat_pad": 512, "classes": 3},
+}
+
+#: Which of (x, a_norm, adj, inv_deg) each model forward consumes, in
+#: signature order.  The AOT pipeline and the Rust runtime both read
+#: this table (via the manifest) so the binding stays in one place.
+MODEL_INPUTS = {
+    "gcn": ("x", "a_norm"),
+    "sgc": ("x", "a_norm"),
+    "sage": ("x", "adj", "inv_deg"),
+    "gat": ("x", "adj"),
+}
+
+#: Parameter name/shape templates per model (F = padded feature dim).
+def param_specs(model: str, feat_pad: int):
+    h, c = HIDDEN, C_PAD
+    if model == "gcn":
+        return [("w0", (feat_pad, h)), ("b0", (1, h)),
+                ("w1", (h, c)), ("b1", (1, c))]
+    if model == "sgc":
+        return [("w", (feat_pad, c)), ("b", (1, c))]
+    if model == "sage":
+        return [("ws0", (feat_pad, h)), ("wn0", (feat_pad, h)), ("b0", (1, h)),
+                ("ws1", (h, c)), ("wn1", (h, c)), ("b1", (1, c))]
+    if model == "gat":
+        return [("w0", (feat_pad, h)), ("al0", (h, 1)), ("ar0", (h, 1)),
+                ("b0", (1, h)),
+                ("w1", (h, c)), ("al1", (c, 1)), ("ar1", (c, 1)),
+                ("b1", (1, c))]
+    raise ValueError(f"unknown model {model!r}")
+
+
+# ---------------------------------------------------------------------------
+# Forwards (kernel-composed)
+# ---------------------------------------------------------------------------
+
+def gcn_forward(x, a_norm, w0, b0, w1, b1):
+    """Two-layer GCN (paper Eq. 2).  The per-layer hot path is the
+    fused aggregate kernel: P = X@W via `matmul`, then act(A_hat@P + b)
+    via `matmul_bias_act` — bias/ReLU fused into the last VMEM tile."""
+    h = matmul_bias_act(a_norm, matmul(x, w0), b0, act="relu")
+    return matmul_bias_act(a_norm, matmul(h, w1), b1, act="none")
+
+
+def sgc_forward(x, a_norm, w, b):
+    """SGC: A_hat^2 X W + b.  Propagation order A@(A@X) keeps every
+    contraction at K = N_MAX instead of touching F twice."""
+    p = matmul(a_norm, matmul(a_norm, x))
+    return matmul_bias_act(p, w, b, act="none")
+
+
+def sage_forward(x, adj, inv_deg, ws0, wn0, b0, ws1, wn1, b1):
+    """Two GraphSAGE-mean layers with the degree-fused mean_agg kernel."""
+    neigh = mean_agg(adj, x, inv_deg)
+    h = _sage_combine(x, neigh, ws0, wn0, b0, act="relu")
+    neigh2 = mean_agg(adj, h, inv_deg)
+    return _sage_combine(h, neigh2, ws1, wn1, b1, act="none")
+
+
+def _sage_combine(x, neigh, w_self, w_neigh, b, act):
+    v = matmul(x, w_self) + matmul_bias_act(neigh, w_neigh, b, act="none")
+    return jnp.maximum(v, 0.0) if act == "relu" else v
+
+
+def gat_forward(x, adj, w0, al0, ar0, b0, w1, al1, ar1, b1):
+    """Two single-head GATv1 layers; attention scores, masked softmax
+    and the attention-weighted aggregation all run as Pallas kernels."""
+    h = _gat_layer(x, adj, w0, al0, ar0, b0, act="relu")
+    return _gat_layer(h, adj, w1, al1, ar1, b1, act="none")
+
+
+def _gat_layer(x, adj, w, a_l, a_r, b, act):
+    h = matmul(x, w)
+    sl = matmul(h, a_l)           # [N, 1]
+    sr = matmul(h, a_r)           # [N, 1]
+    att = masked_softmax(attn_scores(sl, sr), adj)
+    return matmul_bias_act(att, h, b, act=act)
+
+
+FORWARDS = {
+    "gcn": gcn_forward,
+    "sgc": sgc_forward,
+    "sage": sage_forward,
+    "gat": gat_forward,
+}
+
+MODELS = tuple(FORWARDS)

@@ -1,0 +1,144 @@
+"""Artifact-build-time GNN pre-training.
+
+The paper (§6.1) deploys *pre-trained* GNNs (GCN/GAT/GraphSAGE/SGC) on
+every edge server, each at 60–80% node-classification accuracy.  This
+module reproduces that: for each (model, dataset) pair it trains the
+2-layer model on padded 320-vertex subgraphs sampled from the synthetic
+dataset, early-stopping inside the paper's accuracy band, and returns
+the parameter list in the exact order the AOT executable binds them.
+
+Training differentiates through the pure-jnp oracles in ``kernels.ref``
+(same math as the Pallas kernels — equivalence is enforced by
+``python/tests/test_kernels.py``), because reverse-mode AD through
+interpret-mode Pallas is both slow and unnecessary here.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import data as data_mod
+from . import model as model_mod
+from .kernels import ref
+
+ACC_LO, ACC_HI = 0.60, 0.80
+MAX_STEPS = 400
+EVAL_EVERY = 5
+LR = 0.01
+
+
+def sample_subgraph(d, adj, size, rng):
+    """BFS ball around a random seed, induced subgraph of ``size``."""
+    n = d["n"]
+    seen, order = set(), []
+    frontier = [int(rng.integers(0, n))]
+    while len(order) < size:
+        if not frontier:
+            frontier = [int(rng.integers(0, n))]
+        nxt = []
+        for u in frontier:
+            if u in seen:
+                continue
+            seen.add(u)
+            order.append(u)
+            if len(order) >= size:
+                break
+            nxt.extend(adj[u])
+        frontier = nxt
+    order = order[:size]
+    index = {u: k for k, u in enumerate(order)}
+    a = np.zeros((model_mod.N_MAX, model_mod.N_MAX), dtype=np.float32)
+    for u in order:
+        for v in adj[u]:
+            if v in index:
+                a[index[u], index[v]] = 1.0
+    for k in range(size):
+        a[k, k] = 1.0  # self loops
+    return order, a
+
+
+def build_batch(d, adj, feat_pad, rng, size=300):
+    order, a = sample_subgraph(d, adj, size, rng)
+    x = np.zeros((model_mod.N_MAX, feat_pad), dtype=np.float32)
+    x[:len(order)] = data_mod.dense_features(d, feat_pad, rows=order)
+    y = np.full(model_mod.N_MAX, -1, dtype=np.int32)
+    y[:len(order)] = d["labels"][order]
+    return (jnp.asarray(x), jnp.asarray(a), jnp.asarray(y))
+
+
+def ref_forward(model, x, a, params):
+    """Dispatch to the oracle forward with (adj-with-self-loops) ``a``."""
+    a_norm = ref.sym_norm_adj(a)
+    inv_deg = ref.inv_degree(a)
+    if model == "gcn":
+        return ref.gcn_forward(a_norm, x, *params)
+    if model == "sgc":
+        return ref.sgc_forward(a_norm, x, *params)
+    if model == "sage":
+        return ref.sage_forward(a, inv_deg, x, *params)
+    if model == "gat":
+        w0, al0, ar0, b0, w1, al1, ar1, b1 = params
+        return ref.gat_forward(a, x, w0, al0[:, 0], ar0[:, 0], b0,
+                               w1, al1[:, 0], ar1[:, 0], b1)
+    raise ValueError(model)
+
+
+def init_params(model, feat_pad, key):
+    params = []
+    for name, shape in model_mod.param_specs(model, feat_pad):
+        key, sub = jax.random.split(key)
+        if name.startswith("b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            scale = jnp.sqrt(2.0 / fan_in)
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def pretrain(model, dataset_name, d, seed=7, log=print):
+    """Train; returns (params, accuracy).  Early-stops in [0.60, 0.80]."""
+    spec = model_mod.DATASETS[dataset_name]
+    feat_pad = spec["feat_pad"]
+    adj = data_mod.adjacency_lists(d)
+    rng = np.random.default_rng(seed)
+    train_b = [build_batch(d, adj, feat_pad, rng) for _ in range(3)]
+    val_b = build_batch(d, adj, feat_pad, rng)
+
+    def loss_fn(params, x, a, y):
+        logits = ref_forward(model, x, a, params)
+        mask = (y >= 0).astype(jnp.float32)
+        yc = jnp.clip(y, 0)
+        logp = jax.nn.log_softmax(logits[:, :spec["classes"]], axis=-1)
+        nll = -jnp.take_along_axis(logp, yc[:, None], axis=-1)[:, 0]
+        return jnp.sum(nll * mask) / jnp.sum(mask)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def accuracy(params, x, a, y):
+        logits = ref_forward(model, x, a, params)
+        pred = jnp.argmax(logits[:, :spec["classes"]], axis=-1)
+        mask = y >= 0
+        return jnp.sum((pred == y) & mask) / jnp.sum(mask)
+
+    params = init_params(model, feat_pad, jax.random.PRNGKey(seed))
+    m_state = [jnp.zeros_like(p) for p in params]
+    v_state = [jnp.zeros_like(p) for p in params]
+    acc = 0.0
+    for step in range(1, MAX_STEPS + 1):
+        x, a, y = train_b[step % len(train_b)]
+        _, grads = grad_fn(params, x, a, y)
+        t = float(step)
+        for i, g in enumerate(grads):
+            m_state[i] = 0.9 * m_state[i] + 0.1 * g
+            v_state[i] = 0.999 * v_state[i] + 0.001 * g * g
+            mh = m_state[i] / (1 - 0.9 ** t)
+            vh = v_state[i] / (1 - 0.999 ** t)
+            params[i] = params[i] - LR * mh / (jnp.sqrt(vh) + 1e-8)
+        if step % EVAL_EVERY == 0:
+            acc = float(accuracy(params, *val_b))
+            if acc >= ACC_LO:
+                break  # stop as soon as we enter the paper's band
+    log(f"    pretrain {model}/{dataset_name}: acc={acc:.3f} steps<= {step}")
+    return params, acc

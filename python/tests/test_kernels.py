@@ -1,0 +1,194 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (within the tiling contract: dims that the
+block-picker can tile) and values; assert_allclose against ref.*.
+This suite is the core correctness signal for the serving hot path —
+pre-training differentiates through ref.* while serving executes the
+Pallas HLO, and these tests are what make those interchangeable.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    attn_scores,
+    masked_softmax,
+    matmul,
+    matmul_bias_act,
+    mean_agg,
+    pick_block,
+    ref,
+)
+
+DIMS = st.sampled_from([8, 16, 32, 64, 128, 192, 320])
+SMALL_DIMS = st.sampled_from([1, 2, 8, 64])
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape, scale=scale).astype(np.float32))
+
+
+def rand_adj(rng, n, density=0.1, self_loops=True):
+    a = (rng.random((n, n)) < density).astype(np.float32)
+    a = np.maximum(a, a.T)
+    if self_loops:
+        np.fill_diagonal(a, 1.0)
+    return jnp.asarray(a)
+
+
+def allclose(a, b, tol=3e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# pick_block
+# ---------------------------------------------------------------------------
+
+@given(dim=st.integers(1, 4096), preferred=st.sampled_from([8, 64, 128]))
+def test_pick_block_divides(dim, preferred):
+    b = pick_block(dim, preferred)
+    assert dim % b == 0
+    assert 1 <= b <= preferred
+
+
+def test_pick_block_prefers_largest():
+    assert pick_block(320, 128) == 64
+    assert pick_block(1536, 128) == 128
+    assert pick_block(512, 128) == 128
+    assert pick_block(7, 64) == 1
+
+
+# ---------------------------------------------------------------------------
+# matmul family
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=SMALL_DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, m, k), rand(rng, k, n)
+    allclose(matmul(x, y), ref.matmul(x, y), tol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIMS, k=DIMS, act=st.sampled_from(["none", "relu", "sigmoid"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_bias_act_matches_ref(m, k, act, seed):
+    rng = np.random.default_rng(seed)
+    n = 64
+    x, y, b = rand(rng, m, k), rand(rng, k, n), rand(rng, 1, n)
+    allclose(matmul_bias_act(x, y, b, act),
+             ref.matmul_bias_act(x, y, b, act), tol=1e-3)
+
+
+def test_matmul_bias_act_rejects_unknown_act():
+    x = jnp.zeros((8, 8))
+    with pytest.raises(ValueError):
+        matmul_bias_act(x, x, jnp.zeros((1, 8)), act="gelu")
+
+
+def test_matmul_identity():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 64, 64)
+    allclose(matmul(x, jnp.eye(64)), x)
+
+
+def test_matmul_zero_operand():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 64, 128)
+    out = matmul(x, jnp.zeros((128, 8)))
+    assert np.allclose(np.asarray(out), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# mean aggregation
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([64, 128, 320]), f=st.sampled_from([8, 64, 512]),
+       density=st.floats(0.01, 0.5), seed=st.integers(0, 2**31 - 1))
+def test_mean_agg_matches_ref(n, f, density, seed):
+    rng = np.random.default_rng(seed)
+    adj = rand_adj(rng, n, density)
+    x = rand(rng, n, f)
+    inv_deg = ref.inv_degree(adj)
+    allclose(mean_agg(adj, x, inv_deg), ref.mean_agg(adj, x, inv_deg),
+             tol=1e-3)
+
+
+def test_mean_agg_isolated_rows_zero():
+    """Rows with zero degree (padding) must aggregate to exactly 0."""
+    rng = np.random.default_rng(3)
+    n = 64
+    adj = np.zeros((n, n), dtype=np.float32)
+    adj[: n // 2, : n // 2] = np.asarray(rand_adj(rng, n // 2))
+    adj = jnp.asarray(adj)
+    x = rand(rng, n, 64)
+    out = np.asarray(mean_agg(adj, x, ref.inv_degree(adj)))
+    assert np.all(out[n // 2:] == 0.0)
+
+
+def test_mean_agg_uniform_graph_is_mean():
+    """On a complete graph with self-loops the aggregate is the column
+    mean of x, for every vertex."""
+    rng = np.random.default_rng(4)
+    n = 64
+    adj = jnp.ones((n, n), dtype=jnp.float32)
+    x = rand(rng, n, 8)
+    out = mean_agg(adj, x, ref.inv_degree(adj))
+    expect = jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), (n, 8))
+    allclose(out, expect)
+
+
+# ---------------------------------------------------------------------------
+# GAT attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([64, 128, 320]), seed=st.integers(0, 2**31 - 1))
+def test_attn_scores_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    sl, sr = rand(rng, n, 1), rand(rng, n, 1)
+    allclose(attn_scores(sl, sr), ref.attn_scores(sl, sr))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([64, 128, 320]), density=st.floats(0.02, 0.6),
+       seed=st.integers(0, 2**31 - 1))
+def test_masked_softmax_matches_ref(n, density, seed):
+    rng = np.random.default_rng(seed)
+    adj = rand_adj(rng, n, density)
+    scores = rand(rng, n, n, scale=3.0)
+    allclose(masked_softmax(scores, adj), ref.masked_softmax(scores, adj))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([64, 128]), seed=st.integers(0, 2**31 - 1))
+def test_masked_softmax_rows_sum_to_one(n, seed):
+    rng = np.random.default_rng(seed)
+    adj = rand_adj(rng, n, 0.2)
+    out = np.asarray(masked_softmax(rand(rng, n, n), adj))
+    np.testing.assert_allclose(out.sum(axis=1), np.ones(n), rtol=1e-4)
+
+
+def test_masked_softmax_empty_rows_are_zero():
+    """All-masked (padding) rows must produce zeros, not NaN."""
+    rng = np.random.default_rng(9)
+    n = 64
+    adj = np.zeros((n, n), dtype=np.float32)
+    adj[:32, :32] = 1.0
+    out = np.asarray(masked_softmax(rand(rng, n, n), jnp.asarray(adj)))
+    assert np.all(np.isfinite(out))
+    assert np.all(out[32:] == 0.0)
+
+
+def test_masked_softmax_respects_mask():
+    rng = np.random.default_rng(10)
+    n = 64
+    adj = rand_adj(rng, n, 0.15)
+    out = np.asarray(masked_softmax(rand(rng, n, n), adj))
+    assert np.all(out[np.asarray(adj) == 0.0] == 0.0)

@@ -1,0 +1,92 @@
+"""L2 model forwards (kernel-composed) vs layer oracles, shape contracts."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+def make_graph(n_real=200, feat_pad=512):
+    n = model.N_MAX
+    adj = np.zeros((n, n), dtype=np.float32)
+    block = (RNG.random((n_real, n_real)) < 0.05).astype(np.float32)
+    block = np.maximum(block, block.T)
+    adj[:n_real, :n_real] = block
+    for i in range(n_real):
+        adj[i, i] = 1.0
+    adj = jnp.asarray(adj)
+    x = np.zeros((n, feat_pad), dtype=np.float32)
+    x[:n_real] = RNG.normal(size=(n_real, feat_pad)).astype(np.float32)
+    return jnp.asarray(x), adj
+
+
+def params_for(m, feat_pad):
+    return [jnp.asarray(RNG.normal(size=s, scale=0.1).astype(np.float32))
+            for _, s in model.param_specs(m, feat_pad)]
+
+
+def run_forward(m, x, adj, params):
+    a_norm = ref.sym_norm_adj(adj)
+    inv_deg = ref.inv_degree(adj)
+    env = {"x": x, "a_norm": a_norm, "adj": adj, "inv_deg": inv_deg}
+    args = [env[k] for k in model.MODEL_INPUTS[m]]
+    return model.FORWARDS[m](*args, *params)
+
+
+@pytest.mark.parametrize("m", model.MODELS)
+def test_forward_shape(m):
+    x, adj = make_graph()
+    out = run_forward(m, x, adj, params_for(m, 512))
+    assert out.shape == (model.N_MAX, model.C_PAD)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+@pytest.mark.parametrize("m", model.MODELS)
+def test_forward_matches_oracle(m):
+    x, adj = make_graph()
+    params = params_for(m, 512)
+    out = run_forward(m, x, adj, params)
+    a_norm = ref.sym_norm_adj(adj)
+    inv_deg = ref.inv_degree(adj)
+    if m == "gcn":
+        expect = ref.gcn_forward(a_norm, x, *params)
+    elif m == "sgc":
+        expect = ref.sgc_forward(a_norm, x, *params)
+    elif m == "sage":
+        expect = ref.sage_forward(adj, inv_deg, x, *params)
+    else:
+        w0, al0, ar0, b0, w1, al1, ar1, b1 = params
+        expect = ref.gat_forward(adj, x, w0, al0[:, 0], ar0[:, 0], b0,
+                                 w1, al1[:, 0], ar1[:, 0], b1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("m", model.MODELS)
+def test_padding_vertices_isolated(m):
+    """Padded (masked-out) vertices must not influence real logits."""
+    x, adj = make_graph(n_real=100)
+    params = params_for(m, 512)
+    base = np.asarray(run_forward(m, x, adj, params))[:100]
+    # Corrupt the padded rows' features; logits of real rows unchanged.
+    x2 = np.asarray(x).copy()
+    x2[100:] = 1e3
+    out2 = np.asarray(run_forward(m, jnp.asarray(x2), adj, params))[:100]
+    np.testing.assert_allclose(base, out2, rtol=1e-4, atol=1e-4)
+
+
+def test_dataset_specs_consistent():
+    for name, spec in model.DATASETS.items():
+        assert spec["feat_pad"] % 128 == 0 or spec["feat_pad"] % 64 == 0
+        assert spec["feat"] <= spec["feat_pad"]
+        assert spec["classes"] <= model.C_PAD
+
+
+def test_param_specs_unknown_model():
+    with pytest.raises(ValueError):
+        model.param_specs("transformer", 512)

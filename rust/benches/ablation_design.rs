@@ -1,0 +1,122 @@
+//! Design-choice ablations (DESIGN.md §Key-design-decisions):
+//!
+//! 1. ζ_sp sweep — how strongly the R_sp subgraph-colocation term
+//!    (Eq. 25) should weigh against the marginal cost.
+//! 2. Halo hops — 2-hop halos give exact 2-layer GNN inference; 1-hop
+//!    trades boundary-accuracy for less cross-server traffic.
+//! 3. Router batch size — latency/throughput tradeoff of the dynamic
+//!    batcher.
+
+use graphedge::bench::Table;
+use graphedge::coordinator::Controller;
+use graphedge::drl::{baselines, MaddpgConfig, Method};
+use graphedge::net::SystemParams;
+use graphedge::serving::{Fleet, GnnService};
+use graphedge::util::rng::Rng;
+
+fn zeta_sweep(ctrl: &Controller) -> graphedge::Result<()> {
+    let episodes: usize = std::env::var("GRAPHEDGE_BENCH_EPISODES")
+        .ok().and_then(|v| v.parse().ok()).unwrap_or(30);
+    let mut t = Table::new(
+        "ablation: R_sp weight ζ (Eq. 25) — cost & cross-traffic after training",
+        &["zeta_sp", "system cost C", "cross-Mb", "cut-size servers/subgraph"],
+    );
+    for &zeta in &[0.0, 0.1, 0.5, 2.0] {
+        let mut params = SystemParams::default();
+        params.zeta_sp = zeta;
+        let ctrl2 = Controller::new(params)?; // fresh runtime w/ params
+        let cfg = MaddpgConfig { episodes, ..MaddpgConfig::default() };
+        let (mut tr, _, _) = ctrl2.train_drlgo("cora", false, 150, 900, &cfg)?;
+        let mut rng = Rng::seed_from(404);
+        let mut env = ctrl2.make_env(Method::Drlgo, "cora", 150, 900, &mut rng)?;
+        tr.policy_offload(&mut env)?;
+        let c = env.evaluate();
+        // Mean number of servers used per (multi-user) subgraph.
+        let mut spread = 0.0;
+        let mut count = 0.0;
+        let subs: std::collections::HashSet<usize> =
+            env.subgraph_of.iter().copied().filter(|&s| s != usize::MAX).collect();
+        for sg in subs {
+            let members: Vec<usize> = (0..env.users.capacity())
+                .filter(|&v| env.subgraph_of[v] == sg && env.users.is_active(v))
+                .collect();
+            if members.len() < 2 {
+                continue;
+            }
+            let servers: std::collections::HashSet<usize> =
+                members.iter().map(|&v| env.offload.server[v]).collect();
+            spread += servers.len() as f64;
+            count += 1.0;
+        }
+        t.row(vec![
+            format!("{zeta}"),
+            format!("{:.3}", c.total()),
+            format!("{:.1}", c.cross_mb),
+            format!("{:.2}", if count > 0.0 { spread / count } else { 0.0 }),
+        ]);
+        let _ = ctrl;
+    }
+    t.emit("ablation_zeta");
+    Ok(())
+}
+
+fn halo_sweep(ctrl: &Controller) -> graphedge::Result<()> {
+    let mut t = Table::new(
+        "ablation: halo hops — accuracy vs cross-server fetch volume",
+        &["hops", "accuracy", "halo fetches", "halo Mb", "exec (s)"],
+    );
+    let svc = GnnService::load(&ctrl.rt, "gcn", "cora")?;
+    let ds = ctrl.dataset("cora")?;
+    for hops in [0usize, 1, 2] {
+        let mut rng = Rng::seed_from(17);
+        let mut env = ctrl.make_env(Method::Greedy, "cora", 150, 600, &mut rng)?;
+        baselines::run_greedy(&mut env);
+        let scenario = graphedge::graph::sample::Scenario {
+            users: env.scenario.users.clone(),
+            graph: env.users.graph().clone(),
+        };
+        let fleet = Fleet::new(&svc, &scenario, ds);
+        let users = &env.users;
+        let alive = |v: usize| users.is_active(v);
+        let rep = fleet.infer_round_hops(&env.offload, &alive, env.net.len(), None, hops)?;
+        t.row(vec![
+            hops.to_string(),
+            format!("{:.3}", fleet.accuracy(&rep, &alive)),
+            rep.halo_fetches.to_string(),
+            format!("{:.1}", rep.halo_mb),
+            format!("{:.3}", rep.execute_s),
+        ]);
+    }
+    t.emit("ablation_halo");
+    Ok(())
+}
+
+fn batch_sweep(ctrl: &Controller) -> graphedge::Result<()> {
+    let mut t = Table::new(
+        "ablation: dynamic batcher max_batch — latency vs throughput",
+        &["max_batch", "throughput req/s", "p50 ms", "p99 ms", "batches"],
+    );
+    for max_batch in [8usize, 32, 64, 128] {
+        std::env::set_var("GRAPHEDGE_MAX_BATCH", max_batch.to_string());
+        let stats =
+            graphedge::serving::serve_run(ctrl, "cora", "gcn", 150, 600, 600, 5)?;
+        t.row(vec![
+            max_batch.to_string(),
+            format!("{:.0}", stats.requests as f64 / stats.total_s),
+            format!("{:.3}", stats.latency_p50_s * 1e3),
+            format!("{:.3}", stats.latency_p99_s * 1e3),
+            stats.batches.to_string(),
+        ]);
+    }
+    std::env::remove_var("GRAPHEDGE_MAX_BATCH");
+    t.emit("ablation_batch");
+    Ok(())
+}
+
+fn main() -> graphedge::Result<()> {
+    let ctrl = Controller::new(SystemParams::default())?;
+    halo_sweep(&ctrl)?;
+    batch_sweep(&ctrl)?;
+    zeta_sweep(&ctrl)?;
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Fig. 10 — system cost of every method across GNN models (GCN, GAT,
+//! GraphSAGE, SGC) × datasets, N = 300, E = 4800, with real fleet
+//! inference (accuracy + execute time) for the DRLGO rows.
+
+fn main() -> graphedge::Result<()> {
+    graphedge::bench::figs::gnn_models_figure()
+}

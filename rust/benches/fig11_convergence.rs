@@ -1,0 +1,6 @@
+//! Fig. 11 — training-reward convergence, DRLGO vs PTOM, with 20%
+//! user/association churn per episode (the paper's §6.4 protocol).
+
+fn main() -> graphedge::Result<()> {
+    graphedge::bench::figs::convergence_figure()
+}

@@ -1,0 +1,6 @@
+//! Fig. 12 — ablation: DRLGO vs DRL-only (MADDPG without HiCut and
+//! without the R_sp reward constraint), N = 300, E = 4800.
+
+fn main() -> graphedge::Result<()> {
+    graphedge::bench::figs::ablation_figure()
+}

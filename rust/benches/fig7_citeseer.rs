@@ -1,0 +1,7 @@
+//! Fig. 7 — dynamic performance of DRLGO/PTOM/GM/RM on citeseer:
+//! system cost vs users, vs associations, under mobility, and
+//! cross-server communication cost.  See bench::figs for the driver.
+
+fn main() -> graphedge::Result<()> {
+    graphedge::bench::figs::dynamic_cost_figure("citeseer")
+}

@@ -1,0 +1,98 @@
+//! §Perf — hot-path microbenchmarks for the optimization pass:
+//! PJRT executes (GNN forward, actor forward, MADDPG train step),
+//! HiCut, environment stepping, padded-graph construction.
+
+use graphedge::bench::{fmt_secs, time_reps, Table};
+use graphedge::coordinator::Controller;
+use graphedge::drl::{MaddpgTrainer, Method};
+use graphedge::net::SystemParams;
+use graphedge::serving::{GnnService, PaddedGraph};
+use graphedge::util::rng::Rng;
+
+fn main() -> graphedge::Result<()> {
+    let ctrl = Controller::new(SystemParams::default())?;
+    let mut t = Table::new("perf hot paths", &["op", "mean", "p50", "p99", "n"]);
+    let mut push = |name: &str, s: graphedge::util::stats::Sample| {
+        t.row(vec![
+            name.into(),
+            fmt_secs(s.mean()),
+            fmt_secs(s.percentile(50.0)),
+            fmt_secs(s.percentile(99.0)),
+            s.len().to_string(),
+        ]);
+    };
+
+    // Scenario fixtures.
+    let mut rng = Rng::seed_from(1);
+    let mut env = ctrl.make_env(Method::Greedy, "cora", 300, 1800, &mut rng)?;
+    let ds = ctrl.dataset("cora")?;
+    let svc = GnnService::load(&ctrl.rt, "gcn", "cora")?;
+    let verts: Vec<usize> = (0..300).collect();
+
+    // 1. HiCut on the live scenario graph.
+    push("hicut(300u,1800e)", time_reps(3, 30, || {
+        let users = &env.users;
+        std::hint::black_box(graphedge::partition::hicut(users.graph(), &|v| {
+            users.is_active(v)
+        }));
+    }));
+
+    // 2. Padded-graph construction (320x320 adj + 320x1536 features).
+    let padded = PaddedGraph::build(
+        env.users.graph(), &env.scenario.users, ds, &verts, svc.n_max, svc.feat_pad,
+    );
+    push("padded_build", time_reps(2, 20, || {
+        std::hint::black_box(PaddedGraph::build(
+            env.users.graph(), &env.scenario.users, ds, &verts, svc.n_max,
+            svc.feat_pad,
+        ));
+    }));
+
+    // 3. GNN forward (the serving hot path).
+    push("gcn_cora infer", time_reps(3, 20, || {
+        std::hint::black_box(svc.infer(&padded).unwrap());
+    }));
+    for model in ["gat", "sage", "sgc"] {
+        let s2 = GnnService::load(&ctrl.rt, model, "cora")?;
+        push(&format!("{model}_cora infer"), time_reps(2, 10, || {
+            std::hint::black_box(s2.infer(&padded).unwrap());
+        }));
+    }
+
+    // 4. Environment step + observation build.
+    env.reset();
+    push("env.obs(all agents)", time_reps(3, 50, || {
+        for m in 0..env.agents() {
+            std::hint::black_box(env.obs(m));
+        }
+    }));
+
+    // 5. actor_fwd execute.
+    let mut tr = MaddpgTrainer::new(&ctrl.rt, 1024)?;
+    let obs = vec![0.1f32; tr.m * graphedge::drl::env::OBS];
+    let mut rng2 = Rng::seed_from(2);
+    push("actor_fwd exec", time_reps(5, 100, || {
+        std::hint::black_box(tr.select_actions(&obs, 0.1, &mut rng2).unwrap());
+    }));
+
+    // 6. maddpg_train execute (B=256, all 4 agents).
+    {
+        let mut env2 = ctrl.make_env(Method::Drlgo, "cora", 64, 200, &mut rng)?;
+        // Fill replay.
+        let cfg = graphedge::drl::MaddpgConfig {
+            episodes: 1, warmup: usize::MAX, ..Default::default()
+        };
+        let mut r = Rng::seed_from(3);
+        tr.run_episode(&mut env2, &cfg, true, &mut r)?;
+        while tr.replay_len() < 300 {
+            env2.reset();
+            tr.run_episode(&mut env2, &cfg, true, &mut r)?;
+        }
+        push("maddpg_train exec", time_reps(2, 15, || {
+            std::hint::black_box(tr.train_step(&mut r).unwrap());
+        }));
+    }
+
+    t.emit("perf_hotpath");
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! Bench harness + the shared paper-figure experiment drivers.
+//!
+//! Original header: (criterion is unavailable offline): timing loops,
+//! table rendering and CSV emission for the paper-figure benches in
+//! `rust/benches/`.
+
+pub mod figs;
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use crate::util::stats::Sample;
+
+/// Time one closure over `reps` repetitions (after `warmup` runs);
+/// returns per-rep seconds.
+pub fn time_reps<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Sample::default();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// A simple aligned text table, printed to stdout and collected as CSV.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout and also write `bench_results/<name>.csv`.
+    pub fn emit(&self, name: &str) {
+        print!("{}", self.render());
+        let _ = std::fs::create_dir_all("bench_results");
+        let mut csv = String::new();
+        let _ = writeln!(csv, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(csv, "{}", row.join(","));
+        }
+        let path = format!("bench_results/{name}.csv");
+        if std::fs::write(&path, csv).is_ok() {
+            println!("[wrote {path}]");
+        }
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_and_emits() {
+        let mut t = Table::new("test", &["a", "b"]);
+        t.row(vec!["1".into(), "hello".into()]);
+        let r = t.render();
+        assert!(r.contains("test") && r.contains("hello"));
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_rejected() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn time_reps_counts() {
+        let s = time_reps(1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-7).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,209 @@
+//! The EC controller (core server) — §3.1's processing flow, end to
+//! end:
+//!
+//! 1. **Perceive** the user topology as a dynamic graph layout (§3.2).
+//! 2. **Optimize** the layout with HiCut into weakly-associated
+//!    subgraphs (§4).
+//! 3. **Decide** a graph offloading with DRLGO or a baseline (§5).
+//! 4. **Dispatch** each subgraph's tasks to its edge server and run
+//!    distributed GNN inference (serving layer), accounting all costs
+//!    (Eqs. 12–13).
+//!
+//! [`Controller`] owns the PJRT runtime and loaded datasets;
+//! [`Controller::run_scenario`] executes one full round and returns a
+//! [`ScenarioReport`] — the unit every bench and example builds on.
+
+use std::collections::BTreeMap;
+
+use anyhow::Context;
+
+use crate::drl::{baselines, Env, EnvConfig, MaddpgConfig, MaddpgTrainer, Method, PpoConfig, PpoTrainer};
+use crate::graph::Dataset;
+use crate::net::cost::CostBreakdown;
+use crate::net::SystemParams;
+use crate::runtime::Runtime;
+use crate::serving::{Fleet, GnnService};
+use crate::util::rng::Rng;
+
+/// Result of one coordinated round.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub method: &'static str,
+    pub dataset: String,
+    pub model: String,
+    pub n_users: usize,
+    pub n_assocs: usize,
+    /// Analytic system cost (Eqs. 12–13).
+    pub cost: CostBreakdown,
+    /// HiCut layout quality on this scenario.
+    pub layout_cut_edges: usize,
+    pub subgraphs: usize,
+    /// Inference results (when the fleet ran).
+    pub accuracy: f64,
+    pub halo_fetches: usize,
+    pub halo_mb: f64,
+    pub inference_s: f64,
+    /// Wall-clock of the offloading decision itself.
+    pub decision_s: f64,
+}
+
+/// The EC controller.
+pub struct Controller {
+    pub rt: Runtime,
+    pub params: SystemParams,
+    datasets: BTreeMap<String, Dataset>,
+}
+
+impl Controller {
+    /// Open artifacts and load every dataset in the manifest.
+    pub fn new(params: SystemParams) -> crate::Result<Self> {
+        let rt = Runtime::open_default()?;
+        let mut datasets = BTreeMap::new();
+        for (name, spec) in rt.manifest.datasets.clone() {
+            let path = rt.artifacts_root().join(&spec.path);
+            let ds = Dataset::load(&path, &name)
+                .with_context(|| format!("loading dataset {name}"))?;
+            datasets.insert(name, ds);
+        }
+        Ok(Controller { rt, params, datasets })
+    }
+
+    pub fn dataset(&self, name: &str) -> crate::Result<&Dataset> {
+        self.datasets
+            .get(name)
+            .with_context(|| format!("unknown dataset {name:?}"))
+    }
+
+    pub fn dataset_names(&self) -> Vec<&str> {
+        self.datasets.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Build an environment for `method` on `dataset`.
+    pub fn make_env(
+        &self,
+        method: Method,
+        dataset: &str,
+        n_users: usize,
+        n_assocs: usize,
+        rng: &mut Rng,
+    ) -> crate::Result<Env> {
+        let ds = self.dataset(dataset)?;
+        let use_hicut = matches!(method, Method::Drlgo | Method::Greedy | Method::Random);
+        let cfg = EnvConfig {
+            n_users,
+            n_assocs,
+            use_hicut,
+            use_rsp: matches!(method, Method::Drlgo),
+            zeta_sp: self.params.zeta_sp,
+            ..EnvConfig::default()
+        };
+        Ok(Env::new(ds, self.params.clone(), cfg, rng))
+    }
+
+    /// Train DRLGO (or the DRL-only ablation) on a dataset sample.
+    pub fn train_drlgo(
+        &self,
+        dataset: &str,
+        ablation: bool,
+        n_users: usize,
+        n_assocs: usize,
+        cfg: &MaddpgConfig,
+    ) -> crate::Result<(MaddpgTrainer<'_>, Env, Vec<crate::drl::maddpg::EpisodeStats>)> {
+        let method = if ablation { Method::DrlOnly } else { Method::Drlgo };
+        let mut rng = Rng::seed_from(cfg.seed);
+        let mut env = self.make_env(method, dataset, n_users, n_assocs, &mut rng)?;
+        if ablation {
+            env.cfg.use_hicut = false;
+            env.cfg.use_rsp = false;
+            env.recut();
+            env.reset();
+        }
+        let mut trainer = MaddpgTrainer::new(&self.rt, 100_000)?;
+        let curve = trainer.train(&mut env, cfg)?;
+        Ok((trainer, env, curve))
+    }
+
+    /// Train the PTOM baseline.
+    pub fn train_ptom(
+        &self,
+        dataset: &str,
+        n_users: usize,
+        n_assocs: usize,
+        cfg: &PpoConfig,
+    ) -> crate::Result<(PpoTrainer<'_>, Env, Vec<crate::drl::maddpg::EpisodeStats>)> {
+        let mut rng = Rng::seed_from(cfg.seed);
+        let mut env = self.make_env(Method::Ptom, dataset, n_users, n_assocs, &mut rng)?;
+        let mut trainer = PpoTrainer::new(&self.rt)?;
+        let curve = trainer.train(&mut env, cfg)?;
+        Ok((trainer, env, curve))
+    }
+
+    /// Execute one full round: decide an offload with `method` (using
+    /// pre-trained policies where given), optionally run distributed
+    /// inference, and report every cost.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_scenario(
+        &self,
+        method: Method,
+        env: &mut Env,
+        dataset: &str,
+        model: &str,
+        drlgo: Option<&mut MaddpgTrainer>,
+        ptom: Option<&mut PpoTrainer>,
+        run_inference: bool,
+        rng: &mut Rng,
+    ) -> crate::Result<ScenarioReport> {
+        env.profile = crate::net::GnnProfile::from_name(model);
+        let t0 = std::time::Instant::now();
+        match method {
+            Method::Drlgo | Method::DrlOnly => {
+                let tr = drlgo.context("DRLGO policy required")?;
+                tr.policy_offload(env)?;
+            }
+            Method::Ptom => {
+                let tr = ptom.context("PTOM policy required")?;
+                tr.policy_offload(env)?;
+            }
+            Method::Greedy => baselines::run_greedy(env),
+            Method::Random => baselines::run_random(env, rng),
+        }
+        let decision_s = t0.elapsed().as_secs_f64();
+        let cost = env.evaluate();
+
+        let mut report = ScenarioReport {
+            method: method.name(),
+            dataset: dataset.to_string(),
+            model: model.to_string(),
+            n_users: env.cfg.n_users,
+            n_assocs: env.cfg.n_assocs,
+            cost,
+            layout_cut_edges: env.layout_cut_edges(),
+            subgraphs: env.subgraph_size.len(),
+            accuracy: 0.0,
+            halo_fetches: 0,
+            halo_mb: 0.0,
+            inference_s: 0.0,
+            decision_s,
+        };
+
+        if run_inference {
+            let ds = self.dataset(dataset)?;
+            let svc = GnnService::load(&self.rt, model, dataset)?;
+            // The fleet reads the *current* user graph (post-churn).
+            let scenario = crate::graph::sample::Scenario {
+                users: env.scenario.users.clone(),
+                graph: env.users.graph().clone(),
+            };
+            let fleet = Fleet::new(&svc, &scenario, ds);
+            let users = &env.users;
+            let alive = |v: usize| users.is_active(v);
+            let servers = env.net.len();
+            let rep = fleet.infer_round(&env.offload, &alive, servers, None)?;
+            report.accuracy = fleet.accuracy(&rep, &alive);
+            report.halo_fetches = rep.halo_fetches;
+            report.halo_mb = rep.halo_mb;
+            report.inference_s = rep.execute_s;
+        }
+        Ok(report)
+    }
+}

@@ -1,0 +1,90 @@
+//! Non-learning baselines of §6.1: GM (greedy nearest server) and RM
+//! (uniform random server).
+
+use crate::util::rng::Rng;
+
+use super::env::Env;
+
+/// GM: offload every user to the nearest edge server that still has
+/// capacity (falling back to nearest overall).
+pub fn run_greedy(env: &mut Env) {
+    env.reset();
+    while let Some(u) = env.current_user() {
+        let pos = env.users.pos(u);
+        let eligible = env.eligible();
+        let server = if eligible.is_empty() {
+            env.net.nearest(pos)
+        } else {
+            *eligible
+                .iter()
+                .min_by(|&&a, &&b| {
+                    let da = env.net.servers[a].pos.dist(&pos);
+                    let db = env.net.servers[b].pos.dist(&pos);
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap()
+        };
+        env.step(server);
+    }
+}
+
+/// RM: uniform random placement, ignoring all scenario information.
+pub fn run_random(env: &mut Env, rng: &mut Rng) {
+    env.reset();
+    while env.current_user().is_some() {
+        let server = rng.below(env.agents());
+        env.step(server);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::drl::env::testutil::small_env;
+
+    #[test]
+    fn greedy_completes_and_prefers_near_servers() {
+        let mut env = small_env(11);
+        run_greedy(&mut env);
+        assert!(env.finished());
+        let active = env.users.active_users();
+        assert!(env.offload.all_assigned(&active));
+        // Spot-check: with all servers eligible at start, user 0's
+        // server should be its nearest.
+        let mut env2 = small_env(11);
+        let u = env2.current_user().unwrap();
+        let pos = env2.users.pos(u);
+        run_greedy(&mut env2);
+        let nearest = env2.net.nearest(pos);
+        assert_eq!(env2.offload.server[u], nearest);
+    }
+
+    #[test]
+    fn random_completes() {
+        let mut env = small_env(12);
+        let mut rng = Rng::seed_from(5);
+        run_random(&mut env, &mut rng);
+        assert!(env.finished());
+        assert!(env.offload.all_assigned(&env.users.active_users()));
+    }
+
+    #[test]
+    fn greedy_generally_cheaper_than_random() {
+        // Averaged over seeds (GM considers distance; RM nothing).
+        let mut g_total = 0.0;
+        let mut r_total = 0.0;
+        for seed in 0..8 {
+            let mut eg = small_env(100 + seed);
+            run_greedy(&mut eg);
+            g_total += eg.evaluate().total();
+            let mut er = small_env(100 + seed);
+            let mut rng = Rng::seed_from(seed);
+            run_random(&mut er, &mut rng);
+            r_total += er.evaluate().total();
+        }
+        assert!(
+            g_total < r_total * 1.1,
+            "greedy {g_total} should not be much worse than random {r_total}"
+        );
+    }
+}

@@ -1,0 +1,581 @@
+//! The MAMDP environment of §5.2.
+//!
+//! One *episode* offloads every active user, one user per step
+//! (Algorithm 2's inner while-loop).  At each step all M agents emit a
+//! two-dimensional action (Eq. 22); the environment assigns the user
+//! to the capacity-feasible server whose agent expressed the strongest
+//! preference, pays the marginal system cost (the C_m of Eq. 24), and
+//! adds the subgraph-split penalty R_sp = ζ·N_s/N_c (Eq. 25) that
+//! pushes users of one HiCut subgraph onto one server.
+//!
+//! Observation layout (OBS = 18 per agent, all values normalized to
+//! ~[0, 1]; mirrored by `python/compile/drl.py::OBS`):
+//!
+//! | idx | meaning                                        |
+//! |-----|------------------------------------------------|
+//! | 0,1 | current user position x, y / plane             |
+//! | 2   | current user active degree / 20                |
+//! | 3   | current user task size / 1.5 Mb                |
+//! | 4   | user's subgraph size / N                       |
+//! | 5   | fraction of that subgraph already on server m  |
+//! | 6   | remaining capacity of m / capacity             |
+//! | 7   | load of m / N                                  |
+//! | 8   | B_{i,m} / 50 MHz                               |
+//! | 9   | uplink rate / 1 Gbit/s                         |
+//! | 10  | distance(user, m) / plane                      |
+//! | 11  | f_m / 10 GHz                                   |
+//! | 12,13 | server m position x, y / plane               |
+//! | 14  | users remaining / N                            |
+//! | 15  | est. upload time / 0.1 s                       |
+//! | 16  | est. compute time / 0.01 s                     |
+//! | 17  | fraction of user's placed neighbors on m       |
+
+use crate::graph::dynamic::{ChurnConfig, DynamicGraph};
+use crate::graph::geb::Dataset;
+use crate::graph::sample::{sample_scenario, Scenario};
+use crate::net::cost::{CostModel, GnnProfile, Offload, UNASSIGNED};
+use crate::net::params::SystemParams;
+use crate::net::topology::{EdgeNetwork, UserLinks};
+use crate::partition::{hicut, Partition};
+use crate::util::rng::Rng;
+
+/// Per-agent observation width (must equal drl.py::OBS).
+pub const OBS: usize = 18;
+
+/// Environment construction knobs.
+#[derive(Clone, Debug)]
+pub struct EnvConfig {
+    pub n_users: usize,
+    pub n_assocs: usize,
+    /// Run HiCut and order users subgraph-by-subgraph (DRLGO); false
+    /// for the DRL-only ablation and PTOM.
+    pub use_hicut: bool,
+    /// Apply the R_sp subgraph-split penalty (Eq. 25).
+    pub use_rsp: bool,
+    /// ζ of Eq. 25.
+    pub zeta_sp: f64,
+    /// Reward scale on the marginal cost (keeps rewards O(1)).
+    pub cost_scale: f64,
+    pub churn: ChurnConfig,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        EnvConfig {
+            n_users: 300,
+            n_assocs: 4800,
+            use_hicut: true,
+            use_rsp: true,
+            zeta_sp: 0.5,
+            cost_scale: 10.0,
+            churn: ChurnConfig::default(),
+        }
+    }
+}
+
+/// Result of one environment step.
+#[derive(Clone, Debug)]
+pub struct StepOutcome {
+    /// Per-agent rewards R_m (Eq. 24).
+    pub rewards: Vec<f64>,
+    /// Per-agent done flags (server at capacity, or episode over).
+    pub done: Vec<bool>,
+    /// All users offloaded?
+    pub finished: bool,
+    /// Server the user was actually assigned to.
+    pub assigned: usize,
+    /// Raw marginal cost paid this step.
+    pub marginal_cost: f64,
+}
+
+/// The environment.
+pub struct Env {
+    pub cfg: EnvConfig,
+    /// GNN architecture whose compute profile drives Eqs. 10–11.
+    pub profile: GnnProfile,
+    pub params: SystemParams,
+    pub net: EdgeNetwork,
+    pub links: UserLinks,
+    pub users: DynamicGraph,
+    pub scenario: Scenario,
+    pub layer_dims: Vec<usize>,
+    /// Subgraph id per scenario user (identity w/o HiCut).
+    pub subgraph_of: Vec<usize>,
+    pub subgraph_size: Vec<usize>,
+    /// Episode iteration order.
+    pub order: Vec<usize>,
+    // --- per-episode state ---
+    pub offload: Offload,
+    pub loads: Vec<usize>,
+    cursor: usize,
+    /// Per subgraph: per-server assigned counts.
+    sub_server_count: Vec<Vec<usize>>,
+    sub_offloaded: Vec<usize>,
+    /// Overflow assignments (capacity exceeded because nothing was free).
+    pub overflow: usize,
+}
+
+impl Env {
+    /// Build a fresh environment from a dataset sample.
+    pub fn new(
+        dataset: &Dataset,
+        params: SystemParams,
+        cfg: EnvConfig,
+        rng: &mut Rng,
+    ) -> Self {
+        let scenario = sample_scenario(dataset, cfg.n_users, cfg.n_assocs, rng);
+        let net = EdgeNetwork::build(&params, cfg.n_users, rng);
+        let links = UserLinks::draw(&params, cfg.n_users, net.len(), rng);
+        let task_mb: Vec<f64> = (0..cfg.n_users).map(|_| dataset.task_mbit(0)).collect();
+        let users =
+            DynamicGraph::new(scenario.graph.clone(), task_mb, params.plane_m, rng);
+        let layer_dims = vec![dataset.feat_dim.min(1500), 64, dataset.classes];
+        let mut env = Env {
+            cfg,
+            profile: GnnProfile::Gcn,
+            params,
+            net,
+            links,
+            users,
+            scenario,
+            layer_dims,
+            subgraph_of: Vec::new(),
+            subgraph_size: Vec::new(),
+            order: Vec::new(),
+            offload: Offload::empty(0),
+            loads: Vec::new(),
+            cursor: 0,
+            sub_server_count: Vec::new(),
+            sub_offloaded: Vec::new(),
+            overflow: 0,
+        };
+        env.recut();
+        env.reset();
+        env
+    }
+
+    pub fn agents(&self) -> usize {
+        self.net.len()
+    }
+
+    /// Re-run the graph-layout optimization after topology changes
+    /// (Algorithm 2 line 8) and rebuild the iteration order.
+    pub fn recut(&mut self) {
+        let users = &self.users;
+        let n = users.capacity();
+        let partition: Partition = if self.cfg.use_hicut {
+            hicut(users.graph(), &|v| users.is_active(v))
+        } else {
+            // Ablation: each active user its own "subgraph".
+            Partition {
+                subgraphs: users.active_users().into_iter().map(|v| vec![v]).collect(),
+            }
+        };
+        self.subgraph_of = partition.assignment(n);
+        self.subgraph_size = partition.subgraphs.iter().map(|s| s.len()).collect();
+        // Iterate subgraph by subgraph so colocation is learnable.
+        self.order = partition.subgraphs.iter().flatten().copied().collect();
+        self.sub_server_count =
+            vec![vec![0; self.net.len()]; partition.subgraphs.len()];
+        self.sub_offloaded = vec![0; partition.subgraphs.len()];
+    }
+
+    /// Apply one scenario churn step and re-optimize the layout.
+    pub fn mutate(&mut self, rng: &mut Rng) {
+        let churn = self.cfg.churn;
+        self.users.step(&churn, rng);
+        self.recut();
+    }
+
+    /// Start a new episode (offloading round) on the current topology.
+    pub fn reset(&mut self) {
+        let n = self.users.capacity();
+        self.offload = Offload::empty(n);
+        self.loads = vec![0; self.net.len()];
+        self.cursor = 0;
+        for counts in &mut self.sub_server_count {
+            counts.fill(0);
+        }
+        self.sub_offloaded.fill(0);
+        self.overflow = 0;
+        self.skip_inactive();
+    }
+
+    fn skip_inactive(&mut self) {
+        while self.cursor < self.order.len()
+            && !self.users.is_active(self.order[self.cursor])
+        {
+            self.cursor += 1;
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.cursor >= self.order.len()
+    }
+
+    pub fn current_user(&self) -> Option<usize> {
+        self.order.get(self.cursor).copied()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.order[self.cursor.min(self.order.len())..]
+            .iter()
+            .filter(|&&u| self.users.is_active(u))
+            .count()
+    }
+
+    fn cost_model(&self) -> CostModel<'_> {
+        CostModel::new(
+            &self.params,
+            &self.net,
+            &self.links,
+            &self.users,
+            self.layer_dims.clone(),
+        )
+        .with_profile(self.profile)
+    }
+
+    /// Per-agent observation O_m (Eq. 20) for the current user.
+    pub fn obs(&self, m: usize) -> [f32; OBS] {
+        let mut o = [0.0f32; OBS];
+        let Some(u) = self.current_user() else { return o };
+        let cm = self.cost_model();
+        let plane = self.params.plane_m;
+        let pos = self.users.pos(u);
+        let server = &self.net.servers[m];
+        let sg = self.subgraph_of[u];
+        let sg_size = if sg == usize::MAX { 1 } else { self.subgraph_size[sg] };
+        let n = self.cfg.n_users as f32;
+        let rate = cm.uplink_rate(u, m);
+
+        o[0] = (pos.x / plane) as f32;
+        o[1] = (pos.y / plane) as f32;
+        o[2] = self.users.active_degree(u) as f32 / 20.0;
+        o[3] = self.users.task_mb(u) as f32 / 1.5;
+        o[4] = sg_size as f32 / n;
+        o[5] = if sg != usize::MAX && self.sub_offloaded[sg] > 0 {
+            self.sub_server_count[sg][m] as f32 / self.sub_offloaded[sg] as f32
+        } else {
+            0.0
+        };
+        o[6] = (server.capacity.saturating_sub(self.loads[m])) as f32
+            / server.capacity.max(1) as f32;
+        o[7] = self.loads[m] as f32 / n;
+        o[8] = (self.links.bw_hz[u][m] / 50e6) as f32;
+        o[9] = (rate / 1e9) as f32;
+        o[10] = (pos.dist(&server.pos) / plane) as f32;
+        o[11] = (server.f_hz / 10e9) as f32;
+        o[12] = (server.pos.x / plane) as f32;
+        o[13] = (server.pos.y / plane) as f32;
+        o[14] = self.remaining() as f32 / n;
+        o[15] = (self.users.task_mb(u) * 1e6 / rate / 0.1) as f32;
+        o[16] = (self.users.task_mb(u) * 1e6 / server.f_hz / 0.01) as f32;
+        let (mut placed, mut placed_here) = (0f32, 0f32);
+        for &nb in self.users.graph().neighbors(u) {
+            let nb = nb as usize;
+            if !self.users.is_active(nb) {
+                continue;
+            }
+            let s = self.offload.server[nb];
+            if s != UNASSIGNED {
+                placed += 1.0;
+                if s == m {
+                    placed_here += 1.0;
+                }
+            }
+        }
+        o[17] = if placed > 0.0 { placed_here / placed } else { 0.0 };
+        o
+    }
+
+    /// Global state S (Eq. 19): concatenated agent observations.
+    pub fn state(&self) -> Vec<f32> {
+        (0..self.agents()).flat_map(|m| self.obs(m)).collect()
+    }
+
+    /// Servers that can still accept a task.
+    pub fn eligible(&self) -> Vec<usize> {
+        (0..self.agents())
+            .filter(|&m| self.loads[m] < self.net.servers[m].capacity)
+            .collect()
+    }
+
+    /// Decode the joint action (Eq. 22): among capacity-feasible
+    /// servers, the agent with the largest preference margin
+    /// `a[m][0] − a[m][1]` wins; if none is feasible the least-loaded
+    /// server takes the task (counted in `overflow`).
+    pub fn decode_action(&self, actions: &[[f32; 2]]) -> usize {
+        let eligible = self.eligible();
+        if eligible.is_empty() {
+            return (0..self.agents())
+                .min_by_key(|&m| self.loads[m])
+                .unwrap();
+        }
+        *eligible
+            .iter()
+            .max_by(|&&a, &&b| {
+                let ma = actions[a][0] - actions[a][1];
+                let mb = actions[b][0] - actions[b][1];
+                ma.partial_cmp(&mb).unwrap()
+            })
+            .unwrap()
+    }
+
+    /// Assign the current user to `server` and advance the episode.
+    ///
+    /// Capacity is a hard constraint for every method (the paper's
+    /// done_m semantics): a full server redirects the task to the
+    /// least-loaded server with room; only when *every* server is full
+    /// does the assignment overflow (counted in `self.overflow`).
+    pub fn step(&mut self, requested: usize) -> StepOutcome {
+        let m_agents = self.agents();
+        let u = self.current_user().expect("step after episode end");
+        let mut server = requested;
+        if self.loads[server] >= self.net.servers[server].capacity {
+            let eligible = self.eligible();
+            if let Some(&alt) = eligible
+                .iter()
+                .min_by_key(|&&m| self.loads[m])
+            {
+                server = alt;
+            } else {
+                self.overflow += 1;
+            }
+        }
+        let marginal = {
+            let cm = self.cost_model();
+            cm.marginal_cost(&self.offload, u, server)
+        };
+        self.offload.server[u] = server;
+        self.loads[server] += 1;
+
+        // Subgraph-split penalty (Eq. 25).
+        let mut rsp = 0.0;
+        let sg = self.subgraph_of[u];
+        if sg != usize::MAX {
+            self.sub_server_count[sg][server] += 1;
+            self.sub_offloaded[sg] += 1;
+            if self.cfg.use_rsp {
+                let ns = self.sub_server_count[sg].iter().filter(|&&c| c > 0).count();
+                let nc = self.sub_offloaded[sg];
+                // ζ·N_s/N_c, shifted so perfect colocation costs 0.
+                rsp = self.cfg.zeta_sp * (ns as f64 - 1.0) / nc as f64;
+            }
+        }
+
+        self.cursor += 1;
+        self.skip_inactive();
+        let finished = self.finished();
+
+        let mut rewards = vec![0.0f64; m_agents];
+        rewards[server] = -(marginal * self.cfg.cost_scale + rsp);
+        let done: Vec<bool> = (0..m_agents)
+            .map(|m| finished || self.loads[m] >= self.net.servers[m].capacity)
+            .collect();
+        StepOutcome { rewards, done, finished, assigned: server, marginal_cost: marginal }
+    }
+
+    /// Evaluate the completed (or partial) offload with the full cost
+    /// model (Eqs. 12–13).
+    pub fn evaluate(&self) -> crate::net::cost::CostBreakdown {
+        self.cost_model().evaluate(&self.offload)
+    }
+
+    /// Cut quality of the current layout (diagnostics).
+    pub fn layout_cut_edges(&self) -> usize {
+        let a = &self.subgraph_of;
+        self.users
+            .graph()
+            .edge_list()
+            .iter()
+            .filter(|&&(x, y)| {
+                let (sx, sy) = (a[x as usize], a[y as usize]);
+                sx != usize::MAX && sy != usize::MAX && sx != sy
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    use super::*;
+    use crate::graph::generate::preferential_attachment;
+
+    /// Small synthetic dataset for environment tests.
+    pub fn tiny_dataset(n: usize) -> Dataset {
+        let mut rng = Rng::seed_from(1234);
+        let graph = preferential_attachment(n, 6, &mut rng);
+        Dataset {
+            name: "tiny".into(),
+            n,
+            e: graph.num_edges(),
+            feat_dim: 64,
+            classes: 3,
+            labels: (0..n).map(|i| (i % 3) as u8).collect(),
+            feat_ptr: (0..=n as u32).collect(),
+            feat_idx: (0..n).map(|i| (i % 64) as u16).collect(),
+            graph,
+        }
+    }
+
+    pub fn small_env(seed: u64) -> Env {
+        let ds = tiny_dataset(200);
+        let cfg = EnvConfig {
+            n_users: 40,
+            n_assocs: 80,
+            ..EnvConfig::default()
+        };
+        let mut rng = Rng::seed_from(seed);
+        Env::new(&ds, SystemParams::default(), cfg, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::small_env;
+    use super::*;
+
+    #[test]
+    fn episode_assigns_every_active_user() {
+        let mut env = small_env(1);
+        let mut steps = 0;
+        while !env.finished() {
+            let server = steps % env.agents();
+            env.step(server);
+            steps += 1;
+        }
+        assert_eq!(steps, env.users.active_count());
+        assert!(env.offload.all_assigned(&env.users.active_users()));
+    }
+
+    #[test]
+    fn observations_are_bounded() {
+        let mut env = small_env(2);
+        for _ in 0..10 {
+            for m in 0..env.agents() {
+                let o = env.obs(m);
+                for (i, v) in o.iter().enumerate() {
+                    assert!(v.is_finite(), "obs[{i}] not finite");
+                    assert!((-0.01..=5.0).contains(v), "obs[{i}] = {v}");
+                }
+            }
+            env.step(0);
+        }
+    }
+
+    #[test]
+    fn state_is_concat_of_obs() {
+        let env = small_env(3);
+        let s = env.state();
+        assert_eq!(s.len(), env.agents() * OBS);
+        let o1 = env.obs(1);
+        assert_eq!(&s[OBS..2 * OBS], &o1[..]);
+    }
+
+    #[test]
+    fn decode_action_respects_capacity() {
+        let mut env = small_env(4);
+        // Saturate server 0.
+        let cap0 = env.net.servers[0].capacity;
+        for _ in 0..cap0 {
+            if env.finished() {
+                break;
+            }
+            env.step(0);
+        }
+        if !env.finished() {
+            // Even with max preference for 0, decode must avoid it.
+            let mut acts = vec![[0.0f32, 1.0]; env.agents()];
+            acts[0] = [1.0, 0.0];
+            let chosen = env.decode_action(&acts);
+            assert_ne!(chosen, 0);
+        }
+    }
+
+    #[test]
+    fn rsp_penalizes_subgraph_splits() {
+        let mut env = small_env(5);
+        // Find a subgraph with >= 2 users in iteration order (adjacent).
+        let u0 = env.current_user().unwrap();
+        let sg = env.subgraph_of[u0];
+        let r0 = env.step(0);
+        assert!(r0.rewards[0] <= 0.0);
+        if let Some(u1) = env.current_user() {
+            if env.subgraph_of[u1] == sg {
+                // Splitting to a new server must cost extra vs colocating.
+                let mut env2 = small_env(5);
+                env2.step(0);
+                let together = env2.step(0).rewards[0];
+                let mut env3 = small_env(5);
+                env3.step(0);
+                let split = env3.step(1).rewards[1];
+                // Same marginal structure, but split pays R_sp.
+                assert!(
+                    split < together + 1e-12,
+                    "split {split} should be <= colocated {together}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ablation_disables_hicut_and_rsp() {
+        let ds = testutil::tiny_dataset(150);
+        let cfg = EnvConfig {
+            n_users: 30,
+            n_assocs: 60,
+            use_hicut: false,
+            use_rsp: false,
+            ..EnvConfig::default()
+        };
+        let mut rng = Rng::seed_from(6);
+        let mut env = Env::new(&ds, SystemParams::default(), cfg, &mut rng);
+        // Every subgraph is a singleton.
+        assert!(env.subgraph_size.iter().all(|&s| s == 1));
+        let out = env.step(1);
+        // Singleton subgraphs → N_s = 1 → rsp = 0; reward is pure cost.
+        assert!(out.rewards[1] < 0.0);
+    }
+
+    #[test]
+    fn mutate_keeps_env_consistent() {
+        let mut env = small_env(7);
+        let mut rng = Rng::seed_from(8);
+        for _ in 0..5 {
+            env.mutate(&mut rng);
+            env.reset();
+            assert_eq!(env.subgraph_of.len(), env.users.capacity());
+            // Order covers exactly the active users.
+            let active: std::collections::HashSet<usize> =
+                env.users.active_users().into_iter().collect();
+            let in_order: std::collections::HashSet<usize> =
+                env.order.iter().copied().filter(|&u| active.contains(&u)).collect();
+            assert_eq!(active, in_order);
+            while !env.finished() {
+                env.step(0);
+            }
+            assert!(env.evaluate().total() > 0.0);
+        }
+    }
+
+    #[test]
+    fn evaluate_reflects_colocation_benefit() {
+        let mut a = small_env(9);
+        while !a.finished() {
+            a.step(0); // everyone on one server: no transfers
+        }
+        let mut b = small_env(9);
+        let mut i = 0;
+        while !b.finished() {
+            b.step(i % b.agents()); // round-robin: many cross edges
+            i += 1;
+        }
+        let ca = a.evaluate();
+        let cb = b.evaluate();
+        // Capacity redirects keep "all on one server" from being literal,
+        // but the colocating policy must still cut far fewer edges than
+        // round-robin and pay less transfer energy.
+        assert!(ca.cross_edges < cb.cross_edges);
+        assert!(cb.i_transfer_j > ca.i_transfer_j);
+    }
+}

@@ -1,0 +1,344 @@
+//! DRLGO — the MADDPG-based graph offloading trainer (Algorithm 2).
+//!
+//! The trainer owns host-side copies of every agent's parameters and
+//! Adam state; the actual math is two AOT executables:
+//!
+//! * `actor_fwd`  — π_m(O_m) for all M agents in one call (rollout),
+//! * `maddpg_train` — one full update (critic + actor + soft targets)
+//!   for all M agents on a replay mini-batch.
+//!
+//! Exploration follows §6.1's rate of 0.1: Gaussian noise with σ =
+//! `explore_sigma` added to actions and clipped to [0, 1].  Each
+//! episode first churns the scenario (Algorithm 2 line 8), re-runs
+//! HiCut, then offloads users one by one.
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::runtime::{lit, Executable, Runtime};
+use crate::tensor::{Archive, Tensor};
+use crate::util::rng::Rng;
+
+use super::env::{Env, OBS};
+use super::replay::{Replay, Transition};
+
+/// Training configuration (defaults follow Table 2 / §6.1).
+#[derive(Clone, Debug)]
+pub struct MaddpgConfig {
+    pub episodes: usize,
+    /// Environment steps between train-step executions.
+    pub train_every: usize,
+    /// Minimum replay size before learning starts.
+    pub warmup: usize,
+    /// Exploration noise σ (exploration rate 0.1 per §6.1).
+    pub explore_sigma: f64,
+    pub replay_cap: usize,
+    /// Churn the scenario between episodes (dynamic training, Fig. 11).
+    pub churn: bool,
+    pub seed: u64,
+}
+
+impl Default for MaddpgConfig {
+    fn default() -> Self {
+        MaddpgConfig {
+            episodes: 150,
+            train_every: 4,
+            warmup: 512,
+            explore_sigma: 0.1,
+            replay_cap: 100_000,
+            churn: true,
+            seed: 0xD71,
+        }
+    }
+}
+
+/// Per-episode training record.
+#[derive(Clone, Copy, Debug)]
+pub struct EpisodeStats {
+    pub episode: usize,
+    /// Global reward R = Σ_m R_m accumulated over the episode.
+    pub reward: f64,
+    /// Final evaluated system cost C of the episode's offload.
+    pub system_cost: f64,
+    pub critic_loss: f64,
+    pub actor_loss: f64,
+    pub steps: usize,
+}
+
+pub struct MaddpgTrainer<'rt> {
+    /// Keeps the runtime (and thus the PJRT client) alive for the
+    /// lifetime of the cached executables.
+    _rt: &'rt Runtime,
+    actor_fwd: Arc<Executable>,
+    train_exe: Arc<Executable>,
+    pub m: usize,
+    pub pa: usize,
+    pub pc: usize,
+    pub batch: usize,
+    pub state_dim: usize,
+    // Host-side parameter store (flat, row-major [M, P]).
+    actor: Vec<f32>,
+    critic: Vec<f32>,
+    t_actor: Vec<f32>,
+    t_critic: Vec<f32>,
+    m_a: Vec<f32>,
+    v_a: Vec<f32>,
+    m_c: Vec<f32>,
+    v_c: Vec<f32>,
+    step: f32,
+    /// Cached actor literal (rebuilt after each train step).
+    actor_lit: Option<xla::Literal>,
+    replay: Replay,
+    pub losses: (f64, f64),
+}
+
+impl<'rt> MaddpgTrainer<'rt> {
+    /// Load executables + initial parameters from the artifacts.
+    pub fn new(rt: &'rt Runtime, replay_cap: usize) -> crate::Result<Self> {
+        let actor_fwd = rt.load("actor_fwd")?;
+        let train_exe = rt.load("maddpg_train")?;
+        let m = rt.manifest.constant("m_agents")?;
+        let pa = rt.manifest.constant("p_actor")?;
+        let pc = rt.manifest.constant("p_critic")?;
+        let batch = rt.manifest.constant("batch")?;
+        let state_dim = rt.manifest.constant("state_dim")?;
+        let obs = rt.manifest.constant("obs_dim")?;
+        anyhow::ensure!(obs == OBS, "manifest obs_dim {obs} != env OBS {OBS}");
+        let init = rt.load_archive("drl/drl_init.gta")?;
+        let take = |name: &str, len: usize| -> crate::Result<Vec<f32>> {
+            let t = init.get(name)?;
+            anyhow::ensure!(t.f32_data.len() == len, "{name}: {} != {len}", t.f32_data.len());
+            Ok(t.f32_data.clone())
+        };
+        Ok(MaddpgTrainer {
+            _rt: rt,
+            actor_fwd,
+            train_exe,
+            m,
+            pa,
+            pc,
+            batch,
+            state_dim,
+            actor: take("actor", m * pa)?,
+            critic: take("critic", m * pc)?,
+            t_actor: take("t_actor", m * pa)?,
+            t_critic: take("t_critic", m * pc)?,
+            m_a: take("m_a", m * pa)?,
+            v_a: take("v_a", m * pa)?,
+            m_c: take("m_c", m * pc)?,
+            v_c: take("v_c", m * pc)?,
+            step: init.get("step")?.f32_data[0],
+            actor_lit: None,
+            replay: Replay::new(replay_cap),
+            losses: (0.0, 0.0),
+        })
+    }
+
+    fn actor_literal(&mut self) -> crate::Result<&xla::Literal> {
+        if self.actor_lit.is_none() {
+            self.actor_lit = Some(lit(&[self.m, self.pa], &self.actor)?);
+        }
+        Ok(self.actor_lit.as_ref().unwrap())
+    }
+
+    /// π(O) for all agents; optional exploration noise.
+    pub fn select_actions(
+        &mut self,
+        obs_flat: &[f32],
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> crate::Result<Vec<[f32; 2]>> {
+        anyhow::ensure!(obs_flat.len() == self.m * OBS);
+        let m = self.m;
+        let obs_lit = lit(&[m, OBS], obs_flat)?;
+        let exe = self.actor_fwd.clone();
+        let actor_lit = self.actor_literal()?;
+        let out = exe.run_borrowed(&[actor_lit, &obs_lit])?;
+        let acts = out[0].to_vec::<f32>()?;
+        let mut result = Vec::with_capacity(m);
+        for i in 0..m {
+            let mut a = [acts[2 * i], acts[2 * i + 1]];
+            if sigma > 0.0 {
+                for v in &mut a {
+                    *v = (*v + rng.normal_ms(0.0, sigma) as f32).clamp(0.0, 1.0);
+                }
+            }
+            result.push(a);
+        }
+        Ok(result)
+    }
+
+    /// One MADDPG update on a replay mini-batch (Algorithm 2 l.15–20).
+    pub fn train_step(&mut self, rng: &mut Rng) -> crate::Result<(f64, f64)> {
+        let b = self.replay.sample(self.batch, rng);
+        let m = self.m;
+        let inputs = vec![
+            lit(&[m, self.pa], &self.actor)?,
+            lit(&[m, self.pc], &self.critic)?,
+            lit(&[m, self.pa], &self.t_actor)?,
+            lit(&[m, self.pc], &self.t_critic)?,
+            lit(&[m, self.pa], &self.m_a)?,
+            lit(&[m, self.pa], &self.v_a)?,
+            lit(&[m, self.pc], &self.m_c)?,
+            lit(&[m, self.pc], &self.v_c)?,
+            lit(&[], &[self.step])?,
+            lit(&[self.batch, self.state_dim], &b.s)?,
+            lit(&[self.batch, m, 2], &b.a)?,
+            lit(&[self.batch, m], &b.r)?,
+            lit(&[self.batch, self.state_dim], &b.s2)?,
+            lit(&[self.batch, m], &b.done)?,
+            lit(&[self.batch, m, OBS], &b.obs)?,
+            lit(&[self.batch, m, OBS], &b.obs2)?,
+        ];
+        let exe = self.train_exe.clone();
+        let out = exe.run(&inputs)?;
+        self.actor = out[0].to_vec::<f32>()?;
+        self.critic = out[1].to_vec::<f32>()?;
+        self.t_actor = out[2].to_vec::<f32>()?;
+        self.t_critic = out[3].to_vec::<f32>()?;
+        self.m_a = out[4].to_vec::<f32>()?;
+        self.v_a = out[5].to_vec::<f32>()?;
+        self.m_c = out[6].to_vec::<f32>()?;
+        self.v_c = out[7].to_vec::<f32>()?;
+        self.step = out[8].get_first_element::<f32>()?;
+        self.actor_lit = None; // parameters changed
+        let closs = out[9].to_vec::<f32>()?;
+        let aloss = out[10].to_vec::<f32>()?;
+        let c = closs.iter().map(|&x| x as f64).sum::<f64>() / m as f64;
+        let a = aloss.iter().map(|&x| x as f64).sum::<f64>() / m as f64;
+        self.losses = (c, a);
+        Ok((c, a))
+    }
+
+    /// Play one episode; optionally explore and learn.
+    pub fn run_episode(
+        &mut self,
+        env: &mut Env,
+        cfg: &MaddpgConfig,
+        learn: bool,
+        rng: &mut Rng,
+    ) -> crate::Result<EpisodeStats> {
+        env.reset();
+        let mut reward = 0.0;
+        let mut steps = 0usize;
+        let sigma = if learn { cfg.explore_sigma } else { 0.0 };
+        while !env.finished() {
+            // Eq. 19: the global state is exactly the concatenation of
+            // the local observations — compute once, reuse for both.
+            let obs = env.state();
+            let actions = self.select_actions(&obs, sigma, rng)?;
+            let server = env.decode_action(&actions);
+            let outcome = env.step(server);
+            reward += outcome.rewards.iter().sum::<f64>();
+            steps += 1;
+            if learn {
+                let obs2 = env.state();
+                self.replay.push(Transition {
+                    s: obs.clone(),
+                    a: actions.iter().flat_map(|a| a.iter().copied()).collect(),
+                    r: outcome.rewards.iter().map(|&r| r as f32).collect(),
+                    s2: obs2.clone(),
+                    done: outcome.done.iter().map(|&d| d as u8 as f32).collect(),
+                    obs,
+                    obs2,
+                });
+                if self.replay.len() >= cfg.warmup && steps % cfg.train_every == 0 {
+                    self.train_step(rng)?;
+                }
+            }
+        }
+        Ok(EpisodeStats {
+            episode: 0,
+            reward,
+            system_cost: env.evaluate().total(),
+            critic_loss: self.losses.0,
+            actor_loss: self.losses.1,
+            steps,
+        })
+    }
+
+    /// Full training run; returns the per-episode reward curve
+    /// (Fig. 11's DRLGO series).
+    pub fn train(
+        &mut self,
+        env: &mut Env,
+        cfg: &MaddpgConfig,
+    ) -> crate::Result<Vec<EpisodeStats>> {
+        let mut rng = Rng::seed_from(cfg.seed);
+        let mut curve = Vec::with_capacity(cfg.episodes);
+        for ep in 0..cfg.episodes {
+            if cfg.churn && ep > 0 {
+                env.mutate(&mut rng);
+            }
+            let mut stats = self.run_episode(env, cfg, true, &mut rng)?;
+            stats.episode = ep;
+            log::debug!(
+                "maddpg ep {ep}: reward {:.3} cost {:.3} closs {:.4}",
+                stats.reward,
+                stats.system_cost,
+                stats.critic_loss
+            );
+            curve.push(stats);
+        }
+        Ok(curve)
+    }
+
+    /// Deterministic policy rollout (evaluation): fills `env.offload`.
+    pub fn policy_offload(&mut self, env: &mut Env) -> crate::Result<()> {
+        let mut rng = Rng::seed_from(0);
+        env.reset();
+        while !env.finished() {
+            let obs = env.state();
+            let actions = self.select_actions(&obs, 0.0, &mut rng)?;
+            let server = env.decode_action(&actions);
+            env.step(server);
+        }
+        Ok(())
+    }
+
+    /// Checkpoint the full learner state.
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        let t = |name: &str, shape: Vec<usize>, data: &[f32]| Tensor {
+            name: name.into(),
+            shape,
+            f32_data: data.to_vec(),
+            is_int: false,
+        };
+        let a = Archive {
+            tensors: vec![
+                t("actor", vec![self.m, self.pa], &self.actor),
+                t("critic", vec![self.m, self.pc], &self.critic),
+                t("t_actor", vec![self.m, self.pa], &self.t_actor),
+                t("t_critic", vec![self.m, self.pc], &self.t_critic),
+                t("m_a", vec![self.m, self.pa], &self.m_a),
+                t("v_a", vec![self.m, self.pa], &self.v_a),
+                t("m_c", vec![self.m, self.pc], &self.m_c),
+                t("v_c", vec![self.m, self.pc], &self.v_c),
+                t("step", vec![], &[self.step]),
+            ],
+        };
+        a.save(path).context("saving MADDPG checkpoint")?;
+        Ok(())
+    }
+
+    /// Restore a checkpoint produced by [`Self::save`].
+    pub fn restore(&mut self, path: &std::path::Path) -> crate::Result<()> {
+        let a = Archive::load(path)?;
+        self.actor = a.get_shaped("actor", &[self.m, self.pa])?.f32_data.clone();
+        self.critic = a.get_shaped("critic", &[self.m, self.pc])?.f32_data.clone();
+        self.t_actor = a.get_shaped("t_actor", &[self.m, self.pa])?.f32_data.clone();
+        self.t_critic = a.get_shaped("t_critic", &[self.m, self.pc])?.f32_data.clone();
+        self.m_a = a.get_shaped("m_a", &[self.m, self.pa])?.f32_data.clone();
+        self.v_a = a.get_shaped("v_a", &[self.m, self.pa])?.f32_data.clone();
+        self.m_c = a.get_shaped("m_c", &[self.m, self.pc])?.f32_data.clone();
+        self.v_c = a.get_shaped("v_c", &[self.m, self.pc])?.f32_data.clone();
+        self.step = a.get("step")?.f32_data[0];
+        self.actor_lit = None;
+        Ok(())
+    }
+
+    pub fn replay_len(&self) -> usize {
+        self.replay.len()
+    }
+}

@@ -1,0 +1,53 @@
+//! DRL-based graph offloading (§5) and the §6 baselines.
+//!
+//! * [`env`] — the MAMDP environment of §5.2: per-agent observations,
+//!   global state, two-dimensional agent actions, the cost-based
+//!   reward with the subgraph-colocation term R_sp (Eq. 25), and the
+//!   user-by-user episode protocol of Algorithm 2.
+//! * [`replay`] — experience replay buffer D.
+//! * [`maddpg`] — DRLGO: the MADDPG trainer driving the AOT-compiled
+//!   `actor_fwd` / `maddpg_train` executables, plus greedy policy
+//!   execution for evaluation.
+//! * [`ppo`] — PTOM: the single-agent PPO baseline (global state, no
+//!   HiCut, no R_sp).
+//! * [`baselines`] — GM (nearest server) and RM (random server).
+//!
+//! Everything numeric runs through PJRT; this module owns only control
+//! flow, the environment and the buffers.
+
+pub mod baselines;
+pub mod env;
+pub mod maddpg;
+pub mod ppo;
+pub mod replay;
+
+pub use env::{Env, EnvConfig, StepOutcome};
+pub use maddpg::{MaddpgConfig, MaddpgTrainer};
+pub use ppo::{PpoConfig, PpoTrainer};
+
+/// Offloading method identifiers used across benches and the CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// DRLGO: HiCut + MADDPG (the paper's proposal).
+    Drlgo,
+    /// PTOM: PPO over the global state, no HiCut/R_sp.
+    Ptom,
+    /// Greedy: nearest server with remaining capacity.
+    Greedy,
+    /// Random server.
+    Random,
+    /// Ablation: MADDPG without HiCut and without R_sp (§6.5).
+    DrlOnly,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Drlgo => "DRLGO",
+            Method::Ptom => "PTOM",
+            Method::Greedy => "GM",
+            Method::Random => "RM",
+            Method::DrlOnly => "DRL-only",
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! PTOM — the PPO-based task-offloading baseline (§6.1).
+//!
+//! A single agent observes the *global* environment state, samples one
+//! of the M servers per user, and learns with the clipped surrogate
+//! objective.  No HiCut layout optimization, no R_sp shaping — exactly
+//! the paper's comparison configuration (same network sizes as DRLGO).
+//!
+//! The math lives in two AOT executables: `ppo_fwd` (logits + value)
+//! and `ppo_train` (one clipped-surrogate epoch on a fixed horizon of
+//! 256 steps).  GAE(γ = 0.99, λ = 0.95) is computed host-side.
+
+use std::sync::Arc;
+
+use crate::runtime::{lit, Executable, Runtime};
+use crate::util::rng::Rng;
+
+use super::env::Env;
+use super::maddpg::EpisodeStats;
+
+#[derive(Clone, Debug)]
+pub struct PpoConfig {
+    pub episodes: usize,
+    /// Train epochs per collected horizon.
+    pub epochs: usize,
+    pub gamma: f64,
+    pub lam: f64,
+    pub churn: bool,
+    pub seed: u64,
+}
+
+impl Default for PpoConfig {
+    fn default() -> Self {
+        PpoConfig {
+            episodes: 150,
+            epochs: 4,
+            gamma: 0.99,
+            lam: 0.95,
+            churn: true,
+            seed: 0x990,
+        }
+    }
+}
+
+/// Rollout storage for one horizon.
+#[derive(Default)]
+struct Rollout {
+    states: Vec<f32>,  // [T * STATE]
+    actions: Vec<usize>,
+    logps: Vec<f32>,
+    values: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<f32>,
+}
+
+impl Rollout {
+    fn len(&self) -> usize {
+        self.actions.len()
+    }
+
+    fn clear(&mut self) {
+        self.states.clear();
+        self.actions.clear();
+        self.logps.clear();
+        self.values.clear();
+        self.rewards.clear();
+        self.dones.clear();
+    }
+}
+
+pub struct PpoTrainer<'rt> {
+    fwd: Arc<Executable>,
+    train_exe: Arc<Executable>,
+    pub state_dim: usize,
+    pub actions: usize,
+    pub horizon: usize,
+    params: Vec<f32>,
+    m_p: Vec<f32>,
+    v_p: Vec<f32>,
+    step: f32,
+    roll: Rollout,
+    _rt: std::marker::PhantomData<&'rt Runtime>,
+}
+
+impl<'rt> PpoTrainer<'rt> {
+    pub fn new(rt: &'rt Runtime) -> crate::Result<Self> {
+        let fwd = rt.load("ppo_fwd")?;
+        let train_exe = rt.load("ppo_train")?;
+        let state_dim = rt.manifest.constant("state_dim")?;
+        let actions = rt.manifest.constant("m_agents")?;
+        let horizon = rt.manifest.constant("batch")?;
+        let p_ppo = rt.manifest.constant("p_ppo")?;
+        let init = rt.load_archive("drl/drl_init.gta")?;
+        let params = init.get_shaped("ppo", &[p_ppo])?.f32_data.clone();
+        Ok(PpoTrainer {
+            fwd,
+            train_exe,
+            state_dim,
+            actions,
+            horizon,
+            m_p: vec![0.0; params.len()],
+            v_p: vec![0.0; params.len()],
+            params,
+            step: init.get("ppo_step")?.f32_data[0],
+            roll: Rollout::default(),
+            _rt: std::marker::PhantomData,
+        })
+    }
+
+    /// Sample an action from the categorical policy; returns
+    /// (action, log-prob, value).
+    pub fn select(&self, state: &[f32], rng: &mut Rng, greedy: bool)
+        -> crate::Result<(usize, f32, f32)> {
+        let p = lit(&[self.params.len()], &self.params)?;
+        let s = lit(&[1, self.state_dim], state)?;
+        let out = self.fwd.run_borrowed(&[&p, &s])?;
+        let logits = out[0].to_vec::<f32>()?;
+        let value = out[1].to_vec::<f32>()?[0];
+        // Softmax (stable).
+        let mx = logits.iter().cloned().fold(f32::MIN, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|&l| (l - mx).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let probs: Vec<f32> = exps.iter().map(|&e| e / z).collect();
+        let action = if greedy {
+            probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        } else {
+            let mut u = rng.f32();
+            let mut a = self.actions - 1;
+            for (i, &pr) in probs.iter().enumerate() {
+                if u < pr {
+                    a = i;
+                    break;
+                }
+                u -= pr;
+            }
+            a
+        };
+        Ok((action, probs[action].max(1e-12).ln(), value))
+    }
+
+    /// Run one PPO update over the stored horizon (must be full).
+    fn update(&mut self, epochs: usize, gamma: f64, lam: f64, last_value: f32)
+        -> crate::Result<(f64, f64)> {
+        let t = self.roll.len();
+        debug_assert_eq!(t, self.horizon);
+        // GAE advantages + returns.
+        let mut adv = vec![0.0f32; t];
+        let mut ret = vec![0.0f32; t];
+        let mut gae = 0.0f64;
+        for i in (0..t).rev() {
+            let next_v = if i + 1 < t {
+                // value bootstrap is zeroed across episode boundaries
+                if self.roll.dones[i] > 0.5 { 0.0 } else { self.roll.values[i + 1] as f64 }
+            } else if self.roll.dones[i] > 0.5 {
+                0.0
+            } else {
+                last_value as f64
+            };
+            let nonterminal = if self.roll.dones[i] > 0.5 { 0.0 } else { 1.0 };
+            let delta =
+                self.roll.rewards[i] as f64 + gamma * next_v - self.roll.values[i] as f64;
+            gae = delta + gamma * lam * nonterminal * gae;
+            adv[i] = gae as f32;
+            ret[i] = adv[i] + self.roll.values[i];
+        }
+        // Normalize advantages.
+        let mean = adv.iter().sum::<f32>() / t as f32;
+        let var = adv.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / t as f32;
+        let std = var.sqrt().max(1e-6);
+        for a in &mut adv {
+            *a = (*a - mean) / std;
+        }
+        let mut onehot = vec![0.0f32; t * self.actions];
+        for (i, &a) in self.roll.actions.iter().enumerate() {
+            onehot[i * self.actions + a] = 1.0;
+        }
+        let (mut pl, mut vl) = (0.0, 0.0);
+        for _ in 0..epochs {
+            let inputs = vec![
+                lit(&[self.params.len()], &self.params)?,
+                lit(&[self.params.len()], &self.m_p)?,
+                lit(&[self.params.len()], &self.v_p)?,
+                lit(&[], &[self.step])?,
+                lit(&[t, self.state_dim], &self.roll.states)?,
+                lit(&[t, self.actions], &onehot)?,
+                lit(&[t], &self.roll.logps)?,
+                lit(&[t], &adv)?,
+                lit(&[t], &ret)?,
+            ];
+            let out = self.train_exe.run(&inputs)?;
+            self.params = out[0].to_vec::<f32>()?;
+            self.m_p = out[1].to_vec::<f32>()?;
+            self.v_p = out[2].to_vec::<f32>()?;
+            self.step = out[3].get_first_element::<f32>()?;
+            pl = out[4].get_first_element::<f32>()? as f64;
+            vl = out[5].get_first_element::<f32>()? as f64;
+        }
+        self.roll.clear();
+        Ok((pl, vl))
+    }
+
+    /// Full training: episodes over a (churning) environment.
+    pub fn train(&mut self, env: &mut Env, cfg: &PpoConfig)
+        -> crate::Result<Vec<EpisodeStats>> {
+        let mut rng = Rng::seed_from(cfg.seed);
+        let mut curve = Vec::new();
+        for ep in 0..cfg.episodes {
+            if cfg.churn && ep > 0 {
+                env.mutate(&mut rng);
+            }
+            env.reset();
+            let mut reward = 0.0;
+            let mut steps = 0;
+            while !env.finished() {
+                let s = env.state();
+                let (a, logp, v) = self.select(&s, &mut rng, false)?;
+                let out = env.step(a);
+                let r: f64 = out.rewards.iter().sum();
+                reward += r;
+                steps += 1;
+                self.roll.states.extend_from_slice(&s);
+                self.roll.actions.push(a);
+                self.roll.logps.push(logp);
+                self.roll.values.push(v);
+                self.roll.rewards.push(r as f32);
+                self.roll.dones.push(out.finished as u8 as f32);
+                if self.roll.len() == self.horizon {
+                    let last_v = if env.finished() {
+                        0.0
+                    } else {
+                        self.select(&env.state(), &mut rng, false)?.2
+                    };
+                    self.update(cfg.epochs, cfg.gamma, cfg.lam, last_v)?;
+                }
+            }
+            curve.push(EpisodeStats {
+                episode: ep,
+                reward,
+                system_cost: env.evaluate().total(),
+                critic_loss: 0.0,
+                actor_loss: 0.0,
+                steps,
+            });
+            log::debug!("ppo ep {ep}: reward {reward:.3}");
+        }
+        Ok(curve)
+    }
+
+    /// Greedy policy rollout for evaluation.
+    pub fn policy_offload(&mut self, env: &mut Env) -> crate::Result<()> {
+        let mut rng = Rng::seed_from(0);
+        env.reset();
+        while !env.finished() {
+            let (a, _, _) = self.select(&env.state(), &mut rng, true)?;
+            env.step(a);
+        }
+        Ok(())
+    }
+}

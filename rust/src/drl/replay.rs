@@ -1,0 +1,139 @@
+//! Experience replay buffer D (§5.3).
+//!
+//! Stores flattened MAMDP transitions and samples uniform mini-batches
+//! as contiguous f32 blocks ready to become PJRT literals.
+
+use crate::util::rng::Rng;
+
+/// One transition, flattened (lengths fixed by the environment).
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub s: Vec<f32>,     // [STATE]
+    pub a: Vec<f32>,     // [M*ACT]
+    pub r: Vec<f32>,     // [M]
+    pub s2: Vec<f32>,    // [STATE]
+    pub done: Vec<f32>,  // [M]
+    pub obs: Vec<f32>,   // [M*OBS]
+    pub obs2: Vec<f32>,  // [M*OBS]
+}
+
+/// Ring-buffer replay store.
+pub struct Replay {
+    cap: usize,
+    buf: Vec<Transition>,
+    next: usize,
+}
+
+/// A sampled batch, already laid out for the train-step literals.
+pub struct Batch {
+    pub s: Vec<f32>,
+    pub a: Vec<f32>,
+    pub r: Vec<f32>,
+    pub s2: Vec<f32>,
+    pub done: Vec<f32>,
+    pub obs: Vec<f32>,
+    pub obs2: Vec<f32>,
+    pub len: usize,
+}
+
+impl Replay {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Replay { cap, buf: Vec::with_capacity(cap.min(4096)), next: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.cap {
+            self.buf.push(t);
+        } else {
+            self.buf[self.next] = t;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Uniform sample with replacement of `batch` transitions.
+    pub fn sample(&self, batch: usize, rng: &mut Rng) -> Batch {
+        assert!(!self.buf.is_empty(), "sampling empty replay buffer");
+        let mut out = Batch {
+            s: Vec::with_capacity(batch * self.buf[0].s.len()),
+            a: Vec::with_capacity(batch * self.buf[0].a.len()),
+            r: Vec::with_capacity(batch * self.buf[0].r.len()),
+            s2: Vec::with_capacity(batch * self.buf[0].s2.len()),
+            done: Vec::with_capacity(batch * self.buf[0].done.len()),
+            obs: Vec::with_capacity(batch * self.buf[0].obs.len()),
+            obs2: Vec::with_capacity(batch * self.buf[0].obs2.len()),
+            len: batch,
+        };
+        for _ in 0..batch {
+            let t = &self.buf[rng.below(self.buf.len())];
+            out.s.extend_from_slice(&t.s);
+            out.a.extend_from_slice(&t.a);
+            out.r.extend_from_slice(&t.r);
+            out.s2.extend_from_slice(&t.s2);
+            out.done.extend_from_slice(&t.done);
+            out.obs.extend_from_slice(&t.obs);
+            out.obs2.extend_from_slice(&t.obs2);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: f32) -> Transition {
+        Transition {
+            s: vec![v; 4],
+            a: vec![v; 2],
+            r: vec![v; 2],
+            s2: vec![v; 4],
+            done: vec![0.0; 2],
+            obs: vec![v; 6],
+            obs2: vec![v; 6],
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut r = Replay::new(3);
+        for i in 0..5 {
+            r.push(t(i as f32));
+        }
+        assert_eq!(r.len(), 3);
+        // Contents are {2,3,4} in some ring order.
+        let vals: std::collections::HashSet<i32> =
+            r.buf.iter().map(|x| x.s[0] as i32).collect();
+        assert_eq!(vals, [2, 3, 4].into_iter().collect());
+    }
+
+    #[test]
+    fn sample_shapes() {
+        let mut r = Replay::new(10);
+        for i in 0..10 {
+            r.push(t(i as f32));
+        }
+        let mut rng = Rng::seed_from(0);
+        let b = r.sample(32, &mut rng);
+        assert_eq!(b.len, 32);
+        assert_eq!(b.s.len(), 32 * 4);
+        assert_eq!(b.a.len(), 32 * 2);
+        assert_eq!(b.obs.len(), 32 * 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty replay")]
+    fn sample_empty_panics() {
+        let r = Replay::new(4);
+        let mut rng = Rng::seed_from(0);
+        r.sample(1, &mut rng);
+    }
+}

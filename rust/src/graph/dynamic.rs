@@ -1,0 +1,424 @@
+//! The paper's dynamic graph model (§3.2).
+//!
+//! `G(t) = (V(t), E(t))` as perceived by the EC controller, extended
+//! with a **mask module** (an array of length N whose entries flip to 0
+//! when users drop out and back to 1 when new users take their slots)
+//! and per-vertex **position attributes** synchronized to user
+//! locations.  Three kinds of dynamics are supported, exactly the ones
+//! §3.2 enumerates:
+//!
+//! 1. location changes (`move_users`),
+//! 2. user count changes (`remove_users` / `add_users`),
+//! 3. association changes (`rewire`).
+//!
+//! [`DynamicGraph::step`] applies a randomized mixture of all three —
+//! the per-episode scenario churn of Algorithm 2 line 8.
+
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// 2-D position on the EC plane, meters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pos {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Pos {
+    pub fn dist(&self, other: &Pos) -> f64 {
+        ((self.x - other.x).powi(2) + (self.y - other.y).powi(2)).sqrt()
+    }
+}
+
+/// Churn configuration for [`DynamicGraph::step`].
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnConfig {
+    /// Fraction of users that may join/leave per step (paper: 20%).
+    pub user_change_rate: f64,
+    /// Fraction of associations rewired per step (paper: 20%).
+    pub assoc_change_rate: f64,
+    /// Max per-step movement in meters (random walk).
+    pub move_radius_m: f64,
+    /// Plane side length in meters (Table 2: 2000).
+    pub plane_m: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            user_change_rate: 0.2,
+            assoc_change_rate: 0.2,
+            move_radius_m: 100.0,
+            plane_m: 2000.0,
+        }
+    }
+}
+
+/// Dynamic user graph with mask + positions (§3.2).
+#[derive(Clone, Debug)]
+pub struct DynamicGraph {
+    graph: Graph,
+    mask: Vec<bool>,
+    pos: Vec<Pos>,
+    /// Task data size per user in Mbit (X_i of Table 1).
+    task_mb: Vec<f64>,
+    /// Mean active degree at construction — the association density the
+    /// churn process preserves (without an anchor, departures bleed
+    /// edges faster than arrivals restore them and |E| decays).
+    target_mean_deg: f64,
+}
+
+impl DynamicGraph {
+    /// Build with all users alive, positions uniform on the plane and
+    /// task sizes supplied by the caller (from dataset feature dims).
+    pub fn new(graph: Graph, task_mb: Vec<f64>, plane_m: f64, rng: &mut Rng) -> Self {
+        let n = graph.len();
+        assert_eq!(task_mb.len(), n);
+        let pos = (0..n)
+            .map(|_| Pos { x: rng.range_f64(0.0, plane_m), y: rng.range_f64(0.0, plane_m) })
+            .collect();
+        let target_mean_deg = 2.0 * graph.num_edges() as f64 / n.max(1) as f64;
+        DynamicGraph { graph, mask: vec![true; n], pos, task_mb, target_mean_deg }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// Number of *active* users (mask = 1).
+    pub fn active_count(&self) -> usize {
+        self.mask.iter().filter(|&&m| m).count()
+    }
+
+    pub fn is_active(&self, v: usize) -> bool {
+        self.mask[v]
+    }
+
+    pub fn active_users(&self) -> Vec<usize> {
+        (0..self.capacity()).filter(|&v| self.mask[v]).collect()
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn pos(&self, v: usize) -> Pos {
+        self.pos[v]
+    }
+
+    pub fn task_mb(&self, v: usize) -> f64 {
+        self.task_mb[v]
+    }
+
+    pub fn set_task_mb(&mut self, v: usize, mb: f64) {
+        self.task_mb[v] = mb;
+    }
+
+    /// Active-neighbor count — |N_i(t)| of the cost model.
+    pub fn active_degree(&self, v: usize) -> usize {
+        self.graph
+            .neighbors(v)
+            .iter()
+            .filter(|&&u| self.mask[u as usize])
+            .count()
+    }
+
+    /// Total active associations (edges with both ends alive).
+    pub fn active_edges(&self) -> usize {
+        self.graph
+            .edge_list()
+            .iter()
+            .filter(|&&(u, v)| self.mask[u as usize] && self.mask[v as usize])
+            .count()
+    }
+
+    // -- §3.2 dynamics ------------------------------------------------------
+
+    /// Users drop out: mask to 0 and remove their associations.
+    pub fn remove_users(&mut self, users: &[usize]) {
+        for &v in users {
+            if self.mask[v] {
+                self.mask[v] = false;
+                self.graph.isolate(v);
+            }
+        }
+    }
+
+    /// New users take mask-0 slots: mask back to 1, fresh positions and
+    /// associations supplied by the caller.  Returns the slot ids used.
+    pub fn add_users(
+        &mut self,
+        count: usize,
+        positions: &mut dyn FnMut(usize, &mut Rng) -> Pos,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let free: Vec<usize> =
+            (0..self.capacity()).filter(|&v| !self.mask[v]).collect();
+        let take = count.min(free.len());
+        let chosen = &free[..take];
+        for (i, &slot) in chosen.iter().enumerate() {
+            self.mask[slot] = true;
+            self.pos[slot] = positions(i, rng);
+        }
+        chosen.to_vec()
+    }
+
+    /// Random-walk position update for all active users.
+    pub fn move_users(&mut self, radius_m: f64, plane_m: f64, rng: &mut Rng) {
+        for v in 0..self.capacity() {
+            if !self.mask[v] {
+                continue;
+            }
+            let dx = rng.range_f64(-radius_m, radius_m);
+            let dy = rng.range_f64(-radius_m, radius_m);
+            self.pos[v] = Pos {
+                x: (self.pos[v].x + dx).clamp(0.0, plane_m),
+                y: (self.pos[v].y + dy).clamp(0.0, plane_m),
+            };
+        }
+    }
+
+    /// Teleport all active users to fresh uniform positions (the
+    /// "randomly change the position of all users" experiment of §6.3).
+    pub fn scatter_users(&mut self, plane_m: f64, rng: &mut Rng) {
+        for v in 0..self.capacity() {
+            if self.mask[v] {
+                self.pos[v] = Pos {
+                    x: rng.range_f64(0.0, plane_m),
+                    y: rng.range_f64(0.0, plane_m),
+                };
+            }
+        }
+    }
+
+    /// Rewire `count` associations: drop a random active edge, add a
+    /// random active non-edge (keeping |E| roughly stable).
+    pub fn rewire(&mut self, count: usize, rng: &mut Rng) {
+        let active = self.active_users();
+        if active.len() < 2 {
+            return;
+        }
+        for _ in 0..count {
+            let edges: Vec<(u32, u32)> = self
+                .graph
+                .edge_list()
+                .into_iter()
+                .filter(|&(u, v)| self.mask[u as usize] && self.mask[v as usize])
+                .collect();
+            if let Some(&(u, v)) = edges.get(rng.below(edges.len().max(1)).min(edges.len().saturating_sub(1))) {
+                if !edges.is_empty() {
+                    self.graph.remove_edge(u as usize, v as usize);
+                }
+            }
+            // Add a fresh association between random active users.
+            for _ in 0..10 {
+                let a = *rng.choose(&active);
+                let b = *rng.choose(&active);
+                if a != b && self.graph.add_edge(a, b) {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// One scenario step: randomized mixture of §3.2's three dynamics
+    /// (Algorithm 2 line 8 / Fig. 11's 20% churn protocol).
+    pub fn step(&mut self, cfg: &ChurnConfig, rng: &mut Rng) {
+        // 1. churn user count: remove up to rate/2, re-add up to rate/2.
+        let active = self.active_users();
+        // Churn is sized against *capacity* (the nominal population),
+        // not the current active count: a multiplicative random walk
+        // on the active count drifts downward over long training runs
+        // and silently empties the scenario.  Removals draw from the
+        // active set; admissions refill free slots, so the population
+        // mean-reverts to ~capacity.
+        let churn = ((self.capacity() as f64) * cfg.user_change_rate * 0.5) as usize;
+        if churn > 0 {
+            let victims: Vec<usize> = rng
+                .sample_indices(active.len(), churn.min(active.len()))
+                .into_iter()
+                .map(|i| active[i])
+                .collect();
+            self.remove_users(&victims);
+            let plane = cfg.plane_m;
+            let free = self.capacity() - self.active_count();
+            let added = self.add_users(
+                rng.range(free.saturating_sub(churn / 2), free + 1),
+                &mut |_, r| Pos {
+                    x: r.range_f64(0.0, plane),
+                    y: r.range_f64(0.0, plane),
+                },
+                rng,
+            );
+            // Fresh users attach with the scenario's mean degree,
+            // degree-proportionally (otherwise every churn round bleeds
+            // ~mean_deg associations per replaced user and |E| collapses
+            // over long training runs).
+            let now_active = self.active_users();
+            let active_n = now_active.len().max(1);
+            let mean_deg =
+                ((2 * self.active_edges()) as f64 / active_n as f64).round() as usize;
+            // Degree-proportional endpoint pool.
+            let mut pool: Vec<usize> = Vec::with_capacity(2 * self.active_edges() + active_n);
+            for &u in &now_active {
+                pool.push(u); // +1 smoothing so isolated users are reachable
+                for _ in 0..self.active_degree(u) {
+                    pool.push(u);
+                }
+            }
+            for v in added {
+                let want = mean_deg.max(1);
+                let mut tries = 0;
+                let mut got = 0;
+                while got < want && tries < 20 * want {
+                    tries += 1;
+                    let u = *rng.choose(&pool);
+                    if u != v && self.graph.add_edge(u, v) {
+                        got += 1;
+                    }
+                }
+            }
+        }
+        // 2. mobility.
+        self.move_users(cfg.move_radius_m, cfg.plane_m, rng);
+        // 3. association churn.
+        let assoc = ((self.active_edges() as f64) * cfg.assoc_change_rate) as usize;
+        self.rewire(assoc, rng);
+        // 4. density anchor: top associations back up toward the
+        // construction-time mean degree (scaled to the live
+        // population), degree-proportionally.
+        let active = self.active_users();
+        if active.len() >= 2 {
+            let desired =
+                (self.target_mean_deg * active.len() as f64 / 2.0).round() as usize;
+            // Compute the deficit once (active_edges() is O(E)); count
+            // successful insertions instead of re-scanning.
+            let deficit = desired.saturating_sub(self.active_edges());
+            let mut got = 0;
+            let mut tries = 0;
+            while got < deficit && tries < 50 * deficit.max(1) {
+                tries += 1;
+                let u = *rng.choose(&active);
+                let v = *rng.choose(&active);
+                if u != v && self.graph.add_edge(u, v) {
+                    got += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_seeds;
+
+    fn make(n: usize, rng: &mut Rng) -> DynamicGraph {
+        let mut g = Graph::new(n);
+        for _ in 0..2 * n {
+            g.add_edge(rng.below(n), rng.below(n));
+        }
+        DynamicGraph::new(g, vec![1.0; n], 2000.0, rng)
+    }
+
+    #[test]
+    fn remove_users_clears_mask_and_edges() {
+        let mut rng = Rng::seed_from(1);
+        let mut d = make(20, &mut rng);
+        let before = d.active_count();
+        d.remove_users(&[3, 7]);
+        assert_eq!(d.active_count(), before - 2);
+        assert!(!d.is_active(3));
+        assert_eq!(d.graph().degree(3), 0);
+        assert_eq!(d.active_degree(3), 0);
+    }
+
+    #[test]
+    fn add_users_fills_freed_slots() {
+        let mut rng = Rng::seed_from(2);
+        let mut d = make(10, &mut rng);
+        d.remove_users(&[1, 2, 3]);
+        let added = d.add_users(
+            2,
+            &mut |_, r| Pos { x: r.range_f64(0.0, 10.0), y: 0.0 },
+            &mut rng,
+        );
+        assert_eq!(added.len(), 2);
+        assert!(added.iter().all(|&v| [1usize, 2, 3].contains(&v)));
+        assert_eq!(d.active_count(), 9);
+    }
+
+    #[test]
+    fn add_users_never_exceeds_capacity() {
+        let mut rng = Rng::seed_from(3);
+        let mut d = make(8, &mut rng);
+        let added = d.add_users(5, &mut |_, _| Pos { x: 0.0, y: 0.0 }, &mut rng);
+        assert!(added.is_empty()); // no free slots
+        assert_eq!(d.active_count(), 8);
+    }
+
+    #[test]
+    fn move_users_stays_on_plane() {
+        check_seeds(20, |rng| {
+            let mut d = make(30, rng);
+            for _ in 0..5 {
+                d.move_users(500.0, 2000.0, rng);
+            }
+            (0..30).all(|v| {
+                let p = d.pos(v);
+                (0.0..=2000.0).contains(&p.x) && (0.0..=2000.0).contains(&p.y)
+            })
+        });
+    }
+
+    #[test]
+    fn step_keeps_invariants() {
+        check_seeds(15, |rng| {
+            let mut d = make(40, rng);
+            let cfg = ChurnConfig::default();
+            for _ in 0..8 {
+                d.step(&cfg, rng);
+                // Mask-0 vertices must never carry edges.
+                for v in 0..d.capacity() {
+                    if !d.is_active(v) && d.graph().degree(v) > 0 {
+                        return false;
+                    }
+                }
+                if d.active_count() > d.capacity() {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn population_stays_stable_under_long_churn() {
+        // Regression: additions must balance removals on average, or
+        // training scenarios silently decay to a handful of users.
+        let mut rng = Rng::seed_from(77);
+        let mut d = make(100, &mut rng);
+        let e0 = d.active_edges();
+        let cfg = ChurnConfig::default();
+        for _ in 0..60 {
+            d.step(&cfg, &mut rng);
+        }
+        assert!(
+            d.active_count() >= 60,
+            "population collapsed to {}",
+            d.active_count()
+        );
+        let e1 = d.active_edges();
+        assert!(
+            e1 * 2 >= e0,
+            "association count collapsed: {e0} -> {e1}"
+        );
+    }
+
+    #[test]
+    fn pos_distance() {
+        let a = Pos { x: 0.0, y: 0.0 };
+        let b = Pos { x: 3.0, y: 4.0 };
+        assert!((a.dist(&b) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,189 @@
+//! Loader for the `.geb` synthetic citation datasets written by
+//! `python/compile/data.py` (see that module for the byte layout).
+//!
+//! A [`Dataset`] owns the topology, labels and *sparse* bag-of-words
+//! features; dense padded feature blocks for the GNN executables are
+//! materialized on demand by the serving layer.
+
+use std::path::Path;
+
+use super::Graph;
+
+#[derive(Debug, thiserror::Error)]
+pub enum GebError {
+    #[error("bad GEB magic")]
+    BadMagic,
+    #[error("truncated GEB file")]
+    Truncated,
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// A loaded citation dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// Vertex count.
+    pub n: usize,
+    /// Undirected edge count.
+    pub e: usize,
+    /// Real (un-padded) feature dimensionality.
+    pub feat_dim: usize,
+    /// Class count.
+    pub classes: usize,
+    pub labels: Vec<u8>,
+    /// CSR over sparse feature indices.
+    pub feat_ptr: Vec<u32>,
+    pub feat_idx: Vec<u16>,
+    pub graph: Graph,
+}
+
+impl Dataset {
+    pub fn load(path: impl AsRef<Path>, name: &str) -> Result<Self, GebError> {
+        let buf = std::fs::read(path)?;
+        Self::parse(&buf, name)
+    }
+
+    pub fn parse(buf: &[u8], name: &str) -> Result<Self, GebError> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8], GebError> {
+            if *pos + n > buf.len() {
+                return Err(GebError::Truncated);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != b"GEB1" {
+            return Err(GebError::BadMagic);
+        }
+        let u32at = |b: &[u8]| u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        let hdr = take(&mut pos, 16)?;
+        let (n, e, feat_dim, classes) = (
+            u32at(&hdr[0..4]) as usize,
+            u32at(&hdr[4..8]) as usize,
+            u32at(&hdr[8..12]) as usize,
+            u32at(&hdr[12..16]) as usize,
+        );
+        let labels = take(&mut pos, n)?.to_vec();
+        let feat_ptr: Vec<u32> = take(&mut pos, 4 * (n + 1))?
+            .chunks_exact(4)
+            .map(u32at)
+            .collect();
+        let nnz = *feat_ptr.last().unwrap() as usize;
+        let feat_idx: Vec<u16> = take(&mut pos, 2 * nnz)?
+            .chunks_exact(2)
+            .map(|b| u16::from_le_bytes([b[0], b[1]]))
+            .collect();
+        let raw_edges = take(&mut pos, 8 * e)?;
+        let mut graph = Graph::new(n);
+        for ch in raw_edges.chunks_exact(8) {
+            let u = u32at(&ch[0..4]) as usize;
+            let v = u32at(&ch[4..8]) as usize;
+            graph.add_edge(u, v);
+        }
+        Ok(Dataset {
+            name: name.to_string(),
+            n,
+            e,
+            feat_dim,
+            classes,
+            labels,
+            feat_ptr,
+            feat_idx,
+            graph,
+        })
+    }
+
+    /// Sparse feature indices of one document.
+    pub fn features_of(&self, v: usize) -> &[u16] {
+        let lo = self.feat_ptr[v] as usize;
+        let hi = self.feat_ptr[v + 1] as usize;
+        &self.feat_idx[lo..hi]
+    }
+
+    /// Write vertex `v`'s features, L2-normalized, into a dense row
+    /// (matching `data.dense_features` on the Python side).
+    pub fn write_dense_row(&self, v: usize, row: &mut [f32]) {
+        row.fill(0.0);
+        let idx = self.features_of(v);
+        if idx.is_empty() {
+            return;
+        }
+        let val = 1.0 / (idx.len() as f32).sqrt();
+        for &i in idx {
+            if (i as usize) < row.len() {
+                row[i as usize] = val;
+            }
+        }
+    }
+
+    /// Task data size in Mbit for user/vertex `v` — the paper maps each
+    /// feature dimension to 1 kb and caps dimensions at 1500 (§6.1).
+    pub fn task_mbit(&self, _v: usize) -> f64 {
+        (self.feat_dim.min(1500) as f64) * 1.0e3 / 1.0e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a tiny GEB byte image.
+    fn tiny_geb() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"GEB1");
+        for v in [3u32, 2, 8, 2] {
+            b.extend_from_slice(&v.to_le_bytes()); // n=3 e=2 f=8 c=2
+        }
+        b.extend_from_slice(&[0, 1, 0]); // labels
+        for v in [0u32, 2, 3, 5] {
+            b.extend_from_slice(&v.to_le_bytes()); // feat_ptr
+        }
+        for v in [1u16, 4, 2, 0, 7] {
+            b.extend_from_slice(&v.to_le_bytes()); // feat_idx
+        }
+        for v in [0u32, 1, 1, 2] {
+            b.extend_from_slice(&v.to_le_bytes()); // edges (0,1),(1,2)
+        }
+        b
+    }
+
+    #[test]
+    fn parses_tiny() {
+        let d = Dataset::parse(&tiny_geb(), "tiny").unwrap();
+        assert_eq!((d.n, d.e, d.feat_dim, d.classes), (3, 2, 8, 2));
+        assert_eq!(d.labels, vec![0, 1, 0]);
+        assert_eq!(d.features_of(0), &[1, 4]);
+        assert_eq!(d.features_of(1), &[2]);
+        assert_eq!(d.features_of(2), &[0, 7]);
+        assert!(d.graph.has_edge(0, 1) && d.graph.has_edge(1, 2));
+        assert!(!d.graph.has_edge(0, 2));
+    }
+
+    #[test]
+    fn dense_row_is_l2_normalized() {
+        let d = Dataset::parse(&tiny_geb(), "tiny").unwrap();
+        let mut row = vec![0.0f32; 8];
+        d.write_dense_row(0, &mut row);
+        let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-6);
+        assert!(row[1] > 0.0 && row[4] > 0.0);
+        assert_eq!(row.iter().filter(|&&x| x > 0.0).count(), 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(matches!(Dataset::parse(b"XXXX", "x"), Err(GebError::BadMagic)));
+        assert!(matches!(
+            Dataset::parse(b"GEB1\x01\x00", "x"),
+            Err(GebError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn task_size_tracks_feat_dim() {
+        let d = Dataset::parse(&tiny_geb(), "tiny").unwrap();
+        assert!((d.task_mbit(0) - 8.0e3 / 1.0e6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,135 @@
+//! Random-graph generators for the Fig. 6 scale experiments and tests.
+//!
+//! Fig. 6 evaluates graph-cut time on random graphs with a given vertex
+//! and edge budget ("sparse": 500–20 000 vertices / 5 010–800 040
+//! edges, "non-sparse": 500 100–8 000 400 edges), with edge weights
+//! uniform in 1–100.  [`uniform_random`] produces exactly that;
+//! [`preferential_attachment`] mirrors the Python dataset generator for
+//! degree-distribution experiments on the Rust side.
+
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// Uniform random graph with exactly `edges` distinct edges.
+///
+/// Uses rejection sampling with a hash set — fine up to the Fig. 6
+/// maximum of 8M edges over 20k vertices (4% of all pairs).
+pub fn uniform_random(n: usize, edges: usize, rng: &mut Rng) -> Graph {
+    let max_edges = n * (n - 1) / 2;
+    assert!(edges <= max_edges, "cannot fit {edges} edges into {n} vertices");
+    let mut seen = std::collections::HashSet::with_capacity(edges * 2);
+    let mut list = Vec::with_capacity(edges);
+    while list.len() < edges {
+        let u = rng.below(n);
+        let v = rng.below(n);
+        if u == v {
+            continue;
+        }
+        let key = if u < v { (u as u64) << 32 | v as u64 } else { (v as u64) << 32 | u as u64 };
+        if seen.insert(key) {
+            list.push((u.min(v) as u32, u.max(v) as u32));
+        }
+    }
+    Graph::from_edges(n, &list)
+}
+
+/// Random integer edge weights in `[lo, hi]` keyed by canonical edge —
+/// the Fig. 6 comparison's 1–100 weights for the min-cut baseline.
+pub fn random_weights(
+    g: &Graph,
+    lo: u32,
+    hi: u32,
+    rng: &mut Rng,
+) -> std::collections::HashMap<(u32, u32), u32> {
+    let mut w = std::collections::HashMap::with_capacity(g.num_edges());
+    for (u, v) in g.edge_list() {
+        w.insert((u, v), lo + rng.below((hi - lo + 1) as usize) as u32);
+    }
+    w
+}
+
+/// Preferential-attachment graph (degree-proportional endpoint choice),
+/// ~`mean_degree/2` attachments per incoming vertex.
+pub fn preferential_attachment(n: usize, mean_degree: usize, rng: &mut Rng) -> Graph {
+    let m = (mean_degree / 2).max(1);
+    let mut g = Graph::new(n);
+    let seed = (m + 1).min(n);
+    let mut pool: Vec<u32> = Vec::new();
+    for i in 0..seed {
+        for j in (i + 1)..seed {
+            if g.add_edge(i, j) {
+                pool.push(i as u32);
+                pool.push(j as u32);
+            }
+        }
+    }
+    for v in seed..n {
+        let mut added = 0;
+        let mut tries = 0;
+        while added < m && tries < 20 * m {
+            tries += 1;
+            let u = *rng.choose(&pool) as usize;
+            if g.add_edge(u, v) {
+                pool.push(u as u32);
+                pool.push(v as u32);
+                added += 1;
+            }
+        }
+        if added == 0 {
+            let u = rng.below(v);
+            g.add_edge(u, v);
+            pool.push(u as u32);
+            pool.push(v as u32);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_seeds;
+
+    #[test]
+    fn uniform_random_exact_edge_count() {
+        check_seeds(10, |rng| {
+            let n = rng.range(10, 200);
+            let e = rng.below(n * (n - 1) / 4);
+            let g = uniform_random(n, e, rng);
+            g.num_edges() == e && g.len() == n
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot fit")]
+    fn uniform_random_rejects_overfull() {
+        let mut rng = Rng::seed_from(0);
+        uniform_random(4, 100, &mut rng);
+    }
+
+    #[test]
+    fn weights_in_range_and_complete() {
+        let mut rng = Rng::seed_from(1);
+        let g = uniform_random(50, 200, &mut rng);
+        let w = random_weights(&g, 1, 100, &mut rng);
+        assert_eq!(w.len(), 200);
+        assert!(w.values().all(|&x| (1..=100).contains(&x)));
+    }
+
+    #[test]
+    fn preferential_attachment_heavy_tail() {
+        let mut rng = Rng::seed_from(2);
+        let g = preferential_attachment(2000, 6, &mut rng);
+        let mean = 2.0 * g.num_edges() as f64 / g.len() as f64;
+        let max = (0..g.len()).map(|v| g.degree(v)).max().unwrap() as f64;
+        assert!(max > 4.0 * mean, "max {max} mean {mean}");
+    }
+
+    #[test]
+    fn preferential_attachment_connected_enough() {
+        let mut rng = Rng::seed_from(3);
+        let g = preferential_attachment(500, 4, &mut rng);
+        let comps = g.components(|_| true);
+        assert_eq!(comps.len(), 1, "PA graph should be connected");
+    }
+}

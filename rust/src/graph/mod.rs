@@ -1,0 +1,267 @@
+//! Graph substrate: topology, the paper's dynamic graph model (§3.2),
+//! dataset loading and synthetic generation.
+//!
+//! * [`Graph`] — adjacency-list undirected graph, the common currency
+//!   of HiCut, the cost model and the serving layer.
+//! * [`dynamic`] — mask module + position attributes (§3.2): user
+//!   join/leave, mobility, association churn.
+//! * [`geb`] — loader for the `.geb` synthetic citation datasets
+//!   produced at artifact-build time.
+//! * [`generate`] — random-graph generators for the Fig. 6 scale
+//!   experiments (uniform-random and preferential-attachment).
+//! * [`sample`] — scenario sampling: draw N users / E associations
+//!   from a dataset graph, as §6.3 does.
+
+pub mod dynamic;
+pub mod geb;
+pub mod generate;
+pub mod sample;
+pub mod stats;
+
+pub use dynamic::DynamicGraph;
+pub use geb::Dataset;
+
+/// Undirected graph over vertices `0..n` as sorted adjacency lists.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    adj: Vec<Vec<u32>>,
+    edges: usize,
+}
+
+impl Graph {
+    pub fn new(n: usize) -> Self {
+        Graph { adj: vec![Vec::new(); n], edges: 0 }
+    }
+
+    /// Build from an edge list (duplicates and self-loops ignored).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        let mut g = Graph::new(n);
+        for &(u, v) in edges {
+            g.add_edge(u as usize, v as usize);
+        }
+        g
+    }
+
+    pub fn len(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adj.is_empty()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].len()
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.adj[v]
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].binary_search(&(v as u32)).is_ok()
+    }
+
+    /// Insert an undirected edge; returns false if it already existed
+    /// or is a self-loop.
+    pub fn add_edge(&mut self, u: usize, v: usize) -> bool {
+        if u == v || u >= self.len() || v >= self.len() {
+            return false;
+        }
+        match self.adj[u].binary_search(&(v as u32)) {
+            Ok(_) => false,
+            Err(iu) => {
+                self.adj[u].insert(iu, v as u32);
+                let iv = self.adj[v].binary_search(&(u as u32)).unwrap_err();
+                self.adj[v].insert(iv, u as u32);
+                self.edges += 1;
+                true
+            }
+        }
+    }
+
+    /// Remove an undirected edge; returns false if absent.
+    pub fn remove_edge(&mut self, u: usize, v: usize) -> bool {
+        if u >= self.len() || v >= self.len() {
+            return false;
+        }
+        match self.adj[u].binary_search(&(v as u32)) {
+            Ok(iu) => {
+                self.adj[u].remove(iu);
+                let iv = self.adj[v].binary_search(&(u as u32)).unwrap();
+                self.adj[v].remove(iv);
+                self.edges -= 1;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Drop every edge incident to `v` (used when a user leaves, §3.2).
+    pub fn isolate(&mut self, v: usize) {
+        let neigh = std::mem::take(&mut self.adj[v]);
+        for &u in &neigh {
+            let iu = self.adj[u as usize].binary_search(&(v as u32)).unwrap();
+            self.adj[u as usize].remove(iu);
+        }
+        self.edges -= neigh.len();
+    }
+
+    pub fn edge_list(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.edges);
+        for (u, neigh) in self.adj.iter().enumerate() {
+            for &v in neigh {
+                if (u as u32) < v {
+                    out.push((u as u32, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Connected components as vertex lists (restricted to `alive`).
+    pub fn components(&self, alive: impl Fn(usize) -> bool) -> Vec<Vec<usize>> {
+        let n = self.len();
+        let mut seen = vec![false; n];
+        let mut out = Vec::new();
+        for s in 0..n {
+            if seen[s] || !alive(s) {
+                continue;
+            }
+            let mut comp = Vec::new();
+            let mut queue = std::collections::VecDeque::from([s]);
+            seen[s] = true;
+            while let Some(u) = queue.pop_front() {
+                comp.push(u);
+                for &v in self.neighbors(u) {
+                    let v = v as usize;
+                    if !seen[v] && alive(v) {
+                        seen[v] = true;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            out.push(comp);
+        }
+        out
+    }
+
+    /// Vertices within `hops` BFS hops of the seed set (seed included) —
+    /// the halo construction for distributed GNN inference.
+    pub fn k_hop(&self, seeds: &[usize], hops: usize) -> Vec<usize> {
+        let mut dist = vec![usize::MAX; self.len()];
+        let mut queue = std::collections::VecDeque::new();
+        for &s in seeds {
+            dist[s] = 0;
+            queue.push_back(s);
+        }
+        let mut out: Vec<usize> = seeds.to_vec();
+        while let Some(u) = queue.pop_front() {
+            if dist[u] == hops {
+                continue;
+            }
+            for &v in self.neighbors(u) {
+                let v = v as usize;
+                if dist[v] == usize::MAX {
+                    dist[v] = dist[u] + 1;
+                    out.push(v);
+                    queue.push_back(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_seeds;
+
+    fn path_graph(n: usize) -> Graph {
+        let edges: Vec<(u32, u32)> =
+            (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        Graph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn add_remove_edges() {
+        let mut g = Graph::new(4);
+        assert!(g.add_edge(0, 1));
+        assert!(!g.add_edge(1, 0)); // duplicate
+        assert!(!g.add_edge(2, 2)); // self loop
+        assert_eq!(g.num_edges(), 1);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(g.remove_edge(0, 1));
+        assert!(!g.remove_edge(0, 1));
+        assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn isolate_removes_all_incident() {
+        let mut g = Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3), (1, 2)]);
+        g.isolate(0);
+        assert_eq!(g.degree(0), 0);
+        assert_eq!(g.num_edges(), 1);
+        assert!(g.has_edge(1, 2));
+    }
+
+    #[test]
+    fn components_split() {
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (3, 4)]);
+        let comps = g.components(|_| true);
+        assert_eq!(comps.len(), 3); // {0,1,2}, {3,4}, {5}
+        let sizes: Vec<usize> = comps.iter().map(|c| c.len()).collect();
+        assert_eq!(sizes, vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn components_respect_alive_mask() {
+        let g = path_graph(5);
+        // Killing the middle vertex splits the path.
+        let comps = g.components(|v| v != 2);
+        assert_eq!(comps.len(), 2);
+    }
+
+    #[test]
+    fn k_hop_halo() {
+        let g = path_graph(7);
+        let mut h = g.k_hop(&[3], 2);
+        h.sort_unstable();
+        assert_eq!(h, vec![1, 2, 3, 4, 5]);
+        let mut h0 = g.k_hop(&[0], 1);
+        h0.sort_unstable();
+        assert_eq!(h0, vec![0, 1]);
+    }
+
+    #[test]
+    fn edge_list_round_trip() {
+        check_seeds(30, |rng| {
+            let n = rng.range(2, 40);
+            let mut g = Graph::new(n);
+            for _ in 0..rng.below(3 * n) {
+                g.add_edge(rng.below(n), rng.below(n));
+            }
+            let rebuilt = Graph::from_edges(n, &g.edge_list());
+            (0..n).all(|v| rebuilt.neighbors(v) == g.neighbors(v))
+                && rebuilt.num_edges() == g.num_edges()
+        });
+    }
+
+    #[test]
+    fn degree_sums_to_twice_edges() {
+        check_seeds(30, |rng| {
+            let n = rng.range(2, 60);
+            let mut g = Graph::new(n);
+            for _ in 0..rng.below(4 * n) {
+                g.add_edge(rng.below(n), rng.below(n));
+            }
+            let degsum: usize = (0..n).map(|v| g.degree(v)).sum();
+            degsum == 2 * g.num_edges()
+        });
+    }
+}

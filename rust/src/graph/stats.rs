@@ -1,0 +1,74 @@
+//! Graph statistics for the Fig. 5 experiment (vertex degree
+//! distributions of the three datasets) and general diagnostics.
+
+use super::Graph;
+
+/// (degree, count) pairs sorted by degree — what Fig. 5 plots.
+pub fn degree_distribution(g: &Graph) -> Vec<(usize, usize)> {
+    crate::util::stats::int_distribution((0..g.len()).map(|v| g.degree(v)))
+}
+
+/// Summary of a distribution for table output.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DegreeSummary {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+    pub median: usize,
+}
+
+pub fn degree_summary(g: &Graph) -> DegreeSummary {
+    let mut degs: Vec<usize> = (0..g.len()).map(|v| g.degree(v)).collect();
+    degs.sort_unstable();
+    let n = degs.len().max(1);
+    DegreeSummary {
+        min: degs.first().copied().unwrap_or(0),
+        max: degs.last().copied().unwrap_or(0),
+        mean: degs.iter().sum::<usize>() as f64 / n as f64,
+        median: degs[n / 2],
+    }
+}
+
+/// Pearson-style tail heaviness probe: fraction of vertices with degree
+/// above `k * mean` — citation graphs have a visible heavy tail.
+pub fn tail_fraction(g: &Graph, k: f64) -> f64 {
+    let mean = 2.0 * g.num_edges() as f64 / g.len().max(1) as f64;
+    let cut = k * mean;
+    (0..g.len()).filter(|&v| g.degree(v) as f64 > cut).count() as f64
+        / g.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{preferential_attachment, uniform_random};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn distribution_sums_to_vertex_count() {
+        let mut rng = Rng::seed_from(1);
+        let g = uniform_random(200, 600, &mut rng);
+        let dist = degree_distribution(&g);
+        let total: usize = dist.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 200);
+        let edge_mass: usize = dist.iter().map(|&(d, c)| d * c).sum();
+        assert_eq!(edge_mass, 2 * g.num_edges());
+    }
+
+    #[test]
+    fn summary_consistent() {
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
+        let s = degree_summary(&g);
+        assert_eq!(s.max, 3);
+        assert_eq!(s.min, 1);
+        assert!((s.mean - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pa_has_heavier_tail_than_uniform() {
+        let mut rng = Rng::seed_from(7);
+        let pa = preferential_attachment(3000, 8, &mut rng);
+        let er = uniform_random(3000, pa.num_edges(), &mut rng);
+        assert!(tail_fraction(&pa, 4.0) > tail_fraction(&er, 4.0));
+    }
+}

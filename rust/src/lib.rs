@@ -1,0 +1,40 @@
+//! # GraphEdge
+//!
+//! A production-shaped reproduction of *GraphEdge: Dynamic Graph
+//! Partition and Task Scheduling for GNNs Computing in Edge Network*
+//! (Xiao et al., 2025), built as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the EC controller and everything around
+//!   it: the dynamic graph model (§3.2), the HiCut hierarchical
+//!   traversal graph-cut (§4, Algorithm 1), the DRLGO multi-agent
+//!   offloading algorithm (§5, Algorithm 2) plus the paper's baselines
+//!   (PTOM/GM/RM and the max-flow min-cut comparator), the radio/energy
+//!   cost model (Eqs. 3–13), and a simulated heterogeneous edge-server
+//!   fleet that *actually executes* GNN inference.
+//! * **Layer 2 (JAX, build time)** — GCN/GAT/GraphSAGE/SGC forwards and
+//!   the MADDPG/PPO train steps, AOT-lowered to HLO text.
+//! * **Layer 1 (Pallas, build time)** — the dense aggregation kernels
+//!   behind every GNN layer.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! compute once, and this crate loads + executes the artifacts through
+//! the PJRT C API ([`runtime`]).
+//!
+//! Start with [`coordinator::Controller`] for the end-to-end loop, or
+//! the `examples/` directory.
+
+pub mod bench;
+pub mod coordinator;
+pub mod drl;
+pub mod graph;
+pub mod net;
+pub mod partition;
+pub mod runtime;
+pub mod serving;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias (anyhow-based; library-level typed errors
+/// live next to their modules as `thiserror` enums).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,280 @@
+//! `graphedge` — the GraphEdge launcher.
+//!
+//! Subcommands:
+//!   info       manifest + config dump (Table 2 parameters)
+//!   partition  HiCut vs max-flow min-cut on synthetic graphs (Fig. 6 style)
+//!   train      train DRLGO / PTOM, checkpoint, print the reward curve
+//!   simulate   evaluate offloading methods on dataset scenarios
+//!   serve      online serving loop: router + batcher + fleet inference
+
+use graphedge::bench::{fmt_secs, Table};
+use graphedge::coordinator::Controller;
+use graphedge::drl::{Method, MaddpgConfig, PpoConfig};
+use graphedge::graph::generate::{random_weights, uniform_random};
+use graphedge::net::SystemParams;
+use graphedge::partition::{hicut, mincut_partition};
+use graphedge::util::cli::{App, CliError, Command};
+use graphedge::util::config::Config;
+use graphedge::util::metrics::GLOBAL as METRICS;
+use graphedge::util::rng::Rng;
+
+fn app() -> App {
+    App {
+        name: "graphedge",
+        about: "dynamic graph partition and task scheduling for GNN edge computing",
+        commands: vec![
+            Command::new("info", "dump manifest, datasets and Table 2 parameters")
+                .opt("config", "configs/table2.toml", "config file"),
+            Command::new("partition", "compare HiCut vs min-cut on a random graph")
+                .opt("vertices", "2000", "vertex count")
+                .opt("edges", "20000", "edge count")
+                .opt("servers", "25", "server count for min-cut iterations")
+                .opt("seed", "7", "rng seed"),
+            Command::new("train", "train an offloading policy")
+                .opt("method", "drlgo", "drlgo | ptom | drl-only")
+                .opt("dataset", "pubmed", "training dataset")
+                .opt("episodes", "100", "training episodes")
+                .opt("users", "300", "users per scenario")
+                .opt("assocs", "4800", "associations per scenario")
+                .opt("out", "checkpoints", "checkpoint directory")
+                .opt("config", "configs/table2.toml", "config file")
+                .opt("seed", "3401", "rng seed"),
+            Command::new("simulate", "evaluate offloading methods on one scenario")
+                .opt("dataset", "cora", "dataset")
+                .opt("model", "gcn", "gnn model")
+                .opt("users", "150", "users")
+                .opt("assocs", "900", "associations")
+                .opt("episodes", "40", "training episodes for the DRL methods")
+                .opt("config", "configs/table2.toml", "config file")
+                .opt("seed", "11", "rng seed")
+                .switch("no-inference", "skip fleet GNN inference"),
+            Command::new("serve", "online serving: router + dynamic batching + fleet")
+                .opt("dataset", "cora", "dataset")
+                .opt("model", "gcn", "gnn model")
+                .opt("users", "200", "users")
+                .opt("assocs", "1200", "associations")
+                .opt("requests", "600", "request count")
+                .opt("policy", "", "DRLGO checkpoint (.gta); empty = greedy placement")
+                .opt("config", "configs/table2.toml", "config file")
+                .opt("seed", "5", "rng seed"),
+        ],
+    }
+}
+
+fn main() {
+    graphedge::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let matches = match app().parse(&args) {
+        Ok(m) => m,
+        Err(CliError::HelpRequested) => return,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match matches.command.as_str() {
+        "info" => cmd_info(&matches),
+        "partition" => cmd_partition(&matches),
+        "train" => cmd_train(&matches),
+        "simulate" => cmd_simulate(&matches),
+        "serve" => cmd_serve(&matches),
+        other => {
+            eprintln!("unknown command {other}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_params(matches: &graphedge::util::cli::Matches) -> SystemParams {
+    let path = matches.str("config");
+    match Config::from_file(path) {
+        Ok(cfg) => SystemParams::from_config(&cfg),
+        Err(_) => {
+            log::warn!("config {path} not found; using Table 2 defaults");
+            SystemParams::default()
+        }
+    }
+}
+
+fn cmd_info(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
+    let params = load_params(matches);
+    let ctrl = Controller::new(params.clone())?;
+    println!("GraphEdge — manifest + parameters\n");
+    println!("datasets:");
+    for (name, ds) in &ctrl.rt.manifest.datasets {
+        println!(
+            "  {name:<10} |V|={:<6} |E|={:<6} F={:<5} classes={}",
+            ds.n, ds.e, ds.feat, ds.classes
+        );
+    }
+    println!("\nexecutables ({}):", ctrl.rt.manifest.executables.len());
+    for (name, e) in &ctrl.rt.manifest.executables {
+        println!("  {name:<16} {} inputs  {}", e.inputs.len(), e.path);
+    }
+    println!("\npre-trained accuracy (paper band 0.60–0.80):");
+    for (k, v) in &ctrl.rt.manifest.accuracy {
+        println!("  {k:<16} {v:.3}");
+    }
+    println!("\nTable 2 parameters (SI units):");
+    println!("  servers={}  plane={}m  noise={:.1e}W", params.servers, params.plane_m, params.noise_w);
+    println!("  P_user={:?}W  P_server={:?}W", params.p_user_w, params.p_server_w);
+    println!("  B_user={:?}Hz  B_server={:.1e}Hz", params.bw_user_hz, params.bw_server_hz);
+    println!("  f_k={:?}Hz  μ={:.1e}  ϑ={:.1e}  φ={:.1e}", params.f_hz, params.mu_j_bit, params.theta_j, params.phi_j);
+    Ok(())
+}
+
+fn cmd_partition(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
+    let (v, e) = (matches.usize("vertices"), matches.usize("edges"));
+    let servers = matches.usize("servers");
+    let mut rng = Rng::seed_from(matches.usize("seed") as u64);
+    println!("generating random graph |V|={v} |E|={e} ...");
+    let g = uniform_random(v, e, &mut rng);
+    let w = random_weights(&g, 1, 100, &mut rng);
+
+    let t0 = std::time::Instant::now();
+    let hp = hicut(&g, &|_| true);
+    let t_hicut = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let mp = mincut_partition(&g, &w, servers, &mut rng);
+    let t_mincut = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        "HiCut vs max-flow min-cut",
+        &["method", "time", "subgraphs", "cut edges", "cut weight", "locality"],
+    );
+    t.row(vec![
+        "HiCut".into(),
+        fmt_secs(t_hicut),
+        hp.len().to_string(),
+        hp.cut_edges(&g).to_string(),
+        hp.cut_weight(&g, &w).to_string(),
+        format!("{:.3}", hp.locality(&g)),
+    ]);
+    t.row(vec![
+        "min-cut [36]".into(),
+        fmt_secs(t_mincut),
+        mp.len().to_string(),
+        mp.cut_edges(&g).to_string(),
+        mp.cut_weight(&g, &w).to_string(),
+        format!("{:.3}", mp.locality(&g)),
+    ]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_train(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
+    let params = load_params(matches);
+    let ctrl = Controller::new(params)?;
+    let dataset = matches.str("dataset").to_string();
+    let episodes = matches.usize("episodes");
+    let users = matches.usize("users");
+    let assocs = matches.usize("assocs");
+    let seed = matches.usize("seed") as u64;
+    let outdir = std::path::PathBuf::from(matches.str("out"));
+    std::fs::create_dir_all(&outdir)?;
+    let method = matches.str("method").to_string();
+    match method.as_str() {
+        "drlgo" | "drl-only" => {
+            let cfg = MaddpgConfig { episodes, seed, ..MaddpgConfig::default() };
+            let ablation = method == "drl-only";
+            let (trainer, _env, curve) =
+                ctrl.train_drlgo(&dataset, ablation, users, assocs, &cfg)?;
+            let ckpt = outdir.join(format!("{method}_{dataset}.gta"));
+            trainer.save(&ckpt)?;
+            println!("saved checkpoint {}", ckpt.display());
+            print_curve(&curve);
+        }
+        "ptom" => {
+            let cfg = PpoConfig { episodes, seed, ..PpoConfig::default() };
+            let (_trainer, _env, curve) = ctrl.train_ptom(&dataset, users, assocs, &cfg)?;
+            print_curve(&curve);
+        }
+        other => anyhow::bail!("unknown method {other}"),
+    }
+    Ok(())
+}
+
+fn print_curve(curve: &[graphedge::drl::maddpg::EpisodeStats]) {
+    let mut t = Table::new("training curve", &["episode", "reward", "system cost"]);
+    let stride = (curve.len() / 20).max(1);
+    for s in curve.iter().step_by(stride) {
+        t.row(vec![
+            s.episode.to_string(),
+            format!("{:.3}", s.reward),
+            format!("{:.3}", s.system_cost),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn cmd_simulate(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
+    let params = load_params(matches);
+    let ctrl = Controller::new(params)?;
+    let dataset = matches.str("dataset").to_string();
+    let model = matches.str("model").to_string();
+    let users = matches.usize("users");
+    let assocs = matches.usize("assocs");
+    let episodes = matches.usize("episodes");
+    let seed = matches.usize("seed") as u64;
+    let inference = !matches.switch("no-inference");
+
+    let mcfg = MaddpgConfig { episodes, seed, ..MaddpgConfig::default() };
+    let (mut drlgo, _, _) = ctrl.train_drlgo(&dataset, false, users, assocs, &mcfg)?;
+    let pcfg = PpoConfig { episodes, seed, ..PpoConfig::default() };
+    let (mut ptom, _, _) = ctrl.train_ptom(&dataset, users, assocs, &pcfg)?;
+
+    let mut table = Table::new(
+        &format!("scenario {dataset}/{model} N={users} E={assocs}"),
+        &["method", "T_all (s)", "I_all (J)", "C", "cross-Mb", "accuracy", "decision"],
+    );
+    for method in [Method::Drlgo, Method::Ptom, Method::Greedy, Method::Random] {
+        let mut rng = Rng::seed_from(seed + 100);
+        let mut env = ctrl.make_env(method, &dataset, users, assocs, &mut rng)?;
+        let report = ctrl.run_scenario(
+            method,
+            &mut env,
+            &dataset,
+            &model,
+            Some(&mut drlgo),
+            Some(&mut ptom),
+            inference,
+            &mut rng,
+        )?;
+        table.row(vec![
+            report.method.into(),
+            format!("{:.4}", report.cost.t_all()),
+            format!("{:.4}", report.cost.i_all()),
+            format!("{:.4}", report.cost.total()),
+            format!("{:.2}", report.cost.cross_mb),
+            format!("{:.3}", report.accuracy),
+            fmt_secs(report.decision_s),
+        ]);
+    }
+    print!("{}", table.render());
+    print!("{}", METRICS.report());
+    Ok(())
+}
+
+fn cmd_serve(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
+    let params = load_params(matches);
+    let ctrl = Controller::new(params)?;
+    let dataset = matches.str("dataset").to_string();
+    let model = matches.str("model").to_string();
+    let users = matches.usize("users");
+    let assocs = matches.usize("assocs");
+    let requests = matches.usize("requests");
+    let seed = matches.usize("seed") as u64;
+    let policy = matches.str("policy").to_string();
+    let placement = if policy.is_empty() {
+        graphedge::serving::Placement::Greedy
+    } else {
+        graphedge::serving::Placement::DrlgoCheckpoint(std::path::Path::new(
+            Box::leak(policy.clone().into_boxed_str()),
+        ))
+    };
+    graphedge::serving::serve_loop(&ctrl, &dataset, &model, users, assocs, requests, seed, placement)
+}

@@ -1,0 +1,548 @@
+//! The system cost model: Eqs. 3–14 of §3.3–§3.5.
+//!
+//! Interpretation notes (documented in DESIGN.md §Substitutions):
+//!
+//! * Task sizes X_i are in Mbit (1 kb per feature dimension, capped at
+//!   1500 dims, §6.1); converted to bits where rates are in bit/s.
+//! * Eq. (12) as printed sums the inter-server transfer term inside the
+//!   per-user sum (multiplying it by N); we count each server pair once,
+//!   which is the physically meaningful reading.
+//! * S_κ in the GNN energy terms is the *feature dimensionality* of
+//!   layer κ.  Aggregation (Eq. 10) moves S_{κ-1}·1kb bits per
+//!   neighbor (μ is J/bit); the update (Eq. 11) performs
+//!   S_{κ-1}·S_κ multiply-accumulates (ϑ is J/MAC) plus S_κ
+//!   activations (φ J each) per vertex.  Reading Eq. 11's product as
+//!   bits² would put the update term 6 orders of magnitude above every
+//!   other cost and erase the offloading signal the paper optimizes.
+
+use crate::graph::dynamic::DynamicGraph;
+
+use super::params::SystemParams;
+use super::topology::{EdgeNetwork, UserLinks};
+
+/// Per-architecture GNN compute profile: the paper's Eq. 10/11 terms
+/// depend on which GNN runs on the servers (Fig. 10 compares GCN, GAT,
+/// GraphSAGE and SGC).  Profiles are expressed against the layer
+/// dimensionality list `[S_0, S_1, ..., S_F]`:
+///
+/// * `update_mult` — weight matrices applied per layer (GraphSAGE-mean
+///   has W_self and W_neigh → 2.0; others 1.0).
+/// * `edge_score_macs(s)` — extra per-edge multiply-accumulates in the
+///   aggregation (GAT's additive attention scores: 2·S per edge).
+/// * `fused_update` — SGC collapses all updates into one S_0 × S_F
+///   product with no intermediate activations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GnnProfile {
+    Gcn,
+    Gat,
+    Sage,
+    Sgc,
+}
+
+impl GnnProfile {
+    pub fn from_name(name: &str) -> Self {
+        match name {
+            "gat" => GnnProfile::Gat,
+            "sage" => GnnProfile::Sage,
+            "sgc" => GnnProfile::Sgc,
+            _ => GnnProfile::Gcn,
+        }
+    }
+
+    pub fn update_mult(&self) -> f64 {
+        match self {
+            GnnProfile::Sage => 2.0,
+            _ => 1.0,
+        }
+    }
+
+    pub fn edge_score_macs(&self, s_cur: f64) -> f64 {
+        match self {
+            GnnProfile::Gat => 2.0 * s_cur,
+            _ => 0.0,
+        }
+    }
+
+    pub fn fused_update(&self) -> bool {
+        matches!(self, GnnProfile::Sgc)
+    }
+}
+
+/// An offloading decision: `server[i]` = edge-server id of scenario
+/// user `i`, or `UNASSIGNED`.
+pub const UNASSIGNED: usize = usize::MAX;
+
+#[derive(Clone, Debug)]
+pub struct Offload {
+    pub server: Vec<usize>,
+}
+
+impl Offload {
+    pub fn empty(n: usize) -> Self {
+        Offload { server: vec![UNASSIGNED; n] }
+    }
+
+    pub fn all_assigned(&self, active: &[usize]) -> bool {
+        active.iter().all(|&u| self.server[u] != UNASSIGNED)
+    }
+
+    /// Per-server load (assigned-task counts).
+    pub fn loads(&self, servers: usize) -> Vec<usize> {
+        let mut l = vec![0usize; servers];
+        for &s in &self.server {
+            if s != UNASSIGNED {
+                l[s] += 1;
+            }
+        }
+        l
+    }
+}
+
+/// Cost decomposition of one completed offloading round.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostBreakdown {
+    /// Σ upload delay (s).
+    pub t_upload_s: f64,
+    /// Σ inter-server transfer delay (s).
+    pub t_transfer_s: f64,
+    /// Σ GNN compute delay (s).
+    pub t_compute_s: f64,
+    /// Σ upload energy (J).
+    pub i_upload_j: f64,
+    /// Σ inter-server communication energy (J).
+    pub i_transfer_j: f64,
+    /// GNN aggregation + update energy over all layers (J).
+    pub i_gnn_j: f64,
+    /// Cross-server data volume (Mbit) — the Fig. 7d/8d/9d metric.
+    pub cross_mb: f64,
+    /// Number of associations crossing servers.
+    pub cross_edges: usize,
+}
+
+impl CostBreakdown {
+    /// T_all (Eq. 12), seconds.
+    pub fn t_all(&self) -> f64 {
+        self.t_upload_s + self.t_transfer_s + self.t_compute_s
+    }
+
+    /// I_all (Eq. 13), joules.
+    pub fn i_all(&self) -> f64 {
+        self.i_upload_j + self.i_transfer_j + self.i_gnn_j
+    }
+
+    /// C = T_all + I_all (§3.5; the paper's scalarized objective).
+    pub fn total(&self) -> f64 {
+        self.t_all() + self.i_all()
+    }
+}
+
+/// Cost evaluator bound to one scenario (users + network + links).
+pub struct CostModel<'a> {
+    pub params: &'a SystemParams,
+    pub net: &'a EdgeNetwork,
+    pub links: &'a UserLinks,
+    pub users: &'a DynamicGraph,
+    /// Hidden feature dimensionality per GNN layer (e.g. [F, 64, C]).
+    pub layer_dims: Vec<usize>,
+    /// Which GNN architecture the servers run (Fig. 10).
+    pub profile: GnnProfile,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(
+        params: &'a SystemParams,
+        net: &'a EdgeNetwork,
+        links: &'a UserLinks,
+        users: &'a DynamicGraph,
+        layer_dims: Vec<usize>,
+    ) -> Self {
+        assert_eq!(layer_dims.len(), params.gnn_layers + 1, "dims per layer boundary");
+        CostModel { params, net, links, users, layer_dims, profile: GnnProfile::Gcn }
+    }
+
+    /// Builder-style: switch the GNN architecture profile.
+    pub fn with_profile(mut self, profile: GnnProfile) -> Self {
+        self.profile = profile;
+        self
+    }
+
+    /// Channel gain h_{i,m}(t) = ϱ₀ · d⁻² (free-space path loss).
+    pub fn gain(&self, user: usize, server: usize) -> f64 {
+        let d = self.users.pos(user).dist(&self.net.servers[server].pos).max(1.0);
+        self.params.rho0 / (d * d)
+    }
+
+    /// Uplink rate R_{i,m}(t), bit/s (Eq. 3).
+    pub fn uplink_rate(&self, user: usize, server: usize) -> f64 {
+        let bw = self.links.bw_hz[user][server];
+        let snr = self.links.p_w[user] * self.gain(user, server) / self.params.noise_w;
+        bw * (1.0 + snr).log2()
+    }
+
+    /// Inter-server rate R_{k,l}, bit/s (Eq. 6).
+    pub fn server_rate(&self, k: usize) -> f64 {
+        let snr = self.net.servers[k].p_w * self.params.h0 / self.params.noise_w;
+        self.net.server_bw_hz * (1.0 + snr).log2()
+    }
+
+    /// Upload delay T^{up}_{i,m} (Eq. 4), seconds.
+    pub fn upload_time(&self, user: usize, server: usize) -> f64 {
+        self.users.task_mb(user) * 1e6 / self.uplink_rate(user, server)
+    }
+
+    /// Upload energy I^{up}_{i,m} (Eq. 5), joules.
+    pub fn upload_energy(&self, user: usize) -> f64 {
+        self.users.task_mb(user) * self.params.zeta_up_j_mb
+    }
+
+    /// GNN compute delay T^{com}_{i,f_k} (Eq. 9), seconds.
+    pub fn compute_time(&self, user: usize, server: usize) -> f64 {
+        self.users.task_mb(user) * 1e6 / self.net.servers[server].f_hz
+    }
+
+    /// Full-system cost of a complete offload (Eqs. 12–13).
+    pub fn evaluate(&self, offload: &Offload) -> CostBreakdown {
+        let mut out = CostBreakdown::default();
+        let active = self.users.active_users();
+
+        // Upload + compute, per user (Eqs. 4, 5, 9).
+        for &u in &active {
+            let s = offload.server[u];
+            if s == UNASSIGNED {
+                continue;
+            }
+            out.t_upload_s += self.upload_time(u, s);
+            out.i_upload_j += self.upload_energy(u);
+            out.t_compute_s += self.compute_time(u, s);
+        }
+
+        // Inter-server transfers: for every association whose endpoints
+        // live on different servers, both tasks' data crosses (x̃_kl,
+        // Eq. 7).  Accumulated per ordered pair once.
+        let m = self.net.len();
+        let mut pair_mb = vec![0.0f64; m * m];
+        for (i, j) in self.users.graph().edge_list() {
+            let (i, j) = (i as usize, j as usize);
+            if !self.users.is_active(i) || !self.users.is_active(j) {
+                continue;
+            }
+            let (k, l) = (offload.server[i], offload.server[j]);
+            if k == UNASSIGNED || l == UNASSIGNED || k == l {
+                continue;
+            }
+            pair_mb[k * m + l] += self.users.task_mb(i);
+            pair_mb[l * m + k] += self.users.task_mb(j);
+            out.cross_edges += 1;
+        }
+        for k in 0..m {
+            for l in 0..m {
+                if k == l {
+                    continue;
+                }
+                let mb = pair_mb[k * m + l];
+                if mb == 0.0 {
+                    continue;
+                }
+                out.cross_mb += mb;
+                out.t_transfer_s += mb * 1e6 / self.server_rate(k);
+                out.i_transfer_j += mb * self.params.zeta_tran_j_mb;
+            }
+        }
+
+        // GNN energy (Eqs. 10–11) over F layers, shaped by the model
+        // profile (Fig. 10 compares architectures on the same scenario).
+        let mut agg = 0.0;
+        let mut verts = 0.0;
+        for &u in &active {
+            if offload.server[u] == UNASSIGNED {
+                continue;
+            }
+            agg += self.users.active_degree(u) as f64;
+            verts += 1.0;
+        }
+        out.i_gnn_j += self.gnn_energy_j(agg, verts);
+        out
+    }
+
+    /// Eqs. 10–11 for `agg` total neighbor aggregations and `verts`
+    /// participating vertices, per the architecture profile.
+    pub fn gnn_energy_j(&self, agg: f64, verts: f64) -> f64 {
+        let p = self.params;
+        let mut e = 0.0;
+        for kappa in 1..=p.gnn_layers {
+            let s_prev = self.layer_dims[kappa - 1] as f64;
+            let s_cur = self.layer_dims[kappa] as f64;
+            // Eq. 10: μ · |N_i| · S_{κ-1}·1kb bits per neighbor.
+            e += p.mu_j_bit * agg * s_prev * 1e3;
+            // GAT: attention-score MACs per (directed) edge.
+            e += p.theta_j * self.profile.edge_score_macs(s_cur) * agg;
+            if !self.profile.fused_update() {
+                // Eq. 11: ϑ·S_{κ-1}·S_κ MACs + φ·S_κ activations/vertex.
+                e += verts
+                    * (p.theta_j * self.profile.update_mult() * s_prev * s_cur
+                        + p.phi_j * s_cur);
+            }
+        }
+        if self.profile.fused_update() {
+            // SGC: one S_0 × S_F product, activations only at readout.
+            let s0 = self.layer_dims[0] as f64;
+            let sf = *self.layer_dims.last().unwrap() as f64;
+            e += verts * (p.theta_j * s0 * sf + p.phi_j * sf);
+        }
+        e
+    }
+
+    /// Incremental cost of assigning `user` to `server` given the
+    /// current partial offload — the per-step DRL reward basis.  The
+    /// transfer term charges both directions of every association
+    /// between `user` and already-placed neighbors on other servers.
+    pub fn marginal_cost(&self, offload: &Offload, user: usize, server: usize) -> f64 {
+        let mut c = self.upload_time(user, server)
+            + self.upload_energy(user)
+            + self.compute_time(user, server);
+        for &nb in self.users.graph().neighbors(user) {
+            let nb = nb as usize;
+            if !self.users.is_active(nb) {
+                continue;
+            }
+            let s2 = offload.server[nb];
+            if s2 == UNASSIGNED || s2 == server {
+                continue;
+            }
+            let mb = self.users.task_mb(user) + self.users.task_mb(nb);
+            c += self.users.task_mb(user) * 1e6 / self.server_rate(server);
+            c += self.users.task_mb(nb) * 1e6 / self.server_rate(s2);
+            c += mb * self.params.zeta_tran_j_mb;
+        }
+        // Per-user share of GNN energy (profile-aware).
+        c += self.gnn_energy_j(self.users.active_degree(user) as f64, 1.0);
+        c
+    }
+
+    /// Constraint checks C1–C6 (Eq. 14a–f) for a complete offload.
+    pub fn check_constraints(&self, offload: &Offload) -> Result<(), String> {
+        // C1: every active user on exactly one server.
+        for &u in &self.users.active_users() {
+            if offload.server[u] == UNASSIGNED {
+                return Err(format!("C1 violated: user {u} unassigned"));
+            }
+        }
+        // C2: positive CPU rates.
+        if self.net.servers.iter().any(|s| s.f_hz <= 0.0) {
+            return Err("C2 violated: non-positive f_k".into());
+        }
+        // C3: Σ B_{i,m} ≤ B_max1 over *used* links.
+        let used_bw: f64 = self
+            .users
+            .active_users()
+            .iter()
+            .map(|&u| self.links.bw_hz[u][offload.server[u]])
+            .sum();
+        if used_bw > self.params.bmax_user_hz {
+            return Err(format!(
+                "C3 violated: user bandwidth {:.1} MHz > cap",
+                used_bw / 1e6
+            ));
+        }
+        // C4: Σ B_{k,l} ≤ B_max2 over active server pairs.
+        let m = self.net.len();
+        let active_pairs = m * (m - 1) / 2;
+        let server_bw = active_pairs as f64 * self.net.server_bw_hz;
+        if server_bw > self.params.bmax_server_hz * m as f64 {
+            return Err("C4 violated: server bandwidth over cap".into());
+        }
+        // C5/C6: aggregate transmit power caps.
+        let p_users: f64 = self
+            .users
+            .active_users()
+            .iter()
+            .map(|&u| self.links.p_w[u])
+            .sum();
+        if p_users > self.params.pmax_user_w {
+            return Err(format!("C5 violated: ΣP_i = {p_users:.3} W"));
+        }
+        let p_servers: f64 = self.net.servers.iter().map(|s| s.p_w).sum();
+        if p_servers > self.params.pmax_server_w {
+            return Err(format!("C6 violated: ΣP_k = {p_servers:.3} W"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::util::rng::Rng;
+
+    fn scenario(
+        n: usize,
+        edges: &[(u32, u32)],
+        seed: u64,
+    ) -> (SystemParams, EdgeNetwork, UserLinks, DynamicGraph) {
+        let params = SystemParams::default();
+        let mut rng = Rng::seed_from(seed);
+        let net = EdgeNetwork::build(&params, n, &mut rng);
+        let links = UserLinks::draw(&params, n, net.len(), &mut rng);
+        let g = Graph::from_edges(n, edges);
+        let users = DynamicGraph::new(g, vec![1.5; n], params.plane_m, &mut rng);
+        (params, net, links, users)
+    }
+
+    fn dims() -> Vec<usize> {
+        vec![1500, 64, 8]
+    }
+
+    #[test]
+    fn rates_positive_and_distance_monotone() {
+        let (p, net, links, users) = scenario(10, &[], 1);
+        let cm = CostModel::new(&p, &net, &links, &users, dims());
+        for u in 0..10 {
+            for s in 0..net.len() {
+                assert!(cm.uplink_rate(u, s) > 0.0);
+            }
+        }
+        // Same bandwidth/power, farther server → lower rate: force it.
+        let near = net.nearest(users.pos(0));
+        let far = (0..net.len())
+            .max_by(|&a, &b| {
+                users.pos(0)
+                    .dist(&net.servers[a].pos)
+                    .partial_cmp(&users.pos(0).dist(&net.servers[b].pos))
+                    .unwrap()
+            })
+            .unwrap();
+        // Rate ratio dominated by gain when bandwidths are similar; we
+        // only check the gain ordering which is deterministic.
+        assert!(cm.gain(0, near) > cm.gain(0, far));
+    }
+
+    #[test]
+    fn colocated_offload_has_zero_transfer() {
+        let (p, net, links, users) = scenario(6, &[(0, 1), (2, 3), (4, 5)], 2);
+        let cm = CostModel::new(&p, &net, &links, &users, dims());
+        let off = Offload { server: vec![1; 6] };
+        let cost = cm.evaluate(&off);
+        assert_eq!(cost.cross_edges, 0);
+        assert_eq!(cost.t_transfer_s, 0.0);
+        assert_eq!(cost.i_transfer_j, 0.0);
+        assert!(cost.t_upload_s > 0.0);
+        assert!(cost.i_gnn_j > 0.0);
+    }
+
+    #[test]
+    fn split_neighbors_pay_transfer() {
+        let (p, net, links, users) = scenario(2, &[(0, 1)], 3);
+        let cm = CostModel::new(&p, &net, &links, &users, dims());
+        let together = cm.evaluate(&Offload { server: vec![0, 0] });
+        let split = cm.evaluate(&Offload { server: vec![0, 1] });
+        assert_eq!(split.cross_edges, 1);
+        assert!((split.cross_mb - 3.0).abs() < 1e-9); // both 1.5 Mb tasks cross
+        assert!(split.total() > together.total());
+        assert!(split.i_transfer_j > 0.0);
+    }
+
+    #[test]
+    fn unassigned_users_cost_nothing() {
+        let (p, net, links, users) = scenario(4, &[(0, 1)], 4);
+        let cm = CostModel::new(&p, &net, &links, &users, dims());
+        let mut off = Offload::empty(4);
+        off.server[0] = 0;
+        let cost = cm.evaluate(&off);
+        let full = cm.evaluate(&Offload { server: vec![0; 4] });
+        assert!(cost.t_upload_s < full.t_upload_s);
+        assert_eq!(cost.cross_edges, 0);
+    }
+
+    #[test]
+    fn cost_scales_with_users_and_edges() {
+        // More users / more associations → higher total cost, the
+        // monotonicity behind Figs. 7–9 panels (a) and (b).
+        let (p, net, links, users_small) = scenario(10, &[(0, 1)], 5);
+        let cm_small = CostModel::new(&p, &net, &links, &users_small, dims());
+        let c_small = cm_small.evaluate(&Offload { server: vec![0; 10] });
+
+        let edges: Vec<(u32, u32)> = (0..20u32)
+            .flat_map(|i| ((i + 1)..20).map(move |j| (i, j)))
+            .take(60)
+            .collect();
+        let (p2, net2, links2, users_big) = scenario(20, &edges, 5);
+        let cm_big = CostModel::new(&p2, &net2, &links2, &users_big, dims());
+        // Spread users over servers so transfers exist.
+        let assign: Vec<usize> = (0..20).map(|u| u % 4).collect();
+        let c_big = cm_big.evaluate(&Offload { server: assign });
+        assert!(c_big.total() > c_small.total());
+    }
+
+    #[test]
+    fn marginal_cost_prefers_neighbor_server() {
+        let (p, net, links, users) = scenario(3, &[(0, 1)], 6);
+        let cm = CostModel::new(&p, &net, &links, &users, dims());
+        let mut off = Offload::empty(3);
+        off.server[0] = 2;
+        let with_nb = cm.marginal_cost(&off, 1, 2);
+        let away = cm.marginal_cost(&off, 1, 3);
+        // Joining the neighbor's server avoids the transfer term; the
+        // upload/compute deltas are orders of magnitude smaller here.
+        assert!(with_nb < away, "{with_nb} vs {away}");
+    }
+
+    #[test]
+    fn constraints_detect_violations() {
+        let (p, net, links, users) = scenario(5, &[], 7);
+        let cm = CostModel::new(&p, &net, &links, &users, dims());
+        let mut off = Offload::empty(5);
+        assert!(cm.check_constraints(&off).unwrap_err().contains("C1"));
+        for u in 0..5 {
+            off.server[u] = 0;
+        }
+        assert!(cm.check_constraints(&off).is_ok());
+    }
+
+    #[test]
+    fn gnn_profiles_order_energy() {
+        // Per-vertex update energy: SAGE (2 weight mats) > GAT (extra
+        // per-edge attention) > GCN > SGC (single fused product).
+        let (p, net, links, users) = scenario(8, &[(0, 1), (1, 2)], 8);
+        let e = |prof: GnnProfile| {
+            CostModel::new(&p, &net, &links, &users, dims())
+                .with_profile(prof)
+                .gnn_energy_j(16.0, 8.0)
+        };
+        let (gcn, gat, sage, sgc) = (
+            e(GnnProfile::Gcn),
+            e(GnnProfile::Gat),
+            e(GnnProfile::Sage),
+            e(GnnProfile::Sgc),
+        );
+        assert!(sage > gat, "sage {sage} gat {gat}");
+        assert!(gat > gcn, "gat {gat} gcn {gcn}");
+        assert!(gcn > sgc, "gcn {gcn} sgc {sgc}");
+    }
+
+    #[test]
+    fn profile_from_name() {
+        assert_eq!(GnnProfile::from_name("gat"), GnnProfile::Gat);
+        assert_eq!(GnnProfile::from_name("sage"), GnnProfile::Sage);
+        assert_eq!(GnnProfile::from_name("sgc"), GnnProfile::Sgc);
+        assert_eq!(GnnProfile::from_name("gcn"), GnnProfile::Gcn);
+        assert_eq!(GnnProfile::from_name("???"), GnnProfile::Gcn);
+    }
+
+    #[test]
+    fn t_and_i_aggregate() {
+        let b = CostBreakdown {
+            t_upload_s: 1.0,
+            t_transfer_s: 2.0,
+            t_compute_s: 3.0,
+            i_upload_j: 4.0,
+            i_transfer_j: 5.0,
+            i_gnn_j: 6.0,
+            cross_mb: 0.0,
+            cross_edges: 0,
+        };
+        assert_eq!(b.t_all(), 6.0);
+        assert_eq!(b.i_all(), 15.0);
+        assert_eq!(b.total(), 21.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Edge-network substrate: radio model, topology and the system cost
+//! model of §3.3–§3.5 (Eqs. 3–14).
+//!
+//! * [`params::SystemParams`] — every Table 2 constant, loadable from
+//!   `configs/*.toml`.
+//! * [`topology::EdgeNetwork`] — the M edge servers + co-located APs on
+//!   the 2000 m × 2000 m plane, heterogeneous service capacities
+//!   (5/4·Mean, Mean, 3/4·Mean) and CPU rates.
+//! * [`cost::CostModel`] — uplink rates (Eq. 3), upload delay/energy
+//!   (Eqs. 4–5), inter-server transfer (Eqs. 6–8), GNN compute time
+//!   (Eq. 9) and energy (Eqs. 10–11), aggregated into
+//!   `C = T_all + I_all` (Eqs. 12–13) with the C1–C6 constraint checks.
+
+pub mod cost;
+pub mod params;
+pub mod topology;
+
+pub use cost::{CostBreakdown, CostModel, GnnProfile, Offload};
+pub use params::SystemParams;
+pub use topology::{EdgeNetwork, EdgeServer};

@@ -1,0 +1,173 @@
+//! Table 2 system parameters.
+//!
+//! All values carry SI units internally (watts, hertz, joules, bits,
+//! meters, seconds); the dBm/MHz/pJ/mJ numbers of Table 2 are converted
+//! at construction.
+
+use crate::util::config::Config;
+
+/// Full parameter set of the EC system (Table 2 defaults).
+#[derive(Clone, Debug)]
+pub struct SystemParams {
+    /// Plane side, meters (2000).
+    pub plane_m: f64,
+    /// Number of edge servers / APs (M = 4 in the system experiments,
+    /// 25 in the Fig. 6 comparison).
+    pub servers: usize,
+    /// Noise power σ², watts (−110 dBm).
+    pub noise_w: f64,
+    /// Reference channel gain ϱ₀ at d₀ = 1 m (free-space path loss
+    /// h = ϱ₀ d⁻²); −30 dB is the customary reference.
+    pub rho0: f64,
+    /// Constant inter-server channel gain h₀ (servers are wired-grade;
+    /// modeled as the gain at 1 km).
+    pub h0: f64,
+    /// User transmit power range [2, 5] mW → watts.
+    pub p_user_w: (f64, f64),
+    /// Server transmit power range [10, 15] mW → watts.
+    pub p_server_w: (f64, f64),
+    /// User↔AP bandwidth range [20, 50] MHz → Hz.
+    pub bw_user_hz: (f64, f64),
+    /// Server↔server bandwidth, Hz (100 MHz).
+    pub bw_server_hz: f64,
+    /// Server CPU rate range [2, 10] GHz (cycles/s; GNN processes one
+    /// bit of task data per cycle, Eq. 9).
+    pub f_hz: (f64, f64),
+    /// Unit aggregation energy μ, J/bit (20 pJ/bit).
+    pub mu_j_bit: f64,
+    /// Unit update energy ϑ, J per multiply-accumulate (100 pJ).
+    pub theta_j: f64,
+    /// Unit activation energy φ, J per output element (50 pJ).
+    pub phi_j: f64,
+    /// Upload energy ς_{i,m}, J/Mbit (3 mJ/Mb).
+    pub zeta_up_j_mb: f64,
+    /// Inter-server transfer energy ς_{k,l}, J/Mbit (5 mJ/Mb).
+    pub zeta_tran_j_mb: f64,
+    /// GNN layer count F (2-layer models per §2.2/§6.1).
+    pub gnn_layers: usize,
+    /// Aggregate bandwidth caps B_max1/B_max2 (5000 / 500 MHz) → Hz.
+    pub bmax_user_hz: f64,
+    pub bmax_server_hz: f64,
+    /// Aggregate power caps P_max1/P_max2 (1.5 W / 60 mW) → watts.
+    pub pmax_user_w: f64,
+    pub pmax_server_w: f64,
+    /// Subgraph-split reward weight ζ (Eq. 25).
+    pub zeta_sp: f64,
+}
+
+impl Default for SystemParams {
+    fn default() -> Self {
+        SystemParams {
+            plane_m: 2000.0,
+            servers: 4,
+            noise_w: dbm_to_w(-110.0),
+            rho0: 1e-3,
+            h0: 1e-3 / (1000.0 * 1000.0),
+            p_user_w: (2e-3, 5e-3),
+            p_server_w: (10e-3, 15e-3),
+            bw_user_hz: (20e6, 50e6),
+            bw_server_hz: 100e6,
+            f_hz: (2e9, 10e9),
+            mu_j_bit: 20e-12,
+            theta_j: 100e-12,
+            phi_j: 50e-12,
+            zeta_up_j_mb: 3e-3,
+            zeta_tran_j_mb: 5e-3,
+            gnn_layers: 2,
+            bmax_user_hz: 5000e6,
+            bmax_server_hz: 500e6,
+            pmax_user_w: 1.5,
+            pmax_server_w: 60e-3,
+            zeta_sp: 1.0,
+        }
+    }
+}
+
+impl SystemParams {
+    /// Overlay values from a config file section `[net]` / `[cost]`.
+    pub fn from_config(cfg: &Config) -> Self {
+        let d = SystemParams::default();
+        SystemParams {
+            plane_m: cfg.f64("net.plane_m", d.plane_m),
+            servers: cfg.usize("net.servers", d.servers),
+            noise_w: dbm_to_w(cfg.f64("net.noise_dbm", -110.0)),
+            rho0: cfg.f64("net.rho0", d.rho0),
+            h0: cfg.f64("net.h0", d.h0),
+            p_user_w: (
+                cfg.f64("net.p_user_mw_lo", 2.0) * 1e-3,
+                cfg.f64("net.p_user_mw_hi", 5.0) * 1e-3,
+            ),
+            p_server_w: (
+                cfg.f64("net.p_server_mw_lo", 10.0) * 1e-3,
+                cfg.f64("net.p_server_mw_hi", 15.0) * 1e-3,
+            ),
+            bw_user_hz: (
+                cfg.f64("net.bw_user_mhz_lo", 20.0) * 1e6,
+                cfg.f64("net.bw_user_mhz_hi", 50.0) * 1e6,
+            ),
+            bw_server_hz: cfg.f64("net.bw_server_mhz", 100.0) * 1e6,
+            f_hz: (
+                cfg.f64("net.f_ghz_lo", 2.0) * 1e9,
+                cfg.f64("net.f_ghz_hi", 10.0) * 1e9,
+            ),
+            mu_j_bit: cfg.f64("cost.mu_pj_bit", 20.0) * 1e-12,
+            theta_j: cfg.f64("cost.theta_pj", 100.0) * 1e-12,
+            phi_j: cfg.f64("cost.phi_pj", 50.0) * 1e-12,
+            zeta_up_j_mb: cfg.f64("cost.zeta_up_mj_mb", 3.0) * 1e-3,
+            zeta_tran_j_mb: cfg.f64("cost.zeta_tran_mj_mb", 5.0) * 1e-3,
+            gnn_layers: cfg.usize("cost.gnn_layers", d.gnn_layers),
+            bmax_user_hz: cfg.f64("net.bmax_user_mhz", 5000.0) * 1e6,
+            bmax_server_hz: cfg.f64("net.bmax_server_mhz", 500.0) * 1e6,
+            pmax_user_w: cfg.f64("net.pmax_user_w", d.pmax_user_w),
+            pmax_server_w: cfg.f64("net.pmax_server_mw", 60.0) * 1e-3,
+            zeta_sp: cfg.f64("cost.zeta_sp", d.zeta_sp),
+        }
+    }
+}
+
+/// dBm → watts.
+pub fn dbm_to_w(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0) * 1e-3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dbm_conversion() {
+        assert!((dbm_to_w(0.0) - 1e-3).abs() < 1e-12);
+        assert!((dbm_to_w(30.0) - 1.0).abs() < 1e-9);
+        // Table 2 noise: −110 dBm = 1e-14 W.
+        assert!((dbm_to_w(-110.0) - 1e-14).abs() < 1e-20);
+    }
+
+    #[test]
+    fn defaults_match_table2() {
+        let p = SystemParams::default();
+        assert_eq!(p.servers, 4);
+        assert_eq!(p.plane_m, 2000.0);
+        assert!((p.noise_w - 1e-14).abs() < 1e-20);
+        assert_eq!(p.p_user_w, (2e-3, 5e-3));
+        assert_eq!(p.bw_user_hz, (20e6, 50e6));
+        assert_eq!(p.bw_server_hz, 100e6);
+        assert_eq!(p.f_hz, (2e9, 10e9));
+        assert!((p.mu_j_bit - 20e-12).abs() < 1e-24);
+        assert!((p.zeta_up_j_mb - 3e-3).abs() < 1e-12);
+        assert_eq!(p.gnn_layers, 2);
+    }
+
+    #[test]
+    fn config_overlay() {
+        let cfg = Config::from_str(
+            "[net]\nservers = 25\nbw_server_mhz = 200\n[cost]\nmu_pj_bit = 40\n",
+        )
+        .unwrap();
+        let p = SystemParams::from_config(&cfg);
+        assert_eq!(p.servers, 25);
+        assert_eq!(p.bw_server_hz, 200e6);
+        assert!((p.mu_j_bit - 40e-12).abs() < 1e-24);
+        // Untouched values keep Table 2 defaults.
+        assert_eq!(p.plane_m, 2000.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Physical topology: M edge servers with co-located APs on the plane.
+//!
+//! §6.1: four servers serve the 2000 m × 2000 m plane; service
+//! capacities are drawn from {5/4·Mean, Mean, 3/4·Mean} where
+//! Mean = N/M; per-user AP bandwidths are uniform in [20, 50] MHz and
+//! CPU rates uniform in [2, 10] GHz — the server heterogeneity DRLGO is
+//! supposed to exploit.
+
+use crate::graph::dynamic::Pos;
+use crate::util::rng::Rng;
+
+use super::params::SystemParams;
+
+/// One edge server + its AP.
+#[derive(Clone, Debug)]
+pub struct EdgeServer {
+    pub id: usize,
+    pub pos: Pos,
+    /// CPU cycles per second available to the GNN (f_k).
+    pub f_hz: f64,
+    /// Transmit power P_k, watts.
+    pub p_w: f64,
+    /// Maximum number of user tasks this server accepts per round
+    /// (the §6.1 service-capacity levels).
+    pub capacity: usize,
+}
+
+/// The edge network: servers, APs and link bandwidths.
+#[derive(Clone, Debug)]
+pub struct EdgeNetwork {
+    pub servers: Vec<EdgeServer>,
+    /// η_{kl}: inter-server links all up (fully connected backhaul).
+    pub server_bw_hz: f64,
+}
+
+impl EdgeNetwork {
+    /// Place M servers on a near-square grid over the plane and draw
+    /// heterogeneous capacities/CPU rates.  `n_users` sets Mean = N/M.
+    pub fn build(params: &SystemParams, n_users: usize, rng: &mut Rng) -> Self {
+        let m = params.servers;
+        let cols = (m as f64).sqrt().ceil() as usize;
+        let rows = m.div_ceil(cols);
+        let mean = (n_users as f64 / m as f64).max(1.0);
+        // §6.1 capacity levels.
+        let levels = [1.25 * mean, mean, 0.75 * mean];
+        let servers = (0..m)
+            .map(|id| {
+                let (r, c) = (id / cols, id % cols);
+                let cell_w = params.plane_m / cols as f64;
+                let cell_h = params.plane_m / rows as f64;
+                EdgeServer {
+                    id,
+                    pos: Pos {
+                        x: (c as f64 + 0.5) * cell_w,
+                        y: (r as f64 + 0.5) * cell_h,
+                    },
+                    f_hz: rng.range_f64(params.f_hz.0, params.f_hz.1),
+                    p_w: rng.range_f64(params.p_server_w.0, params.p_server_w.1),
+                    capacity: levels[rng.below(levels.len())].ceil() as usize,
+                }
+            })
+            .collect();
+        EdgeNetwork { servers, server_bw_hz: params.bw_server_hz }
+    }
+
+    pub fn len(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.servers.is_empty()
+    }
+
+    /// Nearest server to a position (the GM baseline's criterion).
+    pub fn nearest(&self, pos: Pos) -> usize {
+        self.servers
+            .iter()
+            .min_by(|a, b| {
+                a.pos.dist(&pos).partial_cmp(&b.pos.dist(&pos)).unwrap()
+            })
+            .map(|s| s.id)
+            .unwrap()
+    }
+
+    /// Total service capacity.
+    pub fn total_capacity(&self) -> usize {
+        self.servers.iter().map(|s| s.capacity).sum()
+    }
+}
+
+/// Per-scenario user↔AP bandwidth draws (B_{i,m} of Eq. 3).
+#[derive(Clone, Debug)]
+pub struct UserLinks {
+    /// bw[user][server] in Hz.
+    pub bw_hz: Vec<Vec<f64>>,
+    /// User transmit powers P_i, watts.
+    pub p_w: Vec<f64>,
+}
+
+impl UserLinks {
+    pub fn draw(params: &SystemParams, n_users: usize, servers: usize, rng: &mut Rng) -> Self {
+        UserLinks {
+            bw_hz: (0..n_users)
+                .map(|_| {
+                    (0..servers)
+                        .map(|_| rng.range_f64(params.bw_user_hz.0, params.bw_user_hz.1))
+                        .collect()
+                })
+                .collect(),
+            p_w: (0..n_users)
+                .map(|_| rng.range_f64(params.p_user_w.0, params.p_user_w.1))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_places_all_servers_on_plane() {
+        let p = SystemParams::default();
+        let mut rng = Rng::seed_from(1);
+        let net = EdgeNetwork::build(&p, 300, &mut rng);
+        assert_eq!(net.len(), 4);
+        for s in &net.servers {
+            assert!((0.0..=2000.0).contains(&s.pos.x));
+            assert!((0.0..=2000.0).contains(&s.pos.y));
+            assert!((2e9..=10e9).contains(&s.f_hz));
+            assert!((10e-3..=15e-3).contains(&s.p_w));
+        }
+    }
+
+    #[test]
+    fn capacities_are_the_three_levels() {
+        let p = SystemParams::default();
+        let mut rng = Rng::seed_from(2);
+        let net = EdgeNetwork::build(&p, 300, &mut rng);
+        let mean = 300.0 / 4.0;
+        let levels = [
+            (1.25f64 * mean).ceil() as usize,
+            mean.ceil() as usize,
+            (0.75 * mean).ceil() as usize,
+        ];
+        for s in &net.servers {
+            assert!(levels.contains(&s.capacity), "capacity {}", s.capacity);
+        }
+    }
+
+    #[test]
+    fn nearest_picks_closest_quadrant() {
+        let p = SystemParams::default();
+        let mut rng = Rng::seed_from(3);
+        let net = EdgeNetwork::build(&p, 100, &mut rng);
+        // Corner (0,0) must map to the server at (500,500) = id 0.
+        assert_eq!(net.nearest(Pos { x: 0.0, y: 0.0 }), 0);
+        assert_eq!(net.nearest(Pos { x: 1999.0, y: 1999.0 }), 3);
+    }
+
+    #[test]
+    fn links_within_ranges() {
+        let p = SystemParams::default();
+        let mut rng = Rng::seed_from(4);
+        let links = UserLinks::draw(&p, 50, 4, &mut rng);
+        assert_eq!(links.bw_hz.len(), 50);
+        for row in &links.bw_hz {
+            assert!(row.iter().all(|&b| (20e6..=50e6).contains(&b)));
+        }
+        assert!(links.p_w.iter().all(|&pw| (2e-3..=5e-3).contains(&pw)));
+    }
+
+    #[test]
+    fn grid_works_for_25_servers() {
+        let mut p = SystemParams::default();
+        p.servers = 25;
+        let mut rng = Rng::seed_from(5);
+        let net = EdgeNetwork::build(&p, 500, &mut rng);
+        assert_eq!(net.len(), 25);
+        // All distinct positions.
+        for i in 0..25 {
+            for j in (i + 1)..25 {
+                assert!(net.servers[i].pos.dist(&net.servers[j].pos) > 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! HiCut — Hierarchical Traversal Graph Cut (paper §4, Algorithm 1).
+//!
+//! BFS-based layer-by-layer traversal; the cut is placed between the
+//! two layers with the weakest association.  Per-layer association
+//! strength is the number of edges `d_n` leaving the current layer
+//! toward not-yet-assigned vertices:
+//!
+//! * `d_n` ≥ previous layer's `d_{n-1}` → association strengthening:
+//!   the recorded candidate cut (if any, and strictly `<`) is taken and
+//!   the subgraph closed; otherwise the layer joins the subgraph.
+//! * `d_n` < `d_{n-1}` → a candidate cut: the layer is parked in
+//!   `V_seg` and traversal continues looking for an even weaker spot.
+//! * `d_n` = 0 → the frontier died out; everything parked joins and the
+//!   subgraph closes.
+//!
+//! Repeating from every unassigned vertex yields the optimized layout
+//! `G_sub` whose inter-subgraph association count — and therefore the
+//! cross-server message-passing cost of distributed GNN inference — is
+//! minimized.  Complexity O(N² + N·E) (§4.4).
+
+use super::Partition;
+use crate::graph::Graph;
+
+/// Run HiCut over the vertices for which `alive` holds (the §3.2 mask).
+pub fn hicut(g: &Graph, alive: &dyn Fn(usize) -> bool) -> Partition {
+    let n = g.len();
+    // assignment[v] = subgraph id, usize::MAX = unassigned.
+    let mut assigned = vec![false; n];
+    let mut partition = Partition::default();
+
+    for start in 0..n {
+        if assigned[start] || !alive(start) {
+            continue;
+        }
+        let sub = layer_cut(g, start, &mut assigned, alive);
+        debug_assert!(!sub.is_empty());
+        partition.subgraphs.push(sub);
+    }
+    partition
+}
+
+/// One graph-cut operation (Algorithm 1's `LayerCut`): BFS from
+/// `start`, returning the vertices of the new subgraph (marked in
+/// `assigned`).
+fn layer_cut(
+    g: &Graph,
+    start: usize,
+    assigned: &mut [bool],
+    alive: &dyn Fn(usize) -> bool,
+) -> Vec<usize> {
+    let mut subgraph: Vec<usize> = Vec::new();
+    let mut commit = |verts: &mut Vec<usize>, assigned: &mut [bool]| {
+        for &v in verts.iter() {
+            if !assigned[v] {
+                assigned[v] = true;
+                subgraph.push(v);
+            }
+        }
+        verts.clear();
+    };
+
+    let mut queue = std::collections::VecDeque::from([start]);
+    // BFS layer of each visited vertex (0 = unvisited in this call).
+    let mut layer = vec![0u32; g.len()];
+    layer[start] = 1;
+    // V_begin joins immediately (Algorithm 1 line 9).
+    let mut seed = vec![start];
+    commit(&mut seed, assigned);
+
+    let mut n_cur = 1usize; // vertices left in the current layer
+    let mut l_cur = 1usize; // current layer number
+    let mut v_cur: Vec<usize> = Vec::new(); // vertices of current layer
+    let mut v_seg: Vec<usize> = Vec::new(); // parked candidate-cut layer
+    let mut d_prev = 0usize;
+    let mut d_n = 0usize;
+
+    while let Some(vc) = queue.pop_front() {
+        v_cur.push(vc);
+        n_cur -= 1;
+        for &vr in g.neighbors(vc) {
+            let vr = vr as usize;
+            if !alive(vr) || assigned[vr] {
+                continue; // only unassigned alive vertices count (line 16)
+            }
+            if layer[vr] == 0 {
+                layer[vr] = l_cur as u32 + 1;
+                queue.push_back(vr);
+            }
+            // d_n counts the edges *between this layer and the next*
+            // (Fig. 3: "the numbers on the edges represent the
+            // traversal layer's number") — intra-layer and back edges
+            // do not weaken the cut candidate.
+            if layer[vr] == l_cur as u32 + 1 {
+                d_n += 1;
+            }
+        }
+        if n_cur > 0 {
+            continue;
+        }
+        // ---- end of layer (Algorithm 1 lines 20–37) ----
+        n_cur = queue.len();
+        if d_n == 0 {
+            // Frontier exhausted: everything parked + current joins.
+            commit(&mut v_seg, assigned);
+            commit(&mut v_cur, assigned);
+            return subgraph;
+        }
+        if l_cur == 1 {
+            d_prev = d_n;
+            // Layer-1 vertices are the start vertex, already committed.
+            v_cur.clear();
+        } else if d_prev <= d_n {
+            // Association strengthening again.
+            if !v_seg.is_empty() && d_prev < d_n {
+                // The parked layer was the weakest spot: cut there.
+                commit(&mut v_seg, assigned);
+                return subgraph;
+            }
+            d_prev = d_n;
+            commit(&mut v_cur, assigned);
+        } else {
+            // d_prev > d_n: candidate cut — park this layer.
+            commit(&mut v_seg, assigned);
+            v_seg = std::mem::take(&mut v_cur);
+            d_prev = d_n;
+        }
+        l_cur += 1;
+        v_cur.clear();
+        d_n = 0;
+    }
+    // Queue exhausted naturally: commit whatever is parked.
+    commit(&mut v_seg, assigned);
+    commit(&mut v_cur, assigned);
+    subgraph
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{preferential_attachment, uniform_random};
+    use crate::util::proptest::check_seeds;
+    use crate::util::rng::Rng;
+
+    fn is_partition(p: &Partition, g: &Graph, alive: &dyn Fn(usize) -> bool) -> bool {
+        let mut seen = vec![0usize; g.len()];
+        for sub in &p.subgraphs {
+            if sub.is_empty() {
+                return false;
+            }
+            for &v in sub {
+                seen[v] += 1;
+            }
+        }
+        (0..g.len()).all(|v| if alive(v) { seen[v] == 1 } else { seen[v] == 0 })
+    }
+
+    #[test]
+    fn paper_figure3_example() {
+        // The red-subgraph walkthrough of §4.2: layers from V1 with
+        // edge counts d = [3, 2, 1, 4] ending in subgraph {V1..V6}.
+        // Graph: V1-(V2,V3,V6); layer2 edges to layer3: V2-V4, V3-V5;
+        // layer3 edge to layer4: V4-V7; layer4: V7 with 4 outgoing
+        // edges to V8..V11.
+        let edges: &[(u32, u32)] = &[
+            (0, 1), (0, 2), (0, 5),          // V1 -> V2,V3,V6   (d1 = 3)
+            (1, 3), (2, 4),                  // layer2 -> layer3 (d2 = 2)
+            (3, 6),                          // layer3 -> layer4 (d3 = 1)
+            (6, 7), (6, 8), (6, 9), (6, 10), // layer4 out       (d4 = 4)
+        ];
+        let g = Graph::from_edges(11, edges);
+        let p = hicut(&g, &|_| true);
+        // First subgraph must be exactly {V1..V6} = ids 0..=5.
+        let mut first = p.subgraphs[0].clone();
+        first.sort_unstable();
+        assert_eq!(first, vec![0, 1, 2, 3, 4, 5]);
+        assert!(is_partition(&p, &g, &|_| true));
+    }
+
+    #[test]
+    fn isolated_vertices_become_singletons() {
+        let g = Graph::new(5);
+        let p = hicut(&g, &|_| true);
+        assert_eq!(p.len(), 5);
+        assert!(p.subgraphs.iter().all(|s| s.len() == 1));
+    }
+
+    #[test]
+    fn respects_alive_mask() {
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let alive = |v: usize| v != 2;
+        let p = hicut(&g, &alive);
+        assert!(is_partition(&p, &g, &alive));
+        assert!(p.subgraphs.iter().all(|s| !s.contains(&2)));
+    }
+
+    #[test]
+    fn partition_invariant_random_graphs() {
+        check_seeds(40, |rng| {
+            let n = rng.range(2, 120);
+            let e = rng.below((n * (n - 1) / 2).min(4 * n));
+            let g = uniform_random(n, e, rng);
+            let p = hicut(&g, &|_| true);
+            is_partition(&p, &g, &|_| true)
+        });
+    }
+
+    #[test]
+    fn partition_invariant_with_random_masks() {
+        check_seeds(40, |rng| {
+            let n = rng.range(4, 100);
+            let g = uniform_random(n, rng.below(3 * n), rng);
+            let dead: std::collections::HashSet<usize> =
+                (0..n).filter(|_| rng.chance(0.3)).collect();
+            let alive = move |v: usize| !dead.contains(&v);
+            let p = hicut(&g, &alive);
+            is_partition(&p, &g, &alive)
+        });
+    }
+
+    #[test]
+    fn cut_beats_random_assignment_on_clustered_graphs() {
+        // On a graph of dense communities with sparse bridges HiCut
+        // should cut far fewer edges than a random 4-way split.
+        let mut rng = Rng::seed_from(42);
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        let k = 8; // communities of 16
+        for c in 0..k {
+            let base = (c * 16) as u32;
+            for i in 0..16u32 {
+                for j in (i + 1)..16u32 {
+                    if rng.chance(0.5) {
+                        edges.push((base + i, base + j));
+                    }
+                }
+            }
+        }
+        for c in 0..k - 1 {
+            edges.push(((c * 16) as u32, ((c + 1) * 16) as u32)); // bridges
+        }
+        let g = Graph::from_edges(k * 16, &edges);
+        let p = hicut(&g, &|_| true);
+        let mut rand_assign = Partition { subgraphs: vec![vec![]; 4] };
+        for v in 0..g.len() {
+            rand_assign.subgraphs[rng.below(4)].push(v);
+        }
+        assert!(
+            p.cut_edges(&g) < rand_assign.cut_edges(&g) / 4,
+            "hicut {} vs random {}",
+            p.cut_edges(&g),
+            rand_assign.cut_edges(&g)
+        );
+    }
+
+    #[test]
+    fn scales_to_pa_graphs() {
+        let mut rng = Rng::seed_from(3);
+        let g = preferential_attachment(5000, 10, &mut rng);
+        let p = hicut(&g, &|_| true);
+        assert_eq!(p.covered(), 5000);
+        assert!(p.locality(&g) > 0.0);
+    }
+}

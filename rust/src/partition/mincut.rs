@@ -1,0 +1,309 @@
+//! Max-flow min-cut comparison baseline (the graph-cut method of
+//! Zeng et al., "GNN at the edge" [36], as described in §6.2).
+//!
+//! The baseline partitions the user graph by *iterated s–t min cuts*:
+//! each iteration picks a pair of edge servers, designates a source and
+//! a sink vertex among the users of the (current) largest fragment, and
+//! splits it along the minimum cut found by a max-flow computation.
+//! The iteration count is driven by the number of edge servers (25 in
+//! the Fig. 6 setup).  Complexity O(V²E) per the paper's comparison.
+//!
+//! The max-flow engine is Dinic's algorithm over an arena-allocated
+//! residual graph (u32 arcs), which is what makes the 8M-edge
+//! "non-sparse" Fig. 6 points tractable at all.
+
+use std::collections::HashMap;
+
+use super::Partition;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Dinic max-flow over a fixed vertex set.
+pub struct Dinic {
+    /// head[v] = first arc index, or u32::MAX.
+    head: Vec<u32>,
+    /// Arc arrays: to, next, cap (residual).
+    to: Vec<u32>,
+    next: Vec<u32>,
+    cap: Vec<u64>,
+    level: Vec<i32>,
+    iter: Vec<u32>,
+}
+
+impl Dinic {
+    pub fn new(n: usize) -> Self {
+        Dinic {
+            head: vec![u32::MAX; n],
+            to: Vec::new(),
+            next: Vec::new(),
+            cap: Vec::new(),
+            level: vec![-1; n],
+            iter: vec![0; n],
+        }
+    }
+
+    /// Add a directed arc u→v with capacity c (plus its 0-cap reverse).
+    pub fn add_arc(&mut self, u: usize, v: usize, c: u64) {
+        let a = self.to.len() as u32;
+        self.to.push(v as u32);
+        self.next.push(self.head[u]);
+        self.cap.push(c);
+        self.head[u] = a;
+        let b = self.to.len() as u32;
+        self.to.push(u as u32);
+        self.next.push(self.head[v]);
+        self.cap.push(0);
+        self.head[v] = b;
+    }
+
+    /// Undirected edge = two opposing arcs with the same capacity.
+    pub fn add_edge(&mut self, u: usize, v: usize, c: u64) {
+        let a = self.to.len() as u32;
+        self.to.push(v as u32);
+        self.next.push(self.head[u]);
+        self.cap.push(c);
+        self.head[u] = a;
+        let b = self.to.len() as u32;
+        self.to.push(u as u32);
+        self.next.push(self.head[v]);
+        self.cap.push(c);
+        self.head[v] = b;
+    }
+
+    fn bfs(&mut self, s: usize, t: usize) -> bool {
+        self.level.fill(-1);
+        let mut q = std::collections::VecDeque::from([s]);
+        self.level[s] = 0;
+        while let Some(u) = q.pop_front() {
+            let mut a = self.head[u];
+            while a != u32::MAX {
+                let v = self.to[a as usize] as usize;
+                if self.cap[a as usize] > 0 && self.level[v] < 0 {
+                    self.level[v] = self.level[u] + 1;
+                    q.push_back(v);
+                }
+                a = self.next[a as usize];
+            }
+        }
+        self.level[t] >= 0
+    }
+
+    fn dfs(&mut self, u: usize, t: usize, f: u64) -> u64 {
+        if u == t {
+            return f;
+        }
+        while self.iter[u] != u32::MAX {
+            let a = self.iter[u] as usize;
+            let v = self.to[a] as usize;
+            if self.cap[a] > 0 && self.level[v] == self.level[u] + 1 {
+                let d = self.dfs(v, t, f.min(self.cap[a]));
+                if d > 0 {
+                    self.cap[a] -= d;
+                    self.cap[a ^ 1] += d;
+                    return d;
+                }
+            }
+            self.iter[u] = self.next[a];
+        }
+        0
+    }
+
+    /// Max flow from s to t; residual capacities afterwards define the
+    /// min cut (vertices reachable from s).
+    pub fn max_flow(&mut self, s: usize, t: usize) -> u64 {
+        assert_ne!(s, t);
+        let mut flow = 0u64;
+        while self.bfs(s, t) {
+            self.iter.copy_from_slice(&self.head);
+            loop {
+                let f = self.dfs(s, t, u64::MAX);
+                if f == 0 {
+                    break;
+                }
+                flow += f;
+            }
+        }
+        flow
+    }
+
+    /// Source side of the min cut (call after `max_flow`).
+    pub fn source_side(&self, s: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.head.len()];
+        let mut q = std::collections::VecDeque::from([s]);
+        seen[s] = true;
+        while let Some(u) = q.pop_front() {
+            let mut a = self.head[u];
+            while a != u32::MAX {
+                let v = self.to[a as usize] as usize;
+                if self.cap[a as usize] > 0 && !seen[v] {
+                    seen[v] = true;
+                    q.push_back(v);
+                }
+                a = self.next[a as usize];
+            }
+        }
+        seen
+    }
+}
+
+/// Iterated min-cut partition: split fragments along s–t min cuts until
+/// `servers` fragments exist (or nothing splittable remains).
+///
+/// Source/sink anchors are the two highest-degree vertices of the
+/// fragment (the vertices "between" the chosen server pair in [36]).
+pub fn mincut_partition(
+    g: &Graph,
+    weights: &HashMap<(u32, u32), u32>,
+    servers: usize,
+    _rng: &mut Rng,
+) -> Partition {
+    // Start from connected components (cutting across components is free).
+    let mut fragments: Vec<Vec<usize>> = g.components(|_| true);
+    // One s–t cut per server pair, as in [36]: iterations ~ servers.
+    while fragments.len() < servers {
+        // Largest fragment with at least 2 vertices.
+        let Some(idx) = fragments
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.len() >= 2)
+            .max_by_key(|(_, f)| f.len())
+            .map(|(i, _)| i)
+        else {
+            break;
+        };
+        let frag = fragments.swap_remove(idx);
+        let index: HashMap<usize, usize> =
+            frag.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+        let mut dinic = Dinic::new(frag.len());
+        for &v in &frag {
+            for &u in g.neighbors(v) {
+                let u = u as usize;
+                if u < v {
+                    continue; // add each undirected edge once
+                }
+                if let Some(&lu) = index.get(&u) {
+                    let lv = index[&v];
+                    let key = (v.min(u) as u32, v.max(u) as u32);
+                    let w = *weights.get(&key).unwrap_or(&1) as u64;
+                    dinic.add_edge(lv, lu, w);
+                }
+            }
+        }
+        // Anchors: two highest-degree vertices (distinct).
+        let mut by_deg: Vec<usize> = (0..frag.len()).collect();
+        by_deg.sort_by_key(|&i| std::cmp::Reverse(g.degree(frag[i])));
+        let (s, t) = (by_deg[0], by_deg[1]);
+        dinic.max_flow(s, t);
+        let side = dinic.source_side(s);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for (i, &v) in frag.iter().enumerate() {
+            if side[i] {
+                a.push(v);
+            } else {
+                b.push(v);
+            }
+        }
+        if a.is_empty() || b.is_empty() {
+            // Degenerate (shouldn't happen after max_flow); stop splitting.
+            fragments.push(if a.is_empty() { b } else { a });
+            break;
+        }
+        fragments.push(a);
+        fragments.push(b);
+    }
+    Partition { subgraphs: fragments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{random_weights, uniform_random};
+    use crate::util::proptest::check_seeds;
+
+    #[test]
+    fn max_flow_textbook() {
+        // Classic 6-node network with known max flow 23.
+        let mut d = Dinic::new(6);
+        d.add_arc(0, 1, 16);
+        d.add_arc(0, 2, 13);
+        d.add_arc(1, 2, 10);
+        d.add_arc(2, 1, 4);
+        d.add_arc(1, 3, 12);
+        d.add_arc(3, 2, 9);
+        d.add_arc(2, 4, 14);
+        d.add_arc(4, 3, 7);
+        d.add_arc(3, 5, 20);
+        d.add_arc(4, 5, 4);
+        assert_eq!(d.max_flow(0, 5), 23);
+    }
+
+    #[test]
+    fn min_cut_separates_on_bridge() {
+        // Two cliques joined by a light bridge: cut = bridge weight.
+        let mut d = Dinic::new(6);
+        for &(u, v) in &[(0, 1), (1, 2), (0, 2)] {
+            d.add_edge(u, v, 100);
+        }
+        for &(u, v) in &[(3, 4), (4, 5), (3, 5)] {
+            d.add_edge(u, v, 100);
+        }
+        d.add_edge(2, 3, 1);
+        assert_eq!(d.max_flow(0, 5), 1);
+        let side = d.source_side(0);
+        assert_eq!(side, vec![true, true, true, false, false, false]);
+    }
+
+    #[test]
+    fn flow_value_equals_cut_capacity_property() {
+        // Weak duality sanity on random graphs: flow == weight of the
+        // residual-reachability cut.
+        check_seeds(20, |rng| {
+            let n = rng.range(4, 30);
+            let e = rng.range(n, (n * (n - 1) / 2).max(n + 1));
+            let g = uniform_random(n, e.min(n * (n - 1) / 2), rng);
+            let w = random_weights(&g, 1, 50, rng);
+            let mut d = Dinic::new(n);
+            for (u, v) in g.edge_list() {
+                d.add_edge(u as usize, v as usize, w[&(u, v)] as u64);
+            }
+            let flow = d.max_flow(0, n - 1);
+            let side = d.source_side(0);
+            let cut: u64 = g
+                .edge_list()
+                .iter()
+                .filter(|&&(u, v)| side[u as usize] != side[v as usize])
+                .map(|e| w[e] as u64)
+                .sum();
+            flow == cut && !side[n - 1]
+        });
+    }
+
+    #[test]
+    fn mincut_partition_covers_everything() {
+        check_seeds(15, |rng| {
+            let n = rng.range(8, 80);
+            let g = uniform_random(n, rng.range(n, 3 * n), rng);
+            let w = random_weights(&g, 1, 100, rng);
+            let p = mincut_partition(&g, &w, 6, rng);
+            let mut seen = vec![false; n];
+            for sub in &p.subgraphs {
+                for &v in sub {
+                    if seen[v] {
+                        return false;
+                    }
+                    seen[v] = true;
+                }
+            }
+            seen.iter().all(|&s| s)
+        });
+    }
+
+    #[test]
+    fn mincut_partition_reaches_server_count() {
+        let mut rng = Rng::seed_from(5);
+        let g = uniform_random(100, 300, &mut rng);
+        let w = random_weights(&g, 1, 100, &mut rng);
+        let p = mincut_partition(&g, &w, 8, &mut rng);
+        assert!(p.len() >= 8, "got {} fragments", p.len());
+    }
+}

@@ -1,0 +1,182 @@
+//! Parsed form of `artifacts/manifest.json` (written by aot.py).
+
+use std::collections::BTreeMap;
+
+use anyhow::Context;
+
+use crate::util::json::Value;
+
+/// Shape/name of one executable input or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One executable entry.
+#[derive(Clone, Debug, Default)]
+pub struct ExeSpec {
+    /// HLO text path relative to the artifacts root.
+    pub path: String,
+    /// Weights archive path (GNN models only).
+    pub weights: Option<String>,
+    /// Graph-input names in positional order (GNN models only).
+    pub graph_inputs: Vec<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// One dataset entry.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub path: String,
+    pub n: usize,
+    pub e: usize,
+    pub feat: usize,
+    pub feat_pad: usize,
+    pub classes: usize,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub constants: BTreeMap<String, f64>,
+    pub datasets: BTreeMap<String, DatasetSpec>,
+    pub executables: BTreeMap<String, ExeSpec>,
+    pub accuracy: BTreeMap<String, f64>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let v = Value::parse(text).context("manifest.json")?;
+        let mut m = Manifest::default();
+
+        if let Some(consts) = v.get("constants").and_then(|c| c.as_obj()) {
+            for (k, val) in consts {
+                if let Some(n) = val.as_f64() {
+                    m.constants.insert(k.clone(), n);
+                }
+            }
+        }
+        if let Some(acc) = v.get("accuracy").and_then(|c| c.as_obj()) {
+            for (k, val) in acc {
+                if let Some(n) = val.as_f64() {
+                    m.accuracy.insert(k.clone(), n);
+                }
+            }
+        }
+        if let Some(ds) = v.get("datasets").and_then(|c| c.as_obj()) {
+            for (k, val) in ds {
+                m.datasets.insert(
+                    k.clone(),
+                    DatasetSpec {
+                        path: val.get("path").and_then(|p| p.as_str()).unwrap_or("").into(),
+                        n: val.get("n").and_then(|x| x.as_usize()).unwrap_or(0),
+                        e: val.get("e").and_then(|x| x.as_usize()).unwrap_or(0),
+                        feat: val.get("feat").and_then(|x| x.as_usize()).unwrap_or(0),
+                        feat_pad: val.get("feat_pad").and_then(|x| x.as_usize()).unwrap_or(0),
+                        classes: val.get("classes").and_then(|x| x.as_usize()).unwrap_or(0),
+                    },
+                );
+            }
+        }
+        if let Some(exes) = v.get("executables").and_then(|c| c.as_obj()) {
+            for (k, val) in exes {
+                let inputs = val
+                    .get("inputs")
+                    .and_then(|i| i.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .map(|t| TensorSpec {
+                                name: t.get("name").and_then(|n| n.as_str()).unwrap_or("").into(),
+                                shape: t
+                                    .get("shape")
+                                    .and_then(|s| s.as_usize_vec())
+                                    .unwrap_or_default(),
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let outputs = val
+                    .get("outputs")
+                    .and_then(|o| o.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .filter_map(|t| t.get("name").and_then(|n| n.as_str()))
+                            .map(String::from)
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let graph_inputs = val
+                    .get("graph_inputs")
+                    .and_then(|g| g.as_arr())
+                    .map(|arr| {
+                        arr.iter().filter_map(|s| s.as_str()).map(String::from).collect()
+                    })
+                    .unwrap_or_default();
+                m.executables.insert(
+                    k.clone(),
+                    ExeSpec {
+                        path: val.get("path").and_then(|p| p.as_str()).unwrap_or("").into(),
+                        weights: val.get("weights").and_then(|w| w.as_str()).map(String::from),
+                        graph_inputs,
+                        inputs,
+                        outputs,
+                    },
+                );
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn constant(&self, name: &str) -> crate::Result<usize> {
+        self.constants
+            .get(name)
+            .map(|&v| v as usize)
+            .with_context(|| format!("manifest constant {name:?} missing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "constants": {"n_max": 320, "m_agents": 4},
+      "accuracy": {"gcn_cora": 0.65},
+      "datasets": {"cora": {"path": "data/cora.geb", "n": 2708, "e": 5278,
+                             "feat": 1433, "feat_pad": 1536, "classes": 7}},
+      "executables": {
+        "gcn_cora": {
+          "path": "models/gcn_cora.hlo.txt",
+          "weights": "models/gcn_cora.weights.gta",
+          "graph_inputs": ["x", "a_norm"],
+          "inputs": [{"name": "x", "shape": [320, 1536]},
+                     {"name": "a_norm", "shape": [320, 320]},
+                     {"name": "w0", "shape": [1536, 64]}],
+          "outputs": [{"name": "logits"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_all_sections() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.constant("n_max").unwrap(), 320);
+        assert_eq!(m.datasets["cora"].classes, 7);
+        let e = &m.executables["gcn_cora"];
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].name, "x");
+        assert_eq!(e.inputs[0].shape, vec![320, 1536]);
+        assert_eq!(e.graph_inputs, vec!["x", "a_norm"]);
+        assert_eq!(e.weights.as_deref(), Some("models/gcn_cora.weights.gta"));
+        assert_eq!(e.outputs, vec!["logits"]);
+        assert!((m.accuracy["gcn_cora"] - 0.65).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_constant_errors() {
+        let m = Manifest::parse("{}").unwrap();
+        assert!(m.constant("nope").is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched.  The flow per
+//! executable (see /opt/xla-example/load_hlo for the reference):
+//!
+//! ```text
+//! HLO text --HloModuleProto::from_text_file--> proto
+//!          --XlaComputation::from_proto------> computation
+//!          --PjRtClient::compile-------------> PjRtLoadedExecutable
+//! ```
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+//!
+//! [`Runtime`] owns one CPU PJRT client, the parsed `manifest.json`,
+//! and a lazy cache of compiled executables keyed by artifact name.
+//! All executables are lowered with `return_tuple=True`, so results
+//! come back as one tuple literal that [`Executable::run`] decomposes.
+
+pub mod manifest;
+
+pub use manifest::{ExeSpec, Manifest, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context};
+
+use crate::tensor::Matrix;
+use crate::util::metrics::GLOBAL as METRICS;
+
+/// A compiled artifact plus its manifest binding.
+pub struct Executable {
+    pub name: String,
+    pub spec: ExeSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional literal inputs; returns the decomposed
+    /// output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        METRICS.observe(&format!("runtime.exec.{}", self.name), t0.elapsed().as_secs_f64());
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Like [`Self::run`] but with borrowed inputs — lets callers keep
+    /// long-lived literals (e.g. model weights) without re-uploading.
+    pub fn run_borrowed(&self, inputs: &[&xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let result = self.exe.execute::<&xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        METRICS.observe(&format!("runtime.exec.{}", self.name), t0.elapsed().as_secs_f64());
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// The process-wide artifact runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    root: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let mpath = root.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts`)", mpath.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "runtime: PJRT {} with {} device(s), {} executables in manifest",
+            client.platform_name(),
+            client.device_count(),
+            manifest.executables.len()
+        );
+        Ok(Runtime { client, manifest, root, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifacts location: `$GRAPHEDGE_ARTIFACTS` or `artifacts/`.
+    pub fn open_default() -> crate::Result<Self> {
+        let dir = std::env::var("GRAPHEDGE_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    /// Fetch (compiling + caching on first use) an executable by name.
+    pub fn load(&self, name: &str) -> crate::Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .executables
+            .get(name)
+            .with_context(|| format!("executable {name:?} not in manifest"))?
+            .clone();
+        let path = self.root.join(&spec.path);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::info!("runtime: compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        METRICS.observe("runtime.compile", t0.elapsed().as_secs_f64());
+        let executable =
+            std::sync::Arc::new(Executable { name: name.to_string(), spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Load a `.gta` archive relative to the artifacts root.
+    pub fn load_archive(&self, rel: &str) -> crate::Result<crate::tensor::Archive> {
+        Ok(crate::tensor::Archive::load(self.root.join(rel))?)
+    }
+
+    pub fn artifacts_root(&self) -> &Path {
+        &self.root
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal of arbitrary shape from a flat slice.
+pub fn lit(shape: &[usize], data: &[f32]) -> crate::Result<xla::Literal> {
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != numel {
+        bail!("literal shape {shape:?} needs {numel} values, got {}", data.len());
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Matrix → 2-D literal.
+pub fn lit_matrix(m: &Matrix) -> crate::Result<xla::Literal> {
+    lit(&[m.rows, m.cols], &m.data)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal → flat f32 vector.
+pub fn to_vec_f32(l: &xla::Literal) -> crate::Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Literal → Matrix (must be 2-D).
+pub fn to_matrix(l: &xla::Literal) -> crate::Result<Matrix> {
+    let shape = l.array_shape()?;
+    let dims = shape.dims();
+    if dims.len() != 2 {
+        bail!("expected rank-2 literal, got {:?}", dims);
+    }
+    Ok(Matrix { rows: dims[0] as usize, cols: dims[1] as usize, data: l.to_vec::<f32>()? })
+}

@@ -1,0 +1,159 @@
+//! The simulated edge-server fleet: per-server task queues, halo
+//! construction and distributed GNN inference with cross-server
+//! message-passing accounting.
+//!
+//! Given a completed offloading decision, each server owns the tasks
+//! assigned to it.  For exact 2-layer GNN inference of its own
+//! vertices it also needs their 2-hop neighborhood (the *halo*); every
+//! halo vertex owned by another server represents a cross-server fetch
+//! (`message passing`, §1), which the fleet counts in bytes and in the
+//! cost model's terms.
+
+use crate::graph::sample::Scenario;
+use crate::graph::Dataset;
+use crate::net::cost::{CostModel, Offload, UNASSIGNED};
+use crate::util::metrics::GLOBAL as METRICS;
+
+use super::gnn::GnnService;
+use super::padded::PaddedGraph;
+
+/// Outcome of one full inference round across the fleet.
+#[derive(Clone, Debug, Default)]
+pub struct InferenceReport {
+    /// Predicted class per scenario user (usize::MAX = not inferred).
+    pub predictions: Vec<usize>,
+    /// Per-server halo fetches (vertices owned elsewhere).
+    pub halo_fetches: usize,
+    /// Cross-server data volume implied by halo fetches, Mbit.
+    pub halo_mb: f64,
+    /// Vertices whose halo was truncated by the N_MAX pad (approximate
+    /// aggregation for those; counted, never silent).
+    pub truncated: usize,
+    /// Wall-clock seconds spent inside PJRT execute calls.
+    pub execute_s: f64,
+    /// Per-server real subgraph sizes.
+    pub batch_sizes: Vec<usize>,
+}
+
+/// The fleet binds one GnnService (identical model replicas on every
+/// server, as in the paper) to a scenario.
+pub struct Fleet<'a> {
+    pub svc: &'a GnnService,
+    pub scenario: &'a Scenario,
+    pub dataset: &'a Dataset,
+}
+
+impl<'a> Fleet<'a> {
+    pub fn new(svc: &'a GnnService, scenario: &'a Scenario, dataset: &'a Dataset) -> Self {
+        Fleet { svc, scenario, dataset }
+    }
+
+    /// Run distributed inference for a complete offload decision.
+    ///
+    /// `alive` filters scenario users (the §3.2 mask); `servers` is the
+    /// fleet size.  Uses the exact 2-hop halo for 2-layer GNNs.
+    pub fn infer_round(
+        &self,
+        offload: &Offload,
+        alive: &dyn Fn(usize) -> bool,
+        servers: usize,
+        cost: Option<&CostModel>,
+    ) -> crate::Result<InferenceReport> {
+        self.infer_round_hops(offload, alive, servers, cost, 2)
+    }
+
+    /// As [`Self::infer_round`] with a configurable halo radius
+    /// (design-choice ablation: 0 = no halo, 1 = approximate boundary
+    /// aggregation, 2 = exact for 2-layer GNNs).
+    pub fn infer_round_hops(
+        &self,
+        offload: &Offload,
+        alive: &dyn Fn(usize) -> bool,
+        servers: usize,
+        cost: Option<&CostModel>,
+        hops: usize,
+    ) -> crate::Result<InferenceReport> {
+        let n = self.scenario.graph.len();
+        let mut report = InferenceReport {
+            predictions: vec![usize::MAX; n],
+            ..Default::default()
+        };
+        for server in 0..servers {
+            let owned: Vec<usize> = (0..n)
+                .filter(|&u| alive(u) && offload.server[u] == server)
+                .collect();
+            if owned.is_empty() {
+                report.batch_sizes.push(0);
+                continue;
+            }
+            // 2-hop halo in BFS order; truncate to n_max keeping the
+            // owned vertices and nearest halo first.
+            let mut verts = self
+                .scenario
+                .graph
+                .k_hop(&owned, hops)
+                .into_iter()
+                .filter(|&v| alive(v))
+                .collect::<Vec<_>>();
+            if verts.len() > self.svc.n_max {
+                report.truncated += verts.len() - self.svc.n_max;
+                verts.truncate(self.svc.n_max);
+            }
+            // Halo accounting: vertices provided by other servers.
+            for &v in &verts {
+                let owner = offload.server[v];
+                if owner != server && owner != UNASSIGNED {
+                    report.halo_fetches += 1;
+                    report.halo_mb += cost
+                        .map(|c| c.users.task_mb(v))
+                        .unwrap_or(self.dataset.task_mbit(0));
+                }
+            }
+            let padded = PaddedGraph::build(
+                &self.scenario.graph,
+                &self.scenario.users,
+                self.dataset,
+                &verts,
+                self.svc.n_max,
+                self.svc.feat_pad,
+            );
+            let t0 = std::time::Instant::now();
+            let classes = self.svc.classify(&padded)?;
+            report.execute_s += t0.elapsed().as_secs_f64();
+            report.batch_sizes.push(padded.real_size());
+            // Keep predictions only for owned vertices (halo rows are
+            // another server's responsibility).
+            let owned_set: std::collections::HashSet<usize> =
+                owned.iter().copied().collect();
+            for (row, &v) in padded.vertices.iter().enumerate() {
+                if owned_set.contains(&v) {
+                    report.predictions[v] = classes[row];
+                }
+            }
+        }
+        METRICS.add("fleet.halo_fetches", report.halo_fetches as u64);
+        METRICS.observe("fleet.round_execute_s", report.execute_s);
+        Ok(report)
+    }
+
+    /// Classification accuracy of a report against dataset labels.
+    pub fn accuracy(&self, report: &InferenceReport, alive: &dyn Fn(usize) -> bool) -> f64 {
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for (u, &pred) in report.predictions.iter().enumerate() {
+            if !alive(u) || pred == usize::MAX {
+                continue;
+            }
+            total += 1;
+            let label = self.dataset.labels[self.scenario.users[u] as usize] as usize;
+            if pred == label {
+                hit += 1;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            hit as f64 / total as f64
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! GnnService: one (model, dataset) AOT executable + pre-trained
+//! weights, exposing padded-subgraph classification.
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::runtime::{lit_matrix, to_matrix, Executable, Runtime};
+use crate::tensor::Matrix;
+
+use super::padded::PaddedGraph;
+
+/// The four GNN architectures of §6.1.
+pub const MODELS: &[&str] = &["gcn", "gat", "sage", "sgc"];
+/// The three datasets of §6.1.
+pub const DATASETS: &[&str] = &["citeseer", "cora", "pubmed"];
+
+pub struct GnnService {
+    pub model: String,
+    pub dataset: String,
+    pub n_max: usize,
+    pub feat_pad: usize,
+    pub classes: usize,
+    exe: Arc<Executable>,
+    /// Parameter literals in executable order (after the graph inputs).
+    weights: Vec<xla::Literal>,
+    graph_inputs: Vec<String>,
+}
+
+impl GnnService {
+    /// Load `"<model>_<dataset>"` from the runtime, including weights.
+    pub fn load(rt: &Runtime, model: &str, dataset: &str) -> crate::Result<Self> {
+        let key = format!("{model}_{dataset}");
+        let exe = rt.load(&key)?;
+        let spec = &exe.spec;
+        let wpath = spec
+            .weights
+            .clone()
+            .with_context(|| format!("{key} has no weights in manifest"))?;
+        let archive = rt.load_archive(&wpath)?;
+        let graph_inputs = spec.graph_inputs.clone();
+        let mut weights = Vec::new();
+        for ts in spec.inputs.iter().skip(graph_inputs.len()) {
+            let t = archive.get_shaped(&ts.name, &ts.shape)?;
+            weights.push(crate::runtime::lit(&t.shape, &t.f32_data)?);
+        }
+        let n_max = rt.manifest.constant("n_max")?;
+        let ds = rt
+            .manifest
+            .datasets
+            .get(dataset)
+            .with_context(|| format!("dataset {dataset} missing from manifest"))?;
+        Ok(GnnService {
+            model: model.to_string(),
+            dataset: dataset.to_string(),
+            n_max,
+            feat_pad: ds.feat_pad,
+            classes: ds.classes,
+            exe,
+            weights,
+            graph_inputs,
+        })
+    }
+
+    /// Run inference; returns logits [n_max, c_pad].
+    pub fn infer(&self, p: &PaddedGraph) -> crate::Result<Matrix> {
+        let mut inputs = Vec::with_capacity(self.graph_inputs.len() + self.weights.len());
+        for gi in &self.graph_inputs {
+            let m = match gi.as_str() {
+                "x" => &p.x,
+                "a_norm" => &p.a_norm,
+                "adj" => &p.adj,
+                "inv_deg" => &p.inv_deg,
+                other => anyhow::bail!("unknown graph input {other:?}"),
+            };
+            inputs.push(lit_matrix(m)?);
+        }
+        // Weights are cheap to clone? Literals aren't Clone — re-borrow
+        // via Borrow<Literal> in execute.
+        let mut all: Vec<&xla::Literal> = inputs.iter().collect();
+        all.extend(self.weights.iter());
+        let outs = self.exe.run_borrowed(&all)?;
+        to_matrix(&outs[0])
+    }
+
+    /// Classify the real vertices of a padded graph: class per vertex.
+    pub fn classify(&self, p: &PaddedGraph) -> crate::Result<Vec<usize>> {
+        let logits = self.infer(p)?;
+        Ok(logits.row_argmax(self.classes)[..p.real_size()].to_vec())
+    }
+}

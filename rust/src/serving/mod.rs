@@ -1,0 +1,26 @@
+//! Serving layer: the edge-server fleet that actually executes GNN
+//! inference on offloaded graph tasks.
+//!
+//! * [`padded`] — fixed-shape (N_MAX-padded) subgraph construction:
+//!   dense features, adjacency with self-loops, symmetric
+//!   normalization, inverse degrees — the four graph inputs every AOT
+//!   executable binds.
+//! * [`gnn`] — [`gnn::GnnService`]: one (model, dataset) executable +
+//!   its pre-trained weights; classifies a padded subgraph.
+//! * [`fleet`] — [`fleet::Fleet`]: per-server task queues, halo
+//!   construction (2-hop neighborhoods with cross-server fetch
+//!   accounting) and batched inference execution.
+//! * [`router`] — request router + dynamic batcher for the online
+//!   serving example: requests accumulate per server until a batch
+//!   window closes, then dispatch as one padded-graph inference.
+
+pub mod fleet;
+pub mod gnn;
+pub mod serve_loop;
+pub mod padded;
+pub mod router;
+
+pub use fleet::{Fleet, InferenceReport};
+pub use serve_loop::{serve_loop, serve_run, serve_run_with, Placement, ServeStats};
+pub use gnn::GnnService;
+pub use padded::PaddedGraph;

@@ -1,0 +1,160 @@
+//! Fixed-shape padded subgraphs — the input contract of the AOT GNN
+//! executables (see python/compile/model.py for the Python mirror).
+
+use crate::graph::{Dataset, Graph};
+use crate::tensor::Matrix;
+
+/// A padded subgraph ready for inference.
+#[derive(Clone, Debug)]
+pub struct PaddedGraph {
+    /// Scenario-user index of each occupied row (len = real size ≤ n_max).
+    pub vertices: Vec<usize>,
+    /// Dense features [n_max, feat_pad].
+    pub x: Matrix,
+    /// 0/1 adjacency with self-loops on occupied rows [n_max, n_max].
+    pub adj: Matrix,
+    /// D^-1/2 (A+I) D^-1/2 [n_max, n_max].
+    pub a_norm: Matrix,
+    /// 1/deg per row [n_max, 1] (0 on padding).
+    pub inv_deg: Matrix,
+}
+
+impl PaddedGraph {
+    /// Build from the scenario graph restricted to `vertices` (scenario
+    /// user ids, at most `n_max`); features come from the dataset
+    /// vertices backing each user (`users_backing[i]` = dataset vertex
+    /// of scenario user i).
+    pub fn build(
+        scenario_graph: &Graph,
+        users_backing: &[u32],
+        dataset: &Dataset,
+        vertices: &[usize],
+        n_max: usize,
+        feat_pad: usize,
+    ) -> Self {
+        assert!(vertices.len() <= n_max, "{} vertices > n_max {}", vertices.len(), n_max);
+        let k = vertices.len();
+        let index: std::collections::HashMap<usize, usize> =
+            vertices.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+
+        let mut x = Matrix::zeros(n_max, feat_pad);
+        for (row, &v) in vertices.iter().enumerate() {
+            dataset.write_dense_row(users_backing[v] as usize, x.row_mut(row));
+        }
+
+        let mut adj = Matrix::zeros(n_max, n_max);
+        for (row, &v) in vertices.iter().enumerate() {
+            adj.set(row, row, 1.0); // self loop
+            for &nb in scenario_graph.neighbors(v) {
+                if let Some(&col) = index.get(&(nb as usize)) {
+                    adj.set(row, col, 1.0);
+                    adj.set(col, row, 1.0);
+                }
+            }
+        }
+
+        // Symmetric normalization + inverse degree.
+        let mut deg = vec![0.0f32; n_max];
+        for r in 0..k {
+            deg[r] = adj.row(r).iter().sum();
+        }
+        let mut a_norm = Matrix::zeros(n_max, n_max);
+        for r in 0..k {
+            let dr = deg[r];
+            if dr <= 0.0 {
+                continue;
+            }
+            for c in 0..k {
+                let v = adj.at(r, c);
+                if v != 0.0 && deg[c] > 0.0 {
+                    a_norm.set(r, c, v / (dr.sqrt() * deg[c].sqrt()));
+                }
+            }
+        }
+        let mut inv_deg = Matrix::zeros(n_max, 1);
+        for r in 0..k {
+            if deg[r] > 0.0 {
+                inv_deg.set(r, 0, 1.0 / deg[r]);
+            }
+        }
+        PaddedGraph { vertices: vertices.to_vec(), x, adj, a_norm, inv_deg }
+    }
+
+    pub fn real_size(&self) -> usize {
+        self.vertices.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn tiny_dataset() -> Dataset {
+        // 4 docs, 8-dim features, doc i has feature {i, i+4}.
+        Dataset {
+            name: "t".into(),
+            n: 4,
+            e: 0,
+            feat_dim: 8,
+            classes: 2,
+            labels: vec![0, 1, 0, 1],
+            feat_ptr: vec![0, 2, 4, 6, 8],
+            feat_idx: vec![0, 4, 1, 5, 2, 6, 3, 7],
+            graph: Graph::new(4),
+        }
+    }
+
+    #[test]
+    fn build_padded_shapes_and_padding() {
+        let ds = tiny_dataset();
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2)]);
+        let backing: Vec<u32> = vec![0, 1, 2, 3];
+        let p = PaddedGraph::build(&g, &backing, &ds, &[0, 1, 2], 8, 16);
+        assert_eq!(p.real_size(), 3);
+        assert_eq!(p.x.rows, 8);
+        assert_eq!(p.x.cols, 16);
+        // Padding rows all zero.
+        for r in 3..8 {
+            assert!(p.x.row(r).iter().all(|&v| v == 0.0));
+            assert!(p.adj.row(r).iter().all(|&v| v == 0.0));
+            assert_eq!(p.inv_deg.at(r, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn adjacency_has_self_loops_and_symmetry() {
+        let ds = tiny_dataset();
+        let g = Graph::from_edges(4, &[(0, 2), (2, 3)]);
+        let p = PaddedGraph::build(&g, &[0, 1, 2, 3], &ds, &[0, 2, 3], 8, 16);
+        // rows: 0->u0, 1->u2, 2->u3
+        assert_eq!(p.adj.at(0, 0), 1.0);
+        assert_eq!(p.adj.at(0, 1), 1.0); // u0-u2
+        assert_eq!(p.adj.at(1, 0), 1.0);
+        assert_eq!(p.adj.at(1, 2), 1.0); // u2-u3
+        assert_eq!(p.adj.at(0, 2), 0.0); // u0-u3 absent
+    }
+
+    #[test]
+    fn a_norm_rows_match_manual() {
+        let ds = tiny_dataset();
+        let g = Graph::from_edges(2, &[(0, 1)]);
+        let p = PaddedGraph::build(&g, &[0, 1], &ds, &[0, 1], 4, 16);
+        // Both vertices: degree 2 (self + edge): a_norm = 1/2 everywhere.
+        for r in 0..2 {
+            for c in 0..2 {
+                assert!((p.a_norm.at(r, c) - 0.5).abs() < 1e-6);
+            }
+        }
+        assert!((p.inv_deg.at(0, 0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn excluded_neighbors_do_not_appear() {
+        let ds = tiny_dataset();
+        let g = Graph::from_edges(4, &[(0, 1), (0, 3)]);
+        let p = PaddedGraph::build(&g, &[0, 1, 2, 3], &ds, &[0, 1], 4, 16);
+        // User 3 not in subgraph: its edge to 0 must not appear anywhere.
+        assert_eq!(p.adj.row(0).iter().filter(|&&v| v > 0.0).count(), 2);
+    }
+}

@@ -1,0 +1,174 @@
+//! Online request router + dynamic batcher.
+//!
+//! The offline experiments evaluate whole scenarios at once; the
+//! serving example instead emulates the production path: user requests
+//! arrive one at a time, the router places each according to the
+//! current offloading policy, and per-server batches are dispatched
+//! when either `max_batch` tasks are queued or `max_wait` elapses —
+//! the standard dynamic-batching loop of GNN serving systems.
+
+use std::time::{Duration, Instant};
+
+use crate::net::cost::{Offload, UNASSIGNED};
+
+/// One enqueued inference request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    /// Scenario user id.
+    pub user: usize,
+    pub enqueued: Instant,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Router state: a queue per server.
+pub struct Router {
+    queues: Vec<Vec<Request>>,
+    policy: BatchPolicy,
+    pub dispatched_batches: usize,
+    pub dispatched_requests: usize,
+}
+
+impl Router {
+    pub fn new(servers: usize, policy: BatchPolicy) -> Self {
+        Router {
+            queues: vec![Vec::new(); servers],
+            policy,
+            dispatched_batches: 0,
+            dispatched_requests: 0,
+        }
+    }
+
+    /// Route a request according to the offloading decision; returns
+    /// the chosen server.
+    pub fn submit(&mut self, user: usize, offload: &Offload, now: Instant) -> Option<usize> {
+        let server = offload.server[user];
+        if server == UNASSIGNED {
+            return None;
+        }
+        self.queues[server].push(Request { user, enqueued: now });
+        Some(server)
+    }
+
+    pub fn queue_len(&self, server: usize) -> usize {
+        self.queues[server].len()
+    }
+
+    /// Collect every batch that is ready at `now` (full or timed out).
+    /// Returns (server, users) pairs, draining those queues.
+    pub fn ready_batches(&mut self, now: Instant) -> Vec<(usize, Vec<usize>)> {
+        let mut out = Vec::new();
+        for (server, q) in self.queues.iter_mut().enumerate() {
+            if q.is_empty() {
+                continue;
+            }
+            let full = q.len() >= self.policy.max_batch;
+            let expired = now.duration_since(q[0].enqueued) >= self.policy.max_wait;
+            if full || expired {
+                let take = q.len().min(self.policy.max_batch);
+                let batch: Vec<usize> = q.drain(..take).map(|r| r.user).collect();
+                self.dispatched_batches += 1;
+                self.dispatched_requests += batch.len();
+                out.push((server, batch));
+            }
+        }
+        out
+    }
+
+    /// Force-flush everything (end of run).
+    pub fn flush(&mut self) -> Vec<(usize, Vec<usize>)> {
+        let mut out = Vec::new();
+        for (server, q) in self.queues.iter_mut().enumerate() {
+            while !q.is_empty() {
+                let take = q.len().min(self.policy.max_batch);
+                let batch: Vec<usize> = q.drain(..take).map(|r| r.user).collect();
+                self.dispatched_batches += 1;
+                self.dispatched_requests += batch.len();
+                out.push((server, batch));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn offload_all_to(server: usize, n: usize) -> Offload {
+        Offload { server: vec![server; n] }
+    }
+
+    #[test]
+    fn batches_dispatch_when_full() {
+        let mut r = Router::new(
+            2,
+            BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(100) },
+        );
+        let off = offload_all_to(1, 10);
+        let t = Instant::now();
+        for u in 0..3 {
+            assert_eq!(r.submit(u, &off, t), Some(1));
+        }
+        let batches = r.ready_batches(t);
+        assert_eq!(batches, vec![(1, vec![0, 1, 2])]);
+        assert_eq!(r.queue_len(1), 0);
+        assert_eq!(r.dispatched_batches, 1);
+    }
+
+    #[test]
+    fn batches_dispatch_on_timeout() {
+        let mut r = Router::new(
+            1,
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) },
+        );
+        let off = offload_all_to(0, 4);
+        let t0 = Instant::now();
+        r.submit(0, &off, t0);
+        r.submit(1, &off, t0);
+        assert!(r.ready_batches(t0).is_empty()); // not expired yet
+        let later = t0 + Duration::from_millis(5);
+        let batches = r.ready_batches(later);
+        assert_eq!(batches, vec![(0, vec![0, 1])]);
+    }
+
+    #[test]
+    fn unassigned_users_rejected() {
+        let mut r = Router::new(1, BatchPolicy::default());
+        let off = Offload::empty(3);
+        assert_eq!(r.submit(0, &off, Instant::now()), None);
+        assert_eq!(r.queue_len(0), 0);
+    }
+
+    #[test]
+    fn flush_drains_everything() {
+        let mut r = Router::new(
+            2,
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(100) },
+        );
+        let mut off = Offload::empty(5);
+        for u in 0..5 {
+            off.server[u] = u % 2;
+        }
+        let t = Instant::now();
+        for u in 0..5 {
+            r.submit(u, &off, t);
+        }
+        let batches = r.flush();
+        let total: usize = batches.iter().map(|(_, b)| b.len()).sum();
+        assert_eq!(total, 5);
+        assert_eq!(r.dispatched_requests, 5);
+        assert!(batches.iter().all(|(_, b)| b.len() <= 2));
+    }
+}

@@ -1,0 +1,219 @@
+//! Online serving loop: the production-shaped path used by
+//! `graphedge serve` and the e2e example.
+//!
+//! Requests (user task arrivals) stream in; the router places each on
+//! its offloaded server, the dynamic batcher closes batches by size or
+//! timeout, and every batch becomes one padded-subgraph GNN inference
+//! on the fleet.  Reports per-request latency percentiles and
+//! throughput.
+
+use std::time::Instant;
+
+use crate::coordinator::Controller;
+use crate::drl::{baselines, Method};
+use crate::serving::router::{BatchPolicy, Router};
+use crate::serving::{GnnService, PaddedGraph};
+use crate::util::metrics::GLOBAL as METRICS;
+use crate::util::rng::Rng;
+use crate::util::stats::Sample;
+
+/// Summary of one serving run.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub total_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+    pub mean_batch: f64,
+    pub accuracy: f64,
+}
+
+/// Placement policy for the serving run.
+pub enum Placement<'a> {
+    /// Greedy nearest-eligible-server placement (no training needed).
+    Greedy,
+    /// A trained DRLGO checkpoint (`graphedge train --method drlgo`).
+    DrlgoCheckpoint(&'a std::path::Path),
+}
+
+/// Run the online loop; prints and returns the stats.
+pub fn serve_loop(
+    ctrl: &Controller,
+    dataset: &str,
+    model: &str,
+    n_users: usize,
+    n_assocs: usize,
+    n_requests: usize,
+    seed: u64,
+    placement: Placement<'_>,
+) -> crate::Result<()> {
+    let stats = serve_run_with(
+        ctrl, dataset, model, n_users, n_assocs, n_requests, seed, placement,
+    )?;
+    println!("\n== online serving ({dataset}/{model}) ==");
+    println!("requests        {}", stats.requests);
+    println!("batches         {} (mean size {:.1})", stats.batches, stats.mean_batch);
+    println!("throughput      {:.1} req/s", stats.requests as f64 / stats.total_s);
+    println!("latency p50     {:.3} ms", stats.latency_p50_s * 1e3);
+    println!("latency p99     {:.3} ms", stats.latency_p99_s * 1e3);
+    println!("accuracy        {:.3}", stats.accuracy);
+    print!("{}", METRICS.report());
+    Ok(())
+}
+
+/// The loop itself (separated for tests/examples); greedy placement.
+pub fn serve_run(
+    ctrl: &Controller,
+    dataset: &str,
+    model: &str,
+    n_users: usize,
+    n_assocs: usize,
+    n_requests: usize,
+    seed: u64,
+) -> crate::Result<ServeStats> {
+    serve_run_with(ctrl, dataset, model, n_users, n_assocs, n_requests, seed,
+                   Placement::Greedy)
+}
+
+/// The loop with an explicit placement policy.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_run_with(
+    ctrl: &Controller,
+    dataset: &str,
+    model: &str,
+    n_users: usize,
+    n_assocs: usize,
+    n_requests: usize,
+    seed: u64,
+    placement: Placement<'_>,
+) -> crate::Result<ServeStats> {
+    let mut rng = Rng::seed_from(seed);
+    let method = match placement {
+        Placement::Greedy => Method::Greedy,
+        Placement::DrlgoCheckpoint(_) => Method::Drlgo,
+    };
+    let mut env = ctrl.make_env(method, dataset, n_users, n_assocs, &mut rng)?;
+    match placement {
+        Placement::Greedy => baselines::run_greedy(&mut env),
+        Placement::DrlgoCheckpoint(path) => {
+            let mut tr = crate::drl::MaddpgTrainer::new(&ctrl.rt, 1024)?;
+            tr.restore(path)?;
+            tr.policy_offload(&mut env)?;
+        }
+    }
+
+    let svc = GnnService::load(&ctrl.rt, model, dataset)?;
+    let ds = ctrl.dataset(dataset)?;
+    let active = env.users.active_users();
+    let servers = env.net.len();
+
+    let mut policy = BatchPolicy::default();
+    if let Ok(v) = std::env::var("GRAPHEDGE_MAX_BATCH") {
+        if let Ok(b) = v.parse() {
+            policy.max_batch = b;
+        }
+    }
+    let mut router = Router::new(servers, policy);
+    let mut latency = Sample::default();
+    let mut batch_sizes = Sample::default();
+    let mut correct = 0usize;
+    let mut classified = 0usize;
+
+    let started = Instant::now();
+    let mut submit_times: Vec<Instant> = Vec::with_capacity(n_requests);
+    let mut pending: Vec<(usize, usize)> = Vec::new(); // (request idx, user)
+
+    struct BatchCtx<'a> {
+        env: &'a crate::drl::Env,
+        svc: &'a GnnService,
+        ds: &'a crate::graph::Dataset,
+    }
+
+    fn process(
+        ctx: &BatchCtx,
+        batches: Vec<(usize, Vec<usize>)>,
+        submit_times: &[Instant],
+        pending: &mut Vec<(usize, usize)>,
+        latency: &mut Sample,
+        batch_sizes: &mut Sample,
+        correct: &mut usize,
+        classified: &mut usize,
+    ) -> crate::Result<()> {
+        for (_server, users) in batches {
+            batch_sizes.push(users.len() as f64);
+            // Batch + 2-hop halo, padded.
+            let mut verts = ctx.env.users.graph().k_hop(&users, 2);
+            {
+                let env = ctx.env;
+                verts.retain(|&v| env.users.is_active(v));
+            }
+            if verts.len() > ctx.svc.n_max {
+                verts.truncate(ctx.svc.n_max);
+            }
+            let padded = PaddedGraph::build(
+                ctx.env.users.graph(),
+                &ctx.env.scenario.users,
+                ctx.ds,
+                &verts,
+                ctx.svc.n_max,
+                ctx.svc.feat_pad,
+            );
+            let classes = ctx.svc.classify(&padded)?;
+            let done = Instant::now();
+            let in_batch: std::collections::HashSet<usize> =
+                users.iter().copied().collect();
+            // Latency for each fulfilled request.
+            pending.retain(|&(req, user)| {
+                if in_batch.contains(&user) {
+                    latency.push(done.duration_since(submit_times[req]).as_secs_f64());
+                    false
+                } else {
+                    true
+                }
+            });
+            // Accuracy bookkeeping.
+            for (row, &v) in padded.vertices.iter().enumerate() {
+                if in_batch.contains(&v) {
+                    *classified += 1;
+                    let label = ctx.ds.labels[ctx.env.scenario.users[v] as usize] as usize;
+                    if classes[row] == label {
+                        *correct += 1;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    let ctx = BatchCtx { env: &env, svc: &svc, ds };
+
+    for req in 0..n_requests {
+        let user = active[rng.below(active.len())];
+        let now = Instant::now();
+        submit_times.push(now);
+        if router.submit(user, &env.offload, now).is_some() {
+            pending.push((req, user));
+        }
+        let ready = router.ready_batches(Instant::now());
+        if !ready.is_empty() {
+            process(&ctx, ready, &submit_times, &mut pending, &mut latency,
+                    &mut batch_sizes, &mut correct, &mut classified)?;
+        }
+        METRICS.inc("serve.requests");
+    }
+    let rest = router.flush();
+    process(&ctx, rest, &submit_times, &mut pending, &mut latency,
+            &mut batch_sizes, &mut correct, &mut classified)?;
+
+    let total_s = started.elapsed().as_secs_f64();
+    Ok(ServeStats {
+        requests: n_requests,
+        batches: router.dispatched_batches,
+        total_s,
+        latency_p50_s: latency.percentile(50.0),
+        latency_p99_s: latency.percentile(99.0),
+        mean_batch: batch_sizes.mean(),
+        accuracy: if classified == 0 { 0.0 } else { correct as f64 / classified as f64 },
+    })
+}

@@ -1,0 +1,229 @@
+//! GTA (GraphEdge Tensor Archive) reader/writer.
+//!
+//! Mirror of `python/compile/gta.py` — see that module for the layout.
+//! The writer exists on the Rust side too so DRL training checkpoints
+//! can be saved and reloaded without Python.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum GtaError {
+    #[error("bad GTA magic")]
+    BadMagic,
+    #[error("unsupported dtype {0}")]
+    BadDtype(u8),
+    #[error("tensor {0:?} not found in archive")]
+    NotFound(String),
+    #[error("tensor {name:?} has shape {actual:?}, expected {expected:?}")]
+    ShapeMismatch { name: String, actual: Vec<usize>, expected: Vec<usize> },
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// One named tensor (f32 or i32; i32 stored as f32-converted on read
+/// convenience accessors).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub f32_data: Vec<f32>,
+    pub is_int: bool,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// A loaded archive, order-preserving.
+#[derive(Clone, Debug, Default)]
+pub struct Archive {
+    pub tensors: Vec<Tensor>,
+}
+
+impl Archive {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, GtaError> {
+        let mut f = std::fs::File::open(path)?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self, GtaError> {
+        let mut c = Cursor { buf, pos: 0 };
+        if c.take(4)? != b"GTA1" {
+            return Err(GtaError::BadMagic);
+        }
+        let count = c.u32()? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nlen = c.u16()? as usize;
+            let name = String::from_utf8_lossy(c.take(nlen)?).into_owned();
+            let dtype = c.u8()?;
+            if dtype > 1 {
+                return Err(GtaError::BadDtype(dtype));
+            }
+            let ndim = c.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(c.u32()? as usize);
+            }
+            let numel = shape.iter().product::<usize>().max(1);
+            let raw = c.take(4 * numel)?;
+            let f32_data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|b| {
+                    let arr = [b[0], b[1], b[2], b[3]];
+                    if dtype == 0 {
+                        f32::from_le_bytes(arr)
+                    } else {
+                        i32::from_le_bytes(arr) as f32
+                    }
+                })
+                .collect();
+            tensors.push(Tensor { name, shape, f32_data, is_int: dtype == 1 });
+        }
+        Ok(Archive { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor, GtaError> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| GtaError::NotFound(name.to_string()))
+    }
+
+    /// Typed fetch with shape validation.
+    pub fn get_shaped(&self, name: &str, shape: &[usize]) -> Result<&Tensor, GtaError> {
+        let t = self.get(name)?;
+        if t.shape != shape {
+            return Err(GtaError::ShapeMismatch {
+                name: name.into(),
+                actual: t.shape.clone(),
+                expected: shape.to_vec(),
+            });
+        }
+        Ok(t)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    /// Save (always f32).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), GtaError> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"GTA1")?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for t in &self.tensors {
+            let nb = t.name.as_bytes();
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&[0u8, t.shape.len() as u8])?;
+            for &d in &t.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            let mut raw = Vec::with_capacity(4 * t.f32_data.len());
+            for v in &t.f32_data {
+                raw.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&raw)?;
+        }
+        Ok(())
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], GtaError> {
+        if self.pos + n > self.buf.len() {
+            return Err(GtaError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "truncated archive",
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, GtaError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, GtaError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, GtaError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Archive {
+        Archive {
+            tensors: vec![
+                Tensor {
+                    name: "w0".into(),
+                    shape: vec![2, 3],
+                    f32_data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+                    is_int: false,
+                },
+                Tensor {
+                    name: "step".into(),
+                    shape: vec![],
+                    f32_data: vec![7.0],
+                    is_int: false,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("graphedge_gta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.gta");
+        sample().save(&path).unwrap();
+        let back = Archive::load(&path).unwrap();
+        assert_eq!(back.names(), vec!["w0", "step"]);
+        assert_eq!(back.get("w0").unwrap().shape, vec![2, 3]);
+        assert_eq!(back.get("w0").unwrap().f32_data, sample().get("w0").unwrap().f32_data);
+        assert_eq!(back.get("step").unwrap().numel(), 1);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let a = sample();
+        assert!(a.get_shaped("w0", &[2, 3]).is_ok());
+        assert!(matches!(
+            a.get_shaped("w0", &[3, 2]),
+            Err(GtaError::ShapeMismatch { .. })
+        ));
+        assert!(matches!(a.get("nope"), Err(GtaError::NotFound(_))));
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(matches!(Archive::parse(b"NOPE"), Err(GtaError::BadMagic)));
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut bytes = b"GTA1".to_vec();
+        bytes.extend_from_slice(&5u32.to_le_bytes());
+        assert!(Archive::parse(&bytes).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Dense tensors + the GTA tensor-archive reader.
+//!
+//! The serving layer builds padded `[N_MAX, N_MAX]` adjacencies and
+//! `[N_MAX, F]` feature matrices as [`Matrix`] values, then hands them
+//! to the PJRT runtime as flat `f32` slices.  [`gta`] reads the
+//! pre-trained weights / DRL initial state written by
+//! `python/compile/gta.py`.
+
+pub mod gta;
+
+pub use gta::{Archive, Tensor};
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Naive matmul — used only by tests to cross-check PJRT results.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for (j, &b) in orow.iter().enumerate() {
+                    out_row[j] += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// argmax per row over the first `limit` columns (class readout).
+    pub fn row_argmax(&self, limit: usize) -> Vec<usize> {
+        let limit = limit.min(self.cols);
+        (0..self.rows)
+            .map(|r| {
+                let row = &self.row(r)[..limit];
+                let mut best = 0;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let i = Matrix::from_rows(vec![vec![1.0, 0.0], vec![0.0, 1.0]]);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known_product() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(vec![vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn row_argmax_respects_limit() {
+        let m = Matrix::from_rows(vec![vec![0.0, 5.0, 99.0], vec![7.0, 1.0, 99.0]]);
+        assert_eq!(m.row_argmax(2), vec![1, 0]);
+    }
+
+    #[test]
+    fn accessors() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 8.0);
+        assert_eq!(m.at(1, 2), 8.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 8.0]);
+    }
+}

@@ -1,0 +1,316 @@
+//! Declarative command-line parsing for the `graphedge` launcher.
+//!
+//! A small clap-shaped API (clap is not available offline): an [`App`]
+//! owns subcommands, each subcommand declares typed flags, and parsing
+//! produces a [`Matches`] with typed getters plus auto-generated
+//! `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("unknown subcommand {0:?} (try --help)")]
+    UnknownCommand(String),
+    #[error("missing required flag --{0}")]
+    MissingRequired(String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+/// Flag arity/type.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arity {
+    /// Boolean switch, no value.
+    Switch,
+    /// Takes one value; may repeat (last one wins except `values()`).
+    Value,
+}
+
+#[derive(Clone, Debug)]
+pub struct Flag {
+    pub name: &'static str,
+    pub arity: Arity,
+    pub default: Option<&'static str>,
+    pub required: bool,
+    pub help: &'static str,
+}
+
+/// One subcommand specification.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<Flag>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, flags: Vec::new() }
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, arity: Arity::Switch, default: None, required: false, help });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag {
+            name,
+            arity: Arity::Value,
+            default: Some(default),
+            required: false,
+            help,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, arity: Arity::Value, default: None, required: true, help });
+        self
+    }
+}
+
+/// Application: a set of subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+/// Parse result.
+#[derive(Debug)]
+pub struct Matches {
+    pub command: String,
+    values: BTreeMap<String, Vec<String>>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Matches {
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+            .unwrap_or("")
+    }
+
+    pub fn values(&self, name: &str) -> &[String] {
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.str(name).parse().unwrap_or_else(|_| {
+            panic!("flag --{name} is not a valid integer: {:?}", self.str(name))
+        })
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.str(name).parse().unwrap_or_else(|_| {
+            panic!("flag --{name} is not a valid number: {:?}", self.str(name))
+        })
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+impl App {
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "USAGE: {} <command> [flags]\n", self.name);
+        let _ = writeln!(s, "COMMANDS:");
+        for c in &self.commands {
+            let _ = writeln!(s, "  {:<12} {}", c.name, c.about);
+        }
+        let _ = writeln!(s, "\nRun `{} <command> --help` for command flags.", self.name);
+        s
+    }
+
+    pub fn command_help(&self, cmd: &Command) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} {} — {}\n", self.name, cmd.name, cmd.about);
+        let _ = writeln!(s, "FLAGS:");
+        for f in &cmd.flags {
+            let meta = match (f.arity, f.default, f.required) {
+                (Arity::Switch, _, _) => String::new(),
+                (_, Some(d), _) => format!(" <val> (default {d})"),
+                (_, None, true) => " <val> (required)".into(),
+                (_, None, false) => " <val>".into(),
+            };
+            let _ = writeln!(s, "  --{:<18} {}{}", format!("{}{}", f.name, meta), f.help, "");
+        }
+        s
+    }
+
+    /// Parse `args` (without argv[0]).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        if args.is_empty()
+            || args[0] == "--help"
+            || args[0] == "-h"
+            || args[0] == "help"
+        {
+            print!("{}", self.help());
+            return Err(CliError::HelpRequested);
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == args[0])
+            .ok_or_else(|| CliError::UnknownCommand(args[0].clone()))?;
+
+        let mut values: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut switches: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positional = Vec::new();
+        for f in &cmd.flags {
+            if let Some(d) = f.default {
+                values.insert(f.name.to_string(), vec![d.to_string()]);
+            }
+        }
+
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.command_help(cmd));
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                // --name=value or --name value or switch
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let flag = cmd
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(name.to_string()))?;
+                match flag.arity {
+                    Arity::Switch => {
+                        switches.insert(name.to_string(), true);
+                    }
+                    Arity::Value => {
+                        let v = if let Some(v) = inline {
+                            v
+                        } else {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.to_string()))?
+                        };
+                        values.entry(name.to_string()).or_default().push(v);
+                    }
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+
+        for f in &cmd.flags {
+            if f.required && !values.contains_key(f.name) {
+                return Err(CliError::MissingRequired(f.name.to_string()));
+            }
+        }
+        // For defaulted flags that also got explicit values, drop default.
+        for f in &cmd.flags {
+            if let Some(v) = values.get_mut(f.name) {
+                if v.len() > 1 && f.default.map(|d| d == v[0]).unwrap_or(false) {
+                    v.remove(0);
+                }
+            }
+        }
+
+        Ok(Matches { command: cmd.name.to_string(), values, switches, positional })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "graphedge",
+            about: "test",
+            commands: vec![
+                Command::new("serve", "run the coordinator")
+                    .opt("config", "configs/table2.toml", "config file")
+                    .opt("model", "gcn", "gnn model")
+                    .switch("verbose", "log more")
+                    .req("dataset", "dataset name"),
+                Command::new("info", "dump info"),
+            ],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let m = app()
+            .parse(&argv(&["serve", "--dataset", "cora", "--verbose"]))
+            .unwrap();
+        assert_eq!(m.command, "serve");
+        assert_eq!(m.str("dataset"), "cora");
+        assert_eq!(m.str("config"), "configs/table2.toml");
+        assert_eq!(m.str("model"), "gcn");
+        assert!(m.switch("verbose"));
+    }
+
+    #[test]
+    fn inline_equals_syntax() {
+        let m = app()
+            .parse(&argv(&["serve", "--dataset=pubmed", "--model=gat"]))
+            .unwrap();
+        assert_eq!(m.str("dataset"), "pubmed");
+        assert_eq!(m.str("model"), "gat");
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(matches!(
+            app().parse(&argv(&["serve"])),
+            Err(CliError::MissingRequired(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_flag_and_command_rejected() {
+        assert!(matches!(
+            app().parse(&argv(&["serve", "--dataset", "x", "--bogus"])),
+            Err(CliError::UnknownFlag(_))
+        ));
+        assert!(matches!(
+            app().parse(&argv(&["frobnicate"])),
+            Err(CliError::UnknownCommand(_))
+        ));
+    }
+
+    #[test]
+    fn repeated_values_collect() {
+        let m = app()
+            .parse(&argv(&["serve", "--dataset", "a", "--model", "x",
+                           "--model", "y"]))
+            .unwrap();
+        assert_eq!(m.values("model"), &["x".to_string(), "y".to_string()]);
+        assert_eq!(m.str("model"), "y");
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let m = app().parse(&argv(&["serve", "--dataset", "a", "pos1"]))
+            .unwrap();
+        assert_eq!(m.positional, vec!["pos1".to_string()]);
+    }
+}

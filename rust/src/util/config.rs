@@ -1,0 +1,368 @@
+//! TOML-subset configuration system.
+//!
+//! Grammar supported (a strict subset of TOML — everything the
+//! `configs/*.toml` files use):
+//!
+//! ```toml
+//! # comment
+//! top_level = 1
+//! [section]
+//! int = 3
+//! float = 2.5
+//! string = "hello"
+//! flag = true
+//! list = [1, 2, 3]
+//! names = ["a", "b"]
+//! ```
+//!
+//! Keys are addressed as `"section.key"` (or bare `"key"` for the
+//! top-level table).  Typed getters return defaults so configs may be
+//! sparse; `require_*` variants error instead.  CLI `--set sec.key=v`
+//! overrides land in the same store (see [`Config::set_override`]).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CfgValue {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+    List(Vec<CfgValue>),
+}
+
+impl fmt::Display for CfgValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CfgValue::Int(v) => write!(f, "{v}"),
+            CfgValue::Float(v) => write!(f, "{v}"),
+            CfgValue::Str(v) => write!(f, "{v:?}"),
+            CfgValue::Bool(v) => write!(f, "{v}"),
+            CfgValue::List(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("missing required config key {0:?}")]
+    Missing(String),
+    #[error("config key {key:?} has wrong type (expected {expected})")]
+    Type { key: String, expected: &'static str },
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Parsed configuration: flat map of `section.key` → value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, CfgValue>,
+}
+
+impl Config {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_str(&text)
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(text: &str) -> Result<Self, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| {
+                    ConfigError::Parse { line: ln + 1, msg: "unterminated [section]".into() }
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| ConfigError::Parse {
+                line: ln + 1,
+                msg: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim()).map_err(|msg| ConfigError::Parse {
+                line: ln + 1,
+                msg,
+            })?;
+            values.insert(key, value);
+        }
+        Ok(Config { values })
+    }
+
+    /// Apply a `sec.key=value` override (from `--set` CLI flags).
+    pub fn set_override(&mut self, spec: &str) -> Result<(), ConfigError> {
+        let (k, v) = spec.split_once('=').ok_or_else(|| ConfigError::Parse {
+            line: 0,
+            msg: format!("override must be key=value, got {spec:?}"),
+        })?;
+        let value = parse_value(v.trim())
+            .map_err(|msg| ConfigError::Parse { line: 0, msg })?;
+        self.values.insert(k.trim().to_string(), value);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&CfgValue> {
+        self.values.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        match self.values.get(key) {
+            Some(CfgValue::Float(v)) => *v,
+            Some(CfgValue::Int(v)) => *v as f64,
+            _ => default,
+        }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        match self.values.get(key) {
+            Some(CfgValue::Int(v)) => *v as usize,
+            _ => default,
+        }
+    }
+
+    pub fn i64(&self, key: &str, default: i64) -> i64 {
+        match self.values.get(key) {
+            Some(CfgValue::Int(v)) => *v,
+            _ => default,
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.values.get(key) {
+            Some(CfgValue::Bool(v)) => *v,
+            _ => default,
+        }
+    }
+
+    pub fn str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        match self.values.get(key) {
+            Some(CfgValue::Str(v)) => v,
+            _ => default,
+        }
+    }
+
+    pub fn require_str(&self, key: &str) -> Result<&str, ConfigError> {
+        match self.values.get(key) {
+            Some(CfgValue::Str(v)) => Ok(v),
+            Some(_) => Err(ConfigError::Type { key: key.into(), expected: "string" }),
+            None => Err(ConfigError::Missing(key.into())),
+        }
+    }
+
+    pub fn require_f64(&self, key: &str) -> Result<f64, ConfigError> {
+        match self.values.get(key) {
+            Some(CfgValue::Float(v)) => Ok(*v),
+            Some(CfgValue::Int(v)) => Ok(*v as f64),
+            Some(_) => Err(ConfigError::Type { key: key.into(), expected: "number" }),
+            None => Err(ConfigError::Missing(key.into())),
+        }
+    }
+
+    /// List of f64 (ints coerced).
+    pub fn f64_list(&self, key: &str) -> Option<Vec<f64>> {
+        match self.values.get(key)? {
+            CfgValue::List(xs) => xs
+                .iter()
+                .map(|x| match x {
+                    CfgValue::Float(v) => Some(*v),
+                    CfgValue::Int(v) => Some(*v as f64),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    pub fn str_list(&self, key: &str) -> Option<Vec<String>> {
+        match self.values.get(key)? {
+            CfgValue::List(xs) => xs
+                .iter()
+                .map(|x| match x {
+                    CfgValue::Str(v) => Some(v.clone()),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a string literal must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<CfgValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(CfgValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(CfgValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string {s:?}"))?;
+        return Ok(CfgValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated list {s:?}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(CfgValue::List(vec![]));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(CfgValue::List(items));
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(CfgValue::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(CfgValue::Float(v));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# GraphEdge test config
+seed = 42
+[net]
+plane_m = 2000.0
+servers = 4
+noise_dbm = -110  # Table 2
+[drl]
+lr = 3e-4
+explore = 0.1
+enabled = true
+name = "maddpg"
+caps = [1.25, 1.0, 0.75]
+tags = ["hi", "lo"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::from_str(SAMPLE).unwrap();
+        assert_eq!(c.usize("seed", 0), 42);
+        assert_eq!(c.f64("net.plane_m", 0.0), 2000.0);
+        assert_eq!(c.usize("net.servers", 0), 4);
+        assert_eq!(c.i64("net.noise_dbm", 0), -110);
+        assert!((c.f64("drl.lr", 0.0) - 3e-4).abs() < 1e-12);
+        assert!(c.bool("drl.enabled", false));
+        assert_eq!(c.str("drl.name", ""), "maddpg");
+        assert_eq!(c.f64_list("drl.caps").unwrap(), vec![1.25, 1.0, 0.75]);
+        assert_eq!(c.str_list("drl.tags").unwrap(), vec!["hi", "lo"]);
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let c = Config::from_str("").unwrap();
+        assert_eq!(c.usize("nope", 7), 7);
+        assert!(matches!(c.require_str("x"), Err(ConfigError::Missing(_))));
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::from_str(SAMPLE).unwrap();
+        c.set_override("net.servers=25").unwrap();
+        c.set_override("drl.name=\"ppo\"").unwrap();
+        assert_eq!(c.usize("net.servers", 0), 25);
+        assert_eq!(c.str("drl.name", ""), "ppo");
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let c = Config::from_str("k = \"a # b\"").unwrap();
+        assert_eq!(c.str("k", ""), "a # b");
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = Config::from_str("a = 1\nbad line\n").unwrap_err();
+        match err {
+            ConfigError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn type_mismatch_reported() {
+        let c = Config::from_str("x = 3").unwrap();
+        assert!(matches!(
+            c.require_str("x"),
+            Err(ConfigError::Type { .. })
+        ));
+    }
+}

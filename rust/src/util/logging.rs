@@ -1,0 +1,74 @@
+//! Minimal env-filtered logging backend for the `log` facade.
+//!
+//! `GRAPHEDGE_LOG=debug` (or error/warn/info/trace) selects the level;
+//! default is `info`.  Output goes to stderr with elapsed-time stamps.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct Logger {
+    level: Level,
+}
+
+impl Log for Logger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed().as_secs_f64();
+        eprintln!(
+            "[{t:9.3}s {:<5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; subsequent calls are no-ops.
+pub fn init() {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("GRAPHEDGE_LOG")
+        .unwrap_or_default()
+        .to_lowercase()
+        .as_str()
+    {
+        "trace" => Level::Trace,
+        "debug" => Level::Debug,
+        "warn" => Level::Warn,
+        "error" => Level::Error,
+        _ => Level::Info,
+    };
+    let _ = log::set_boxed_logger(Box::new(Logger { level }));
+    log::set_max_level(match level {
+        Level::Trace => LevelFilter::Trace,
+        Level::Debug => LevelFilter::Debug,
+        Level::Info => LevelFilter::Info,
+        Level::Warn => LevelFilter::Warn,
+        Level::Error => LevelFilter::Error,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,163 @@
+//! Process-wide metrics registry: named counters, gauges and latency
+//! samples, rendered as a plain-text report (`graphedge serve` prints
+//! it on shutdown; examples print it after each run).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+use super::stats::Sample;
+
+/// Global registry (examples and the launcher share one process).
+pub static GLOBAL: Lazy<Metrics> = Lazy::new(Metrics::new);
+
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    gauges: Mutex<BTreeMap<String, AtomicI64>>,
+    timers: Mutex<BTreeMap<String, Sample>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, n: u64) {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn set_gauge(&self, name: &str, v: i64) {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| AtomicI64::new(0))
+            .store(v, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Record a duration sample in seconds.
+    pub fn observe(&self, name: &str, seconds: f64) {
+        let mut m = self.timers.lock().unwrap();
+        m.entry(name.to_string()).or_default().push(seconds);
+    }
+
+    /// Time a closure into the named sample.
+    pub fn time<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.observe(name, t0.elapsed().as_secs_f64());
+        r
+    }
+
+    pub fn timer_stats(&self, name: &str) -> Option<(usize, f64, f64, f64)> {
+        let m = self.timers.lock().unwrap();
+        let s = m.get(name)?;
+        Some((s.len(), s.mean(), s.percentile(50.0), s.percentile(99.0)))
+    }
+
+    /// Human-readable dump of everything recorded.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let counters = self.counters.lock().unwrap();
+        if !counters.is_empty() {
+            out.push_str("counters:\n");
+            for (k, v) in counters.iter() {
+                out.push_str(&format!("  {k:<40} {}\n", v.load(Ordering::Relaxed)));
+            }
+        }
+        let gauges = self.gauges.lock().unwrap();
+        if !gauges.is_empty() {
+            out.push_str("gauges:\n");
+            for (k, v) in gauges.iter() {
+                out.push_str(&format!("  {k:<40} {}\n", v.load(Ordering::Relaxed)));
+            }
+        }
+        let timers = self.timers.lock().unwrap();
+        if !timers.is_empty() {
+            out.push_str("timers (n / mean / p50 / p99, seconds):\n");
+            for (k, s) in timers.iter() {
+                out.push_str(&format!(
+                    "  {k:<40} {} / {:.6} / {:.6} / {:.6}\n",
+                    s.len(),
+                    s.mean(),
+                    s.percentile(50.0),
+                    s.percentile(99.0)
+                ));
+            }
+        }
+        out
+    }
+
+    pub fn reset(&self) {
+        self.counters.lock().unwrap().clear();
+        self.gauges.lock().unwrap().clear();
+        self.timers.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.inc("requests");
+        m.add("requests", 4);
+        m.set_gauge("queue_depth", 7);
+        assert_eq!(m.counter("requests"), 5);
+        assert_eq!(m.gauge("queue_depth"), 7);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_record() {
+        let m = Metrics::new();
+        m.observe("op", 0.5);
+        m.observe("op", 1.5);
+        let (n, mean, p50, _) = m.timer_stats("op").unwrap();
+        assert_eq!(n, 2);
+        assert!((mean - 1.0).abs() < 1e-12);
+        assert!((p50 - 1.0).abs() < 1e-12);
+        let r = m.time("op2", || 42);
+        assert_eq!(r, 42);
+        assert!(m.timer_stats("op2").is_some());
+    }
+
+    #[test]
+    fn report_contains_names() {
+        let m = Metrics::new();
+        m.inc("a.b");
+        m.observe("lat", 0.1);
+        let rep = m.report();
+        assert!(rep.contains("a.b"));
+        assert!(rep.contains("lat"));
+    }
+}

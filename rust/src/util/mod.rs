@@ -1,0 +1,28 @@
+//! Zero-dependency substrates.
+//!
+//! The offline build environment ships only a handful of vendored
+//! crates (`xla`, `anyhow`, `thiserror`, `log`, `once_cell`), so the
+//! utilities a production service would normally pull from the
+//! ecosystem are implemented here as first-class modules:
+//!
+//! * [`rng`] — xoshiro256** PRNG with the distribution helpers the
+//!   simulators need (uniform, normal, choice, shuffle).
+//! * [`json`] — a strict, minimal JSON parser for `manifest.json`.
+//! * [`config`] — a TOML-subset configuration system (`configs/*.toml`).
+//! * [`cli`] — declarative command-line parsing for the launcher.
+//! * [`threadpool`] — a fixed-size worker pool for parallel benches.
+//! * [`stats`] — streaming means/percentiles for metrics + benches.
+//! * [`metrics`] — a process-wide metrics registry (counters/gauges).
+//! * [`logging`] — an env-filtered `log::Log` backend.
+//! * [`proptest`] — a miniature property-testing harness used by the
+//!   `#[cfg(test)]` suites across the crate.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod metrics;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,168 @@
+//! Miniature property-testing harness (the `proptest` crate is not in
+//! the offline vendor set).
+//!
+//! Usage inside `#[cfg(test)]` modules:
+//!
+//! ```ignore
+//! check(200, |rng| gen_graph(rng), |g| prop_partition_covers(g));
+//! ```
+//!
+//! On failure the harness re-runs a bisection-style shrink when the
+//! generator supports it via [`Shrink`], and always reports the seed of
+//! the failing case so it can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Types that know how to propose smaller versions of themselves.
+pub trait Shrink: Sized {
+    /// Candidate smaller values, most aggressive first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        out.push(self[..self.len() - 1].to_vec());
+        out
+    }
+}
+
+/// Run `cases` random property checks.  Panics (with the seed and a
+/// shrunk witness when available) on the first failure.
+pub fn check<T, G, P>(cases: usize, mut generate: G, mut property: P)
+where
+    T: std::fmt::Debug + Shrink + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let base_seed = match std::env::var("GRAPHEDGE_PROPTEST_SEED") {
+        Ok(s) => s.parse().expect("GRAPHEDGE_PROPTEST_SEED must be u64"),
+        Err(_) => 0x5EED_u64,
+    };
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::seed_from(seed);
+        let input = generate(&mut rng);
+        if property(&input) {
+            continue;
+        }
+        // Shrink: greedily take any smaller failing candidate.
+        let mut witness = input.clone();
+        let mut progress = true;
+        let mut rounds = 0;
+        while progress && rounds < 64 {
+            progress = false;
+            rounds += 1;
+            for cand in witness.shrink() {
+                if !property(&cand) {
+                    witness = cand;
+                    progress = true;
+                    break;
+                }
+            }
+        }
+        panic!(
+            "property failed (case {case}, seed {seed}; replay with \
+             GRAPHEDGE_PROPTEST_SEED={seed}).\nshrunk witness: {witness:#?}"
+        );
+    }
+}
+
+/// Convenience: property over plain seeds, no shrinking.
+pub fn check_seeds<P: FnMut(&mut Rng) -> bool>(cases: usize, mut property: P) {
+    for case in 0..cases {
+        let seed = 0xFACE_u64.wrapping_add(case as u64);
+        let mut rng = Rng::seed_from(seed);
+        assert!(
+            property(&mut rng),
+            "seeded property failed at case {case} (seed {seed})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Debug)]
+    struct SmallVec(Vec<usize>);
+
+    impl Shrink for SmallVec {
+        fn shrink(&self) -> Vec<Self> {
+            self.0.shrink().into_iter().map(SmallVec).collect()
+        }
+    }
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            50,
+            |rng| rng.below(100),
+            |_| {
+                count += 1;
+                true
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(50, |rng| rng.below(100), |&x| x > 1000);
+    }
+
+    #[test]
+    fn shrinking_reduces_vectors() {
+        // Property "no vector contains 7" fails; the shrunk witness
+        // should be much smaller than the original failing input.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                100,
+                |rng| {
+                    SmallVec((0..rng.range(5, 50)).map(|_| rng.below(10)).collect())
+                },
+                |v| !v.0.contains(&7),
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("expected failure"),
+        };
+        assert!(msg.contains("shrunk witness"));
+    }
+
+    #[test]
+    fn check_seeds_deterministic() {
+        let mut seen = Vec::new();
+        check_seeds(3, |rng| {
+            seen.push(rng.next_u64());
+            true
+        });
+        let mut seen2 = Vec::new();
+        check_seeds(3, |rng| {
+            seen2.push(rng.next_u64());
+            true
+        });
+        assert_eq!(seen, seen2);
+    }
+}

@@ -1,0 +1,161 @@
+//! Fixed-size worker pool (tokio is unavailable offline; the serving
+//! loop and the benches need bounded parallelism, not an async runtime).
+//!
+//! Work items are `FnOnce() + Send` closures; [`ThreadPool::scope`]
+//! offers a rayon-like scoped API through which borrowed data can be
+//! processed in parallel chunks.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    handles: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let handles = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                thread::Builder::new()
+                    .name(format!("graphedge-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx, handles, queued }
+    }
+
+    /// Pool sized to the machine (cores, capped at 16).
+    pub fn default_size() -> Self {
+        let n = thread::available_parallelism()
+            .map(|n| n.get().min(16))
+            .unwrap_or(4);
+        Self::new(n)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Msg::Run(Box::new(job))).expect("pool alive");
+    }
+
+    /// Busy-wait (with yields) until all submitted jobs have finished.
+    pub fn wait_idle(&self) {
+        while self.queued.load(Ordering::SeqCst) != 0 {
+            thread::yield_now();
+        }
+    }
+
+    /// Run `f` on every item of `items` in parallel, collecting results
+    /// in input order.  Uses scoped threads so borrows are fine.
+    pub fn map_scoped<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        assert!(workers >= 1);
+        let next = AtomicUsize::new(0);
+        let results: Vec<Mutex<Option<R>>> =
+            items.iter().map(|_| Mutex::new(None)).collect();
+        thread::scope(|s| {
+            for _ in 0..workers.min(items.len().max(1)) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let r = f(&items[i]);
+                    *results[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker filled slot"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_scoped_preserves_order() {
+        let items: Vec<usize> = (0..57).collect();
+        let out = ThreadPool::map_scoped(&items, 8, |&x| x * x);
+        assert_eq!(out, items.iter().map(|&x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_scoped_single_worker() {
+        let items = vec![1, 2, 3];
+        assert_eq!(ThreadPool::map_scoped(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+}

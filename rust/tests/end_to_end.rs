@@ -1,0 +1,107 @@
+//! Integration: the full coordinator loop over real artifacts — every
+//! method produces a valid offload, costs behave per the paper's
+//! qualitative claims, and the fleet's distributed inference matches
+//! centralized accuracy expectations.
+
+use graphedge::coordinator::Controller;
+use graphedge::drl::{MaddpgConfig, Method, PpoConfig};
+use graphedge::net::SystemParams;
+use graphedge::util::rng::Rng;
+
+fn controller() -> Controller {
+    Controller::new(SystemParams::default()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn all_methods_produce_valid_offloads_with_inference() {
+    let ctrl = controller();
+    let users = 48;
+    let assocs = 120;
+    let mcfg = MaddpgConfig { episodes: 2, warmup: 32, ..MaddpgConfig::default() };
+    let (mut drlgo, _, _) = ctrl.train_drlgo("cora", false, users, assocs, &mcfg).unwrap();
+    let pcfg = PpoConfig { episodes: 2, ..PpoConfig::default() };
+    let (mut ptom, _, _) = ctrl.train_ptom("cora", users, assocs, &pcfg).unwrap();
+
+    for method in [Method::Drlgo, Method::Ptom, Method::Greedy, Method::Random] {
+        let mut rng = Rng::seed_from(9);
+        let mut env = ctrl.make_env(method, "cora", users, assocs, &mut rng).unwrap();
+        let report = ctrl
+            .run_scenario(
+                method,
+                &mut env,
+                "cora",
+                "gcn",
+                Some(&mut drlgo),
+                Some(&mut ptom),
+                true,
+                &mut rng,
+            )
+            .unwrap();
+        assert!(report.cost.total() > 0.0, "{method:?}");
+        assert!(report.cost.t_all() > 0.0);
+        assert!(report.cost.i_all() > 0.0);
+        assert!(report.accuracy > 0.3, "{method:?} accuracy {}", report.accuracy);
+        // C1 + capacity: all assigned.
+        assert!(env.offload.all_assigned(&env.users.active_users()));
+        let cm_err = {
+            use graphedge::net::cost::CostModel;
+            let cm = CostModel::new(
+                &env.params,
+                &env.net,
+                &env.links,
+                &env.users,
+                env.layer_dims.clone(),
+            );
+            cm.check_constraints(&env.offload)
+        };
+        cm_err.unwrap_or_else(|e| panic!("{method:?}: {e}"));
+    }
+}
+
+#[test]
+fn hicut_layout_reduces_cross_server_traffic_for_greedy_colocation() {
+    // The qualitative core of the paper: subgraph-aware placement cuts
+    // cross-server communication versus placement that ignores layout.
+    let ctrl = controller();
+    let mut rng = Rng::seed_from(17);
+    let mut env = ctrl.make_env(Method::Greedy, "cora", 64, 200, &mut rng).unwrap();
+
+    // Subgraph-colocating placement: each HiCut subgraph goes wholly
+    // to one (capacity-checked) server.
+    env.reset();
+    while let Some(u) = env.current_user() {
+        let sg = env.subgraph_of[u];
+        let target = sg % env.agents();
+        let _ = u;
+        env.step(target);
+    }
+    let coloc = env.evaluate();
+
+    let mut env2 = ctrl.make_env(Method::Greedy, "cora", 64, 200, &mut rng).unwrap();
+    env2.reset();
+    let mut rr = 0usize;
+    while env2.current_user().is_some() {
+        env2.step(rr % env2.agents());
+        rr += 1;
+    }
+    let scattered = env2.evaluate();
+    assert!(
+        coloc.cross_mb <= scattered.cross_mb,
+        "colocated {} Mb vs scattered {} Mb",
+        coloc.cross_mb,
+        scattered.cross_mb
+    );
+}
+
+#[test]
+fn serve_run_reports_latency_and_accuracy() {
+    let ctrl = controller();
+    let stats =
+        graphedge::serving::serve_run(&ctrl, "pubmed", "sgc", 64, 160, 120, 3).unwrap();
+    assert_eq!(stats.requests, 120);
+    assert!(stats.batches > 0);
+    assert!(stats.latency_p50_s >= 0.0);
+    assert!(stats.latency_p99_s >= stats.latency_p50_s);
+    assert!(stats.accuracy > 0.3, "accuracy {}", stats.accuracy);
+    assert!(stats.mean_batch >= 1.0);
+}

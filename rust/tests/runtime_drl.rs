@@ -1,0 +1,111 @@
+//! Integration: DRL executables (actor_fwd / maddpg_train / ppo_*)
+//! against real artifacts, plus a short end-to-end training smoke.
+
+use graphedge::drl::env::{Env, EnvConfig, OBS};
+use graphedge::drl::{MaddpgConfig, MaddpgTrainer, PpoConfig, PpoTrainer};
+use graphedge::graph::Dataset;
+use graphedge::net::SystemParams;
+use graphedge::runtime::Runtime;
+use graphedge::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("artifacts missing — run `make artifacts`")
+}
+
+fn tiny_env(rt: &Runtime, seed: u64) -> Env {
+    let spec = &rt.manifest.datasets["pubmed"];
+    let ds = Dataset::load(rt.artifacts_root().join(&spec.path), "pubmed").unwrap();
+    let cfg = EnvConfig { n_users: 32, n_assocs: 64, ..EnvConfig::default() };
+    let mut rng = Rng::seed_from(seed);
+    Env::new(&ds, SystemParams::default(), cfg, &mut rng)
+}
+
+#[test]
+fn actor_fwd_outputs_unit_interval_actions() {
+    let rt = runtime();
+    let mut tr = MaddpgTrainer::new(&rt, 1000).unwrap();
+    let mut rng = Rng::seed_from(1);
+    let obs = vec![0.3f32; tr.m * OBS];
+    let acts = tr.select_actions(&obs, 0.0, &mut rng).unwrap();
+    assert_eq!(acts.len(), tr.m);
+    for a in &acts {
+        assert!(a.iter().all(|&v| (0.0..=1.0).contains(&v)), "{a:?}");
+    }
+    // Noise stays clipped.
+    let noisy = tr.select_actions(&obs, 0.5, &mut rng).unwrap();
+    for a in &noisy {
+        assert!(a.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}
+
+#[test]
+fn maddpg_short_training_runs_and_updates() {
+    let rt = runtime();
+    let mut env = tiny_env(&rt, 2);
+    let mut tr = MaddpgTrainer::new(&rt, 10_000).unwrap();
+    let cfg = MaddpgConfig {
+        episodes: 3,
+        warmup: 32,
+        train_every: 8,
+        churn: true,
+        ..MaddpgConfig::default()
+    };
+    let curve = tr.train(&mut env, &cfg).unwrap();
+    assert_eq!(curve.len(), 3);
+    assert!(curve.iter().all(|s| s.reward.is_finite() && s.reward < 0.0));
+    assert!(curve.iter().all(|s| s.system_cost > 0.0));
+    assert!(tr.replay_len() > 0);
+    // Learned policy produces a complete, valid offload.
+    tr.policy_offload(&mut env).unwrap();
+    assert!(env.offload.all_assigned(&env.users.active_users()));
+}
+
+#[test]
+fn maddpg_checkpoint_round_trip() {
+    let rt = runtime();
+    let mut tr = MaddpgTrainer::new(&rt, 1000).unwrap();
+    let dir = std::env::temp_dir().join("graphedge_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("maddpg.gta");
+    tr.save(&path).unwrap();
+    tr.restore(&path).unwrap();
+    // Restored params still drive the actor.
+    let mut rng = Rng::seed_from(3);
+    let obs = vec![0.0f32; tr.m * OBS];
+    let acts = tr.select_actions(&obs, 0.0, &mut rng).unwrap();
+    assert_eq!(acts.len(), tr.m);
+}
+
+#[test]
+fn ppo_training_smoke_and_greedy_rollout() {
+    let rt = runtime();
+    let spec = &rt.manifest.datasets["pubmed"];
+    let ds = Dataset::load(rt.artifacts_root().join(&spec.path), "pubmed").unwrap();
+    let cfg = EnvConfig {
+        n_users: 32,
+        n_assocs: 64,
+        use_hicut: false,
+        use_rsp: false,
+        ..EnvConfig::default()
+    };
+    let mut rng = Rng::seed_from(4);
+    let mut env = Env::new(&ds, SystemParams::default(), cfg, &mut rng);
+    let mut tr = PpoTrainer::new(&rt).unwrap();
+    let curve = tr.train(&mut env, &PpoConfig { episodes: 10, ..PpoConfig::default() }).unwrap();
+    assert_eq!(curve.len(), 10);
+    assert!(curve.iter().all(|s| s.reward.is_finite()));
+    tr.policy_offload(&mut env).unwrap();
+    assert!(env.offload.all_assigned(&env.users.active_users()));
+}
+
+#[test]
+fn manifest_dims_match_env() {
+    let rt = runtime();
+    assert_eq!(rt.manifest.constant("obs_dim").unwrap(), OBS);
+    assert_eq!(rt.manifest.constant("m_agents").unwrap(), 4);
+    assert_eq!(
+        rt.manifest.constant("state_dim").unwrap(),
+        4 * OBS,
+        "state = concat of agent observations (Eq. 19)"
+    );
+}
