@@ -1,0 +1,159 @@
+//! §Perf — incremental partition repair vs full HiCut recut across
+//! churn rates (the fig6-style companion for `partition::incremental`).
+//!
+//! For each churn rate, T steps of §3.2 dynamics run on a 2000-user
+//! preferential-attachment scenario; every step is both repaired
+//! incrementally and recut from scratch, so the two columns describe
+//! the identical graph sequence.  Emits
+//! `bench_results/partition_incremental.csv` and records the perf
+//! trajectory into `BENCH_partition.json` (repo root when present).
+//!
+//! The paper-default point (20% user / 20% association churn) carries
+//! the ISSUE acceptance gate: repair ≥ 5× faster than a full recut
+//! with the mean cut-edge ratio within 1.10 of the fresh full cut.
+
+use std::fmt::Write as _;
+
+use graphedge::bench::{fmt_secs, Table};
+use graphedge::graph::dynamic::{ChurnConfig, DynamicGraph};
+use graphedge::graph::generate::preferential_attachment;
+use graphedge::partition::hicut;
+use graphedge::partition::incremental::{IncrementalConfig, IncrementalPartitioner};
+use graphedge::util::rng::Rng;
+
+struct Run {
+    churn: f64,
+    inc_step_s: f64,
+    full_step_s: f64,
+    speedup: f64,
+    /// Mean of (incremental cut / fresh full-recut cut) per step.
+    cut_ratio_mean: f64,
+    full_fallbacks: usize,
+    local_recuts: usize,
+}
+
+fn run(n: usize, mean_deg: usize, churn: f64, steps: usize) -> Run {
+    let mut rng = Rng::seed_from(0x1A7 + (churn * 100.0) as u64);
+    let g = preferential_attachment(n, mean_deg, &mut rng);
+    let mut users = DynamicGraph::new(g, vec![1.0; n], 2000.0, &mut rng);
+    users.record_deltas(true);
+    let mut inc = IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
+    let cfg = ChurnConfig {
+        user_change_rate: churn,
+        assoc_change_rate: churn,
+        ..ChurnConfig::default()
+    };
+    let (mut inc_s, mut full_s, mut ratio_sum) = (0.0f64, 0.0f64, 0.0f64);
+    for _ in 0..steps {
+        users.step(&cfg, &mut rng);
+        let deltas = users.drain_deltas();
+
+        let t0 = std::time::Instant::now();
+        let stats = inc.apply(&users, &deltas);
+        inc_s += t0.elapsed().as_secs_f64();
+
+        let t0 = std::time::Instant::now();
+        let full = hicut(users.graph(), |v| users.is_active(v));
+        full_s += t0.elapsed().as_secs_f64();
+
+        let full_cut = full.cut_edges(users.graph()).max(1);
+        ratio_sum += stats.cut_edges as f64 / full_cut as f64;
+    }
+    Run {
+        churn,
+        inc_step_s: inc_s / steps as f64,
+        full_step_s: full_s / steps as f64,
+        speedup: full_s / inc_s.max(1e-12),
+        cut_ratio_mean: ratio_sum / steps as f64,
+        full_fallbacks: inc.full_recuts.saturating_sub(1),
+        local_recuts: inc.local_recuts,
+    }
+}
+
+fn main() {
+    let full_suite = std::env::var("GRAPHEDGE_BENCH_FULL").is_ok();
+    let steps = if full_suite { 40 } else { 20 };
+    let (n, mean_deg) = (2000, 6);
+
+    let mut t = Table::new(
+        "incremental repair vs full HiCut recut (2000 users)",
+        &["churn", "repair/step", "full/step", "speedup", "cut ratio",
+          "fallbacks", "local recuts"],
+    );
+    let mut runs = Vec::new();
+    for churn in [0.05, 0.10, 0.20, 0.40] {
+        let r = run(n, mean_deg, churn, steps);
+        t.row(vec![
+            format!("{:.0}%", churn * 100.0),
+            fmt_secs(r.inc_step_s),
+            fmt_secs(r.full_step_s),
+            format!("{:.1}x", r.speedup),
+            format!("{:.3}", r.cut_ratio_mean),
+            r.full_fallbacks.to_string(),
+            r.local_recuts.to_string(),
+        ]);
+        runs.push(r);
+    }
+    t.emit("partition_incremental");
+
+    // Acceptance gate at the paper-default 20% churn point.
+    let paper = &runs[2];
+    let pass = paper.speedup >= 5.0 && paper.cut_ratio_mean <= 1.10;
+    println!(
+        "paper-default point (20% churn): speedup {:.1}x (target >=5x), \
+         cut ratio {:.3} (target <=1.10) — {}",
+        paper.speedup,
+        paper.cut_ratio_mean,
+        if pass { "PASS" } else { "FAIL" },
+    );
+
+    // Perf-trajectory file for future PRs (repo root when running from
+    // the crate directory, else the current directory).
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"partition_incremental\",");
+    let _ = writeln!(
+        json,
+        "  \"_note\": \"Regenerate with `cargo bench --bench \
+         partition_incremental` (the bench overwrites this file).\","
+    );
+    let _ = writeln!(json, "  \"n_users\": {n},");
+    let _ = writeln!(json, "  \"mean_degree\": {mean_deg},");
+    let _ = writeln!(json, "  \"steps\": {steps},");
+    // Keep the acceptance thresholds in the file itself so future PRs
+    // can gate against them without digging through bench source.
+    let _ = writeln!(json, "  \"targets\": {{");
+    let _ = writeln!(json, "    \"paper_default_churn\": 0.2,");
+    let _ = writeln!(json, "    \"min_speedup_vs_full_recut\": 5.0,");
+    let _ = writeln!(json, "    \"max_cut_ratio_vs_fresh_full_cut\": 1.1");
+    let _ = writeln!(json, "  }},");
+    let _ = writeln!(json, "  \"runs\": [");
+    for (i, r) in runs.iter().enumerate() {
+        let comma = if i + 1 < runs.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"churn\": {:.2}, \"repair_step_s\": {:.6e}, \
+             \"full_step_s\": {:.6e}, \"speedup\": {:.2}, \
+             \"cut_ratio_mean\": {:.4}, \"full_fallbacks\": {}, \
+             \"local_recuts\": {}}}{comma}",
+            r.churn,
+            r.inc_step_s,
+            r.full_step_s,
+            r.speedup,
+            r.cut_ratio_mean,
+            r.full_fallbacks,
+            r.local_recuts,
+        );
+    }
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    let path = if std::path::Path::new("../BENCH_partition.json").exists() {
+        "../BENCH_partition.json"
+    } else {
+        "BENCH_partition.json"
+    };
+    match std::fs::write(path, json) {
+        Ok(()) => println!("[wrote {path}]"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -21,6 +21,7 @@ use crate::drl::{baselines, Env, EnvConfig, MaddpgConfig, MaddpgTrainer, Method,
 use crate::graph::Dataset;
 use crate::net::cost::CostBreakdown;
 use crate::net::SystemParams;
+use crate::partition::incremental::IncrementalConfig;
 use crate::runtime::Runtime;
 use crate::serving::{Fleet, GnnService};
 use crate::util::rng::Rng;
@@ -45,6 +46,24 @@ pub struct ScenarioReport {
     pub inference_s: f64,
     /// Wall-clock of the offloading decision itself.
     pub decision_s: f64,
+}
+
+/// Aggregate of a multi-step dynamic run ([`Controller::run_dynamic`]).
+#[derive(Clone, Debug)]
+pub struct DynamicReport {
+    pub steps: usize,
+    pub incremental: bool,
+    /// Wall-clock of churn + layout maintenance across all steps.
+    pub layout_s_total: f64,
+    pub steps_per_s: f64,
+    /// Full HiCut runs (per step when not incremental; drift fallbacks
+    /// plus the initial reference cut otherwise).
+    pub full_recuts: usize,
+    pub local_recuts: usize,
+    pub final_cut_edges: usize,
+    /// Relative drift above the monitor reference (0 when tracking).
+    pub final_drift: f64,
+    pub mean_cost: f64,
 }
 
 /// The EC controller.
@@ -136,6 +155,52 @@ impl Controller {
         let mut trainer = PpoTrainer::new(&self.rt)?;
         let curve = trainer.train(&mut env, cfg)?;
         Ok((trainer, env, curve))
+    }
+
+    /// Drive `env` through `steps` churn steps — §3.2 dynamics, layout
+    /// maintenance (delta-driven repair when `incremental`, full HiCut
+    /// otherwise), greedy re-offload, cost evaluation — and summarize.
+    /// This is the coordinator's dynamic-scenario entry point; the
+    /// serving layer builds on the same loop in
+    /// [`crate::serving::serve_dynamic_run`].
+    pub fn run_dynamic(
+        &self,
+        env: &mut Env,
+        steps: usize,
+        incremental: bool,
+        rng: &mut Rng,
+    ) -> crate::Result<DynamicReport> {
+        if incremental && env.incremental.is_none() {
+            env.enable_incremental(IncrementalConfig::default());
+        } else if !incremental && env.incremental.is_some() {
+            // The mode flag wins: a leftover partitioner from an
+            // earlier incremental run would silently keep repairing
+            // and mislabel the full-recut baseline.
+            env.disable_incremental();
+        }
+        let mut layout_s = 0.0;
+        let mut cost_sum = 0.0;
+        for _ in 0..steps {
+            let t0 = std::time::Instant::now();
+            env.mutate(rng); // churn + repair (or full recut)
+            layout_s += t0.elapsed().as_secs_f64();
+            env.reset();
+            baselines::run_greedy(env);
+            cost_sum += env.evaluate().total();
+        }
+        let (full_recuts, local_recuts, final_drift, final_cut_edges) =
+            env.layout_maintenance_stats(steps);
+        Ok(DynamicReport {
+            steps,
+            incremental,
+            layout_s_total: layout_s,
+            steps_per_s: steps as f64 / layout_s.max(1e-12),
+            full_recuts,
+            local_recuts,
+            final_cut_edges,
+            final_drift,
+            mean_cost: cost_sum / steps.max(1) as f64,
+        })
     }
 
     /// Execute one full round: decide an offload with `method` (using

@@ -36,6 +36,7 @@ use crate::graph::sample::{sample_scenario, Scenario};
 use crate::net::cost::{CostModel, GnnProfile, Offload, UNASSIGNED};
 use crate::net::params::SystemParams;
 use crate::net::topology::{EdgeNetwork, UserLinks};
+use crate::partition::incremental::{IncrementalConfig, IncrementalPartitioner, RepairStats};
 use crate::partition::{hicut, Partition};
 use crate::util::rng::Rng;
 
@@ -113,6 +114,10 @@ pub struct Env {
     sub_offloaded: Vec<usize>,
     /// Overflow assignments (capacity exceeded because nothing was free).
     pub overflow: usize,
+    /// Delta-driven layout maintenance (None = full recut per mutate).
+    pub incremental: Option<IncrementalPartitioner>,
+    /// Repair telemetry of the last incremental `mutate`.
+    pub last_repair: Option<RepairStats>,
 }
 
 impl Env {
@@ -148,6 +153,8 @@ impl Env {
             sub_server_count: Vec::new(),
             sub_offloaded: Vec::new(),
             overflow: 0,
+            incremental: None,
+            last_repair: None,
         };
         env.recut();
         env.reset();
@@ -161,16 +168,65 @@ impl Env {
     /// Re-run the graph-layout optimization after topology changes
     /// (Algorithm 2 line 8) and rebuild the iteration order.
     pub fn recut(&mut self) {
-        let users = &self.users;
-        let n = users.capacity();
-        let partition: Partition = if self.cfg.use_hicut {
-            hicut(users.graph(), &|v| users.is_active(v))
-        } else {
-            // Ablation: each active user its own "subgraph".
-            Partition {
-                subgraphs: users.active_users().into_iter().map(|v| vec![v]).collect(),
+        let partition: Partition = {
+            let users = &self.users;
+            if self.cfg.use_hicut {
+                hicut(users.graph(), |v| users.is_active(v))
+            } else {
+                // Ablation: each active user its own "subgraph".
+                Partition {
+                    subgraphs: users.active_users().into_iter().map(|v| vec![v]).collect(),
+                }
             }
         };
+        // Keep the incremental partitioner (when enabled) in sync with
+        // the freshly computed layout — a full recut is its reference.
+        if let Some(inc) = self.incremental.as_mut() {
+            inc.adopt(self.users.graph(), partition.subgraphs.clone());
+        }
+        self.install_partition(&partition);
+    }
+
+    /// Switch layout maintenance to delta-driven repair: the dynamic
+    /// graph starts recording [`crate::graph::dynamic::GraphDelta`]s
+    /// and every `mutate` repairs the live partition (full HiCut stays
+    /// as the drift-monitor fallback).  Only meaningful with
+    /// `use_hicut`; the ablation path keeps singleton subgraphs.
+    pub fn enable_incremental(&mut self, cfg: IncrementalConfig) {
+        self.users.record_deltas(true);
+        let inc = IncrementalPartitioner::from_users(&self.users, cfg);
+        let partition = inc.partition();
+        self.incremental = Some(inc);
+        self.install_partition(&partition);
+    }
+
+    /// Back to full-recut maintenance: drop the partitioner and stop
+    /// recording deltas (the journal is cleared).
+    pub fn disable_incremental(&mut self) {
+        self.incremental = None;
+        self.last_repair = None;
+        self.users.record_deltas(false);
+    }
+
+    /// Layout-maintenance telemetry: `(full_recuts, local_recuts,
+    /// drift, cut_edges)`.  Without a partitioner every one of the
+    /// `steps` mutates was a full recut and drift is zero by
+    /// definition.
+    pub fn layout_maintenance_stats(&self, steps: usize) -> (usize, usize, f64, usize) {
+        match &self.incremental {
+            Some(inc) => (
+                inc.full_recuts,
+                inc.local_recuts,
+                inc.monitor().drift(inc.cut_edges_now()),
+                inc.cut_edges_now(),
+            ),
+            None => (steps, 0, 0.0, self.layout_cut_edges()),
+        }
+    }
+
+    /// Install a computed layout into the episode bookkeeping.
+    fn install_partition(&mut self, partition: &Partition) {
+        let n = self.users.capacity();
         self.subgraph_of = partition.assignment(n);
         self.subgraph_size = partition.subgraphs.iter().map(|s| s.len()).collect();
         // Iterate subgraph by subgraph so colocation is learnable.
@@ -180,10 +236,25 @@ impl Env {
         self.sub_offloaded = vec![0; partition.subgraphs.len()];
     }
 
-    /// Apply one scenario churn step and re-optimize the layout.
+    /// Apply one scenario churn step and re-optimize the layout —
+    /// incrementally (delta repair) when enabled, else by full recut.
     pub fn mutate(&mut self, rng: &mut Rng) {
         let churn = self.cfg.churn;
         self.users.step(&churn, rng);
+        let deltas = if self.users.recording() {
+            self.users.drain_deltas()
+        } else {
+            Vec::new()
+        };
+        if self.cfg.use_hicut {
+            if let Some(inc) = self.incremental.as_mut() {
+                let stats = inc.apply(&self.users, &deltas);
+                let partition = inc.partition();
+                self.last_repair = Some(stats);
+                self.install_partition(&partition);
+                return;
+            }
+        }
         self.recut();
     }
 
@@ -555,6 +626,31 @@ mod tests {
                 env.step(0);
             }
             assert!(env.evaluate().total() > 0.0);
+        }
+    }
+
+    #[test]
+    fn incremental_mutate_matches_full_recut_invariants() {
+        let mut env = small_env(11);
+        env.enable_incremental(crate::partition::IncrementalConfig::default());
+        let mut rng = Rng::seed_from(12);
+        for _ in 0..5 {
+            env.mutate(&mut rng);
+            let stats = env.last_repair.expect("incremental path must report");
+            let inc = env.incremental.as_ref().unwrap();
+            assert!(inc.is_valid_cover(&env.users));
+            assert_eq!(stats.cut_edges, env.layout_cut_edges());
+            // Episode bookkeeping mirrors the repaired layout.
+            assert_eq!(env.subgraph_of.len(), env.users.capacity());
+            let active: std::collections::HashSet<usize> =
+                env.users.active_users().into_iter().collect();
+            let in_order: std::collections::HashSet<usize> =
+                env.order.iter().copied().collect();
+            assert_eq!(active, in_order);
+            env.reset();
+            while !env.finished() {
+                env.step(0);
+            }
         }
     }
 

@@ -13,6 +13,14 @@
 //!
 //! [`DynamicGraph::step`] applies a randomized mixture of all three —
 //! the per-episode scenario churn of Algorithm 2 line 8.
+//!
+//! When delta recording is enabled ([`DynamicGraph::record_deltas`])
+//! every mutation additionally appends a typed [`GraphDelta`] to an
+//! internal journal, in application order.  Draining that journal
+//! ([`DynamicGraph::drain_deltas`]) gives downstream consumers —
+//! chiefly [`crate::partition::incremental::IncrementalPartitioner`] —
+//! an exact replayable description of one churn step, so derived state
+//! can be *repaired* instead of recomputed from scratch.
 
 use super::Graph;
 use crate::util::rng::Rng;
@@ -28,6 +36,27 @@ impl Pos {
     pub fn dist(&self, other: &Pos) -> f64 {
         ((self.x - other.x).powi(2) + (self.y - other.y).powi(2)).sqrt()
     }
+}
+
+/// One §3.2 scenario change, as seen by the partition layer.
+///
+/// The four variants cover exactly the paper's dynamics: mobility
+/// (`Moved`), user-count changes (`Joined` / `Left`) and association
+/// rewiring (`Rewired`).  Replaying a journal in order onto a copy of
+/// the pre-step graph reproduces the post-step graph bit for bit (see
+/// the `deltas_replay_to_identical_topology` test).
+#[derive(Clone, Debug, PartialEq)]
+pub enum GraphDelta {
+    /// A user moved on the EC plane (position only, no topology).
+    Moved { user: usize, to: Pos },
+    /// A fresh user took a mask-0 slot.  Its associations arrive as
+    /// subsequent [`GraphDelta::Rewired`] events.
+    Joined { user: usize, pos: Pos },
+    /// A user dropped out; `neighbors` is its adjacency at departure
+    /// (those edges are removed atomically with the mask flip).
+    Left { user: usize, neighbors: Vec<u32> },
+    /// One association appeared (`added = true`) or disappeared.
+    Rewired { a: usize, b: usize, added: bool },
 }
 
 /// Churn configuration for [`DynamicGraph::step`].
@@ -66,6 +95,10 @@ pub struct DynamicGraph {
     /// churn process preserves (without an anchor, departures bleed
     /// edges faster than arrivals restore them and |E| decays).
     target_mean_deg: f64,
+    /// Recorded [`GraphDelta`]s since the last drain (empty unless
+    /// `recording`).
+    journal: Vec<GraphDelta>,
+    recording: bool,
 }
 
 impl DynamicGraph {
@@ -78,7 +111,68 @@ impl DynamicGraph {
             .map(|_| Pos { x: rng.range_f64(0.0, plane_m), y: rng.range_f64(0.0, plane_m) })
             .collect();
         let target_mean_deg = 2.0 * graph.num_edges() as f64 / n.max(1) as f64;
-        DynamicGraph { graph, mask: vec![true; n], pos, task_mb, target_mean_deg }
+        DynamicGraph {
+            graph,
+            mask: vec![true; n],
+            pos,
+            task_mb,
+            target_mean_deg,
+            journal: Vec::new(),
+            recording: false,
+        }
+    }
+
+    // -- delta journal ------------------------------------------------------
+
+    /// Start/stop recording [`GraphDelta`]s.  The journal is cleared on
+    /// every call, so a consumer sees only changes after its own
+    /// snapshot.  Off by default: an undrained journal would grow
+    /// without bound across training episodes.
+    pub fn record_deltas(&mut self, on: bool) {
+        self.recording = on;
+        self.journal.clear();
+    }
+
+    pub fn recording(&self) -> bool {
+        self.recording
+    }
+
+    /// Take the recorded delta batch, clearing the journal.
+    pub fn drain_deltas(&mut self) -> Vec<GraphDelta> {
+        std::mem::take(&mut self.journal)
+    }
+
+    /// Insert an association through the journal (all internal edge
+    /// mutations funnel through here so the delta stream stays exact).
+    fn add_assoc(&mut self, u: usize, v: usize) -> bool {
+        let added = self.graph.add_edge(u, v);
+        if added && self.recording {
+            self.journal.push(GraphDelta::Rewired { a: u, b: v, added: true });
+        }
+        added
+    }
+
+    /// Remove an association through the journal.
+    fn remove_assoc(&mut self, u: usize, v: usize) -> bool {
+        let removed = self.graph.remove_edge(u, v);
+        if removed && self.recording {
+            self.journal.push(GraphDelta::Rewired { a: u, b: v, added: false });
+        }
+        removed
+    }
+
+    /// Externally driven association arrival (§3.2 dynamic #3).
+    /// Returns false if either endpoint is inactive or the edge exists.
+    pub fn add_association(&mut self, u: usize, v: usize) -> bool {
+        if !self.mask[u] || !self.mask[v] {
+            return false;
+        }
+        self.add_assoc(u, v)
+    }
+
+    /// Externally driven association departure; false if absent.
+    pub fn remove_association(&mut self, u: usize, v: usize) -> bool {
+        self.remove_assoc(u, v)
     }
 
     pub fn capacity(&self) -> usize {
@@ -139,6 +233,10 @@ impl DynamicGraph {
         for &v in users {
             if self.mask[v] {
                 self.mask[v] = false;
+                if self.recording {
+                    let neighbors = self.graph.neighbors(v).to_vec();
+                    self.journal.push(GraphDelta::Left { user: v, neighbors });
+                }
                 self.graph.isolate(v);
             }
         }
@@ -159,6 +257,10 @@ impl DynamicGraph {
         for (i, &slot) in chosen.iter().enumerate() {
             self.mask[slot] = true;
             self.pos[slot] = positions(i, rng);
+            if self.recording {
+                self.journal
+                    .push(GraphDelta::Joined { user: slot, pos: self.pos[slot] });
+            }
         }
         chosen.to_vec()
     }
@@ -175,6 +277,9 @@ impl DynamicGraph {
                 x: (self.pos[v].x + dx).clamp(0.0, plane_m),
                 y: (self.pos[v].y + dy).clamp(0.0, plane_m),
             };
+            if self.recording {
+                self.journal.push(GraphDelta::Moved { user: v, to: self.pos[v] });
+            }
         }
     }
 
@@ -187,6 +292,9 @@ impl DynamicGraph {
                     x: rng.range_f64(0.0, plane_m),
                     y: rng.range_f64(0.0, plane_m),
                 };
+                if self.recording {
+                    self.journal.push(GraphDelta::Moved { user: v, to: self.pos[v] });
+                }
             }
         }
     }
@@ -207,14 +315,14 @@ impl DynamicGraph {
                 .collect();
             if let Some(&(u, v)) = edges.get(rng.below(edges.len().max(1)).min(edges.len().saturating_sub(1))) {
                 if !edges.is_empty() {
-                    self.graph.remove_edge(u as usize, v as usize);
+                    self.remove_assoc(u as usize, v as usize);
                 }
             }
             // Add a fresh association between random active users.
             for _ in 0..10 {
                 let a = *rng.choose(&active);
                 let b = *rng.choose(&active);
-                if a != b && self.graph.add_edge(a, b) {
+                if a != b && self.add_assoc(a, b) {
                     break;
                 }
             }
@@ -273,7 +381,7 @@ impl DynamicGraph {
                 while got < want && tries < 20 * want {
                     tries += 1;
                     let u = *rng.choose(&pool);
-                    if u != v && self.graph.add_edge(u, v) {
+                    if u != v && self.add_assoc(u, v) {
                         got += 1;
                     }
                 }
@@ -300,7 +408,7 @@ impl DynamicGraph {
                 tries += 1;
                 let u = *rng.choose(&active);
                 let v = *rng.choose(&active);
-                if u != v && self.graph.add_edge(u, v) {
+                if u != v && self.add_assoc(u, v) {
                     got += 1;
                 }
             }
@@ -413,6 +521,84 @@ mod tests {
             e1 * 2 >= e0,
             "association count collapsed: {e0} -> {e1}"
         );
+    }
+
+    #[test]
+    fn journal_is_empty_unless_recording() {
+        let mut rng = Rng::seed_from(21);
+        let mut d = make(30, &mut rng);
+        d.step(&ChurnConfig::default(), &mut rng);
+        assert!(d.drain_deltas().is_empty());
+        d.record_deltas(true);
+        d.step(&ChurnConfig::default(), &mut rng);
+        assert!(!d.drain_deltas().is_empty());
+        // Drain clears; a quiet period records nothing.
+        assert!(d.drain_deltas().is_empty());
+    }
+
+    #[test]
+    fn explicit_association_changes_are_journaled() {
+        let mut rng = Rng::seed_from(22);
+        let mut d = make(10, &mut rng);
+        d.record_deltas(true);
+        d.remove_users(&[3]);
+        assert!(!d.add_association(3, 4)); // inactive endpoint refused
+        let (u, v) = (0usize, 4usize);
+        let had = d.graph().has_edge(u, v);
+        if had {
+            assert!(d.remove_association(u, v));
+        } else {
+            assert!(d.add_association(u, v));
+        }
+        let deltas = d.drain_deltas();
+        assert!(matches!(deltas[0], GraphDelta::Left { user: 3, .. }));
+        assert!(deltas
+            .iter()
+            .any(|x| matches!(x, GraphDelta::Rewired { a: 0, b: 4, .. })));
+    }
+
+    #[test]
+    fn deltas_replay_to_identical_topology() {
+        // The journal is exact: replaying it onto a copy of the
+        // pre-churn graph reproduces adjacency and mask bit for bit.
+        check_seeds(10, |rng| {
+            let n = 50;
+            let mut d = make(n, rng);
+            let mut shadow = d.graph().clone();
+            let mut mask = vec![true; n];
+            d.record_deltas(true);
+            let cfg = ChurnConfig::default();
+            for _ in 0..6 {
+                d.step(&cfg, rng);
+                for delta in d.drain_deltas() {
+                    match delta {
+                        GraphDelta::Moved { .. } => {}
+                        GraphDelta::Joined { user, .. } => mask[user] = true,
+                        GraphDelta::Left { user, .. } => {
+                            mask[user] = false;
+                            shadow.isolate(user);
+                        }
+                        GraphDelta::Rewired { a, b, added } => {
+                            if added {
+                                shadow.add_edge(a, b);
+                            } else {
+                                shadow.remove_edge(a, b);
+                            }
+                        }
+                    }
+                }
+                if shadow.num_edges() != d.graph().num_edges() {
+                    return false;
+                }
+                if (0..n).any(|v| mask[v] != d.is_active(v)) {
+                    return false;
+                }
+                if (0..n).any(|v| shadow.neighbors(v) != d.graph().neighbors(v)) {
+                    return false;
+                }
+            }
+            true
+        });
     }
 
     #[test]

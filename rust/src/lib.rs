@@ -12,6 +12,19 @@
 //!   (PTOM/GM/RM and the max-flow min-cut comparator), the radio/energy
 //!   cost model (Eqs. 3–13), and a simulated heterogeneous edge-server
 //!   fleet that *actually executes* GNN inference.
+//!
+//! Dynamic scenarios no longer recut the world every step: §3.2 churn
+//! is recorded as a typed [`graph::dynamic::GraphDelta`] stream and the
+//! [`partition::incremental`] subsystem repairs the live HiCut layout —
+//! exact O(1) cut bookkeeping per delta, majority-attach for arrivals,
+//! a bounded greedy refinement sweep, and local region re-cuts of
+//! subgraphs whose boundary degraded — in O(Δ·deg + dirty region) per
+//! step versus the full cut's O(N² + N·E) (§4.4).  A
+//! [`partition::incremental::DriftMonitor`] compares the live
+//! inter-subgraph association count against the last full cut and
+//! falls back to full HiCut past a configurable bound, so repair never
+//! silently erodes layout quality.  `coordinator::Controller::run_dynamic`
+//! and `serving::serve_dynamic_run` ride this path online.
 //! * **Layer 2 (JAX, build time)** — GCN/GAT/GraphSAGE/SGC forwards and
 //!   the MADDPG/PPO train steps, AOT-lowered to HLO text.
 //! * **Layer 1 (Pallas, build time)** — the dense aggregation kernels

@@ -55,8 +55,11 @@ fn app() -> App {
                 .opt("assocs", "1200", "associations")
                 .opt("requests", "600", "request count")
                 .opt("policy", "", "DRLGO checkpoint (.gta); empty = greedy placement")
+                .opt("steps", "0", "churn steps (0 = static scenario)")
+                .opt("per-step", "40", "requests per churn step (dynamic mode)")
                 .opt("config", "configs/table2.toml", "config file")
-                .opt("seed", "5", "rng seed"),
+                .opt("seed", "5", "rng seed")
+                .switch("incremental", "delta-driven partition repair (dynamic mode)"),
         ],
     }
 }
@@ -268,6 +271,22 @@ fn cmd_serve(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
     let assocs = matches.usize("assocs");
     let requests = matches.usize("requests");
     let seed = matches.usize("seed") as u64;
+    let steps = matches.usize("steps");
+    if steps > 0 {
+        // Dynamic mode: §3.2 churn every step; the layout is repaired
+        // from GraphDeltas (--incremental) or recut in full.
+        return graphedge::serving::serve_dynamic(
+            &ctrl,
+            &dataset,
+            &model,
+            users,
+            assocs,
+            steps,
+            matches.usize("per-step"),
+            seed,
+            matches.switch("incremental"),
+        );
+    }
     let policy = matches.str("policy").to_string();
     let placement = if policy.is_empty() {
         graphedge::serving::Placement::Greedy

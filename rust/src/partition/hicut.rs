@@ -22,9 +22,14 @@ use super::Partition;
 use crate::graph::Graph;
 
 /// Run HiCut over the vertices for which `alive` holds (the §3.2 mask).
-pub fn hicut(g: &Graph, alive: &dyn Fn(usize) -> bool) -> Partition {
+///
+/// `alive` is a generic bound (not `&dyn Fn`) so the per-neighbor mask
+/// check on the traversal hot path is statically dispatched; `&closure`
+/// arguments keep working through the blanket `Fn` impl for references.
+pub fn hicut(g: &Graph, alive: impl Fn(usize) -> bool) -> Partition {
     let n = g.len();
-    // assignment[v] = subgraph id, usize::MAX = unassigned.
+    // assigned[v] flips to true once v belongs to a finished subgraph
+    // (subgraph ids are implied by push order into the partition).
     let mut assigned = vec![false; n];
     let mut partition = Partition::default();
 
@@ -32,21 +37,49 @@ pub fn hicut(g: &Graph, alive: &dyn Fn(usize) -> bool) -> Partition {
         if assigned[start] || !alive(start) {
             continue;
         }
-        let sub = layer_cut(g, start, &mut assigned, alive);
+        let sub = layer_cut(g, start, &mut assigned, &alive);
         debug_assert!(!sub.is_empty());
         partition.subgraphs.push(sub);
     }
     partition
 }
 
+/// Re-run HiCut restricted to `region`: vertices outside the region are
+/// treated as already assigned, so neither the traversal nor the `d_n`
+/// association counts ever leave it.  Returns the region's new
+/// subgraphs.  This is the local-repair primitive of
+/// [`super::incremental`]: dirty subgraphs plus their cut-edge
+/// neighbors are dissolved into a region and re-cut in place, leaving
+/// the rest of the layout untouched.
+pub fn hicut_region(
+    g: &Graph,
+    region: &[usize],
+    alive: impl Fn(usize) -> bool,
+) -> Vec<Vec<usize>> {
+    let mut assigned = vec![true; g.len()];
+    for &v in region {
+        if alive(v) {
+            assigned[v] = false;
+        }
+    }
+    let mut subgraphs = Vec::new();
+    for &start in region {
+        if assigned[start] {
+            continue;
+        }
+        subgraphs.push(layer_cut(g, start, &mut assigned, &alive));
+    }
+    subgraphs
+}
+
 /// One graph-cut operation (Algorithm 1's `LayerCut`): BFS from
 /// `start`, returning the vertices of the new subgraph (marked in
 /// `assigned`).
-fn layer_cut(
+fn layer_cut<F: Fn(usize) -> bool>(
     g: &Graph,
     start: usize,
     assigned: &mut [bool],
-    alive: &dyn Fn(usize) -> bool,
+    alive: &F,
 ) -> Vec<usize> {
     let mut subgraph: Vec<usize> = Vec::new();
     let mut commit = |verts: &mut Vec<usize>, assigned: &mut [bool]| {
@@ -249,6 +282,41 @@ mod tests {
             p.cut_edges(&g),
             rand_assign.cut_edges(&g)
         );
+    }
+
+    #[test]
+    fn region_cut_covers_exactly_the_region() {
+        check_seeds(30, |rng| {
+            let n = rng.range(6, 80);
+            let g = uniform_random(n, rng.below(3 * n), rng);
+            let region: Vec<usize> = (0..n).filter(|_| rng.chance(0.5)).collect();
+            let subs = hicut_region(&g, &region, |_| true);
+            let mut seen = vec![0usize; n];
+            for sub in &subs {
+                if sub.is_empty() {
+                    return false;
+                }
+                for &v in sub {
+                    seen[v] += 1;
+                }
+            }
+            let in_region: std::collections::HashSet<usize> =
+                region.iter().copied().collect();
+            (0..n).all(|v| seen[v] == usize::from(in_region.contains(&v)))
+        });
+    }
+
+    #[test]
+    fn region_cut_respects_alive_mask() {
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let subs = hicut_region(&g, &[0, 1, 2, 3], |v| v != 2);
+        let all: Vec<usize> = subs.iter().flatten().copied().collect();
+        assert!(!all.contains(&2) && !all.contains(&4) && !all.contains(&5));
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), all.len()); // disjoint
+        assert_eq!(sorted, vec![0, 1, 3]);
     }
 
     #[test]

@@ -1,0 +1,89 @@
+//! Cut-quality drift monitor: the "quality is never silently lost"
+//! guarantee of the incremental path.
+//!
+//! Repair is a heuristic; over many churn steps its layout can erode.
+//! The monitor tracks the live inter-subgraph association count
+//! against the count recorded at the last full HiCut and reports when
+//! the drift bound is exceeded, at which point the owner re-runs the
+//! §4 full cut and resets the reference.
+
+/// Watches the live cut-edge count against the last full-cut
+/// reference.
+#[derive(Clone, Debug)]
+pub struct DriftMonitor {
+    bound: f64,
+    slack: usize,
+    reference: usize,
+    /// Drift evaluations performed.
+    pub checks: usize,
+    /// Times the bound was exceeded (each triggers a full recut).
+    pub trips: usize,
+}
+
+impl DriftMonitor {
+    pub fn new(bound: f64, slack: usize) -> Self {
+        DriftMonitor { bound, slack, reference: 0, checks: 0, trips: 0 }
+    }
+
+    /// Record the cut-edge count of a fresh full cut.
+    pub fn set_reference(&mut self, cut: usize) {
+        self.reference = cut;
+    }
+
+    /// Cut-edge count of the last full cut.
+    pub fn reference(&self) -> usize {
+        self.reference
+    }
+
+    /// Highest tolerated cut-edge count before fallback.
+    pub fn limit(&self) -> usize {
+        (self.reference as f64 * (1.0 + self.bound)) as usize + self.slack
+    }
+
+    /// Relative drift of `cut` above the reference (0.0 at or below).
+    pub fn drift(&self, cut: usize) -> f64 {
+        cut.saturating_sub(self.reference) as f64 / self.reference.max(1) as f64
+    }
+
+    /// Evaluate one repaired layout; true means a full recut is due.
+    pub fn exceeded(&mut self, cut: usize) -> bool {
+        self.checks += 1;
+        if cut > self.limit() {
+            self.trips += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trips_only_past_bound_plus_slack() {
+        let mut m = DriftMonitor::new(0.10, 5);
+        m.set_reference(100);
+        assert_eq!(m.limit(), 115);
+        assert!(!m.exceeded(100));
+        assert!(!m.exceeded(115));
+        assert!(m.exceeded(116));
+        assert_eq!((m.checks, m.trips), (3, 1));
+    }
+
+    #[test]
+    fn slack_covers_zero_reference() {
+        let mut m = DriftMonitor::new(0.10, 8);
+        assert!(!m.exceeded(8));
+        assert!(m.exceeded(9));
+    }
+
+    #[test]
+    fn drift_is_relative_overshoot() {
+        let mut m = DriftMonitor::new(0.10, 0);
+        m.set_reference(200);
+        assert_eq!(m.drift(180), 0.0);
+        assert!((m.drift(220) - 0.10).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,72 @@
+//! Incremental partition maintenance: delta-driven HiCut repair.
+//!
+//! The seed coordinator re-ran full HiCut — O(N² + N·E), §4.4 — on
+//! every §3.2 churn step, even though a 20% churn step perturbs only
+//! part of the layout.  This subsystem keeps the optimized layout
+//! *live* instead:
+//!
+//! 1. [`crate::graph::dynamic::DynamicGraph`] records a typed
+//!    [`crate::graph::dynamic::GraphDelta`] journal (`Moved` / `Joined`
+//!    / `Left` / `Rewired`) for every mutation.
+//! 2. [`IncrementalPartitioner`] owns the live partition plus
+//!    per-subgraph boundary (cut-edge) bookkeeping, and repairs each
+//!    delta batch in O(Δ·deg): departures unassign with exact counter
+//!    fixes, arrivals attach to the majority neighbor subgraph, and a
+//!    bounded greedy refinement sweep over delta-touched vertices
+//!    migrates vertices whose cut contribution strictly improves.
+//! 3. Subgraphs whose boundary grew past a threshold since their last
+//!    cut are *locally* re-cut: the dirty subgraphs plus their
+//!    cut-edge neighbors dissolve into one region and
+//!    [`crate::partition::hicut::hicut_region`] re-cuts it in place.
+//! 4. A [`DriftMonitor`] compares the live inter-subgraph association
+//!    count against the last full HiCut and triggers a full recut when
+//!    drift exceeds a configurable bound — so quality is never
+//!    silently lost, and the O(N² + N·E) cost is paid only when the
+//!    layout has genuinely eroded.
+
+mod drift;
+mod repair;
+
+pub use drift::DriftMonitor;
+pub use repair::{IncrementalPartitioner, RepairStats};
+
+/// Tuning knobs for [`IncrementalPartitioner`].
+#[derive(Clone, Debug)]
+pub struct IncrementalConfig {
+    /// Relative cut-quality drift tolerated before the full-HiCut
+    /// fallback, measured against the cut-edge count of the last full
+    /// cut (paper-default scenarios use 0.10).
+    pub drift_bound: f64,
+    /// Absolute slack on the drift limit so tiny reference cuts don't
+    /// trip the monitor on single-edge noise.
+    pub drift_slack: usize,
+    /// Relative per-subgraph boundary growth (vs the boundary at its
+    /// last cut) that marks a subgraph dirty for a local re-cut.
+    pub local_growth: f64,
+    /// Absolute slack on the dirty threshold.
+    pub local_slack: usize,
+    /// Local re-cut regions larger than this fraction of the covered
+    /// vertices are skipped: at that size region surgery costs about as
+    /// much as the full recut the drift monitor would order anyway.
+    pub max_region_frac: f64,
+    /// Greedy refinement sweeps over delta-touched vertices per batch.
+    pub refine_passes: usize,
+    /// Refinement never grows a subgraph past this fraction of the
+    /// covered vertices (keeps greedy migration from agglomerating the
+    /// layout into one giant subgraph that no edge server could host).
+    pub max_subgraph_frac: f64,
+}
+
+impl Default for IncrementalConfig {
+    fn default() -> Self {
+        IncrementalConfig {
+            drift_bound: 0.10,
+            drift_slack: 16,
+            local_growth: 0.5,
+            local_slack: 4,
+            max_region_frac: 0.2,
+            refine_passes: 2,
+            max_subgraph_frac: 0.25,
+        }
+    }
+}

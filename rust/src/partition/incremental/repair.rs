@@ -1,0 +1,684 @@
+//! Delta-driven repair of a live HiCut partition.
+//!
+//! The partitioner owns the layout as *slots* (subgraph vertex lists
+//! with a free-list), a vertex→slot assignment, and per-slot boundary
+//! counts, all maintained exactly under replayed
+//! [`GraphDelta`] journals:
+//!
+//! * `Left` — unassign, fixing the cut counters from the adjacency
+//!   recorded in the event (the edges died with the user).
+//! * `Joined` — attach to the majority subgraph among live neighbors
+//!   (a fresh singleton when isolated).
+//! * `Rewired` — O(1) counter update; the cut only changes when both
+//!   endpoints are assigned to different subgraphs.
+//!
+//! After replay, a bounded greedy refinement sweep migrates
+//! delta-touched vertices whose cut contribution strictly improves,
+//! dirty subgraphs get a local region re-cut
+//! ([`crate::partition::hicut::hicut_region`]), and the
+//! [`DriftMonitor`] orders a full HiCut when repair has drifted past
+//! its bound.  Per batch the repair work is O(Δ·deg + dirty region)
+//! versus the full cut's O(N² + N·E) (§4.4).
+
+use std::collections::HashMap;
+
+use super::drift::DriftMonitor;
+use super::IncrementalConfig;
+use crate::graph::dynamic::{DynamicGraph, GraphDelta};
+use crate::graph::Graph;
+use crate::partition::hicut::{hicut, hicut_region};
+use crate::partition::Partition;
+
+const NONE: usize = usize::MAX;
+
+/// What one [`IncrementalPartitioner::apply`] call did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RepairStats {
+    /// Journal length of the batch.
+    pub deltas: usize,
+    /// Users attached (joined) / unassigned (left).
+    pub joined: usize,
+    pub left: usize,
+    /// Refinement migrations performed.
+    pub refine_moves: usize,
+    /// Local re-cut region, when one ran.
+    pub region_subgraphs: usize,
+    pub region_vertices: usize,
+    pub local_recut: bool,
+    /// The drift monitor ordered a full HiCut fallback.
+    pub full_recut: bool,
+    /// Live cut-edge count after repair.
+    pub cut_edges: usize,
+    /// Monitor reference (cut edges at the last full cut).
+    pub reference_cut: usize,
+}
+
+/// Owns the live [`Partition`] of a churning scenario and repairs it
+/// from [`GraphDelta`] batches instead of recutting the world.
+pub struct IncrementalPartitioner {
+    pub cfg: IncrementalConfig,
+    monitor: DriftMonitor,
+    /// Subgraph slots; an empty slot is free (listed in `free`).
+    slots: Vec<Vec<usize>>,
+    free: Vec<usize>,
+    /// vertex → slot id (`usize::MAX` = unassigned).
+    assignment: Vec<usize>,
+    /// Index of each assigned vertex inside its slot (O(1) removal).
+    pos_in_slot: Vec<usize>,
+    /// Per-slot cut-edge count (both endpoints assigned, slots differ).
+    boundary: Vec<usize>,
+    /// Boundary at the slot's last full/local cut — dirty detection.
+    baseline: Vec<usize>,
+    /// Live inter-subgraph association count.
+    cut: usize,
+    /// Assigned-vertex count.
+    covered: usize,
+    /// Delta batches applied.
+    pub steps: usize,
+    /// Full HiCut runs (the constructor's reference cut counts as one).
+    pub full_recuts: usize,
+    /// Local region re-cuts performed.
+    pub local_recuts: usize,
+}
+
+impl IncrementalPartitioner {
+    pub fn new(cfg: IncrementalConfig) -> Self {
+        let monitor = DriftMonitor::new(cfg.drift_bound, cfg.drift_slack);
+        IncrementalPartitioner {
+            cfg,
+            monitor,
+            slots: Vec::new(),
+            free: Vec::new(),
+            assignment: Vec::new(),
+            pos_in_slot: Vec::new(),
+            boundary: Vec::new(),
+            baseline: Vec::new(),
+            cut: 0,
+            covered: 0,
+            steps: 0,
+            full_recuts: 0,
+            local_recuts: 0,
+        }
+    }
+
+    /// Build from the live scenario: one full HiCut as the reference.
+    pub fn from_users(users: &DynamicGraph, cfg: IncrementalConfig) -> Self {
+        let mut p = Self::new(cfg);
+        p.full_recut(users);
+        p
+    }
+
+    /// Throw incremental state away and re-run the §4 full HiCut.
+    pub fn full_recut(&mut self, users: &DynamicGraph) {
+        let g = users.graph();
+        let p = hicut(g, |v| users.is_active(v));
+        self.adopt(g, p.subgraphs);
+    }
+
+    /// Adopt an externally computed layout as the new reference.
+    pub fn adopt(&mut self, g: &Graph, subgraphs: Vec<Vec<usize>>) {
+        let n = g.len();
+        self.slots.clear();
+        self.free.clear();
+        self.boundary.clear();
+        self.baseline.clear();
+        self.assignment = vec![NONE; n];
+        self.pos_in_slot = vec![0; n];
+        self.covered = 0;
+        for sub in subgraphs {
+            if sub.is_empty() {
+                continue;
+            }
+            let s = self.alloc_slot();
+            for v in sub {
+                self.assign(v, s);
+            }
+        }
+        self.recount(g);
+        self.baseline.copy_from_slice(&self.boundary);
+        self.monitor.set_reference(self.cut);
+        self.full_recuts += 1;
+    }
+
+    /// Repair the layout after one churn step described by `deltas`
+    /// (the drained journal; `users` is the post-step graph).
+    pub fn apply(&mut self, users: &DynamicGraph, deltas: &[GraphDelta]) -> RepairStats {
+        let g = users.graph();
+        assert_eq!(
+            self.assignment.len(),
+            g.len(),
+            "partitioner was built for a different scenario capacity"
+        );
+        self.steps += 1;
+        let mut stats = RepairStats { deltas: deltas.len(), ..RepairStats::default() };
+
+        // 1. Replay the journal: exact counter maintenance.
+        let mut pending: Vec<usize> = Vec::new();
+        let mut touched = Touched::new(g.len());
+        for delta in deltas {
+            match delta {
+                GraphDelta::Moved { .. } => {}
+                GraphDelta::Joined { user, .. } => pending.push(*user),
+                GraphDelta::Left { user, neighbors } => {
+                    if let Some(i) = pending.iter().position(|&p| p == *user) {
+                        pending.swap_remove(i);
+                    }
+                    for &nb in neighbors {
+                        touched.mark(nb as usize);
+                    }
+                    self.unassign(*user, neighbors);
+                    stats.left += 1;
+                }
+                GraphDelta::Rewired { a, b, added } => {
+                    self.on_edge(*a, *b, *added);
+                    touched.mark(*a);
+                    touched.mark(*b);
+                }
+            }
+        }
+
+        // 2. Attach arrivals (their edges are live in `g` by now).
+        // One scratch tally map serves every attach/refine call in the
+        // batch — per-vertex map allocations would dominate the repair
+        // cost at scale.
+        let mut scratch: HashMap<usize, usize> = HashMap::new();
+        for &u in &pending {
+            if !users.is_active(u) || self.assignment[u] != NONE {
+                continue;
+            }
+            self.attach(u, g, &mut scratch);
+            touched.mark(u);
+            stats.joined += 1;
+        }
+
+        // 3. Greedy boundary refinement over delta-touched vertices.
+        stats.refine_moves = self.refine(g, touched.list(), &mut scratch);
+
+        // 4. Local re-cut of dirty subgraphs + their cut-edge neighbors.
+        self.local_repair(users, &mut stats);
+
+        // 5. Quality backstop: full HiCut when drift exceeds the bound.
+        if self.monitor.exceeded(self.cut) {
+            self.full_recut(users);
+            stats.full_recut = true;
+        }
+        stats.cut_edges = self.cut;
+        stats.reference_cut = self.monitor.reference();
+        stats
+    }
+
+    // -- accessors ----------------------------------------------------------
+
+    /// Materialize the live layout (compacted, creation order).
+    pub fn partition(&self) -> Partition {
+        Partition {
+            subgraphs: self.slots.iter().filter(|s| !s.is_empty()).cloned().collect(),
+        }
+    }
+
+    /// Live inter-subgraph association count.
+    pub fn cut_edges_now(&self) -> usize {
+        self.cut
+    }
+
+    /// Assigned (alive) vertex count.
+    pub fn covered(&self) -> usize {
+        self.covered
+    }
+
+    pub fn subgraph_count(&self) -> usize {
+        self.slots.iter().filter(|s| !s.is_empty()).count()
+    }
+
+    /// Slot id of `v` (slot ids are stable between recuts but not
+    /// compact; use [`Self::partition`] for consumer-facing layouts).
+    pub fn slot_of(&self, v: usize) -> Option<usize> {
+        match self.assignment.get(v) {
+            Some(&s) if s != NONE => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn monitor(&self) -> &DriftMonitor {
+        &self.monitor
+    }
+
+    /// Debug/test support: do the incremental counters match a from-
+    /// scratch recount of the current graph?
+    pub fn counters_consistent(&self, g: &Graph) -> bool {
+        let (cut, boundary) = self.count_from_scratch(g);
+        cut == self.cut && boundary == self.boundary
+    }
+
+    /// Debug/test support: is this a disjoint cover of exactly the
+    /// active vertices, with coherent internal indices?
+    pub fn is_valid_cover(&self, users: &DynamicGraph) -> bool {
+        let n = users.capacity();
+        if self.assignment.len() != n {
+            return false;
+        }
+        let mut seen = vec![0usize; n];
+        for (s, slot) in self.slots.iter().enumerate() {
+            for (i, &v) in slot.iter().enumerate() {
+                if self.assignment[v] != s || self.pos_in_slot[v] != i {
+                    return false;
+                }
+                seen[v] += 1;
+            }
+        }
+        (0..n).all(|v| seen[v] == usize::from(users.is_active(v)))
+    }
+
+    // -- delta handlers -----------------------------------------------------
+
+    /// Remove a departed vertex; `neighbors` is its adjacency at
+    /// departure (from the `Left` event).
+    fn unassign(&mut self, v: usize, neighbors: &[u32]) {
+        let s = self.assignment[v];
+        if s == NONE {
+            return;
+        }
+        for &nb in neighbors {
+            let t = self.assignment[nb as usize];
+            if t != NONE && t != s {
+                self.cut -= 1;
+                self.boundary[s] -= 1;
+                self.boundary[t] -= 1;
+            }
+        }
+        self.remove_from_slot(v, s);
+    }
+
+    /// One association change between (possibly unassigned) endpoints.
+    fn on_edge(&mut self, a: usize, b: usize, added: bool) {
+        let (sa, sb) = (self.assignment[a], self.assignment[b]);
+        if sa == NONE || sb == NONE || sa == sb {
+            return;
+        }
+        if added {
+            self.cut += 1;
+            self.boundary[sa] += 1;
+            self.boundary[sb] += 1;
+        } else {
+            self.cut -= 1;
+            self.boundary[sa] -= 1;
+            self.boundary[sb] -= 1;
+        }
+    }
+
+    /// Tally the slots of `v`'s assigned neighbors into `scratch`
+    /// (cleared first).  Returns `(neighbors in home, best other slot,
+    /// its count)`; the winner is deterministic (max count, smallest
+    /// slot id on ties).  `home = NONE` tallies everything as "other".
+    fn neighbor_slots(
+        &self,
+        g: &Graph,
+        v: usize,
+        home: usize,
+        scratch: &mut HashMap<usize, usize>,
+    ) -> (usize, usize, usize) {
+        scratch.clear();
+        let mut here = 0usize;
+        for &nb in g.neighbors(v) {
+            let t = self.assignment[nb as usize];
+            if t == NONE {
+                continue;
+            }
+            if t == home {
+                here += 1;
+            } else {
+                *scratch.entry(t).or_insert(0) += 1;
+            }
+        }
+        let mut best = NONE;
+        let mut best_c = 0usize;
+        for (&t, &c) in scratch.iter() {
+            if c > best_c || (c == best_c && c > 0 && t < best) {
+                best = t;
+                best_c = c;
+            }
+        }
+        (here, best, best_c)
+    }
+
+    /// Attach an arrival to the majority subgraph among its assigned
+    /// neighbors (locally minimizes new cut edges); singleton if none.
+    fn attach(&mut self, v: usize, g: &Graph, scratch: &mut HashMap<usize, usize>) {
+        let (_, best, _) = self.neighbor_slots(g, v, NONE, scratch);
+        let s = if best == NONE { self.alloc_slot() } else { best };
+        self.assign(v, s);
+        for &nb in g.neighbors(v) {
+            let t = self.assignment[nb as usize];
+            if t != NONE && t != s {
+                self.cut += 1;
+                self.boundary[s] += 1;
+                self.boundary[t] += 1;
+            }
+        }
+    }
+
+    // -- refinement ---------------------------------------------------------
+
+    /// Greedy migration sweeps over `touched`: move a vertex to the
+    /// neighboring subgraph holding strictly more of its neighbors
+    /// (classic LDG-style local search on the cut objective; strict
+    /// improvement guarantees termination).
+    fn refine(
+        &mut self,
+        g: &Graph,
+        touched: &[usize],
+        scratch: &mut HashMap<usize, usize>,
+    ) -> usize {
+        if self.cfg.refine_passes == 0 || touched.is_empty() {
+            return 0;
+        }
+        let cap =
+            ((self.covered as f64 * self.cfg.max_subgraph_frac) as usize).max(8);
+        let mut moves = 0;
+        for _ in 0..self.cfg.refine_passes {
+            let mut moved_any = false;
+            for &v in touched {
+                let s = self.assignment[v];
+                if s == NONE {
+                    continue;
+                }
+                let (here, best, best_c) = self.neighbor_slots(g, v, s, scratch);
+                if best != NONE && best_c > here && self.slots[best].len() < cap {
+                    self.migrate(v, s, best, g);
+                    moves += 1;
+                    moved_any = true;
+                }
+            }
+            if !moved_any {
+                break;
+            }
+        }
+        moves
+    }
+
+    fn migrate(&mut self, v: usize, s: usize, t: usize, g: &Graph) {
+        for &nb in g.neighbors(v) {
+            let u = self.assignment[nb as usize];
+            if u == NONE {
+                continue;
+            }
+            if u == s {
+                // Was intra-s, becomes an s↔t cut edge.
+                self.cut += 1;
+                self.boundary[s] += 1;
+                self.boundary[t] += 1;
+            } else if u == t {
+                // Was an s↔t cut edge, becomes intra-t.
+                self.cut -= 1;
+                self.boundary[s] -= 1;
+                self.boundary[t] -= 1;
+            } else {
+                // Cross before and after; v's side moves s → t.
+                self.boundary[s] -= 1;
+                self.boundary[t] += 1;
+            }
+        }
+        self.remove_from_slot(v, s);
+        self.assign(v, t);
+    }
+
+    // -- local region re-cut ------------------------------------------------
+
+    /// Dissolve subgraphs whose boundary degraded past the threshold
+    /// (plus their cut-edge neighbors) and re-cut the region in place.
+    fn local_repair(&mut self, users: &DynamicGraph, stats: &mut RepairStats) {
+        let g = users.graph();
+        let mut dirty: Vec<usize> = Vec::new();
+        for s in 0..self.slots.len() {
+            if self.slots[s].is_empty() {
+                continue;
+            }
+            let base = self.baseline[s];
+            let growth = ((base as f64 * self.cfg.local_growth) as usize)
+                .max(self.cfg.local_slack);
+            if self.boundary[s] > base + growth {
+                dirty.push(s);
+            }
+        }
+        if dirty.is_empty() {
+            return;
+        }
+        // Region = dirty subgraphs + subgraphs one cut edge away.
+        let mut in_region = vec![false; self.slots.len()];
+        let mut region = dirty.clone();
+        for &s in &dirty {
+            in_region[s] = true;
+        }
+        for &s in &dirty {
+            for &v in &self.slots[s] {
+                for &nb in g.neighbors(v) {
+                    let t = self.assignment[nb as usize];
+                    if t != NONE && !in_region[t] {
+                        in_region[t] = true;
+                        region.push(t);
+                    }
+                }
+            }
+        }
+        let region_vertices: usize =
+            region.iter().map(|&s| self.slots[s].len()).sum();
+        if region_vertices as f64 > self.cfg.max_region_frac * self.covered as f64 {
+            // Too big for surgery; the drift monitor decides what's next.
+            return;
+        }
+        stats.local_recut = true;
+        stats.region_subgraphs = region.len();
+        stats.region_vertices = region_vertices;
+
+        let mut verts: Vec<usize> = Vec::with_capacity(region_vertices);
+        for &s in &region {
+            let members = std::mem::take(&mut self.slots[s]);
+            for &v in &members {
+                self.assignment[v] = NONE;
+            }
+            self.covered -= members.len();
+            self.boundary[s] = 0;
+            self.baseline[s] = 0;
+            self.free.push(s);
+            verts.extend(members);
+        }
+        for sub in hicut_region(g, &verts, |v| users.is_active(v)) {
+            let s = self.alloc_slot();
+            for v in sub {
+                self.assign(v, s);
+            }
+        }
+        // Region surgery invalidates the incremental counters: rebuild
+        // them with one adjacency scan (O(N+E), far below a full cut).
+        self.recount(g);
+        self.baseline.copy_from_slice(&self.boundary);
+        self.local_recuts += 1;
+    }
+
+    // -- plumbing -----------------------------------------------------------
+
+    fn alloc_slot(&mut self) -> usize {
+        if let Some(s) = self.free.pop() {
+            debug_assert!(self.slots[s].is_empty());
+            s
+        } else {
+            self.slots.push(Vec::new());
+            self.boundary.push(0);
+            self.baseline.push(0);
+            self.slots.len() - 1
+        }
+    }
+
+    fn assign(&mut self, v: usize, s: usize) {
+        self.assignment[v] = s;
+        self.pos_in_slot[v] = self.slots[s].len();
+        self.slots[s].push(v);
+        self.covered += 1;
+    }
+
+    fn remove_from_slot(&mut self, v: usize, s: usize) {
+        let idx = self.pos_in_slot[v];
+        self.slots[s].swap_remove(idx);
+        if idx < self.slots[s].len() {
+            let moved = self.slots[s][idx];
+            self.pos_in_slot[moved] = idx;
+        }
+        self.assignment[v] = NONE;
+        self.covered -= 1;
+        if self.slots[s].is_empty() {
+            debug_assert_eq!(self.boundary[s], 0, "empty subgraph kept boundary");
+            self.baseline[s] = 0;
+            self.free.push(s);
+        }
+    }
+
+    fn count_from_scratch(&self, g: &Graph) -> (usize, Vec<usize>) {
+        let mut cut = 0usize;
+        let mut boundary = vec![0usize; self.slots.len()];
+        for v in 0..self.assignment.len() {
+            let s = self.assignment[v];
+            if s == NONE {
+                continue;
+            }
+            for &nb in g.neighbors(v) {
+                let nb = nb as usize;
+                if nb <= v {
+                    continue;
+                }
+                let t = self.assignment[nb];
+                if t != NONE && t != s {
+                    cut += 1;
+                    boundary[s] += 1;
+                    boundary[t] += 1;
+                }
+            }
+        }
+        (cut, boundary)
+    }
+
+    fn recount(&mut self, g: &Graph) {
+        let (cut, boundary) = self.count_from_scratch(g);
+        self.cut = cut;
+        self.boundary = boundary;
+    }
+}
+
+/// Dedup-marking visit list for delta-touched vertices.
+struct Touched {
+    mark: Vec<bool>,
+    list: Vec<usize>,
+}
+
+impl Touched {
+    fn new(n: usize) -> Self {
+        Touched { mark: vec![false; n], list: Vec::new() }
+    }
+
+    fn mark(&mut self, v: usize) {
+        if !self.mark[v] {
+            self.mark[v] = true;
+            self.list.push(v);
+        }
+    }
+
+    fn list(&self) -> &[usize] {
+        &self.list
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dynamic::ChurnConfig;
+    use crate::util::rng::Rng;
+
+    fn two_triangles(rng: &mut Rng) -> DynamicGraph {
+        // Two triangles joined by one bridge: HiCut cuts the bridge.
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5), (2, 3)],
+        );
+        DynamicGraph::new(g, vec![1.0; 6], 2000.0, rng)
+    }
+
+    #[test]
+    fn from_users_matches_full_hicut() {
+        let mut rng = Rng::seed_from(1);
+        let users = two_triangles(&mut rng);
+        let inc = IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
+        let fresh = hicut(users.graph(), |v| users.is_active(v));
+        assert_eq!(inc.cut_edges_now(), fresh.cut_edges(users.graph()));
+        assert_eq!(inc.covered(), 6);
+        assert!(inc.is_valid_cover(&users));
+        assert!(inc.counters_consistent(users.graph()));
+        assert_eq!(inc.monitor().reference(), inc.cut_edges_now());
+    }
+
+    #[test]
+    fn left_and_joined_deltas_keep_counters_exact() {
+        let mut rng = Rng::seed_from(2);
+        let mut users = two_triangles(&mut rng);
+        users.record_deltas(true);
+        let mut inc =
+            IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
+        users.remove_users(&[2]);
+        let added = users.add_users(1, &mut |_, _| crate::graph::dynamic::Pos {
+            x: 0.0,
+            y: 0.0,
+        }, &mut rng);
+        assert_eq!(added, vec![2]);
+        assert!(users.add_association(2, 0));
+        assert!(users.add_association(2, 1));
+        let deltas = users.drain_deltas();
+        let stats = inc.apply(&users, &deltas);
+        assert_eq!((stats.left, stats.joined), (1, 1));
+        assert!(inc.is_valid_cover(&users));
+        assert!(inc.counters_consistent(users.graph()));
+        // 2 rejoined attached to the {0,1} side; the old bridge died
+        // with the departure, so the layout has no cut edges left.
+        assert_eq!(inc.cut_edges_now(), 0);
+    }
+
+    #[test]
+    fn rewired_deltas_update_cut_in_o1() {
+        let mut rng = Rng::seed_from(3);
+        let mut users = two_triangles(&mut rng);
+        users.record_deltas(true);
+        let mut inc =
+            IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
+        let before = inc.cut_edges_now();
+        // A second bridge between the triangles is a new cut edge.
+        assert!(users.add_association(0, 5));
+        let deltas = users.drain_deltas();
+        let stats = inc.apply(&users, &deltas);
+        // Refinement may immediately repair it by migrating a vertex;
+        // either way the counters must be exact.
+        assert!(inc.counters_consistent(users.graph()));
+        assert!(stats.cut_edges <= before + 1);
+    }
+
+    #[test]
+    fn churn_sequence_respects_drift_limit() {
+        let mut rng = Rng::seed_from(4);
+        let g = crate::graph::generate::preferential_attachment(120, 4, &mut rng);
+        let mut users = DynamicGraph::new(g, vec![1.0; 120], 2000.0, &mut rng);
+        users.record_deltas(true);
+        let mut inc =
+            IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
+        let cfg = ChurnConfig::default();
+        for _ in 0..10 {
+            users.step(&cfg, &mut rng);
+            let deltas = users.drain_deltas();
+            let stats = inc.apply(&users, &deltas);
+            assert!(inc.is_valid_cover(&users));
+            assert!(inc.counters_consistent(users.graph()));
+            assert!(
+                stats.cut_edges <= inc.monitor().limit(),
+                "drift limit violated: {} > {}",
+                stats.cut_edges,
+                inc.monitor().limit()
+            );
+        }
+        assert_eq!(inc.steps, 10);
+    }
+}

@@ -1,16 +1,21 @@
-//! Graph-layout optimization: HiCut (the paper's §4 contribution) and
-//! the max-flow min-cut baseline it is compared against in Fig. 6.
+//! Graph-layout optimization: HiCut (the paper's §4 contribution), the
+//! max-flow min-cut baseline it is compared against in Fig. 6, and the
+//! [`incremental`] maintenance subsystem that keeps a HiCut layout
+//! live under §3.2 churn by repairing delta batches instead of
+//! recutting the world.
 //!
-//! Both produce a [`Partition`]: a disjoint cover of the active
+//! All of them produce a [`Partition`]: a disjoint cover of the active
 //! vertices by subgraphs ("weakly associated" in HiCut's case).
 //! [`Partition::cut_edges`] — the number of associations crossing
 //! subgraph boundaries — is the quantity that drives cross-server
 //! message passing during distributed GNN inference (problem P1).
 
 pub mod hicut;
+pub mod incremental;
 pub mod mincut;
 
-pub use hicut::hicut;
+pub use hicut::{hicut, hicut_region};
+pub use incremental::{DriftMonitor, IncrementalConfig, IncrementalPartitioner, RepairStats};
 pub use mincut::{mincut_partition, Dinic};
 
 use crate::graph::Graph;

@@ -21,6 +21,9 @@ pub mod padded;
 pub mod router;
 
 pub use fleet::{Fleet, InferenceReport};
-pub use serve_loop::{serve_loop, serve_run, serve_run_with, Placement, ServeStats};
+pub use serve_loop::{
+    serve_dynamic, serve_dynamic_run, serve_loop, serve_run, serve_run_with,
+    DynamicServeStats, Placement, ServeStats,
+};
 pub use gnn::GnnService;
 pub use padded::PaddedGraph;

@@ -29,6 +29,25 @@ pub struct ServeStats {
     pub accuracy: f64,
 }
 
+/// Summary of a dynamic (churning) serving run.
+#[derive(Clone, Debug)]
+pub struct DynamicServeStats {
+    pub steps: usize,
+    pub requests: usize,
+    /// Mean wall-clock of one churn + layout-maintenance step.
+    pub repair_s_mean: f64,
+    pub layout_steps_per_s: f64,
+    /// Full HiCut runs (drift fallbacks + the initial reference when
+    /// incremental; one per step otherwise).
+    pub full_recuts: usize,
+    pub local_recuts: usize,
+    pub cut_edges_final: usize,
+    pub drift_final: f64,
+    pub accuracy: f64,
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+}
+
 /// Placement policy for the serving run.
 pub enum Placement<'a> {
     /// Greedy nearest-eligible-server placement (no training needed).
@@ -60,6 +79,156 @@ pub fn serve_loop(
     println!("accuracy        {:.3}", stats.accuracy);
     print!("{}", METRICS.report());
     Ok(())
+}
+
+/// Print wrapper for [`serve_dynamic_run`] (the `graphedge serve
+/// --steps N [--incremental]` path).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_dynamic(
+    ctrl: &Controller,
+    dataset: &str,
+    model: &str,
+    n_users: usize,
+    n_assocs: usize,
+    steps: usize,
+    requests_per_step: usize,
+    seed: u64,
+    incremental: bool,
+) -> crate::Result<()> {
+    let stats = serve_dynamic_run(
+        ctrl, dataset, model, n_users, n_assocs, steps, requests_per_step, seed,
+        incremental,
+    )?;
+    let mode = if incremental { "incremental repair" } else { "full recut" };
+    println!("\n== dynamic serving ({dataset}/{model}, {mode}) ==");
+    println!("steps            {}", stats.steps);
+    println!("requests         {}", stats.requests);
+    println!("repair mean      {:.3} ms", stats.repair_s_mean * 1e3);
+    println!("layout steps/s   {:.1}", stats.layout_steps_per_s);
+    println!(
+        "full recuts      {}   local recuts {}",
+        stats.full_recuts, stats.local_recuts
+    );
+    println!(
+        "cut edges        {} (drift {:+.1}%)",
+        stats.cut_edges_final,
+        100.0 * stats.drift_final
+    );
+    println!(
+        "latency p50/p99  {:.3} / {:.3} ms",
+        stats.latency_p50_s * 1e3,
+        stats.latency_p99_s * 1e3
+    );
+    println!("accuracy         {:.3}", stats.accuracy);
+    print!("{}", METRICS.report());
+    Ok(())
+}
+
+/// Online serving over a *churning* scenario: each step applies §3.2
+/// dynamics, repairs the layout from the recorded `GraphDelta` batch
+/// (incremental) or recuts in full, re-offloads greedily, then serves
+/// a burst of requests against the repaired layout.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_dynamic_run(
+    ctrl: &Controller,
+    dataset: &str,
+    model: &str,
+    n_users: usize,
+    n_assocs: usize,
+    steps: usize,
+    requests_per_step: usize,
+    seed: u64,
+    incremental: bool,
+) -> crate::Result<DynamicServeStats> {
+    let mut rng = Rng::seed_from(seed);
+    let mut env = ctrl.make_env(Method::Greedy, dataset, n_users, n_assocs, &mut rng)?;
+    if incremental {
+        env.enable_incremental(Default::default());
+    }
+    let svc = GnnService::load(&ctrl.rt, model, dataset)?;
+    let ds = ctrl.dataset(dataset)?;
+
+    let mut latency = Sample::default();
+    let mut repair = Sample::default();
+    let mut correct = 0usize;
+    let mut classified = 0usize;
+    let mut total_requests = 0usize;
+
+    for _ in 0..steps {
+        let t0 = Instant::now();
+        env.mutate(&mut rng); // churn + delta-driven repair / full recut
+        repair.push(t0.elapsed().as_secs_f64());
+        env.reset();
+        baselines::run_greedy(&mut env);
+
+        // A burst of requests routed onto the repaired layout.
+        let active = env.users.active_users();
+        if active.is_empty() {
+            continue;
+        }
+        let mut per_server: Vec<Vec<usize>> = vec![Vec::new(); env.net.len()];
+        for _ in 0..requests_per_step {
+            let user = active[rng.below(active.len())];
+            let server = env.offload.server[user];
+            if server < per_server.len() {
+                per_server[server].push(user);
+                total_requests += 1;
+            }
+        }
+        let burst_start = Instant::now();
+        for batch in per_server.into_iter().filter(|b| !b.is_empty()) {
+            // Batch + 2-hop halo, padded (same shape as the static loop).
+            let mut verts = env.users.graph().k_hop(&batch, 2);
+            {
+                let users = &env.users;
+                verts.retain(|&v| users.is_active(v));
+            }
+            if verts.len() > svc.n_max {
+                verts.truncate(svc.n_max);
+            }
+            let padded = PaddedGraph::build(
+                env.users.graph(),
+                &env.scenario.users,
+                ds,
+                &verts,
+                svc.n_max,
+                svc.feat_pad,
+            );
+            let classes = svc.classify(&padded)?;
+            let done_s = burst_start.elapsed().as_secs_f64();
+            let in_batch: std::collections::HashSet<usize> =
+                batch.iter().copied().collect();
+            for _ in &batch {
+                latency.push(done_s);
+            }
+            for (row, &v) in padded.vertices.iter().enumerate() {
+                if in_batch.contains(&v) {
+                    classified += 1;
+                    let label = ds.labels[env.scenario.users[v] as usize] as usize;
+                    if classes[row] == label {
+                        correct += 1;
+                    }
+                }
+            }
+            METRICS.inc("serve.dynamic.batches");
+        }
+    }
+
+    let (full_recuts, local_recuts, drift_final, cut_edges_final) =
+        env.layout_maintenance_stats(steps);
+    Ok(DynamicServeStats {
+        steps,
+        requests: total_requests,
+        repair_s_mean: repair.mean(),
+        layout_steps_per_s: 1.0 / repair.mean().max(1e-12),
+        full_recuts,
+        local_recuts,
+        cut_edges_final,
+        drift_final,
+        accuracy: if classified == 0 { 0.0 } else { correct as f64 / classified as f64 },
+        latency_p50_s: latency.percentile(50.0),
+        latency_p99_s: latency.percentile(99.0),
+    })
 }
 
 /// The loop itself (separated for tests/examples); greedy placement.

@@ -7,6 +7,7 @@ use graphedge::graph::Graph;
 use graphedge::net::cost::{CostModel, Offload};
 use graphedge::net::topology::{EdgeNetwork, UserLinks};
 use graphedge::net::SystemParams;
+use graphedge::partition::incremental::{IncrementalConfig, IncrementalPartitioner};
 use graphedge::partition::{hicut, mincut_partition, Partition};
 use graphedge::util::proptest::check_seeds;
 use graphedge::util::rng::Rng;
@@ -159,6 +160,99 @@ fn hicut_respects_churn_masks() {
         let covered: usize = p.subgraphs.iter().map(|s| s.len()).sum();
         covered == users.active_count()
             && p.subgraphs.iter().flatten().all(|&v| users.is_active(v))
+    });
+}
+
+/// A churning DynamicGraph with delta recording on, plus the
+/// incremental partitioner tracking it.
+fn churning(n: usize, deg: usize, rng: &mut Rng) -> (DynamicGraph, IncrementalPartitioner) {
+    let g = preferential_attachment(n, deg, rng);
+    let mut users = DynamicGraph::new(g, vec![1.0; n], 2000.0, rng);
+    users.record_deltas(true);
+    let inc = IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
+    (users, inc)
+}
+
+#[test]
+fn incremental_repair_keeps_partition_valid_under_any_delta_sequence() {
+    // The tentpole invariants: after every delta batch each alive
+    // vertex sits in exactly one subgraph, no dead vertex is assigned,
+    // the incremental counters equal a from-scratch recount, and the
+    // cut never exceeds the drift monitor's limit.
+    check_seeds(12, |rng| {
+        let n = rng.range(20, 120);
+        let (mut users, mut inc) = churning(n, 4, rng);
+        let cfg = ChurnConfig::default();
+        for _ in 0..8 {
+            users.step(&cfg, rng);
+            let deltas = users.drain_deltas();
+            inc.apply(&users, &deltas);
+            if !inc.is_valid_cover(&users) {
+                return false;
+            }
+            if !inc.counters_consistent(users.graph()) {
+                return false;
+            }
+            if inc.cut_edges_now() > inc.monitor().limit() {
+                return false;
+            }
+            // The materialized partition agrees with the counters.
+            let p = inc.partition();
+            if p.covered() != users.active_count() {
+                return false;
+            }
+            if p.cut_edges(users.graph()) != inc.cut_edges_now() {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn incremental_full_recut_matches_fresh_hicut() {
+    check_seeds(10, |rng| {
+        let n = rng.range(20, 100);
+        let (mut users, mut inc) = churning(n, 4, rng);
+        let cfg = ChurnConfig::default();
+        for _ in 0..5 {
+            users.step(&cfg, rng);
+            let deltas = users.drain_deltas();
+            inc.apply(&users, &deltas);
+        }
+        inc.full_recut(&users);
+        let fresh = hicut(users.graph(), |v| users.is_active(v));
+        inc.cut_edges_now() == fresh.cut_edges(users.graph())
+            && inc.partition().covered() == fresh.covered()
+            && inc.monitor().reference() == inc.cut_edges_now()
+    });
+}
+
+#[test]
+fn incremental_cut_stays_within_drift_bound_of_a_full_hicut() {
+    // The drift guarantee, stated against full HiCut: the live cut is
+    // within (1 + drift_bound) + slack of the monitor's reference —
+    // itself a full HiCut of a recent graph version — or of the
+    // current graph's fresh cut when that is larger.
+    let cfg = IncrementalConfig::default();
+    let (bound, slack) = (cfg.drift_bound, cfg.drift_slack);
+    check_seeds(8, |rng| {
+        let n = rng.range(150, 400);
+        let (mut users, mut inc) = churning(n, 6, rng);
+        let churn = ChurnConfig::default();
+        for _ in 0..5 {
+            users.step(&churn, rng);
+            let deltas = users.drain_deltas();
+            inc.apply(&users, &deltas);
+            let fresh = hicut(users.graph(), |v| users.is_active(v))
+                .cut_edges(users.graph());
+            let anchor = fresh.max(inc.monitor().reference());
+            let limit = (anchor as f64 * (1.0 + bound)) as usize + slack;
+            if inc.cut_edges_now() > limit {
+                return false;
+            }
+        }
+        true
     });
 }
 

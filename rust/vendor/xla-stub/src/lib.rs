@@ -1,0 +1,207 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! Mirrors exactly the API surface `graphedge` uses — [`PjRtClient`],
+//! [`PjRtLoadedExecutable`], [`Literal`], [`HloModuleProto`],
+//! [`XlaComputation`] — so the crate compiles and all pure-Rust layers
+//! (graph, partition, cost model, DRL environment, benches) run
+//! without `libxla_extension`.  Host-side literal plumbing
+//! (construction, reshape, readback) is real; anything that would
+//! enter PJRT (parsing HLO, compiling, executing) returns [`Error`]
+//! with a pointer at the real dependency.
+//!
+//! To execute the AOT artifacts, swap the `xla` path dependency in
+//! `rust/Cargo.toml` for a checkout of
+//! `github.com/LaurentMazare/xla-rs` (with `XLA_EXTENSION_DIR` set).
+
+use std::path::Path;
+
+/// Error type matching xla-rs's role in `?` chains (`anyhow`-compatible).
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn stub(what: &str) -> Self {
+        Error {
+            msg: format!(
+                "xla stub: {what} is unavailable in the vendored no-op build; \
+                 point rust/Cargo.toml's `xla` dependency at a real xla-rs \
+                 checkout to execute AOT artifacts"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Dense f32 host literal (the only dtype the artifacts bind).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// Element types readable out of a [`Literal`].
+pub trait NativeElem: Sized {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeElem for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// Array shape of a literal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: vec![v], dims: Vec::new() }
+    }
+
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.data.len() {
+            return Err(Error {
+                msg: format!(
+                    "reshape {:?} -> {dims:?}: element count mismatch",
+                    self.dims
+                ),
+            });
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeElem>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Stub literals are never tuples (tuples only come out of
+    /// `execute`, which errors first).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client.  Construction succeeds so manifest/dataset-only flows
+/// (no executable launches) keep working; `compile` errors.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::scalar(7.0).to_vec::<f32>().unwrap(), vec![7.0]);
+    }
+
+    #[test]
+    fn pjrt_entry_points_error_descriptively() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 0);
+        let comp = XlaComputation { _private: () };
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("xla stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
