@@ -86,7 +86,7 @@ fn main() -> graphedge::Result<()> {
     match graphedge::coordinator::Controller::new(graphedge::net::SystemParams::default()) {
         Ok(ctrl) => {
             graphedge::serving::serve_dynamic(
-                &ctrl, "cora", "gcn", 300, 1800, 8, 40, 5, true,
+                &ctrl, "cora", "gcn", 300, 1800, 8, 40, 5, true, 2,
             )?;
         }
         Err(e) => {

@@ -12,13 +12,14 @@
 //! the ISSUE acceptance gate: repair ≥ 5× faster than a full recut
 //! with the mean cut-edge ratio within 1.10 of the fresh full cut.
 
-use std::fmt::Write as _;
+use std::collections::BTreeMap;
 
-use graphedge::bench::{fmt_secs, Table};
+use graphedge::bench::{fmt_secs, write_bench_section, Table};
 use graphedge::graph::dynamic::{ChurnConfig, DynamicGraph};
 use graphedge::graph::generate::preferential_attachment;
 use graphedge::partition::hicut;
 use graphedge::partition::incremental::{IncrementalConfig, IncrementalPartitioner};
+use graphedge::util::json::Value;
 use graphedge::util::rng::Rng;
 
 struct Run {
@@ -107,53 +108,61 @@ fn main() {
         if pass { "PASS" } else { "FAIL" },
     );
 
-    // Perf-trajectory file for future PRs (repo root when running from
-    // the crate directory, else the current directory).
-    let mut json = String::new();
-    let _ = writeln!(json, "{{");
-    let _ = writeln!(json, "  \"bench\": \"partition_incremental\",");
-    let _ = writeln!(
-        json,
-        "  \"_note\": \"Regenerate with `cargo bench --bench \
-         partition_incremental` (the bench overwrites this file).\","
-    );
-    let _ = writeln!(json, "  \"n_users\": {n},");
-    let _ = writeln!(json, "  \"mean_degree\": {mean_deg},");
-    let _ = writeln!(json, "  \"steps\": {steps},");
-    // Keep the acceptance thresholds in the file itself so future PRs
-    // can gate against them without digging through bench source.
-    let _ = writeln!(json, "  \"targets\": {{");
-    let _ = writeln!(json, "    \"paper_default_churn\": 0.2,");
-    let _ = writeln!(json, "    \"min_speedup_vs_full_recut\": 5.0,");
-    let _ = writeln!(json, "    \"max_cut_ratio_vs_fresh_full_cut\": 1.1");
-    let _ = writeln!(json, "  }},");
-    let _ = writeln!(json, "  \"runs\": [");
-    for (i, r) in runs.iter().enumerate() {
-        let comma = if i + 1 < runs.len() { "," } else { "" };
-        let _ = writeln!(
-            json,
-            "    {{\"churn\": {:.2}, \"repair_step_s\": {:.6e}, \
-             \"full_step_s\": {:.6e}, \"speedup\": {:.2}, \
-             \"cut_ratio_mean\": {:.4}, \"full_fallbacks\": {}, \
-             \"local_recuts\": {}}}{comma}",
-            r.churn,
-            r.inc_step_s,
-            r.full_step_s,
-            r.speedup,
-            r.cut_ratio_mean,
-            r.full_fallbacks,
-            r.local_recuts,
-        );
-    }
-    let _ = writeln!(json, "  ]");
-    let _ = writeln!(json, "}}");
-    let path = if std::path::Path::new("../BENCH_partition.json").exists() {
-        "../BENCH_partition.json"
-    } else {
-        "BENCH_partition.json"
+    // Perf-trajectory section for future PRs, merged into the shared
+    // partition results file (the `partition_parallel` bench owns a
+    // sibling section).
+    let obj = |pairs: Vec<(&str, Value)>| {
+        Value::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect::<BTreeMap<_, _>>(),
+        )
     };
-    match std::fs::write(path, json) {
-        Ok(()) => println!("[wrote {path}]"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
+    let section = obj(vec![
+        (
+            "_note",
+            Value::Str(
+                "Regenerate with `cargo bench --bench partition_incremental` \
+                 (the bench rewrites this section)."
+                    .into(),
+            ),
+        ),
+        ("n_users", Value::Num(n as f64)),
+        ("mean_degree", Value::Num(mean_deg as f64)),
+        ("steps", Value::Num(steps as f64)),
+        // Keep the acceptance thresholds in the file itself so future
+        // PRs can gate against them without digging through bench
+        // source.
+        (
+            "targets",
+            obj(vec![
+                ("paper_default_churn", Value::Num(0.2)),
+                ("min_speedup_vs_full_recut", Value::Num(5.0)),
+                ("max_cut_ratio_vs_fresh_full_cut", Value::Num(1.1)),
+            ]),
+        ),
+        (
+            "runs",
+            Value::Arr(
+                runs.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("churn", Value::Num(r.churn)),
+                            ("repair_step_s", Value::Num(r.inc_step_s)),
+                            ("full_step_s", Value::Num(r.full_step_s)),
+                            ("speedup", Value::Num(r.speedup)),
+                            ("cut_ratio_mean", Value::Num(r.cut_ratio_mean)),
+                            ("full_fallbacks", Value::Num(r.full_fallbacks as f64)),
+                            ("local_recuts", Value::Num(r.local_recuts as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match write_bench_section("BENCH_partition.json", "incremental", section) {
+        Ok(path) => println!("[wrote {path}]"),
+        Err(e) => eprintln!("could not write BENCH_partition.json: {e}"),
     }
 }

@@ -1,0 +1,135 @@
+//! §Perf — sequential vs sharded HiCut across worker counts.
+//!
+//! The workload is a fragmented edge-user topology (independent
+//! preferential-attachment communities — geographically separate
+//! clusters, the shape component sharding targets; a single giant
+//! component falls back to the sequential cut by design).  Every
+//! parallel layout is asserted identical to the sequential one before
+//! its timing counts — the shard/merge equivalence of
+//! `partition::parallel` is a hard invariant here, not a benchmark
+//! footnote.
+//!
+//! Emits `bench_results/partition_parallel.csv` and merges a
+//! `"parallel"` section into `BENCH_partition.json` (repo root when
+//! present) next to the incremental bench's section.
+
+use std::collections::BTreeMap;
+
+use graphedge::bench::{fmt_secs, time_reps, write_bench_section, Table};
+use graphedge::graph::generate::preferential_attachment;
+use graphedge::graph::Graph;
+use graphedge::partition::{hicut, parallel_hicut_pool};
+use graphedge::util::json::Value;
+use graphedge::util::rng::Rng;
+use graphedge::util::threadpool::ThreadPool;
+
+/// `blocks` disjoint PA communities of `block_n` users each.
+fn clustered(blocks: usize, block_n: usize, deg: usize, rng: &mut Rng) -> Graph {
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    for b in 0..blocks {
+        let off = (b * block_n) as u32;
+        let g = preferential_attachment(block_n, deg, rng);
+        edges.extend(g.edge_list().into_iter().map(|(u, v)| (u + off, v + off)));
+    }
+    Graph::from_edges(blocks * block_n, &edges)
+}
+
+struct Run {
+    workers: usize,
+    seq_s: f64,
+    par_s: f64,
+    speedup: f64,
+}
+
+fn main() {
+    let full_suite = std::env::var("GRAPHEDGE_BENCH_FULL").is_ok();
+    let (blocks, block_n, reps) = if full_suite { (64, 500, 5) } else { (32, 150, 3) };
+    let deg = 6;
+    let mut rng = Rng::seed_from(0x5AAD);
+    let g = clustered(blocks, block_n, deg, &mut rng);
+    let n = g.len();
+    println!(
+        "sharded HiCut: {blocks} communities x {block_n} users \
+         (|V|={n} |E|={})",
+        g.num_edges()
+    );
+
+    let seq_sample = time_reps(1, reps, || {
+        std::hint::black_box(hicut(&g, &|_| true));
+    });
+    let seq_s = seq_sample.mean();
+    let reference = hicut(&g, &|_| true);
+
+    let mut t = Table::new(
+        "sequential vs sharded HiCut",
+        &["workers", "sequential", "sharded", "speedup", "subgraphs", "cut edges"],
+    );
+    let mut runs = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(workers);
+        let p = parallel_hicut_pool(&g, |_| true, &pool);
+        assert_eq!(
+            p.subgraphs, reference.subgraphs,
+            "sharded layout diverged from sequential at {workers} workers"
+        );
+        let par_sample = time_reps(1, reps, || {
+            std::hint::black_box(parallel_hicut_pool(&g, |_| true, &pool));
+        });
+        let par_s = par_sample.mean();
+        let speedup = seq_s / par_s.max(1e-12);
+        t.row(vec![
+            workers.to_string(),
+            fmt_secs(seq_s),
+            fmt_secs(par_s),
+            format!("{speedup:.2}x"),
+            p.len().to_string(),
+            p.cut_edges(&g).to_string(),
+        ]);
+        runs.push(Run { workers, seq_s, par_s, speedup });
+        assert_eq!(pool.panicked(), 0, "shard jobs must not panic");
+    }
+    t.emit("partition_parallel");
+
+    let obj = |pairs: Vec<(&str, Value)>| {
+        Value::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect::<BTreeMap<_, _>>(),
+        )
+    };
+    let section = obj(vec![
+        (
+            "_note",
+            Value::Str(
+                "Regenerate with `cargo bench --bench partition_parallel` \
+                 (the bench rewrites this section).  Sequential-equivalent \
+                 layouts are asserted before timing."
+                    .into(),
+            ),
+        ),
+        ("n_users", Value::Num(n as f64)),
+        ("communities", Value::Num(blocks as f64)),
+        ("mean_degree", Value::Num(deg as f64)),
+        ("reps", Value::Num(reps as f64)),
+        (
+            "runs",
+            Value::Arr(
+                runs.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("workers", Value::Num(r.workers as f64)),
+                            ("sequential_s", Value::Num(r.seq_s)),
+                            ("sharded_s", Value::Num(r.par_s)),
+                            ("speedup", Value::Num(r.speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match write_bench_section("BENCH_partition.json", "parallel", section) {
+        Ok(path) => println!("[wrote {path}]"),
+        Err(e) => eprintln!("could not write BENCH_partition.json: {e}"),
+    }
+}

@@ -88,6 +88,39 @@ impl Table {
     }
 }
 
+/// Merge `section` under `key` into a shared bench-results JSON file.
+///
+/// Looks for `../<file>` first (the repo root when a bench runs from
+/// the crate directory), then `<file>` in the current directory.  Any
+/// *other* top-level sections a sibling bench has written are
+/// preserved as long as the existing file parses as a JSON object;
+/// a missing or unparseable file starts fresh.  Returns the path
+/// written.
+pub fn write_bench_section(
+    file: &str,
+    key: &str,
+    section: crate::util::json::Value,
+) -> std::io::Result<String> {
+    use crate::util::json::Value;
+    let parent = format!("../{file}");
+    let path = if std::path::Path::new(&parent).exists() {
+        parent
+    } else {
+        file.to_string()
+    };
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| Value::parse(&s).ok())
+        .and_then(|v| match v {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        })
+        .unwrap_or_default();
+    root.insert(key.to_string(), section);
+    std::fs::write(&path, Value::Obj(root).to_json_pretty())?;
+    Ok(path)
+}
+
 /// Format seconds human-readably.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -124,6 +157,28 @@ mod tests {
             std::hint::black_box(1 + 1);
         });
         assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn bench_sections_merge_without_clobbering() {
+        use crate::util::json::Value;
+        use std::collections::BTreeMap;
+        let path = std::env::temp_dir()
+            .join(format!("graphedge_bench_merge_{}.json", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        let mut a = BTreeMap::new();
+        a.insert("x".to_string(), Value::Num(1.0));
+        write_bench_section(&path_s, "alpha", Value::Obj(a)).unwrap();
+        let mut b = BTreeMap::new();
+        b.insert("y".to_string(), Value::Num(2.0));
+        write_bench_section(&path_s, "beta", Value::Obj(b)).unwrap();
+
+        let v = Value::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.path(&["alpha", "x"]).and_then(|x| x.as_f64()), Some(1.0));
+        assert_eq!(v.path(&["beta", "y"]).and_then(|x| x.as_f64()), Some(2.0));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -53,6 +53,8 @@ pub struct ScenarioReport {
 pub struct DynamicReport {
     pub steps: usize,
     pub incremental: bool,
+    /// Layout-maintenance worker threads used (1 = sequential).
+    pub workers: usize,
     /// Wall-clock of churn + layout maintenance across all steps.
     pub layout_s_total: f64,
     pub steps_per_s: f64,
@@ -160,16 +162,20 @@ impl Controller {
     /// Drive `env` through `steps` churn steps — §3.2 dynamics, layout
     /// maintenance (delta-driven repair when `incremental`, full HiCut
     /// otherwise), greedy re-offload, cost evaluation — and summarize.
-    /// This is the coordinator's dynamic-scenario entry point; the
-    /// serving layer builds on the same loop in
-    /// [`crate::serving::serve_dynamic_run`].
+    /// `workers > 1` shards full recuts and independent dirty-region
+    /// repairs across that many threads (`--workers`; the layout is
+    /// identical for any value).  This is the coordinator's
+    /// dynamic-scenario entry point; the serving layer builds on the
+    /// same loop in [`crate::serving::serve_dynamic_run`].
     pub fn run_dynamic(
         &self,
         env: &mut Env,
         steps: usize,
         incremental: bool,
+        workers: usize,
         rng: &mut Rng,
     ) -> crate::Result<DynamicReport> {
+        env.set_workers(workers);
         if incremental && env.incremental.is_none() {
             env.enable_incremental(IncrementalConfig::default());
         } else if !incremental && env.incremental.is_some() {
@@ -193,6 +199,7 @@ impl Controller {
         Ok(DynamicReport {
             steps,
             incremental,
+            workers: env.workers,
             layout_s_total: layout_s,
             steps_per_s: steps as f64 / layout_s.max(1e-12),
             full_recuts,

@@ -37,7 +37,7 @@ use crate::net::cost::{CostModel, GnnProfile, Offload, UNASSIGNED};
 use crate::net::params::SystemParams;
 use crate::net::topology::{EdgeNetwork, UserLinks};
 use crate::partition::incremental::{IncrementalConfig, IncrementalPartitioner, RepairStats};
-use crate::partition::{hicut, Partition};
+use crate::partition::{hicut, parallel_hicut, Partition};
 use crate::util::rng::Rng;
 
 /// Per-agent observation width (must equal drl.py::OBS).
@@ -118,6 +118,12 @@ pub struct Env {
     pub incremental: Option<IncrementalPartitioner>,
     /// Repair telemetry of the last incremental `mutate`.
     pub last_repair: Option<RepairStats>,
+    /// Layout-maintenance worker threads (`--workers`): full recuts run
+    /// through [`crate::partition::parallel`] and the incremental
+    /// partitioner re-cuts independent dirty regions concurrently.
+    /// `1` = everything on the caller's thread; the layout is
+    /// identical for every value.
+    pub workers: usize,
 }
 
 impl Env {
@@ -155,6 +161,7 @@ impl Env {
             overflow: 0,
             incremental: None,
             last_repair: None,
+            workers: 1,
         };
         env.recut();
         env.reset();
@@ -171,7 +178,11 @@ impl Env {
         let partition: Partition = {
             let users = &self.users;
             if self.cfg.use_hicut {
-                hicut(users.graph(), |v| users.is_active(v))
+                if self.workers > 1 {
+                    parallel_hicut(users.graph(), |v| users.is_active(v), self.workers)
+                } else {
+                    hicut(users.graph(), |v| users.is_active(v))
+                }
             } else {
                 // Ablation: each active user its own "subgraph".
                 Partition {
@@ -194,10 +205,32 @@ impl Env {
     /// `use_hicut`; the ablation path keeps singleton subgraphs.
     pub fn enable_incremental(&mut self, cfg: IncrementalConfig) {
         self.users.record_deltas(true);
+        let mut cfg = cfg;
+        if self.workers > 1 && cfg.workers <= 1 {
+            // The env-level knob reaches the repair layer unless the
+            // caller pinned an explicit worker count of its own.
+            cfg.workers = self.workers;
+        }
         let inc = IncrementalPartitioner::from_users(&self.users, cfg);
         let partition = inc.partition();
         self.incremental = Some(inc);
         self.install_partition(&partition);
+    }
+
+    /// Set the layout-maintenance worker count (see [`Env::workers`])
+    /// and propagate it into an already-enabled incremental
+    /// partitioner.  Mirrors [`Env::enable_incremental`]'s rule: an
+    /// explicit parallel request (`workers > 1`) always reaches the
+    /// repair layer, but the sequential default never clobbers a
+    /// worker count the caller pinned in its own
+    /// [`IncrementalConfig`].
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
+        if let Some(inc) = self.incremental.as_mut() {
+            if self.workers > 1 || inc.cfg.workers <= 1 {
+                inc.cfg.workers = self.workers;
+            }
+        }
     }
 
     /// Back to full-recut maintenance: drop the partitioner and stop
@@ -626,6 +659,28 @@ mod tests {
                 env.step(0);
             }
             assert!(env.evaluate().total() > 0.0);
+        }
+    }
+
+    #[test]
+    fn worker_sharded_layout_matches_sequential_layout() {
+        // Same scenario + churn stream, different worker counts: the
+        // installed layouts must be identical step for step (the
+        // partition::parallel equivalence, seen from the env).
+        let mut a = small_env(13);
+        let mut b = small_env(13);
+        b.set_workers(4);
+        b.recut();
+        assert_eq!(a.subgraph_of, b.subgraph_of);
+        assert_eq!(a.order, b.order);
+        let mut rng_a = Rng::seed_from(14);
+        let mut rng_b = Rng::seed_from(14);
+        for _ in 0..3 {
+            a.mutate(&mut rng_a);
+            b.mutate(&mut rng_b);
+            assert_eq!(a.subgraph_of, b.subgraph_of);
+            assert_eq!(a.order, b.order);
+            assert_eq!(a.subgraph_size, b.subgraph_size);
         }
     }
 

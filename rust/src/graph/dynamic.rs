@@ -339,8 +339,17 @@ impl DynamicGraph {
         // on the active count drifts downward over long training runs
         // and silently empties the scenario.  Removals draw from the
         // active set; admissions refill free slots, so the population
-        // mean-reverts to ~capacity.
-        let churn = ((self.capacity() as f64) * cfg.user_change_rate * 0.5) as usize;
+        // mean-reverts to ~capacity.  Rounded with a floor of one so a
+        // nonzero rate still churns small scenarios — plain truncation
+        // froze every population under ~1/(rate·0.5) users (e.g. <10
+        // users at the paper's 20% rate).
+        let churn = if cfg.user_change_rate > 0.0 && self.capacity() > 0 {
+            ((self.capacity() as f64) * cfg.user_change_rate * 0.5)
+                .round()
+                .max(1.0) as usize
+        } else {
+            0
+        };
         if churn > 0 {
             let victims: Vec<usize> = rng
                 .sample_indices(active.len(), churn.min(active.len()))
@@ -599,6 +608,37 @@ mod tests {
             }
             true
         });
+    }
+
+    #[test]
+    fn small_scenarios_still_churn_users() {
+        // Regression: `(capacity * rate * 0.5) as usize` floored to 0
+        // for populations under ~1/(rate·0.5), so a 10-user scenario at
+        // the paper's 20% rate never saw a join or leave.
+        check_seeds(10, |rng| {
+            let mut d = make(10, rng);
+            d.record_deltas(true);
+            let cfg = ChurnConfig::default(); // 20% user churn
+            d.step(&cfg, rng);
+            let deltas = d.drain_deltas();
+            // churn = round(10·0.2·0.5).max(1) = 1: at least one user
+            // must leave (and the freed slot is refilled).
+            deltas.iter().any(|x| matches!(x, GraphDelta::Left { .. }))
+                && deltas.iter().any(|x| matches!(x, GraphDelta::Joined { .. }))
+        });
+    }
+
+    #[test]
+    fn zero_churn_rate_means_no_user_churn() {
+        let mut rng = Rng::seed_from(31);
+        let mut d = make(10, &mut rng);
+        d.record_deltas(true);
+        let cfg = ChurnConfig { user_change_rate: 0.0, ..ChurnConfig::default() };
+        d.step(&cfg, &mut rng);
+        let deltas = d.drain_deltas();
+        assert!(!deltas
+            .iter()
+            .any(|x| matches!(x, GraphDelta::Left { .. } | GraphDelta::Joined { .. })));
     }
 
     #[test]

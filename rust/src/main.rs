@@ -12,8 +12,9 @@ use graphedge::coordinator::Controller;
 use graphedge::drl::{Method, MaddpgConfig, PpoConfig};
 use graphedge::graph::generate::{random_weights, uniform_random};
 use graphedge::net::SystemParams;
-use graphedge::partition::{hicut, mincut_partition};
+use graphedge::partition::{hicut, mincut_partition, parallel_hicut_pool};
 use graphedge::util::cli::{App, CliError, Command};
+use graphedge::util::threadpool::ThreadPool;
 use graphedge::util::config::Config;
 use graphedge::util::metrics::GLOBAL as METRICS;
 use graphedge::util::rng::Rng;
@@ -29,6 +30,7 @@ fn app() -> App {
                 .opt("vertices", "2000", "vertex count")
                 .opt("edges", "20000", "edge count")
                 .opt("servers", "25", "server count for min-cut iterations")
+                .opt("workers", "1", "shard HiCut across N pool workers (0 = auto)")
                 .opt("seed", "7", "rng seed"),
             Command::new("train", "train an offloading policy")
                 .opt("method", "drlgo", "drlgo | ptom | drl-only")
@@ -59,6 +61,7 @@ fn app() -> App {
                 .opt("per-step", "40", "requests per churn step (dynamic mode)")
                 .opt("config", "configs/table2.toml", "config file")
                 .opt("seed", "5", "rng seed")
+                .opt("workers", "1", "layout worker threads, dynamic mode (0 = auto)")
                 .switch("incremental", "delta-driven partition repair (dynamic mode)"),
         ],
     }
@@ -133,6 +136,7 @@ fn cmd_info(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
 fn cmd_partition(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
     let (v, e) = (matches.usize("vertices"), matches.usize("edges"));
     let servers = matches.usize("servers");
+    let workers = matches.workers();
     let mut rng = Rng::seed_from(matches.usize("seed") as u64);
     println!("generating random graph |V|={v} |E|={e} ...");
     let g = uniform_random(v, e, &mut rng);
@@ -157,6 +161,24 @@ fn cmd_partition(matches: &graphedge::util::cli::Matches) -> graphedge::Result<(
         hp.cut_weight(&g, &w).to_string(),
         format!("{:.3}", hp.locality(&g)),
     ]);
+    if workers > 1 {
+        let pool = ThreadPool::new(workers);
+        let t0 = std::time::Instant::now();
+        let pp = parallel_hicut_pool(&g, |_| true, &pool);
+        let t_par = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            pp.subgraphs, hp.subgraphs,
+            "sharded HiCut must match the sequential layout"
+        );
+        t.row(vec![
+            format!("HiCut x{workers}"),
+            fmt_secs(t_par),
+            pp.len().to_string(),
+            pp.cut_edges(&g).to_string(),
+            pp.cut_weight(&g, &w).to_string(),
+            format!("{:.3}", pp.locality(&g)),
+        ]);
+    }
     t.row(vec![
         "min-cut [36]".into(),
         fmt_secs(t_mincut),
@@ -285,6 +307,7 @@ fn cmd_serve(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
             matches.usize("per-step"),
             seed,
             matches.switch("incremental"),
+            matches.workers(),
         );
     }
     let policy = matches.str("policy").to_string();

@@ -51,19 +51,32 @@ pub fn hicut(g: &Graph, alive: impl Fn(usize) -> bool) -> Partition {
 /// [`super::incremental`]: dirty subgraphs plus their cut-edge
 /// neighbors are dissolved into a region and re-cut in place, leaving
 /// the rest of the layout untouched.
+///
+/// Traversal starts are taken in **ascending vertex order**, whatever
+/// order `region` arrives in (duplicates are ignored).  That makes the
+/// result a pure function of the region *set*, which is what lets
+/// [`super::parallel`] and the concurrent dirty-region repair dispatch
+/// regions to workers without the journal/collection order leaking
+/// into the layout.  It also mirrors full [`hicut`], whose outer loop
+/// scans seeds in ascending vertex order — the shard-merge equivalence
+/// proof leans on exactly this property.
 pub fn hicut_region(
     g: &Graph,
     region: &[usize],
     alive: impl Fn(usize) -> bool,
 ) -> Vec<Vec<usize>> {
     let mut assigned = vec![true; g.len()];
+    let mut starts: Vec<usize> = Vec::with_capacity(region.len());
     for &v in region {
-        if alive(v) {
+        // `assigned[v]` doubles as a dedup mark here.
+        if alive(v) && assigned[v] {
             assigned[v] = false;
+            starts.push(v);
         }
     }
+    starts.sort_unstable();
     let mut subgraphs = Vec::new();
-    for &start in region {
+    for &start in &starts {
         if assigned[start] {
             continue;
         }
@@ -317,6 +330,32 @@ mod tests {
         sorted.dedup();
         assert_eq!(sorted.len(), all.len()); // disjoint
         assert_eq!(sorted, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn region_cut_is_independent_of_input_order() {
+        // Same region *set*, different input orders (shuffled, reversed,
+        // with duplicates) → byte-identical subgraph lists.  Required
+        // before regions can be dispatched to pool workers, where the
+        // collection order is an accident of journal replay.
+        check_seeds(40, |rng| {
+            let n = rng.range(6, 90);
+            let e = rng.below((n * (n - 1) / 2).min(3 * n));
+            let g = uniform_random(n, e, rng);
+            let region: Vec<usize> = (0..n).filter(|_| rng.chance(0.6)).collect();
+            let reference = hicut_region(&g, &region, |_| true);
+
+            let mut shuffled = region.clone();
+            rng.shuffle(&mut shuffled);
+            let mut reversed = region.clone();
+            reversed.reverse();
+            let mut with_dups = shuffled.clone();
+            with_dups.extend(region.iter().copied());
+
+            hicut_region(&g, &shuffled, |_| true) == reference
+                && hicut_region(&g, &reversed, |_| true) == reference
+                && hicut_region(&g, &with_dups, |_| true) == reference
+        });
     }
 
     #[test]

@@ -15,9 +15,12 @@
 //!    bounded greedy refinement sweep over delta-touched vertices
 //!    migrates vertices whose cut contribution strictly improves.
 //! 3. Subgraphs whose boundary grew past a threshold since their last
-//!    cut are *locally* re-cut: the dirty subgraphs plus their
-//!    cut-edge neighbors dissolve into one region and
-//!    [`crate::partition::hicut::hicut_region`] re-cuts it in place.
+//!    cut are *locally* re-cut: each dirty subgraph plus its cut-edge
+//!    neighbors dissolves into a region, overlapping regions are
+//!    coalesced, and [`crate::partition::hicut::hicut_region`] re-cuts
+//!    the resulting vertex-disjoint regions in place — concurrently
+//!    across workers when [`IncrementalConfig::workers`] > 1, with a
+//!    layout identical to the sequential order.
 //! 4. A [`DriftMonitor`] compares the live inter-subgraph association
 //!    count against the last full HiCut and triggers a full recut when
 //!    drift exceeds a configurable bound — so quality is never
@@ -55,6 +58,13 @@ pub struct IncrementalConfig {
     /// covered vertices (keeps greedy migration from agglomerating the
     /// layout into one giant subgraph that no edge server could host).
     pub max_subgraph_frac: f64,
+    /// Worker threads for layout surgery: independent (vertex-disjoint)
+    /// dirty regions are re-cut concurrently, and drift-monitor full
+    /// recuts run through [`crate::partition::parallel`].  `1` keeps
+    /// everything on the caller's thread; the repaired layout is
+    /// identical for every value (see the shard/merge equivalence
+    /// argument in `partition::parallel`).
+    pub workers: usize,
 }
 
 impl Default for IncrementalConfig {
@@ -67,6 +77,7 @@ impl Default for IncrementalConfig {
             max_region_frac: 0.2,
             refine_passes: 2,
             max_subgraph_frac: 0.25,
+            workers: 1,
         }
     }
 }

@@ -27,7 +27,9 @@ use super::IncrementalConfig;
 use crate::graph::dynamic::{DynamicGraph, GraphDelta};
 use crate::graph::Graph;
 use crate::partition::hicut::{hicut, hicut_region};
+use crate::partition::parallel::parallel_hicut;
 use crate::partition::Partition;
+use crate::util::threadpool::ThreadPool;
 
 const NONE: usize = usize::MAX;
 
@@ -41,7 +43,11 @@ pub struct RepairStats {
     pub left: usize,
     /// Refinement migrations performed.
     pub refine_moves: usize,
-    /// Local re-cut region, when one ran.
+    /// Local re-cuts, when any ran: independent (vertex-disjoint)
+    /// dirty regions re-cut this batch — concurrently when
+    /// `IncrementalConfig::workers > 1` — plus the totals of dissolved
+    /// subgraphs and vertices across all of them.
+    pub regions: usize,
     pub region_subgraphs: usize,
     pub region_vertices: usize,
     pub local_recut: bool,
@@ -108,10 +114,16 @@ impl IncrementalPartitioner {
         p
     }
 
-    /// Throw incremental state away and re-run the §4 full HiCut.
+    /// Throw incremental state away and re-run the §4 full HiCut —
+    /// sharded across workers when configured (identical layout either
+    /// way; see [`crate::partition::parallel`]).
     pub fn full_recut(&mut self, users: &DynamicGraph) {
         let g = users.graph();
-        let p = hicut(g, |v| users.is_active(v));
+        let p = if self.cfg.workers > 1 {
+            parallel_hicut(g, |v| users.is_active(v), self.cfg.workers)
+        } else {
+            hicut(g, |v| users.is_active(v))
+        };
         self.adopt(g, p.subgraphs);
     }
 
@@ -424,8 +436,19 @@ impl IncrementalPartitioner {
 
     // -- local region re-cut ------------------------------------------------
 
-    /// Dissolve subgraphs whose boundary degraded past the threshold
-    /// (plus their cut-edge neighbors) and re-cut the region in place.
+    /// Dissolve degraded neighborhoods and re-cut them in place.
+    ///
+    /// Every subgraph whose boundary grew past the threshold seeds a
+    /// *region*: the dirty slot plus the slots one cut edge away.
+    /// Regions that share a slot would re-cut overlapping vertex sets,
+    /// so they are coalesced first (union–find over shared slots);
+    /// what remains is a list of vertex-**disjoint** regions whose
+    /// [`hicut_region`] calls cannot interact — they are dispatched to
+    /// scoped workers when `cfg.workers > 1`, and the result is
+    /// identical to the sequential order for any worker count
+    /// (regions are extracted, re-cut and re-slotted in one
+    /// deterministic order; `hicut_region` itself is input-order
+    /// independent).
     fn local_repair(&mut self, users: &DynamicGraph, stats: &mut RepairStats) {
         let g = users.graph();
         let mut dirty: Vec<usize> = Vec::new();
@@ -443,56 +466,109 @@ impl IncrementalPartitioner {
         if dirty.is_empty() {
             return;
         }
-        // Region = dirty subgraphs + subgraphs one cut edge away.
+        // Region of each dirty slot: itself + cut-edge neighbor slots.
         let mut in_region = vec![false; self.slots.len()];
-        let mut region = dirty.clone();
+        let mut regions: Vec<Vec<usize>> = Vec::with_capacity(dirty.len());
         for &s in &dirty {
+            let mut slots = vec![s];
             in_region[s] = true;
-        }
-        for &s in &dirty {
             for &v in &self.slots[s] {
                 for &nb in g.neighbors(v) {
                     let t = self.assignment[nb as usize];
                     if t != NONE && !in_region[t] {
                         in_region[t] = true;
-                        region.push(t);
+                        slots.push(t);
                     }
                 }
             }
+            for &t in &slots {
+                in_region[t] = false; // reset the scratch marks
+            }
+            regions.push(slots);
         }
-        let region_vertices: usize =
-            region.iter().map(|&s| self.slots[s].len()).sum();
-        if region_vertices as f64 > self.cfg.max_region_frac * self.covered as f64 {
-            // Too big for surgery; the drift monitor decides what's next.
+        // Coalesce regions that share any slot: their vertex sets
+        // overlap, so their re-cuts are not independent.
+        let mut sets = DisjointSets::new(regions.len());
+        let mut owner = vec![NONE; self.slots.len()];
+        for (i, slots) in regions.iter().enumerate() {
+            for &t in slots {
+                if owner[t] == NONE {
+                    owner[t] = i;
+                } else {
+                    sets.union(i, owner[t]);
+                }
+            }
+        }
+        let mut grouped: Vec<Vec<usize>> = vec![Vec::new(); regions.len()];
+        for (i, slots) in regions.into_iter().enumerate() {
+            grouped[sets.find(i)].extend(slots);
+        }
+        // Disjoint, deterministically ordered regions (slot sets).
+        let threshold = self.cfg.max_region_frac * self.covered as f64;
+        let mut group_verts: Vec<Vec<usize>> = Vec::new();
+        for slots in &mut grouped {
+            if slots.is_empty() {
+                continue;
+            }
+            slots.sort_unstable();
+            slots.dedup();
+            let n_verts: usize = slots.iter().map(|&s| self.slots[s].len()).sum();
+            if n_verts as f64 > threshold {
+                // Too big for surgery; the drift monitor decides what's
+                // next for this neighborhood.
+                continue;
+            }
+            stats.region_subgraphs += slots.len();
+            stats.region_vertices += n_verts;
+            // Extract the region's vertices and free its slots.
+            let mut verts: Vec<usize> = Vec::with_capacity(n_verts);
+            for &s in slots.iter() {
+                let members = std::mem::take(&mut self.slots[s]);
+                for &v in &members {
+                    self.assignment[v] = NONE;
+                }
+                self.covered -= members.len();
+                self.boundary[s] = 0;
+                self.baseline[s] = 0;
+                self.free.push(s);
+                verts.extend(members);
+            }
+            group_verts.push(verts);
+        }
+        if group_verts.is_empty() {
             return;
         }
         stats.local_recut = true;
-        stats.region_subgraphs = region.len();
-        stats.region_vertices = region_vertices;
+        stats.regions = group_verts.len();
 
-        let mut verts: Vec<usize> = Vec::with_capacity(region_vertices);
-        for &s in &region {
-            let members = std::mem::take(&mut self.slots[s]);
-            for &v in &members {
-                self.assignment[v] = NONE;
-            }
-            self.covered -= members.len();
-            self.boundary[s] = 0;
-            self.baseline[s] = 0;
-            self.free.push(s);
-            verts.extend(members);
-        }
-        for sub in hicut_region(g, &verts, |v| users.is_active(v)) {
-            let s = self.alloc_slot();
-            for v in sub {
-                self.assign(v, s);
+        // Re-cut every region — concurrently when configured.  The
+        // regions' vertex sets are disjoint and `hicut_region` treats
+        // everything outside its region as assigned, so the calls are
+        // independent; `map_scoped` returns results in input order.
+        let workers = self.cfg.workers.min(group_verts.len());
+        let recut: Vec<Vec<Vec<usize>>> = if workers > 1 {
+            ThreadPool::map_scoped(&group_verts, workers, |verts| {
+                hicut_region(g, verts, |v| users.is_active(v))
+            })
+        } else {
+            group_verts
+                .iter()
+                .map(|verts| hicut_region(g, verts, |v| users.is_active(v)))
+                .collect()
+        };
+        for subs in recut {
+            for sub in subs {
+                let s = self.alloc_slot();
+                for v in sub {
+                    self.assign(v, s);
+                }
             }
         }
         // Region surgery invalidates the incremental counters: rebuild
         // them with one adjacency scan (O(N+E), far below a full cut).
         self.recount(g);
         self.baseline.copy_from_slice(&self.boundary);
-        self.local_recuts += 1;
+        self.local_recuts += stats.regions;
     }
 
     // -- plumbing -----------------------------------------------------------
@@ -560,6 +636,33 @@ impl IncrementalPartitioner {
         let (cut, boundary) = self.count_from_scratch(g);
         self.cut = cut;
         self.boundary = boundary;
+    }
+}
+
+/// Minimal union–find for coalescing overlapping repair regions.
+/// Roots are the smallest member index, so group order (and therefore
+/// the slot-allocation order after re-cuts) is deterministic.
+struct DisjointSets(Vec<usize>);
+
+impl DisjointSets {
+    fn new(n: usize) -> Self {
+        DisjointSets((0..n).collect())
+    }
+
+    fn find(&mut self, mut i: usize) -> usize {
+        while self.0[i] != i {
+            self.0[i] = self.0[self.0[i]]; // path halving
+            i = self.0[i];
+        }
+        i
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+            self.0[hi] = lo;
+        }
     }
 }
 
@@ -655,6 +758,74 @@ mod tests {
         // either way the counters must be exact.
         assert!(inc.counters_consistent(users.graph()));
         assert!(stats.cut_edges <= before + 1);
+    }
+
+    #[test]
+    fn disjoint_sets_coalesce_deterministically() {
+        let mut s = DisjointSets::new(5);
+        s.union(3, 1);
+        s.union(4, 3);
+        assert_eq!(s.find(4), 1);
+        assert_eq!(s.find(3), 1);
+        assert_eq!(s.find(0), 0);
+        s.union(0, 4);
+        assert_eq!(s.find(1), 0); // smallest member is always the root
+        assert_eq!(s.find(2), 2);
+    }
+
+    /// Disconnected "edge cluster" scenario: many small communities, so
+    /// dirty regions stay small and plural.
+    fn clustered_users(blocks: usize, block_n: usize, rng: &mut Rng) -> DynamicGraph {
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for b in 0..blocks {
+            let off = (b * block_n) as u32;
+            let g = crate::graph::generate::preferential_attachment(block_n, 3, rng);
+            edges.extend(g.edge_list().into_iter().map(|(u, v)| (u + off, v + off)));
+        }
+        let n = blocks * block_n;
+        let g = Graph::from_edges(n, &edges);
+        DynamicGraph::new(g, vec![1.0; n], 2000.0, rng)
+    }
+
+    #[test]
+    fn parallel_region_repair_is_worker_count_invariant() {
+        // Identical churn stream into a sequential (workers = 1) and a
+        // concurrent (workers = 4) partitioner: the repaired layouts
+        // must match slot for slot at every step.  Aggressive local
+        // thresholds + a disabled drift fallback force the dirty-region
+        // machinery to carry the whole repair.
+        let mut rng = Rng::seed_from(77);
+        let mut users = clustered_users(16, 20, &mut rng);
+        users.record_deltas(true);
+        let aggressive = IncrementalConfig {
+            local_growth: 0.0,
+            local_slack: 0,
+            max_region_frac: 0.5,
+            drift_bound: 1e9, // local repair only — no full-recut resets
+            ..IncrementalConfig::default()
+        };
+        let mut seq = IncrementalPartitioner::from_users(&users, aggressive.clone());
+        let mut par = IncrementalPartitioner::from_users(&users, IncrementalConfig {
+            workers: 4,
+            ..aggressive
+        });
+        let cfg = ChurnConfig::default();
+        for _ in 0..12 {
+            users.step(&cfg, &mut rng);
+            let deltas = users.drain_deltas();
+            let s = seq.apply(&users, &deltas);
+            let p = par.apply(&users, &deltas);
+            assert_eq!(seq.partition().subgraphs, par.partition().subgraphs);
+            assert_eq!(s.cut_edges, p.cut_edges);
+            assert_eq!(s.regions, p.regions);
+            assert!(par.is_valid_cover(&users));
+            assert!(par.counters_consistent(users.graph()));
+        }
+        assert_eq!(seq.local_recuts, par.local_recuts);
+        assert!(
+            par.local_recuts > 0,
+            "churn never exercised the region re-cut path"
+        );
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Graph-layout optimization: HiCut (the paper's §4 contribution), the
-//! max-flow min-cut baseline it is compared against in Fig. 6, and the
+//! max-flow min-cut baseline it is compared against in Fig. 6, the
 //! [`incremental`] maintenance subsystem that keeps a HiCut layout
 //! live under §3.2 churn by repairing delta batches instead of
-//! recutting the world.
+//! recutting the world, and the [`parallel`] sharding layer that
+//! spreads full cuts (and independent dirty-region repairs) across
+//! worker threads with a provably sequential-equivalent merge.
 //!
 //! All of them produce a [`Partition`]: a disjoint cover of the active
 //! vertices by subgraphs ("weakly associated" in HiCut's case).
@@ -13,10 +15,12 @@
 pub mod hicut;
 pub mod incremental;
 pub mod mincut;
+pub mod parallel;
 
 pub use hicut::{hicut, hicut_region};
 pub use incremental::{DriftMonitor, IncrementalConfig, IncrementalPartitioner, RepairStats};
 pub use mincut::{mincut_partition, Dinic};
+pub use parallel::{parallel_hicut, parallel_hicut_pool};
 
 use crate::graph::Graph;
 

@@ -94,13 +94,14 @@ pub fn serve_dynamic(
     requests_per_step: usize,
     seed: u64,
     incremental: bool,
+    workers: usize,
 ) -> crate::Result<()> {
     let stats = serve_dynamic_run(
         ctrl, dataset, model, n_users, n_assocs, steps, requests_per_step, seed,
-        incremental,
+        incremental, workers,
     )?;
     let mode = if incremental { "incremental repair" } else { "full recut" };
-    println!("\n== dynamic serving ({dataset}/{model}, {mode}) ==");
+    println!("\n== dynamic serving ({dataset}/{model}, {mode}, {workers} worker(s)) ==");
     println!("steps            {}", stats.steps);
     println!("requests         {}", stats.requests);
     println!("repair mean      {:.3} ms", stats.repair_s_mean * 1e3);
@@ -127,7 +128,9 @@ pub fn serve_dynamic(
 /// Online serving over a *churning* scenario: each step applies §3.2
 /// dynamics, repairs the layout from the recorded `GraphDelta` batch
 /// (incremental) or recuts in full, re-offloads greedily, then serves
-/// a burst of requests against the repaired layout.
+/// a burst of requests against the repaired layout.  `workers > 1`
+/// shards full recuts and independent dirty-region repairs across that
+/// many threads (same layout for any value).
 #[allow(clippy::too_many_arguments)]
 pub fn serve_dynamic_run(
     ctrl: &Controller,
@@ -139,9 +142,11 @@ pub fn serve_dynamic_run(
     requests_per_step: usize,
     seed: u64,
     incremental: bool,
+    workers: usize,
 ) -> crate::Result<DynamicServeStats> {
     let mut rng = Rng::seed_from(seed);
     let mut env = ctrl.make_env(Method::Greedy, dataset, n_users, n_assocs, &mut rng)?;
+    env.set_workers(workers);
     if incremental {
         env.enable_incremental(Default::default());
     }

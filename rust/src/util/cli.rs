@@ -119,6 +119,19 @@ impl Matches {
     pub fn switch(&self, name: &str) -> bool {
         self.switches.get(name).copied().unwrap_or(false)
     }
+
+    /// Resolve a `--workers N` knob: `0` means "size to the machine"
+    /// (available parallelism, capped at 16 like
+    /// `ThreadPool::default_size`), anything else is taken literally.
+    /// Callers treat `1` as the sequential path.
+    pub fn workers(&self) -> usize {
+        match self.usize("workers") {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get().min(16))
+                .unwrap_or(4),
+            n => n,
+        }
+    }
 }
 
 impl App {
@@ -305,6 +318,23 @@ mod tests {
             .unwrap();
         assert_eq!(m.values("model"), &["x".to_string(), "y".to_string()]);
         assert_eq!(m.str("model"), "y");
+    }
+
+    #[test]
+    fn workers_knob_resolves_zero_to_machine_size() {
+        let app = App {
+            name: "graphedge",
+            about: "test",
+            commands: vec![Command::new("serve", "run")
+                .opt("workers", "1", "layout worker threads (0 = auto)")],
+        };
+        let m = app.parse(&argv(&["serve"])).unwrap();
+        assert_eq!(m.workers(), 1);
+        let m = app.parse(&argv(&["serve", "--workers", "6"])).unwrap();
+        assert_eq!(m.workers(), 6);
+        let m = app.parse(&argv(&["serve", "--workers", "0"])).unwrap();
+        let auto = m.workers();
+        assert!((1..=16).contains(&auto), "auto workers out of range: {auto}");
     }
 
     #[test]

@@ -96,6 +96,103 @@ impl Value {
             .map(|v| v.as_usize())
             .collect::<Option<Vec<_>>>()
     }
+
+    // -- serialization -----------------------------------------------------
+
+    /// Pretty serializer (2-space indent): the inverse of
+    /// [`Value::parse`] up to whitespace and float formatting.  Lets
+    /// sibling benches merge their sections into one shared results
+    /// file (`BENCH_partition.json`) without clobbering each other.
+    /// Non-finite numbers are not representable in JSON and serialize
+    /// as `null`.
+    pub fn to_json_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_pretty(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_pretty(&self, out: &mut String, depth: usize) {
+        use std::fmt::Write as _;
+        fn pad(out: &mut String, d: usize) {
+            for _ in 0..d {
+                out.push_str("  ");
+            }
+        }
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Value::Num(n) if !n.is_finite() => out.push_str("null"),
+            Value::Num(n) => {
+                // Integral values print without a fraction so counters
+                // stay readable; f64 `Display` never emits exponent
+                // notation, so both arms are valid JSON numbers.
+                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Value::Str(s) => escape_json_str(out, s),
+            Value::Arr(a) => {
+                if a.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (i, v) in a.iter().enumerate() {
+                    pad(out, depth + 1);
+                    v.write_pretty(out, depth + 1);
+                    if i + 1 < a.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, depth);
+                out.push(']');
+            }
+            Value::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    pad(out, depth + 1);
+                    escape_json_str(out, k);
+                    out.push_str(": ");
+                    v.write_pretty(out, depth + 1);
+                    if i + 1 < m.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, depth);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn escape_json_str(out: &mut String, s: &str) {
+    use std::fmt::Write as _;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 impl fmt::Display for Value {
@@ -396,5 +493,36 @@ mod tests {
     fn unicode_passthrough() {
         let v = Value::parse("\"héllo → 世界\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo → 世界"));
+    }
+
+    #[test]
+    fn pretty_serializer_roundtrips() {
+        let src = r#"{
+          "bench": "partition_parallel",
+          "note": "line\nbreak \"quoted\" \\ tab\t",
+          "n": 2000,
+          "rate": 0.125,
+          "tiny": 0.0000012,
+          "flag": true,
+          "none": null,
+          "runs": [{"workers": 4, "speedup": 3.5}, {"workers": 8}],
+          "empty_arr": [],
+          "empty_obj": {},
+          "uni": "héllo → 世界"
+        }"#;
+        let v = Value::parse(src).unwrap();
+        let text = v.to_json_pretty();
+        assert_eq!(Value::parse(&text).unwrap(), v);
+        // Integral floats print as integers, fractions keep the point.
+        assert!(text.contains("\"n\": 2000"));
+        assert!(text.contains("\"rate\": 0.125"));
+    }
+
+    #[test]
+    fn pretty_serializer_escapes_control_chars() {
+        let v = Value::Str("a\u{1}b".into());
+        let text = v.to_json_pretty();
+        assert!(text.contains("\\u0001"));
+        assert_eq!(Value::parse(text.trim()).unwrap(), v);
     }
 }

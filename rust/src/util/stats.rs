@@ -54,14 +54,25 @@ impl Welford {
 }
 
 /// Exact percentile over a stored sample (benches are small enough).
+///
+/// Percentile queries sort lazily into a cached view that `push`
+/// invalidates, so report loops calling `median`/`percentile` per
+/// metric pay one sort per batch instead of one clone-and-sort per
+/// call (which was quadratic-ish across the bench report loop).
 #[derive(Clone, Debug, Default)]
 pub struct Sample {
     xs: Vec<f64>,
+    /// Lazily built sorted copy of `xs` (`None` = stale).  Interior
+    /// mutability keeps the query API `&self` for every existing
+    /// caller; `Sample` stays `Send`, which is all the metrics
+    /// registry's `Mutex` needs.
+    sorted: std::cell::RefCell<Option<Vec<f64>>>,
 }
 
 impl Sample {
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
+        *self.sorted.get_mut() = None;
     }
 
     pub fn len(&self) -> usize {
@@ -94,8 +105,12 @@ impl Sample {
         if self.xs.is_empty() {
             return 0.0;
         }
-        let mut s = self.xs.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut cache = self.sorted.borrow_mut();
+        let s = cache.get_or_insert_with(|| {
+            let mut s = self.xs.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s
+        });
         let rank = (p / 100.0) * (s.len() - 1) as f64;
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
@@ -189,6 +204,45 @@ mod tests {
         assert_eq!(s.percentile(100.0), 4.0);
         assert!((s.median() - 2.5).abs() < 1e-12);
         assert!((s.percentile(25.0) - 1.75).abs() < 1e-12);
+    }
+
+    /// The pre-cache implementation: clone + sort on every call.
+    fn naive_percentile(xs: &[f64], p: f64) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let (lo, hi) = (rank.floor() as usize, rank.ceil() as usize);
+        if lo == hi {
+            s[lo]
+        } else {
+            let w = rank - lo as f64;
+            s[lo] * (1.0 - w) + s[hi] * w
+        }
+    }
+
+    #[test]
+    fn cached_percentiles_match_fresh_sorts_across_pushes() {
+        // Interleave pushes and queries so the sorted cache is built,
+        // reused, and invalidated repeatedly; every answer must equal
+        // the old clone-and-sort implementation exactly.
+        let mut s = Sample::default();
+        let mut reference: Vec<f64> = Vec::new();
+        let mut rng = crate::util::rng::Rng::seed_from(5);
+        for _ in 0..5 {
+            for _ in 0..50 {
+                let x = rng.f64();
+                s.push(x);
+                reference.push(x);
+            }
+            for p in [0.0, 12.5, 25.0, 50.0, 90.0, 99.0, 100.0] {
+                assert_eq!(s.percentile(p), naive_percentile(&reference, p));
+                assert_eq!(s.percentile(p), s.percentile(p)); // cached re-read
+            }
+            assert_eq!(s.median(), naive_percentile(&reference, 50.0));
+        }
     }
 
     #[test]

@@ -1,10 +1,20 @@
 //! Fixed-size worker pool (tokio is unavailable offline; the serving
-//! loop and the benches need bounded parallelism, not an async runtime).
+//! loop, the sharded partitioner and the benches need bounded
+//! parallelism, not an async runtime).
 //!
-//! Work items are `FnOnce() + Send` closures; [`ThreadPool::scope`]
-//! offers a rayon-like scoped API through which borrowed data can be
-//! processed in parallel chunks.
+//! Work items are `FnOnce() + Send` closures submitted with
+//! [`ThreadPool::execute`]; [`ThreadPool::map_scoped`] offers a
+//! rayon-like scoped API through which borrowed data can be processed
+//! in parallel chunks.
+//!
+//! Jobs are panic-isolated: a panicking job is caught on the worker,
+//! counted in [`ThreadPool::panicked`], and — critically — still
+//! decrements the in-flight counter (via a drop guard, so the
+//! decrement survives the unwind).  Without that guard a single
+//! panicking job would leave [`ThreadPool::wait_idle`] spinning
+//! forever and silently kill the worker thread.
 
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -17,11 +27,23 @@ enum Msg {
     Shutdown,
 }
 
+/// Decrements the in-flight job counter when dropped, so the count
+/// stays exact even when the job unwinds: `wait_idle` must never hang
+/// on a panicking job.
+struct InFlightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// A fixed pool of worker threads.
 pub struct ThreadPool {
     tx: mpsc::Sender<Msg>,
     handles: Vec<thread::JoinHandle<()>>,
     queued: Arc<AtomicUsize>,
+    panicked: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
@@ -31,18 +53,27 @@ impl ThreadPool {
         let (tx, rx) = mpsc::channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         let queued = Arc::new(AtomicUsize::new(0));
+        let panicked = Arc::new(AtomicUsize::new(0));
         let handles = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 let queued = Arc::clone(&queued);
+                let panicked = Arc::clone(&panicked);
                 thread::Builder::new()
                     .name(format!("graphedge-worker-{i}"))
                     .spawn(move || loop {
                         let msg = { rx.lock().unwrap().recv() };
                         match msg {
                             Ok(Msg::Run(job)) => {
-                                job();
-                                queued.fetch_sub(1, Ordering::SeqCst);
+                                let _in_flight = InFlightGuard(&queued);
+                                // Catch the unwind so the worker thread
+                                // survives a poisoned job instead of
+                                // silently shrinking the pool.
+                                if std::panic::catch_unwind(AssertUnwindSafe(job))
+                                    .is_err()
+                                {
+                                    panicked.fetch_add(1, Ordering::SeqCst);
+                                }
                             }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
@@ -50,7 +81,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx, handles, queued }
+        ThreadPool { tx, handles, queued, panicked }
     }
 
     /// Pool sized to the machine (cores, capped at 16).
@@ -63,6 +94,12 @@ impl ThreadPool {
 
     pub fn workers(&self) -> usize {
         self.handles.len()
+    }
+
+    /// Number of submitted jobs that panicked (caught on the worker;
+    /// the pool keeps running and `wait_idle` still returns).
+    pub fn panicked(&self) -> usize {
+        self.panicked.load(Ordering::SeqCst)
     }
 
     /// Submit a job.
@@ -157,5 +194,37 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn panicking_job_neither_hangs_wait_idle_nor_kills_the_pool() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("poisoned job"));
+        // Regression: the panic used to skip the queued decrement, so
+        // this call spun forever (and the worker thread died).
+        pool.wait_idle();
+        assert_eq!(pool.panicked(), 1);
+
+        // The pool must still execute new work on every worker.
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..32 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+        assert_eq!(pool.panicked(), 1);
+    }
+
+    #[test]
+    fn panics_are_counted_per_job() {
+        let pool = ThreadPool::new(4);
+        for _ in 0..5 {
+            pool.execute(|| panic!("again"));
+        }
+        pool.wait_idle();
+        assert_eq!(pool.panicked(), 5);
     }
 }

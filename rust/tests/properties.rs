@@ -8,9 +8,10 @@ use graphedge::net::cost::{CostModel, Offload};
 use graphedge::net::topology::{EdgeNetwork, UserLinks};
 use graphedge::net::SystemParams;
 use graphedge::partition::incremental::{IncrementalConfig, IncrementalPartitioner};
-use graphedge::partition::{hicut, mincut_partition, Partition};
+use graphedge::partition::{hicut, mincut_partition, parallel_hicut, parallel_hicut_pool, Partition};
 use graphedge::util::proptest::check_seeds;
 use graphedge::util::rng::Rng;
+use graphedge::util::threadpool::ThreadPool;
 
 fn scenario(
     n: usize,
@@ -92,6 +93,46 @@ fn hicut_subgraphs_cover_components() {
             .iter()
             .all(|sub| sub.iter().all(|&v| comp_of[v] == comp_of[sub[0]]))
     });
+}
+
+#[test]
+fn sharded_hicut_is_indistinguishable_from_sequential() {
+    // The PR-2 acceptance property: for any graph, alive mask and
+    // worker count, the sharded cut covers the identical vertex set
+    // and its cut_edges equals the sequential hicut's — here by full
+    // structural equality of the partitions.
+    check_seeds(40, |rng| {
+        let n = rng.range(4, 120);
+        let e = rng.below((n * (n - 1) / 2).min(3 * n));
+        let g = uniform_random(n, e, rng);
+        let dead: std::collections::HashSet<usize> =
+            (0..n).filter(|_| rng.chance(0.3)).collect();
+        let alive = |v: usize| !dead.contains(&v);
+        let seq = hicut(&g, &alive);
+        for workers in [2usize, 5] {
+            let par = parallel_hicut(&g, &alive, workers);
+            if par.subgraphs != seq.subgraphs
+                || par.covered() != seq.covered()
+                || par.cut_edges(&g) != seq.cut_edges(&g)
+            {
+                return false;
+            }
+        }
+        true
+    });
+    // Same property through a shared worker pool (the serving path).
+    let pool = ThreadPool::new(3);
+    check_seeds(40, |rng| {
+        let n = rng.range(4, 100);
+        let g = preferential_attachment(n, 1 + rng.below(4), rng);
+        let dead: std::collections::HashSet<usize> =
+            (0..n).filter(|_| rng.chance(0.4)).collect();
+        let alive = |v: usize| !dead.contains(&v);
+        let seq = hicut(&g, &alive);
+        let par = parallel_hicut_pool(&g, &alive, &pool);
+        par.subgraphs == seq.subgraphs && par.cut_edges(&g) == seq.cut_edges(&g)
+    });
+    assert_eq!(pool.panicked(), 0);
 }
 
 #[test]
