@@ -1,0 +1,171 @@
+//! §Perf — the DRLGO observation hot path: the incremental
+//! observation engine (`Env::state`, an O(M·OBS) copy off the cached
+//! `ObsState`) against the from-scratch rebuild it replaced
+//! (`Env::state_recompute`: a fresh cost model, O(N) remaining scan
+//! and O(deg) neighborhood scan per agent, every query).
+//!
+//! Three views:
+//!
+//! * a single `state()` call mid-episode (the Algorithm 2 inner-loop
+//!   unit),
+//! * a full offloading episode stepping every user and building one
+//!   state per step (what one training episode pays),
+//! * one `mutate` — churn + layout maintenance + the engine's static
+//!   table rebuild — the amortized refresh cost the engine adds.
+//!
+//! Cached and recomputed states are asserted **bit-identical** before
+//! any timing counts (the `tests/properties.rs` equivalence, re-checked
+//! here on the bench scenario).
+//!
+//! Emits `bench_results/env_step.csv` and merges an `"env"` section
+//! into `BENCH_partition.json` (repo root when present), next to the
+//! partition benches' sections.
+
+use std::collections::BTreeMap;
+
+use graphedge::bench::{fmt_secs, time_reps, write_bench_section, Table};
+use graphedge::drl::env::OBS;
+use graphedge::drl::{Env, EnvConfig};
+use graphedge::graph::Dataset;
+use graphedge::net::SystemParams;
+use graphedge::util::json::Value;
+use graphedge::util::rng::Rng;
+
+fn assert_bit_identical(env: &Env, at: &str) {
+    let (new, old) = (env.state(), env.state_recompute());
+    assert_eq!(new.len(), old.len(), "state width diverged {at}");
+    for (i, (a, b)) in new.iter().zip(&old).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "cached state[{i}] diverged from recompute {at}: {a} vs {b}"
+        );
+    }
+}
+
+fn main() {
+    let full_suite = std::env::var("GRAPHEDGE_BENCH_FULL").is_ok();
+    let (ds_n, n_users, n_assocs, reps) =
+        if full_suite { (4000, 600, 7200, 200) } else { (2000, 300, 4800, 50) };
+
+    let mut rng = Rng::seed_from(0x0B5E);
+    let ds = Dataset::synthetic(ds_n, &mut rng);
+    let cfg = EnvConfig { n_users, n_assocs, ..EnvConfig::default() };
+    let mut env = Env::new(&ds, SystemParams::default(), cfg, &mut rng);
+    let agents = env.agents();
+    println!(
+        "observation engine: {n_users} users, {agents} agents, OBS={OBS} \
+         (|V|={ds_n}, state = {} floats)",
+        agents * OBS
+    );
+
+    // Advance to mid-episode so the dynamic features are non-trivial
+    // (partial loads, placed neighbors, split subgraphs).
+    assert_bit_identical(&env, "at reset");
+    let half = env.users.active_count() / 2;
+    for i in 0..half {
+        env.step(i % agents);
+    }
+    assert_bit_identical(&env, "mid-episode");
+
+    let mut t = Table::new(
+        "cached ObsState vs from-scratch recompute",
+        &["op", "cached", "recompute", "speedup"],
+    );
+
+    // 1. One state() build, mid-episode.
+    let state_new = time_reps(10, reps, || {
+        std::hint::black_box(env.state());
+    });
+    let state_old = time_reps(10, reps, || {
+        std::hint::black_box(env.state_recompute());
+    });
+    let state_speedup = state_old.mean() / state_new.mean().max(1e-12);
+    t.row(vec![
+        "state() mid-episode".into(),
+        fmt_secs(state_new.mean()),
+        fmt_secs(state_old.mean()),
+        format!("{state_speedup:.1}x"),
+    ]);
+
+    // 2. A full episode: reset + one state per step (Algorithm 2's
+    // inner while-loop, as a training episode drives it).
+    let ep_reps = (reps / 5).max(3);
+    let episode_new = time_reps(1, ep_reps, || {
+        env.reset();
+        let mut i = 0;
+        while !env.finished() {
+            std::hint::black_box(env.state());
+            env.step(i % agents);
+            i += 1;
+        }
+    });
+    let episode_old = time_reps(1, ep_reps, || {
+        env.reset();
+        let mut i = 0;
+        while !env.finished() {
+            std::hint::black_box(env.state_recompute());
+            env.step(i % agents);
+            i += 1;
+        }
+    });
+    let episode_speedup = episode_old.mean() / episode_new.mean().max(1e-12);
+    t.row(vec![
+        "episode (state/step)".into(),
+        fmt_secs(episode_new.mean()),
+        fmt_secs(episode_old.mean()),
+        format!("{episode_speedup:.1}x"),
+    ]);
+
+    // 3. The refresh cost the engine amortizes: churn + layout
+    // maintenance + static-table rebuild, once per topology change.
+    let mut churn_rng = Rng::seed_from(0x0B5F);
+    let mutate = time_reps(1, ep_reps, || {
+        env.mutate(&mut churn_rng);
+        env.reset();
+    });
+    t.row(vec![
+        "mutate+reset (rebuild)".into(),
+        fmt_secs(mutate.mean()),
+        "-".into(),
+        "-".into(),
+    ]);
+    assert_bit_identical(&env, "after churn");
+
+    t.emit("env_step");
+
+    let obj = |pairs: Vec<(&str, Value)>| {
+        Value::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect::<BTreeMap<_, _>>(),
+        )
+    };
+    let section = obj(vec![
+        (
+            "_note",
+            Value::Str(
+                "Regenerate with `cargo bench --bench env_step` (the bench \
+                 rewrites this section).  Cached and recomputed states are \
+                 asserted bit-identical before timing."
+                    .into(),
+            ),
+        ),
+        ("n_users", Value::Num(n_users as f64)),
+        ("agents", Value::Num(agents as f64)),
+        ("obs_dim", Value::Num(OBS as f64)),
+        ("reps", Value::Num(reps as f64)),
+        ("state_cached_s", Value::Num(state_new.mean())),
+        ("state_recompute_s", Value::Num(state_old.mean())),
+        ("state_speedup", Value::Num(state_speedup)),
+        ("episode_cached_s", Value::Num(episode_new.mean())),
+        ("episode_recompute_s", Value::Num(episode_old.mean())),
+        ("episode_speedup", Value::Num(episode_speedup)),
+        ("mutate_reset_s", Value::Num(mutate.mean())),
+    ]);
+    match write_bench_section("BENCH_partition.json", "env", section) {
+        Ok(path) => println!("[wrote {path}]"),
+        Err(e) => eprintln!("could not write BENCH_partition.json: {e}"),
+    }
+}

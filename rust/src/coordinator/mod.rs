@@ -5,6 +5,10 @@
 //! 2. **Optimize** the layout with HiCut into weakly-associated
 //!    subgraphs (§4).
 //! 3. **Decide** a graph offloading with DRLGO or a baseline (§5).
+//!    Policy rollouts ride the environment's incremental observation
+//!    engine (see [`crate::drl::env`]): per-step states are O(M·OBS)
+//!    copies, with the static feature table refreshed only when the
+//!    topology changes (`Env::mutate` / `Env::recut`).
 //! 4. **Dispatch** each subgraph's tasks to its edge server and run
 //!    distributed GNN inference (serving layer), accounting all costs
 //!    (Eqs. 12–13).

@@ -15,12 +15,14 @@ pub fn run_greedy(env: &mut Env) {
         let server = if eligible.is_empty() {
             env.net.nearest(pos)
         } else {
+            // total_cmp: a NaN distance (degenerate positions) sorts
+            // last instead of panicking the whole serving loop.
             *eligible
                 .iter()
                 .min_by(|&&a, &&b| {
                     let da = env.net.servers[a].pos.dist(&pos);
                     let db = env.net.servers[b].pos.dist(&pos);
-                    da.partial_cmp(&db).unwrap()
+                    da.total_cmp(&db)
                 })
                 .unwrap()
         };

@@ -11,24 +11,60 @@
 //! Observation layout (OBS = 18 per agent, all values normalized to
 //! ~[0, 1]; mirrored by `python/compile/drl.py::OBS`):
 //!
-//! | idx | meaning                                        |
-//! |-----|------------------------------------------------|
-//! | 0,1 | current user position x, y / plane             |
-//! | 2   | current user active degree / 20                |
-//! | 3   | current user task size / 1.5 Mb                |
-//! | 4   | user's subgraph size / N                       |
-//! | 5   | fraction of that subgraph already on server m  |
-//! | 6   | remaining capacity of m / capacity             |
-//! | 7   | load of m / N                                  |
-//! | 8   | B_{i,m} / 50 MHz                               |
-//! | 9   | uplink rate / 1 Gbit/s                         |
-//! | 10  | distance(user, m) / plane                      |
-//! | 11  | f_m / 10 GHz                                   |
-//! | 12,13 | server m position x, y / plane               |
-//! | 14  | users remaining / N                            |
-//! | 15  | est. upload time / 0.1 s                       |
-//! | 16  | est. compute time / 0.01 s                     |
-//! | 17  | fraction of user's placed neighbors on m       |
+//! | idx | meaning                                        | class   |
+//! |-----|------------------------------------------------|---------|
+//! | 0,1 | current user position x, y / plane             | static  |
+//! | 2   | current user active degree / 20                | static  |
+//! | 3   | current user task size / 1.5 Mb                | static  |
+//! | 4   | user's subgraph size / N                       | static  |
+//! | 5   | fraction of that subgraph already on server m  | dynamic |
+//! | 6   | remaining capacity of m / capacity             | dynamic |
+//! | 7   | load of m / N                                  | dynamic |
+//! | 8   | B_{i,m} / 50 MHz                               | static  |
+//! | 9   | uplink rate / 1 Gbit/s                         | static  |
+//! | 10  | distance(user, m) / plane                      | static  |
+//! | 11  | f_m / 10 GHz                                   | static  |
+//! | 12,13 | server m position x, y / plane               | static  |
+//! | 14  | users not yet offloaded (incl. current) / N    | dynamic |
+//! | 15  | est. upload time / 0.1 s                       | static  |
+//! | 16  | est. compute time / 0.01 s                     | static  |
+//! | 17  | fraction of user's placed neighbors on m       | dynamic |
+//!
+//! # The incremental observation engine
+//!
+//! [`Env::obs`] / [`Env::state`] are the innermost loop of Algorithm 2
+//! (one `state()` per environment step, M·OBS floats each), so the
+//! environment maintains an `ObsState` instead of recomputing every
+//! feature per query:
+//!
+//! * **Static features** (the `static` rows above — positions,
+//!   bandwidths, uplink rates, distances, CPU rates, subgraph sizes)
+//!   only change when the *topology* changes.  They are precomputed
+//!   into a flat `capacity × M` table of per-(user, server) OBS-row
+//!   templates.
+//! * **Dynamic features** change per step.  `loads` and
+//!   `sub_server_count` were already O(1) lookups; the placed-neighbor
+//!   fraction (obs\[17\]) and the remaining-user count (obs\[14\]) are
+//!   now maintained as counters: [`Env::step`] applies an O(deg)
+//!   update when it places a user, instead of `obs` re-scanning the
+//!   neighborhood per agent and `remaining` re-scanning the whole
+//!   iteration order.
+//!
+//! With that split, `state()` is a straight O(M·OBS) copy.
+//!
+//! **Invalidation rules.**  Every layout-changing path (`recut`,
+//! `mutate`, `enable_incremental`) funnels through
+//! `install_partition`, which rebuilds the static table and recomputes
+//! the dynamic counters from scratch; `reset` re-derives the counters
+//! for the fresh episode.  Code that mutates `env.users` directly
+//! (e.g. `scatter_users` in the figure benches) must call
+//! [`Env::recut`] afterwards — exactly the call it already needs for
+//! the layout itself to be refreshed.
+//!
+//! The pre-engine implementation survives as [`Env::obs_recompute`] /
+//! [`Env::state_recompute`]; `tests/properties.rs` proves the cached
+//! path bit-identical to it across interleaved churn/reset/step
+//! sequences, and `benches/env_step.rs` times one against the other.
 
 use crate::graph::dynamic::{ChurnConfig, DynamicGraph};
 use crate::graph::geb::Dataset;
@@ -89,6 +125,26 @@ pub struct StepOutcome {
     pub marginal_cost: f64,
 }
 
+/// Incrementally maintained observation state (see the module docs).
+///
+/// `templates` holds one OBS-row per (user, server) with every static
+/// feature filled in and the dynamic slots zeroed; `obs` copies the
+/// row and patches the five dynamic slots.  The counters mirror what
+/// the pre-engine implementation recomputed per query:
+///
+/// * `placed[u]` — active, already-placed neighbors of `u`,
+/// * `placed_here[u·M + m]` — the subset of those on server `m`,
+/// * `remaining` — active users at or after the episode cursor
+///   (obs\[14\]'s numerator, *including* the current user).
+#[derive(Debug, Default)]
+struct ObsState {
+    /// `capacity × M` static feature templates, row `u·M + m`.
+    templates: Vec<[f32; OBS]>,
+    placed: Vec<u32>,
+    placed_here: Vec<u32>,
+    remaining: usize,
+}
+
 /// The environment.
 pub struct Env {
     pub cfg: EnvConfig,
@@ -124,6 +180,8 @@ pub struct Env {
     /// `1` = everything on the caller's thread; the layout is
     /// identical for every value.
     pub workers: usize,
+    /// Incremental observation engine (see the module docs).
+    obs_state: ObsState,
 }
 
 impl Env {
@@ -162,6 +220,7 @@ impl Env {
             incremental: None,
             last_repair: None,
             workers: 1,
+            obs_state: ObsState::default(),
         };
         env.recut();
         env.reset();
@@ -258,6 +317,12 @@ impl Env {
     }
 
     /// Install a computed layout into the episode bookkeeping.
+    ///
+    /// Every layout-changing path (`recut`, `mutate`,
+    /// `enable_incremental`) funnels through here, which makes it the
+    /// observation engine's invalidation point: the static feature
+    /// table is rebuilt and the dynamic counters recomputed against
+    /// the (unchanged) live offload.
     fn install_partition(&mut self, partition: &Partition) {
         let n = self.users.capacity();
         self.subgraph_of = partition.assignment(n);
@@ -267,6 +332,92 @@ impl Env {
         self.sub_server_count =
             vec![vec![0; self.net.len()]; partition.subgraphs.len()];
         self.sub_offloaded = vec![0; partition.subgraphs.len()];
+        self.rebuild_obs_statics();
+        self.recompute_obs_dynamics();
+    }
+
+    /// (Re)build the static per-(user, server) observation table: one
+    /// OBS-row template per active user and server, dynamic slots
+    /// zeroed.  O(N·M) with one uplink-rate evaluation per entry —
+    /// paid once per topology change instead of once per `obs` query.
+    fn rebuild_obs_statics(&mut self) {
+        let m_agents = self.net.len();
+        let n_cap = self.users.capacity();
+        let plane = self.params.plane_m;
+        let n = self.cfg.n_users as f32;
+        let mut templates = vec![[0.0f32; OBS]; n_cap * m_agents];
+        let cm = CostModel::new(
+            &self.params,
+            &self.net,
+            &self.links,
+            &self.users,
+            &self.layer_dims,
+        );
+        for u in 0..n_cap {
+            if !self.users.is_active(u) {
+                continue;
+            }
+            let pos = self.users.pos(u);
+            let deg = self.users.active_degree(u) as f32 / 20.0;
+            let task = self.users.task_mb(u);
+            let sg = self.subgraph_of[u];
+            let sg_size = if sg == usize::MAX { 1 } else { self.subgraph_size[sg] };
+            for (m, server) in self.net.servers.iter().enumerate() {
+                let rate = cm.uplink_rate(u, m);
+                let o = &mut templates[u * m_agents + m];
+                o[0] = (pos.x / plane) as f32;
+                o[1] = (pos.y / plane) as f32;
+                o[2] = deg;
+                o[3] = task as f32 / 1.5;
+                o[4] = sg_size as f32 / n;
+                o[8] = (self.links.bw_hz[u][m] / 50e6) as f32;
+                o[9] = (rate / 1e9) as f32;
+                o[10] = (pos.dist(&server.pos) / plane) as f32;
+                o[11] = (server.f_hz / 10e9) as f32;
+                o[12] = (server.pos.x / plane) as f32;
+                o[13] = (server.pos.y / plane) as f32;
+                o[15] = (task * 1e6 / rate / 0.1) as f32;
+                o[16] = (task * 1e6 / server.f_hz / 0.01) as f32;
+            }
+        }
+        drop(cm);
+        self.obs_state.templates = templates;
+    }
+
+    /// Recompute the dynamic observation counters from scratch against
+    /// the live offload: the placed-neighbor tallies behind obs\[17\]
+    /// and the remaining-user count behind obs\[14\].  O(N·deg) — the
+    /// cost of *one* pre-engine `obs` scan — paid per layout install
+    /// and per `reset`; [`Env::step`] maintains the counters in O(deg)
+    /// in between.
+    fn recompute_obs_dynamics(&mut self) {
+        let m_agents = self.net.len();
+        let n_cap = self.users.capacity();
+        self.obs_state.placed.clear();
+        self.obs_state.placed.resize(n_cap, 0);
+        self.obs_state.placed_here.clear();
+        self.obs_state.placed_here.resize(n_cap * m_agents, 0);
+        // A pre-reset offload (from `Env::new`) has no slots yet.
+        if self.offload.server.len() == n_cap {
+            for v in 0..n_cap {
+                if !self.users.is_active(v) {
+                    continue;
+                }
+                let s = self.offload.server[v];
+                if s == UNASSIGNED {
+                    continue;
+                }
+                for &nb in self.users.graph().neighbors(v) {
+                    let nb = nb as usize;
+                    if !self.users.is_active(nb) {
+                        continue;
+                    }
+                    self.obs_state.placed[nb] += 1;
+                    self.obs_state.placed_here[nb * m_agents + s] += 1;
+                }
+            }
+        }
+        self.obs_state.remaining = self.remaining_scan();
     }
 
     /// Apply one scenario churn step and re-optimize the layout —
@@ -303,6 +454,7 @@ impl Env {
         self.sub_offloaded.fill(0);
         self.overflow = 0;
         self.skip_inactive();
+        self.recompute_obs_dynamics();
     }
 
     fn skip_inactive(&mut self) {
@@ -321,7 +473,18 @@ impl Env {
         self.order.get(self.cursor).copied()
     }
 
+    /// Users not yet offloaded, *including* the current one — the
+    /// obs\[14\] numerator.  O(1): the count is maintained by the
+    /// observation engine (decremented per `step`, re-derived on
+    /// `reset` and on every layout install).
     pub fn remaining(&self) -> usize {
+        self.obs_state.remaining
+    }
+
+    /// Reference implementation of [`Env::remaining`]: re-scan the
+    /// iteration order.  Feeds the counter recomputation and the
+    /// equivalence tests.
+    fn remaining_scan(&self) -> usize {
         self.order[self.cursor.min(self.order.len())..]
             .iter()
             .filter(|&&u| self.users.is_active(u))
@@ -334,13 +497,55 @@ impl Env {
             &self.net,
             &self.links,
             &self.users,
-            self.layer_dims.clone(),
+            &self.layer_dims,
         )
         .with_profile(self.profile)
     }
 
-    /// Per-agent observation O_m (Eq. 20) for the current user.
+    /// Per-agent observation O_m (Eq. 20) for the current user: an
+    /// O(OBS) copy of the cached static row plus the five dynamic
+    /// features (see the module docs).
     pub fn obs(&self, m: usize) -> [f32; OBS] {
+        let Some(u) = self.current_user() else { return [0.0f32; OBS] };
+        let m_agents = self.net.len();
+        let mut o = self.obs_state.templates[u * m_agents + m];
+        let n = self.cfg.n_users as f32;
+        let server = &self.net.servers[m];
+        let sg = self.subgraph_of[u];
+        o[5] = if sg != usize::MAX && self.sub_offloaded[sg] > 0 {
+            self.sub_server_count[sg][m] as f32 / self.sub_offloaded[sg] as f32
+        } else {
+            0.0
+        };
+        o[6] = (server.capacity.saturating_sub(self.loads[m])) as f32
+            / server.capacity.max(1) as f32;
+        o[7] = self.loads[m] as f32 / n;
+        o[14] = self.obs_state.remaining as f32 / n;
+        let placed = self.obs_state.placed[u];
+        o[17] = if placed > 0 {
+            self.obs_state.placed_here[u * m_agents + m] as f32 / placed as f32
+        } else {
+            0.0
+        };
+        o
+    }
+
+    /// Global state S (Eq. 19): concatenated agent observations.
+    pub fn state(&self) -> Vec<f32> {
+        let m_agents = self.agents();
+        let mut out = Vec::with_capacity(m_agents * OBS);
+        for m in 0..m_agents {
+            out.extend_from_slice(&self.obs(m));
+        }
+        out
+    }
+
+    /// From-scratch reference for [`Env::obs`] — the pre-engine
+    /// implementation (cost model per call, O(N) remaining scan,
+    /// O(deg) neighborhood scan per agent).  Kept public so the
+    /// `tests/properties.rs` bit-equivalence property and
+    /// `benches/env_step.rs` can compare against it.
+    pub fn obs_recompute(&self, m: usize) -> [f32; OBS] {
         let mut o = [0.0f32; OBS];
         let Some(u) = self.current_user() else { return o };
         let cm = self.cost_model();
@@ -371,7 +576,7 @@ impl Env {
         o[11] = (server.f_hz / 10e9) as f32;
         o[12] = (server.pos.x / plane) as f32;
         o[13] = (server.pos.y / plane) as f32;
-        o[14] = self.remaining() as f32 / n;
+        o[14] = self.remaining_scan() as f32 / n;
         o[15] = (self.users.task_mb(u) * 1e6 / rate / 0.1) as f32;
         o[16] = (self.users.task_mb(u) * 1e6 / server.f_hz / 0.01) as f32;
         let (mut placed, mut placed_here) = (0f32, 0f32);
@@ -392,9 +597,10 @@ impl Env {
         o
     }
 
-    /// Global state S (Eq. 19): concatenated agent observations.
-    pub fn state(&self) -> Vec<f32> {
-        (0..self.agents()).flat_map(|m| self.obs(m)).collect()
+    /// From-scratch reference for [`Env::state`] (see
+    /// [`Env::obs_recompute`]).
+    pub fn state_recompute(&self) -> Vec<f32> {
+        (0..self.agents()).flat_map(|m| self.obs_recompute(m)).collect()
     }
 
     /// Servers that can still accept a task.
@@ -408,6 +614,11 @@ impl Env {
     /// servers, the agent with the largest preference margin
     /// `a[m][0] − a[m][1]` wins; if none is feasible the least-loaded
     /// server takes the task (counted in `overflow`).
+    ///
+    /// Margins are compared under IEEE 754 `total_cmp`, so a policy
+    /// that emits NaN/±∞ (diverged training, corrupted checkpoint)
+    /// yields a deterministic feasible pick instead of panicking
+    /// mid-episode (NaN sorts above +∞ in that order).
     pub fn decode_action(&self, actions: &[[f32; 2]]) -> usize {
         let eligible = self.eligible();
         if eligible.is_empty() {
@@ -420,7 +631,7 @@ impl Env {
             .max_by(|&&a, &&b| {
                 let ma = actions[a][0] - actions[a][1];
                 let mb = actions[b][0] - actions[b][1];
-                ma.partial_cmp(&mb).unwrap()
+                ma.total_cmp(&mb)
             })
             .unwrap()
     }
@@ -452,6 +663,16 @@ impl Env {
         };
         self.offload.server[u] = server;
         self.loads[server] += 1;
+        // O(deg) observation maintenance: u's placement becomes part
+        // of every active neighbor's placed-fraction feature (obs[17]).
+        for &nb in self.users.graph().neighbors(u) {
+            let nb = nb as usize;
+            if !self.users.is_active(nb) {
+                continue;
+            }
+            self.obs_state.placed[nb] += 1;
+            self.obs_state.placed_here[nb * m_agents + server] += 1;
+        }
 
         // Subgraph-split penalty (Eq. 25).
         let mut rsp = 0.0;
@@ -467,6 +688,9 @@ impl Env {
             }
         }
 
+        // The current user leaves the remaining pool (obs[14]); the
+        // inactive entries `skip_inactive` hops over were never in it.
+        self.obs_state.remaining = self.obs_state.remaining.saturating_sub(1);
         self.cursor += 1;
         self.skip_inactive();
         let finished = self.finished();
@@ -503,23 +727,11 @@ impl Env {
 #[cfg(test)]
 pub mod testutil {
     use super::*;
-    use crate::graph::generate::preferential_attachment;
 
     /// Small synthetic dataset for environment tests.
     pub fn tiny_dataset(n: usize) -> Dataset {
         let mut rng = Rng::seed_from(1234);
-        let graph = preferential_attachment(n, 6, &mut rng);
-        Dataset {
-            name: "tiny".into(),
-            n,
-            e: graph.num_edges(),
-            feat_dim: 64,
-            classes: 3,
-            labels: (0..n).map(|i| (i % 3) as u8).collect(),
-            feat_ptr: (0..=n as u32).collect(),
-            feat_idx: (0..n).map(|i| (i % 64) as u16).collect(),
-            graph,
-        }
+        Dataset::synthetic(n, &mut rng)
     }
 
     pub fn small_env(seed: u64) -> Env {
@@ -593,6 +805,75 @@ mod tests {
             acts[0] = [1.0, 0.0];
             let chosen = env.decode_action(&acts);
             assert_ne!(chosen, 0);
+        }
+    }
+
+    #[test]
+    fn decode_action_survives_nan_and_inf_actions() {
+        // Regression: `partial_cmp(..).unwrap()` panicked the moment a
+        // diverged policy emitted a NaN margin.  total_cmp must yield
+        // a deterministic feasible server instead.
+        let env = small_env(21);
+        let agents = env.agents();
+        let eligible = env.eligible();
+        assert!(!eligible.is_empty());
+
+        // One NaN agent among finite ones.
+        let mut acts = vec![[0.2f32, 0.1]; agents];
+        acts[1] = [f32::NAN, 0.0];
+        let pick = env.decode_action(&acts);
+        assert!(eligible.contains(&pick));
+        assert_eq!(pick, env.decode_action(&acts), "must be deterministic");
+
+        // All-NaN joint action.
+        let nan_acts = vec![[f32::NAN, f32::NAN]; agents];
+        let pick = env.decode_action(&nan_acts);
+        assert!(eligible.contains(&pick));
+
+        // ±∞ margins order sensibly: +∞ beats every finite margin.
+        let mut inf_acts = vec![[0.0f32, 1.0]; agents];
+        inf_acts[2] = [f32::INFINITY, 0.0];
+        inf_acts[0] = [f32::NEG_INFINITY, 0.0];
+        assert_eq!(env.decode_action(&inf_acts), 2);
+    }
+
+    #[test]
+    fn remaining_includes_current_user() {
+        // Pins the obs[14] semantics: `remaining()` counts the users
+        // not yet offloaded *including* the one currently being
+        // decided, so it starts at the full active count.
+        let mut env = small_env(22);
+        let active = env.users.active_count();
+        assert_eq!(env.remaining(), active);
+        env.step(0);
+        assert_eq!(env.remaining(), active - 1);
+        while !env.finished() {
+            env.step(1);
+        }
+        assert_eq!(env.remaining(), 0);
+        env.reset();
+        assert_eq!(env.remaining(), active);
+    }
+
+    #[test]
+    fn cached_obs_matches_recompute_through_an_episode() {
+        // The heavyweight multi-seed interleaving lives in
+        // tests/properties.rs; this is the in-crate smoke check.
+        let mut env = small_env(23);
+        let mut step = 0;
+        while !env.finished() {
+            assert_eq!(env.remaining(), env.remaining_scan());
+            let state = env.state();
+            let reference = env.state_recompute();
+            for (i, (a, b)) in state.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "state[{i}] diverged at step {step}: {a} vs {b}"
+                );
+            }
+            env.step(step % env.agents());
+            step += 1;
         }
     }
 

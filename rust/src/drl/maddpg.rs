@@ -223,17 +223,20 @@ impl<'rt> MaddpgTrainer<'rt> {
         let mut reward = 0.0;
         let mut steps = 0usize;
         let sigma = if learn { cfg.explore_sigma } else { 0.0 };
+        // Eq. 19: the global state is exactly the concatenation of the
+        // local observations — and the post-step state doubles as the
+        // next step's pre-step state, so each env step builds exactly
+        // one state (the observation engine makes it an O(M·OBS)
+        // copy, but there is still no reason to do it twice).
+        let mut obs = env.state();
         while !env.finished() {
-            // Eq. 19: the global state is exactly the concatenation of
-            // the local observations — compute once, reuse for both.
-            let obs = env.state();
             let actions = self.select_actions(&obs, sigma, rng)?;
             let server = env.decode_action(&actions);
             let outcome = env.step(server);
             reward += outcome.rewards.iter().sum::<f64>();
             steps += 1;
+            let obs2 = env.state();
             if learn {
-                let obs2 = env.state();
                 self.replay.push(Transition {
                     s: obs.clone(),
                     a: actions.iter().flat_map(|a| a.iter().copied()).collect(),
@@ -241,12 +244,13 @@ impl<'rt> MaddpgTrainer<'rt> {
                     s2: obs2.clone(),
                     done: outcome.done.iter().map(|&d| d as u8 as f32).collect(),
                     obs,
-                    obs2,
+                    obs2: obs2.clone(),
                 });
                 if self.replay.len() >= cfg.warmup && steps % cfg.train_every == 0 {
                     self.train_step(rng)?;
                 }
             }
+            obs = obs2;
         }
         Ok(EpisodeStats {
             episode: 0,

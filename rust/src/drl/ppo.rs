@@ -121,10 +121,12 @@ impl<'rt> PpoTrainer<'rt> {
         let z: f32 = exps.iter().sum();
         let probs: Vec<f32> = exps.iter().map(|&e| e / z).collect();
         let action = if greedy {
+            // total_cmp: NaN logits (diverged policy) must not panic
+            // the evaluation rollout.
             probs
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0
         } else {
@@ -215,8 +217,11 @@ impl<'rt> PpoTrainer<'rt> {
             env.reset();
             let mut reward = 0.0;
             let mut steps = 0;
+            // The post-step state serves both the horizon-boundary
+            // value bootstrap and the next iteration's policy input —
+            // one state build per env step.
+            let mut s = env.state();
             while !env.finished() {
-                let s = env.state();
                 let (a, logp, v) = self.select(&s, &mut rng, false)?;
                 let out = env.step(a);
                 let r: f64 = out.rewards.iter().sum();
@@ -228,14 +233,16 @@ impl<'rt> PpoTrainer<'rt> {
                 self.roll.values.push(v);
                 self.roll.rewards.push(r as f32);
                 self.roll.dones.push(out.finished as u8 as f32);
+                let s_next = env.state();
                 if self.roll.len() == self.horizon {
                     let last_v = if env.finished() {
                         0.0
                     } else {
-                        self.select(&env.state(), &mut rng, false)?.2
+                        self.select(&s_next, &mut rng, false)?.2
                     };
                     self.update(cfg.epochs, cfg.gamma, cfg.lam, last_v)?;
                 }
+                s = s_next;
             }
             curve.push(EpisodeStats {
                 episode: ep,

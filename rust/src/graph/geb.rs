@@ -39,6 +39,27 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Synthetic in-memory dataset (no `.geb` file / artifacts): a
+    /// preferential-attachment topology with placeholder sparse
+    /// features (one index per vertex) and cyclic 3-class labels.
+    /// The shared scaffold for environment tests and toolchain-only
+    /// benches (`tests/properties.rs`, `benches/env_step.rs`,
+    /// `drl::env::testutil`).
+    pub fn synthetic(n: usize, rng: &mut crate::util::rng::Rng) -> Self {
+        let graph = super::generate::preferential_attachment(n, 6, rng);
+        Dataset {
+            name: "synthetic".into(),
+            n,
+            e: graph.num_edges(),
+            feat_dim: 64,
+            classes: 3,
+            labels: (0..n).map(|i| (i % 3) as u8).collect(),
+            feat_ptr: (0..=n as u32).collect(),
+            feat_idx: (0..n).map(|i| (i % 64) as u16).collect(),
+            graph,
+        }
+    }
+
     pub fn load(path: impl AsRef<Path>, name: &str) -> Result<Self, GebError> {
         let buf = std::fs::read(path)?;
         Self::parse(&buf, name)

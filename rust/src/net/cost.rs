@@ -143,7 +143,10 @@ pub struct CostModel<'a> {
     pub links: &'a UserLinks,
     pub users: &'a DynamicGraph,
     /// Hidden feature dimensionality per GNN layer (e.g. [F, 64, C]).
-    pub layer_dims: Vec<usize>,
+    /// Borrowed: constructing a `CostModel` allocates nothing, so hot
+    /// paths (the DRL reward in `Env::step`, the observation engine's
+    /// table rebuild) can build one per use for free.
+    pub layer_dims: &'a [usize],
     /// Which GNN architecture the servers run (Fig. 10).
     pub profile: GnnProfile,
 }
@@ -154,7 +157,7 @@ impl<'a> CostModel<'a> {
         net: &'a EdgeNetwork,
         links: &'a UserLinks,
         users: &'a DynamicGraph,
-        layer_dims: Vec<usize>,
+        layer_dims: &'a [usize],
     ) -> Self {
         assert_eq!(layer_dims.len(), params.gnn_layers + 1, "dims per layer boundary");
         CostModel { params, net, links, users, layer_dims, profile: GnnProfile::Gcn }
@@ -389,8 +392,8 @@ mod tests {
         (params, net, links, users)
     }
 
-    fn dims() -> Vec<usize> {
-        vec![1500, 64, 8]
+    fn dims() -> &'static [usize] {
+        &[1500, 64, 8]
     }
 
     #[test]

@@ -42,6 +42,10 @@ pub struct Router {
 
 impl Router {
     pub fn new(servers: usize, policy: BatchPolicy) -> Self {
+        // A zero max_batch (e.g. GRAPHEDGE_MAX_BATCH=0) would make the
+        // batch-draining loops spin forever (`drain(..0)` removes
+        // nothing); clamp to 1.
+        let policy = BatchPolicy { max_batch: policy.max_batch.max(1), ..policy };
         Router {
             queues: vec![Vec::new(); servers],
             policy,
@@ -67,17 +71,26 @@ impl Router {
 
     /// Collect every batch that is ready at `now` (full or timed out).
     /// Returns (server, users) pairs, draining those queues.
+    ///
+    /// *All* full batches are drained, not just the first: a queue
+    /// holding ≥ 2·`max_batch` requests (a burst between poll points)
+    /// previously shipped one batch and stranded the residue until the
+    /// next timeout.  After the full batches, any remainder whose
+    /// oldest request has waited past `max_wait` ships too.
     pub fn ready_batches(&mut self, now: Instant) -> Vec<(usize, Vec<usize>)> {
         let mut out = Vec::new();
         for (server, q) in self.queues.iter_mut().enumerate() {
-            if q.is_empty() {
-                continue;
+            while q.len() >= self.policy.max_batch {
+                let batch: Vec<usize> =
+                    q.drain(..self.policy.max_batch).map(|r| r.user).collect();
+                self.dispatched_batches += 1;
+                self.dispatched_requests += batch.len();
+                out.push((server, batch));
             }
-            let full = q.len() >= self.policy.max_batch;
-            let expired = now.duration_since(q[0].enqueued) >= self.policy.max_wait;
-            if full || expired {
-                let take = q.len().min(self.policy.max_batch);
-                let batch: Vec<usize> = q.drain(..take).map(|r| r.user).collect();
+            if !q.is_empty()
+                && now.duration_since(q[0].enqueued) >= self.policy.max_wait
+            {
+                let batch: Vec<usize> = q.drain(..).map(|r| r.user).collect();
                 self.dispatched_batches += 1;
                 self.dispatched_requests += batch.len();
                 out.push((server, batch));
@@ -144,11 +157,80 @@ mod tests {
     }
 
     #[test]
+    fn burst_drains_every_full_batch() {
+        // Regression: ≥ 2·max_batch queued requests used to yield one
+        // batch per call, stranding the rest until the next timeout.
+        let mut r = Router::new(
+            2,
+            BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(100) },
+        );
+        let off = offload_all_to(1, 16);
+        let t = Instant::now();
+        for u in 0..7 {
+            r.submit(u, &off, t);
+        }
+        let batches = r.ready_batches(t);
+        assert_eq!(
+            batches,
+            vec![(1, vec![0, 1, 2]), (1, vec![3, 4, 5])],
+            "both full batches must dispatch in one poll"
+        );
+        // The residue (below max_batch, not timed out) stays queued.
+        assert_eq!(r.queue_len(1), 1);
+        assert_eq!(r.dispatched_batches, 2);
+        assert_eq!(r.dispatched_requests, 6);
+        // Once the residue's oldest request expires it ships too.
+        let later = t + Duration::from_secs(200);
+        assert_eq!(r.ready_batches(later), vec![(1, vec![6])]);
+        assert_eq!(r.queue_len(1), 0);
+    }
+
+    #[test]
+    fn burst_drains_full_batches_per_server() {
+        let mut r = Router::new(
+            2,
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(100) },
+        );
+        let mut off = Offload::empty(8);
+        for u in 0..8 {
+            off.server[u] = u % 2;
+        }
+        let t = Instant::now();
+        for u in 0..8 {
+            r.submit(u, &off, t);
+        }
+        let batches = r.ready_batches(t);
+        assert_eq!(batches.len(), 4);
+        assert!(batches.iter().all(|(_, b)| b.len() == 2));
+        assert_eq!(r.queue_len(0), 0);
+        assert_eq!(r.queue_len(1), 0);
+        assert_eq!(r.dispatched_requests, 8);
+    }
+
+    #[test]
     fn unassigned_users_rejected() {
         let mut r = Router::new(1, BatchPolicy::default());
         let off = Offload::empty(3);
         assert_eq!(r.submit(0, &off, Instant::now()), None);
         assert_eq!(r.queue_len(0), 0);
+    }
+
+    #[test]
+    fn zero_max_batch_is_clamped_not_an_infinite_loop() {
+        // Regression: max_batch = 0 made `while q.len() >= max_batch`
+        // spin forever on drain(..0).
+        let mut r = Router::new(
+            1,
+            BatchPolicy { max_batch: 0, max_wait: Duration::from_secs(100) },
+        );
+        let off = offload_all_to(0, 3);
+        let t = Instant::now();
+        for u in 0..3 {
+            r.submit(u, &off, t);
+        }
+        let batches = r.ready_batches(t);
+        assert_eq!(batches, vec![(0, vec![0]), (0, vec![1]), (0, vec![2])]);
+        assert!(r.flush().is_empty());
     }
 
     #[test]

@@ -48,6 +48,35 @@ pub struct DynamicServeStats {
     pub latency_p99_s: f64,
 }
 
+/// Run each batch of one burst through `process`, charging every
+/// request in a batch that batch's *own* wall-clock.
+///
+/// Regression note: the previous scheme timestamped the whole burst
+/// once (`burst_start.elapsed()` after each batch), so batch k was
+/// charged the processing time of batches 1..k too — with ≥ 2 servers
+/// in a step, every batch after the first inherited its predecessors'
+/// latency and the p50/p99 numbers drifted upward with server count.
+/// Batches of one burst model independent per-server dispatches, not a
+/// serial pipeline; each is timed individually.
+fn time_batches<F>(
+    batches: Vec<Vec<usize>>,
+    latency: &mut Sample,
+    mut process: F,
+) -> crate::Result<()>
+where
+    F: FnMut(&[usize]) -> crate::Result<()>,
+{
+    for batch in batches.into_iter().filter(|b| !b.is_empty()) {
+        let t0 = Instant::now();
+        process(&batch)?;
+        let batch_s = t0.elapsed().as_secs_f64();
+        for _ in &batch {
+            latency.push(batch_s);
+        }
+    }
+    Ok(())
+}
+
 /// Placement policy for the serving run.
 pub enum Placement<'a> {
     /// Greedy nearest-eligible-server placement (no training needed).
@@ -180,10 +209,9 @@ pub fn serve_dynamic_run(
                 total_requests += 1;
             }
         }
-        let burst_start = Instant::now();
-        for batch in per_server.into_iter().filter(|b| !b.is_empty()) {
+        time_batches(per_server, &mut latency, |batch| {
             // Batch + 2-hop halo, padded (same shape as the static loop).
-            let mut verts = env.users.graph().k_hop(&batch, 2);
+            let mut verts = env.users.graph().k_hop(batch, 2);
             {
                 let users = &env.users;
                 verts.retain(|&v| users.is_active(v));
@@ -200,12 +228,8 @@ pub fn serve_dynamic_run(
                 svc.feat_pad,
             );
             let classes = svc.classify(&padded)?;
-            let done_s = burst_start.elapsed().as_secs_f64();
             let in_batch: std::collections::HashSet<usize> =
                 batch.iter().copied().collect();
-            for _ in &batch {
-                latency.push(done_s);
-            }
             for (row, &v) in padded.vertices.iter().enumerate() {
                 if in_batch.contains(&v) {
                     classified += 1;
@@ -216,7 +240,8 @@ pub fn serve_dynamic_run(
                 }
             }
             METRICS.inc("serve.dynamic.batches");
-        }
+            Ok(())
+        })?;
     }
 
     let (full_recuts, local_recuts, drift_final, cut_edges_final) =
@@ -390,4 +415,54 @@ pub fn serve_run_with(
         mean_batch: batch_sizes.mean(),
         accuracy: if classified == 0 { 0.0 } else { correct as f64 / classified as f64 },
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn burst_batches_are_timed_individually() {
+        // ≥ 2 servers' batches in one burst: under the old cumulative
+        // `burst_start.elapsed()` accounting the last batch would be
+        // charged ~3× the per-batch time; individually timed, every
+        // batch stays well under the burst total.
+        let sleep = Duration::from_millis(30);
+        let batches = vec![vec![1, 2], Vec::new(), vec![3], vec![4, 5, 6]];
+        let mut latency = Sample::default();
+        let mut processed = 0usize;
+        time_batches(batches, &mut latency, |batch| {
+            assert!(!batch.is_empty(), "empty batches must be skipped");
+            processed += 1;
+            std::thread::sleep(sleep);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(processed, 3);
+        // One latency sample per request of every non-empty batch.
+        assert_eq!(latency.len(), 6);
+        let per_batch = sleep.as_secs_f64();
+        assert!(latency.percentile(0.0) >= per_batch * 0.9);
+        // Cumulative accounting would put the last batch at ~3×.
+        assert!(
+            latency.percentile(100.0) < 2.0 * per_batch,
+            "a batch inherited its predecessors' time: max {}s",
+            latency.percentile(100.0)
+        );
+    }
+
+    #[test]
+    fn time_batches_propagates_errors() {
+        let mut latency = Sample::default();
+        let out = time_batches(vec![vec![1], vec![2]], &mut latency, |batch| {
+            if batch[0] == 2 {
+                anyhow::bail!("boom");
+            }
+            Ok(())
+        });
+        assert!(out.is_err());
+        // The failing batch records no latency.
+        assert_eq!(latency.len(), 1);
+    }
 }

@@ -50,7 +50,7 @@ fn all_methods_produce_valid_offloads_with_inference() {
                 &env.net,
                 &env.links,
                 &env.users,
-                env.layer_dims.clone(),
+                &env.layer_dims,
             );
             cm.check_constraints(&env.offload)
         };

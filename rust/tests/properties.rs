@@ -31,7 +31,7 @@ fn cost_is_nonnegative_and_additive() {
     check_seeds(25, |rng| {
         let n = rng.range(4, 60);
         let (p, net, links, users) = scenario(n, 4, rng);
-        let cm = CostModel::new(&p, &net, &links, &users, vec![500, 64, 3]);
+        let cm = CostModel::new(&p, &net, &links, &users, &[500, 64, 3]);
         let assign: Vec<usize> = (0..n).map(|_| rng.below(net.len())).collect();
         let c = cm.evaluate(&Offload { server: assign });
         c.t_upload_s >= 0.0
@@ -49,7 +49,7 @@ fn transfer_cost_monotone_in_split_edges() {
     check_seeds(25, |rng| {
         let n = rng.range(6, 50);
         let (p, net, links, users) = scenario(n, 6, rng);
-        let cm = CostModel::new(&p, &net, &links, &users, vec![500, 64, 3]);
+        let cm = CostModel::new(&p, &net, &links, &users, &[500, 64, 3]);
         let mut assign: Vec<usize> = vec![0; n];
         // pick a user with a neighbor, co-locate, then split.
         let Some(u) = (0..n).find(|&u| users.graph().degree(u) > 0) else {
@@ -315,9 +315,63 @@ fn uplink_rate_decreases_with_distance() {
     users = DynamicGraph::new(g, vec![1.0; 2], p.plane_m, &mut rng);
     let _ = &users;
     // Access positions via scatter + check monotonicity statistically:
-    let cm = CostModel::new(&p, &net, &links, &users, vec![500, 64, 3]);
+    let cm = CostModel::new(&p, &net, &links, &users, &[500, 64, 3]);
     let d0 = users.pos(0).dist(&s0);
     let d1 = users.pos(1).dist(&s0);
     let (near, far) = if d0 < d1 { (0, 1) } else { (1, 0) };
     assert!(cm.uplink_rate(near, 0) >= cm.uplink_rate(far, 0));
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn cached_observations_bit_identical_to_recompute_under_churn() {
+    // The observation-engine acceptance property: across interleaved
+    // `mutate` / `reset` / `step` sequences — in both full-recut and
+    // incremental-repair maintenance modes — the cached `obs`/`state`
+    // must equal the from-scratch recompute bit for bit.
+    use graphedge::drl::{Env, EnvConfig};
+    for incremental in [false, true] {
+        check_seeds(20, |rng| {
+            let ds = graphedge::graph::Dataset::synthetic(160, rng);
+            let cfg = EnvConfig { n_users: 40, n_assocs: 90, ..EnvConfig::default() };
+            let mut env = Env::new(&ds, SystemParams::default(), cfg, rng);
+            if incremental {
+                env.enable_incremental(IncrementalConfig::default());
+            }
+            for _round in 0..4 {
+                env.mutate(rng);
+                // Pre-reset: the layout install alone must leave the
+                // cache coherent with the (stale) episode state.
+                if !bits_eq(&env.state(), &env.state_recompute()) {
+                    return false;
+                }
+                env.reset();
+                let mut steps = 0usize;
+                while !env.finished() && steps < 200 {
+                    steps += 1;
+                    if !bits_eq(&env.state(), &env.state_recompute()) {
+                        return false;
+                    }
+                    let m = rng.below(env.agents());
+                    let (o, r) = (env.obs(m), env.obs_recompute(m));
+                    if !bits_eq(&o, &r) {
+                        return false;
+                    }
+                    env.step(rng.below(env.agents()));
+                    // Occasional mid-episode reset: the counters must
+                    // re-derive, not accumulate.
+                    if steps % 17 == 0 {
+                        env.reset();
+                    }
+                }
+                if !bits_eq(&env.state(), &env.state_recompute()) {
+                    return false;
+                }
+            }
+            true
+        });
+    }
 }
