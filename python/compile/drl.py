@@ -25,7 +25,8 @@ import jax.numpy as jnp
 # ---------------------------------------------------------------------------
 
 M = 4            #: number of edge servers / agents (2000m plane, 500m cells)
-OBS = 18         #: per-agent observation dim (see rust drl::env docs)
+OBS = 21         #: per-agent observation dim incl. the three layout-
+                 #: maintenance slots (see rust drl::env docs)
 ACT = 2          #: paper Eq. (22): two-dimensional agent action in [0,1]^2
 HID = 64         #: hidden width (§6.1)
 STATE = M * OBS  #: global state = concat of local observations (Eq. 19)

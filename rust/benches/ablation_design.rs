@@ -98,8 +98,7 @@ fn batch_sweep(ctrl: &Controller) -> graphedge::Result<()> {
     );
     for max_batch in [8usize, 32, 64, 128] {
         std::env::set_var("GRAPHEDGE_MAX_BATCH", max_batch.to_string());
-        let stats =
-            graphedge::serving::serve_run(ctrl, "cora", "gcn", 150, 600, 600, 5)?;
+        let stats = graphedge::serving::serve_run(ctrl, "cora", "gcn", 150, 600, 600, 5)?;
         t.row(vec![
             max_batch.to_string(),
             format!("{:.0}", stats.requests as f64 / stats.total_s),

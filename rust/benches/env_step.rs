@@ -44,9 +44,18 @@ fn assert_bit_identical(env: &Env, at: &str) {
 }
 
 fn main() {
+    // GRAPHEDGE_BENCH_SMOKE=1: tiny sizes, one rep — CI executes the
+    // bench end to end (including the JSON section write) without
+    // paying for meaningful numbers.
+    let smoke = std::env::var("GRAPHEDGE_BENCH_SMOKE").is_ok();
     let full_suite = std::env::var("GRAPHEDGE_BENCH_FULL").is_ok();
-    let (ds_n, n_users, n_assocs, reps) =
-        if full_suite { (4000, 600, 7200, 200) } else { (2000, 300, 4800, 50) };
+    let (ds_n, n_users, n_assocs, reps) = if smoke {
+        (300, 60, 120, 1)
+    } else if full_suite {
+        (4000, 600, 7200, 200)
+    } else {
+        (2000, 300, 4800, 50)
+    };
 
     let mut rng = Rng::seed_from(0x0B5E);
     let ds = Dataset::synthetic(ds_n, &mut rng);
@@ -90,7 +99,7 @@ fn main() {
 
     // 2. A full episode: reset + one state per step (Algorithm 2's
     // inner while-loop, as a training episode drives it).
-    let ep_reps = (reps / 5).max(3);
+    let ep_reps = if smoke { 1 } else { (reps / 5).max(3) };
     let episode_new = time_reps(1, ep_reps, || {
         env.reset();
         let mut i = 0;

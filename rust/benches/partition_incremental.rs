@@ -72,9 +72,18 @@ fn run(n: usize, mean_deg: usize, churn: f64, steps: usize) -> Run {
 }
 
 fn main() {
+    // GRAPHEDGE_BENCH_SMOKE=1: tiny graph, two steps per churn rate —
+    // CI executes the bench (and its JSON write) without real timing.
+    let smoke = std::env::var("GRAPHEDGE_BENCH_SMOKE").is_ok();
     let full_suite = std::env::var("GRAPHEDGE_BENCH_FULL").is_ok();
-    let steps = if full_suite { 40 } else { 20 };
-    let (n, mean_deg) = (2000, 6);
+    let steps = if smoke {
+        2
+    } else if full_suite {
+        40
+    } else {
+        20
+    };
+    let (n, mean_deg) = if smoke { (300, 4) } else { (2000, 6) };
 
     let mut t = Table::new(
         "incremental repair vs full HiCut recut (2000 users)",
@@ -97,16 +106,19 @@ fn main() {
     }
     t.emit("partition_incremental");
 
-    // Acceptance gate at the paper-default 20% churn point.
-    let paper = &runs[2];
-    let pass = paper.speedup >= 5.0 && paper.cut_ratio_mean <= 1.10;
-    println!(
-        "paper-default point (20% churn): speedup {:.1}x (target >=5x), \
-         cut ratio {:.3} (target <=1.10) — {}",
-        paper.speedup,
-        paper.cut_ratio_mean,
-        if pass { "PASS" } else { "FAIL" },
-    );
+    // Acceptance gate at the paper-default 20% churn point (not
+    // meaningful on the smoke-path sizes).
+    if !smoke {
+        let paper = &runs[2];
+        let pass = paper.speedup >= 5.0 && paper.cut_ratio_mean <= 1.10;
+        println!(
+            "paper-default point (20% churn): speedup {:.1}x (target >=5x), \
+             cut ratio {:.3} (target <=1.10) — {}",
+            paper.speedup,
+            paper.cut_ratio_mean,
+            if pass { "PASS" } else { "FAIL" },
+        );
+    }
 
     // Perf-trajectory section for future PRs, merged into the shared
     // partition results file (the `partition_parallel` bench owns a

@@ -42,8 +42,17 @@ struct Run {
 }
 
 fn main() {
+    // GRAPHEDGE_BENCH_SMOKE=1: few tiny communities, one rep — CI
+    // executes the bench (layout-equality asserts included) cheaply.
+    let smoke = std::env::var("GRAPHEDGE_BENCH_SMOKE").is_ok();
     let full_suite = std::env::var("GRAPHEDGE_BENCH_FULL").is_ok();
-    let (blocks, block_n, reps) = if full_suite { (64, 500, 5) } else { (32, 150, 3) };
+    let (blocks, block_n, reps) = if smoke {
+        (4, 60, 1)
+    } else if full_suite {
+        (64, 500, 5)
+    } else {
+        (32, 150, 3)
+    };
     let deg = 6;
     let mut rng = Rng::seed_from(0x5AAD);
     let g = clustered(blocks, block_n, deg, &mut rng);

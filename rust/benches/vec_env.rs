@@ -1,0 +1,188 @@
+//! §Perf — vectorized multi-episode rollout: per-step state assembly
+//! and rollout throughput of a [`graphedge::drl::vec_env::VecEnv`]
+//! across batch widths E ∈ {1, 4, 16}.
+//!
+//! Before any timing counts, an E=1 vector (churn off) is asserted
+//! trajectory-identical to a plain `Env` driven by the same policy —
+//! the correctness contract `tests/properties.rs` proves across seeds,
+//! re-checked here on the bench scenario.
+//!
+//! Two measurements per E:
+//!
+//! * **state assembly** — one `states()` call, the `E × M × OBS` batch
+//!   matrix the training loops feed to `select_actions`;
+//! * **rollout throughput** — round-robin vector steps with auto-reset
+//!   and churn on, reported as environment steps per second (E env
+//!   steps per vector step).
+//!
+//! Emits `bench_results/vec_env.csv` and merges a `"vec_env"` section
+//! into `BENCH_partition.json` (repo root when present), next to the
+//! `env`/`incremental`/`parallel` sections.
+
+use std::collections::BTreeMap;
+
+use graphedge::bench::{fmt_secs, time_reps, write_bench_section, Table};
+use graphedge::drl::env::OBS;
+use graphedge::drl::vec_env::VecEnv;
+use graphedge::drl::{baselines, Env, EnvConfig};
+use graphedge::graph::Dataset;
+use graphedge::net::SystemParams;
+use graphedge::util::json::Value;
+use graphedge::util::rng::Rng;
+
+/// E=1, churn off: the vector must replay a plain env bit for bit.
+fn assert_e1_equivalent(proto: &Env) {
+    let mut venv = VecEnv::replicate(proto, 1, 0xE0);
+    venv.set_churn(false);
+    venv.reset_all();
+    let mut env = proto.clone();
+    env.reset();
+    let agents = env.agents();
+    let steps = env.users.active_count().min(64);
+    for step in 0..steps {
+        let server = step % agents;
+        let vres = venv.step_servers(&[server]);
+        let out = env.step(server);
+        assert_eq!(vres[0].outcome.assigned, out.assigned, "assignment diverged");
+        if out.finished {
+            env.reset();
+        }
+        let (a, b) = (venv.states(), env.state());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "state[{i}] diverged at step {step}");
+        }
+    }
+}
+
+struct Run {
+    envs: usize,
+    workers: usize,
+    assembly_s: f64,
+    steps_per_s: f64,
+    episodes: usize,
+}
+
+fn main() {
+    let smoke = std::env::var("GRAPHEDGE_BENCH_SMOKE").is_ok();
+    let full_suite = std::env::var("GRAPHEDGE_BENCH_FULL").is_ok();
+    let (ds_n, n_users, n_assocs, reps) = if smoke {
+        (300, 60, 120, 1)
+    } else if full_suite {
+        (2000, 300, 4800, 20)
+    } else {
+        (1000, 150, 1200, 8)
+    };
+
+    let mut rng = Rng::seed_from(0x0ECE);
+    let ds = Dataset::synthetic(ds_n, &mut rng);
+    let cfg = EnvConfig { n_users, n_assocs, ..EnvConfig::default() };
+    let proto = Env::new(&ds, SystemParams::default(), cfg, &mut rng);
+    let agents = proto.agents();
+    println!(
+        "vec env: {n_users} users, {agents} agents, OBS={OBS} \
+         (|V|={ds_n}, state row = {} floats)",
+        agents * OBS
+    );
+
+    assert_e1_equivalent(&proto);
+    println!("E=1 vector verified trajectory-identical to the plain env");
+
+    let mut t = Table::new(
+        "vectorized rollout across batch widths",
+        &["E", "workers", "states() / call", "rollout steps/s", "episodes"],
+    );
+    let mut runs = Vec::new();
+    for envs in [1usize, 4, 16] {
+        let mut venv = VecEnv::replicate(&proto, envs, 0xBEEF + envs as u64);
+        venv.set_workers(0); // one worker per slot
+        let workers = venv.workers();
+
+        // 1. Batch state assembly.
+        let assembly = time_reps(3, reps.max(3) * 10, || {
+            std::hint::black_box(venv.states());
+        });
+
+        // 2. Rollout throughput: round-robin policy, churn + auto-reset
+        // on (the training loop's steady state).
+        venv.set_churn(true);
+        venv.reset_all();
+        let vsteps_per_rep = if smoke { 8 } else { 2 * n_users };
+        let mut servers = vec![0usize; envs];
+        let mut step = 0usize;
+        let roll = time_reps(1, reps, || {
+            for _ in 0..vsteps_per_rep {
+                for (i, s) in servers.iter_mut().enumerate() {
+                    *s = (step + i) % agents;
+                }
+                std::hint::black_box(venv.step_servers(&servers));
+                step += 1;
+            }
+        });
+        let steps_per_s = (vsteps_per_rep * envs) as f64 / roll.mean().max(1e-12);
+
+        // 3. Batched greedy evaluation exercises the same fan-out.
+        let costs = baselines::run_greedy_vec(&mut venv);
+        assert_eq!(costs.len(), envs);
+
+        let episodes = venv.episodes_completed();
+        t.row(vec![
+            envs.to_string(),
+            workers.to_string(),
+            fmt_secs(assembly.mean()),
+            format!("{steps_per_s:.0}"),
+            episodes.to_string(),
+        ]);
+        runs.push(Run {
+            envs,
+            workers,
+            assembly_s: assembly.mean(),
+            steps_per_s,
+            episodes,
+        });
+    }
+    t.emit("vec_env");
+
+    let obj = |pairs: Vec<(&str, Value)>| {
+        Value::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect::<BTreeMap<_, _>>(),
+        )
+    };
+    let section = obj(vec![
+        (
+            "_note",
+            Value::Str(
+                "Regenerate with `cargo bench --bench vec_env` (the bench \
+                 rewrites this section).  An E=1 vector is asserted \
+                 trajectory-identical to a plain Env before timing."
+                    .into(),
+            ),
+        ),
+        ("n_users", Value::Num(n_users as f64)),
+        ("agents", Value::Num(agents as f64)),
+        ("obs_dim", Value::Num(OBS as f64)),
+        ("reps", Value::Num(reps as f64)),
+        (
+            "runs",
+            Value::Arr(
+                runs.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("envs", Value::Num(r.envs as f64)),
+                            ("workers", Value::Num(r.workers as f64)),
+                            ("state_assembly_s", Value::Num(r.assembly_s)),
+                            ("rollout_steps_per_s", Value::Num(r.steps_per_s)),
+                            ("episodes", Value::Num(r.episodes as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match write_bench_section("BENCH_partition.json", "vec_env", section) {
+        Ok(path) => println!("[wrote {path}]"),
+        Err(e) => eprintln!("could not write BENCH_partition.json: {e}"),
+    }
+}

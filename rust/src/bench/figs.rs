@@ -51,8 +51,7 @@ pub fn train_policies<'c>(
     Ok(TrainedPolicies { drlgo, ptom })
 }
 
-pub const METHODS: [Method; 4] =
-    [Method::Drlgo, Method::Ptom, Method::Greedy, Method::Random];
+pub const METHODS: [Method; 4] = [Method::Drlgo, Method::Ptom, Method::Greedy, Method::Random];
 
 /// Average system cost of `method` over `reps` fresh scenarios.
 #[allow(clippy::too_many_arguments)]
@@ -102,8 +101,7 @@ pub fn dynamic_cost_figure(dataset: &str) -> crate::Result<()> {
     for users in [50, 100, 150, 200, 250, 300] {
         let mut row = vec![users.to_string()];
         for method in METHODS {
-            let (c, _) =
-                avg_cost(&ctrl, &mut pol, method, dataset, users, 6 * users, reps, 42)?;
+            let (c, _) = avg_cost(&ctrl, &mut pol, method, dataset, users, 6 * users, reps, 42)?;
             row.push(format!("{c:.3}"));
         }
         ta.row(row);

@@ -8,7 +8,10 @@
 //!    Policy rollouts ride the environment's incremental observation
 //!    engine (see [`crate::drl::env`]): per-step states are O(M·OBS)
 //!    copies, with the static feature table refreshed only when the
-//!    topology changes (`Env::mutate` / `Env::recut`).
+//!    topology changes (`Env::mutate` / `Env::recut`).  Training
+//!    rolls out on a [`crate::drl::vec_env::VecEnv`] — E episode
+//!    slots of the sampled scenario stepped as a batch, each with its
+//!    own churn stream (`--envs E`).
 //! 4. **Dispatch** each subgraph's tasks to its edge server and run
 //!    distributed GNN inference (serving layer), accounting all costs
 //!    (Eqs. 12–13).
@@ -21,7 +24,9 @@ use std::collections::BTreeMap;
 
 use anyhow::Context;
 
-use crate::drl::{baselines, Env, EnvConfig, MaddpgConfig, MaddpgTrainer, Method, PpoConfig, PpoTrainer};
+use crate::drl::{
+    baselines, Env, EnvConfig, MaddpgConfig, MaddpgTrainer, Method, PpoConfig, PpoTrainer,
+};
 use crate::graph::Dataset;
 use crate::net::cost::CostBreakdown;
 use crate::net::SystemParams;
@@ -126,6 +131,12 @@ impl Controller {
     }
 
     /// Train DRLGO (or the DRL-only ablation) on a dataset sample.
+    ///
+    /// The sampled scenario is replicated into `cfg.envs` vectorized
+    /// episode slots ([`crate::drl::VecEnv`]) and trained with one
+    /// batched `select_actions`/`train_step` round per vector step;
+    /// the returned [`Env`] is slot 0's final scenario, ready for
+    /// [`Controller::run_scenario`].
     pub fn train_drlgo(
         &self,
         dataset: &str,
@@ -134,7 +145,11 @@ impl Controller {
         n_assocs: usize,
         cfg: &MaddpgConfig,
     ) -> crate::Result<(MaddpgTrainer<'_>, Env, Vec<crate::drl::maddpg::EpisodeStats>)> {
-        let method = if ablation { Method::DrlOnly } else { Method::Drlgo };
+        let method = if ablation {
+            Method::DrlOnly
+        } else {
+            Method::Drlgo
+        };
         let mut rng = Rng::seed_from(cfg.seed);
         let mut env = self.make_env(method, dataset, n_users, n_assocs, &mut rng)?;
         if ablation {
@@ -143,12 +158,13 @@ impl Controller {
             env.recut();
             env.reset();
         }
-        let mut trainer = MaddpgTrainer::new(&self.rt, 100_000)?;
+        let mut trainer = MaddpgTrainer::new(&self.rt, cfg.replay_cap)?;
         let curve = trainer.train(&mut env, cfg)?;
         Ok((trainer, env, curve))
     }
 
-    /// Train the PTOM baseline.
+    /// Train the PTOM baseline (vectorized like
+    /// [`Controller::train_drlgo`], over `cfg.envs` episode slots).
     pub fn train_ptom(
         &self,
         dataset: &str,

@@ -1,9 +1,12 @@
 //! Non-learning baselines of §6.1: GM (greedy nearest server) and RM
-//! (uniform random server).
+//! (uniform random server) — single-env, plus batched variants that
+//! evaluate every slot of a [`VecEnv`] concurrently.
 
+use crate::net::cost::CostBreakdown;
 use crate::util::rng::Rng;
 
 use super::env::Env;
+use super::vec_env::VecEnv;
 
 /// GM: offload every user to the nearest edge server that still has
 /// capacity (falling back to nearest overall).
@@ -39,6 +42,24 @@ pub fn run_random(env: &mut Env, rng: &mut Rng) {
     }
 }
 
+/// Batched GM: run the greedy policy to completion in every slot of
+/// the vector (fanned out across its worker threads) and return the
+/// per-slot evaluated cost.  Slots are neither churned nor counted as
+/// training episodes — this is the evaluation rollout.
+pub fn run_greedy_vec(venv: &mut VecEnv) -> Vec<CostBreakdown> {
+    venv.evaluate_with(|_, env| run_greedy(env))
+}
+
+/// Batched RM: like [`run_greedy_vec`] but with uniform random
+/// placement; slot `i` draws from `Rng::seed_from(seed + i)` so the
+/// result is deterministic and worker-count independent.
+pub fn run_random_vec(venv: &mut VecEnv, seed: u64) -> Vec<CostBreakdown> {
+    venv.evaluate_with(|i, env| {
+        let mut rng = Rng::seed_from(seed.wrapping_add(i as u64));
+        run_random(env, &mut rng);
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,6 +89,38 @@ mod tests {
         run_random(&mut env, &mut rng);
         assert!(env.finished());
         assert!(env.offload.all_assigned(&env.users.active_users()));
+    }
+
+    #[test]
+    fn vec_baselines_match_their_single_env_runs() {
+        // Batched evaluation is the same policy per slot: a 3-slot
+        // vector (no churn yet, so all slots share the scenario) must
+        // produce exactly the single-env greedy cost in every slot,
+        // and stay identical across worker counts.
+        use crate::drl::vec_env::VecEnv;
+        let mut single = small_env(14);
+        run_greedy(&mut single);
+        let expected = single.evaluate().total();
+        for workers in [1usize, 3] {
+            let proto = small_env(14);
+            let mut venv = VecEnv::replicate(&proto, 3, 77);
+            venv.set_workers(workers);
+            let costs = run_greedy_vec(&mut venv);
+            assert_eq!(costs.len(), 3);
+            for c in &costs {
+                assert!((c.total() - expected).abs() < 1e-12, "greedy cost diverged");
+            }
+        }
+        // Random: deterministic per slot seed, independent of workers.
+        let proto = small_env(14);
+        let mut a = VecEnv::replicate(&proto, 3, 77);
+        let mut b = VecEnv::replicate(&proto, 3, 77);
+        b.set_workers(3);
+        let ca = run_random_vec(&mut a, 9);
+        let cb = run_random_vec(&mut b, 9);
+        for (x, y) in ca.iter().zip(&cb) {
+            assert_eq!(x.total().to_bits(), y.total().to_bits());
+        }
     }
 
     #[test]

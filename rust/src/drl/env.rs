@@ -8,7 +8,7 @@
 //! adds the subgraph-split penalty R_sp = ζ·N_s/N_c (Eq. 25) that
 //! pushes users of one HiCut subgraph onto one server.
 //!
-//! Observation layout (OBS = 18 per agent, all values normalized to
+//! Observation layout (OBS = 21 per agent, all values normalized to
 //! ~[0, 1]; mirrored by `python/compile/drl.py::OBS`):
 //!
 //! | idx | meaning                                        | class   |
@@ -29,6 +29,9 @@
 //! | 15  | est. upload time / 0.1 s                       | static  |
 //! | 16  | est. compute time / 0.01 s                     | static  |
 //! | 17  | fraction of user's placed neighbors on m       | dynamic |
+//! | 18  | repair fraction of the last layout maintenance | maint   |
+//! | 19  | cut drift vs the monitor's reference cut       | maint   |
+//! | 20  | re-cut intensity of the last maintenance batch | maint   |
 //!
 //! # The incremental observation engine
 //!
@@ -49,17 +52,41 @@
 //!   update when it places a user, instead of `obs` re-scanning the
 //!   neighborhood per agent and `remaining` re-scanning the whole
 //!   iteration order.
+//! * **Maintenance features** (`maint` rows above) describe the last
+//!   layout-maintenance batch — the [`RepairStats`] of the most recent
+//!   incremental `mutate`.  obs\[18\] is the fraction of users the
+//!   repair touched (joins, departures, refinement migrations and
+//!   region re-cut vertices over N), obs\[19\] the relative cut drift
+//!   above the drift monitor's reference cut, and obs\[20\] the re-cut
+//!   intensity (1 for a full-HiCut fallback, else local regions / 8,
+//!   both clamped to \[0, 1\]).  They are identical for every agent,
+//!   constant within an episode, and **zero whenever incremental
+//!   maintenance is off** — the policy sees how much the layout under
+//!   its feet just moved, without paying anything per step.
 //!
 //! With that split, `state()` is a straight O(M·OBS) copy.
 //!
 //! **Invalidation rules.**  Every layout-changing path (`recut`,
 //! `mutate`, `enable_incremental`) funnels through
-//! `install_partition`, which rebuilds the static table and recomputes
-//! the dynamic counters from scratch; `reset` re-derives the counters
-//! for the fresh episode.  Code that mutates `env.users` directly
+//! `install_partition`, which rebuilds the static table, recomputes
+//! the dynamic counters from scratch and refreshes the cached
+//! maintenance slots; `disable_incremental` zeroes the maintenance
+//! slots in place; `reset` re-derives the dynamic counters for the
+//! fresh episode.  Code that mutates `env.users` directly
 //! (e.g. `scatter_users` in the figure benches) must call
 //! [`Env::recut`] afterwards — exactly the call it already needs for
 //! the layout itself to be refreshed.
+//!
+//! **Vectorized rollout.**  [`crate::drl::vec_env::VecEnv`] replicates
+//! one environment into E independent episode slots: the scenario
+//! (dataset sample, topology, link draws, system parameters) is shared
+//! by cloning and never mutated in place across slots — each slot owns
+//! its `Env`, its churn RNG stream and therefore its own `ObsState`,
+//! so per-slot stepping parallelizes without any cross-slot
+//! invalidation.  The sharing rule is exactly the invalidation rule
+//! above, applied per slot: a slot's caches are refreshed by *its own*
+//! `mutate`/`recut`/`reset`, and nothing a sibling slot does can touch
+//! them.
 //!
 //! The pre-engine implementation survives as [`Env::obs_recompute`] /
 //! [`Env::state_recompute`]; `tests/properties.rs` proves the cached
@@ -77,7 +104,11 @@ use crate::partition::{hicut, parallel_hicut, Partition};
 use crate::util::rng::Rng;
 
 /// Per-agent observation width (must equal drl.py::OBS).
-pub const OBS: usize = 18;
+pub const OBS: usize = 21;
+
+/// Normalizer for the obs\[20\] re-cut intensity: local re-cut batches
+/// of this many regions (or more) saturate the slot at 1.
+const RECUT_NORM: f32 = 8.0;
 
 /// Environment construction knobs.
 #[derive(Clone, Debug)]
@@ -135,17 +166,21 @@ pub struct StepOutcome {
 /// * `placed[u]` — active, already-placed neighbors of `u`,
 /// * `placed_here[u·M + m]` — the subset of those on server `m`,
 /// * `remaining` — active users at or after the episode cursor
-///   (obs\[14\]'s numerator, *including* the current user).
-#[derive(Debug, Default)]
+///   (obs\[14\]'s numerator, *including* the current user),
+/// * `repair` — the three maintenance slots (obs\[18..21\]), derived
+///   from the last [`RepairStats`] on every layout install.
+#[derive(Clone, Debug, Default)]
 struct ObsState {
     /// `capacity × M` static feature templates, row `u·M + m`.
     templates: Vec<[f32; OBS]>,
     placed: Vec<u32>,
     placed_here: Vec<u32>,
     remaining: usize,
+    repair: [f32; 3],
 }
 
 /// The environment.
+#[derive(Clone)]
 pub struct Env {
     pub cfg: EnvConfig,
     /// GNN architecture whose compute profile drives Eqs. 10–11.
@@ -186,18 +221,12 @@ pub struct Env {
 
 impl Env {
     /// Build a fresh environment from a dataset sample.
-    pub fn new(
-        dataset: &Dataset,
-        params: SystemParams,
-        cfg: EnvConfig,
-        rng: &mut Rng,
-    ) -> Self {
+    pub fn new(dataset: &Dataset, params: SystemParams, cfg: EnvConfig, rng: &mut Rng) -> Self {
         let scenario = sample_scenario(dataset, cfg.n_users, cfg.n_assocs, rng);
         let net = EdgeNetwork::build(&params, cfg.n_users, rng);
         let links = UserLinks::draw(&params, cfg.n_users, net.len(), rng);
         let task_mb: Vec<f64> = (0..cfg.n_users).map(|_| dataset.task_mbit(0)).collect();
-        let users =
-            DynamicGraph::new(scenario.graph.clone(), task_mb, params.plane_m, rng);
+        let users = DynamicGraph::new(scenario.graph.clone(), task_mb, params.plane_m, rng);
         let layer_dims = vec![dataset.feat_dim.min(1500), 64, dataset.classes];
         let mut env = Env {
             cfg,
@@ -293,11 +322,14 @@ impl Env {
     }
 
     /// Back to full-recut maintenance: drop the partitioner and stop
-    /// recording deltas (the journal is cleared).
+    /// recording deltas (the journal is cleared).  The maintenance
+    /// observation slots (obs\[18..21\]) are zeroed in place — they
+    /// describe incremental repair, which no longer runs.
     pub fn disable_incremental(&mut self) {
         self.incremental = None;
         self.last_repair = None;
         self.users.record_deltas(false);
+        self.obs_state.repair = [0.0; 3];
     }
 
     /// Layout-maintenance telemetry: `(full_recuts, local_recuts,
@@ -329,11 +361,34 @@ impl Env {
         self.subgraph_size = partition.subgraphs.iter().map(|s| s.len()).collect();
         // Iterate subgraph by subgraph so colocation is learnable.
         self.order = partition.subgraphs.iter().flatten().copied().collect();
-        self.sub_server_count =
-            vec![vec![0; self.net.len()]; partition.subgraphs.len()];
+        self.sub_server_count = vec![vec![0; self.net.len()]; partition.subgraphs.len()];
         self.sub_offloaded = vec![0; partition.subgraphs.len()];
         self.rebuild_obs_statics();
         self.recompute_obs_dynamics();
+        self.obs_state.repair = self.repair_slots_now();
+    }
+
+    /// The maintenance observation slots (obs\[18..21\]), computed from
+    /// scratch off [`Env::last_repair`]: all-zero unless incremental
+    /// maintenance is enabled *and* a repair has run.  Shared by the
+    /// cache refresh in `install_partition` and the
+    /// [`Env::obs_recompute`] reference path, so the two stay
+    /// bit-identical by construction.
+    fn repair_slots_now(&self) -> [f32; 3] {
+        if self.incremental.is_none() {
+            return [0.0; 3];
+        }
+        let Some(st) = self.last_repair else { return [0.0; 3] };
+        let n = self.cfg.n_users.max(1) as f32;
+        let touched = (st.joined + st.left + st.refine_moves + st.region_vertices) as f32;
+        let reference = st.reference_cut.max(1) as f32;
+        let drift = ((st.cut_edges as f32 - reference) / reference).clamp(0.0, 1.0);
+        let recut = if st.full_recut {
+            1.0
+        } else {
+            (st.regions as f32 / RECUT_NORM).min(1.0)
+        };
+        [(touched / n).min(1.0), drift, recut]
     }
 
     /// (Re)build the static per-(user, server) observation table: one
@@ -361,7 +416,11 @@ impl Env {
             let deg = self.users.active_degree(u) as f32 / 20.0;
             let task = self.users.task_mb(u);
             let sg = self.subgraph_of[u];
-            let sg_size = if sg == usize::MAX { 1 } else { self.subgraph_size[sg] };
+            let sg_size = if sg == usize::MAX {
+                1
+            } else {
+                self.subgraph_size[sg]
+            };
             for (m, server) in self.net.servers.iter().enumerate() {
                 let rate = cm.uplink_rate(u, m);
                 let o = &mut templates[u * m_agents + m];
@@ -527,17 +586,24 @@ impl Env {
         } else {
             0.0
         };
+        o[18..].copy_from_slice(&self.obs_state.repair);
         o
     }
 
     /// Global state S (Eq. 19): concatenated agent observations.
     pub fn state(&self) -> Vec<f32> {
-        let m_agents = self.agents();
-        let mut out = Vec::with_capacity(m_agents * OBS);
-        for m in 0..m_agents {
+        let mut out = Vec::with_capacity(self.agents() * OBS);
+        self.state_into(&mut out);
+        out
+    }
+
+    /// Append the global state to `out` (the allocation-free form of
+    /// [`Env::state`] — the vectorized environment assembles its
+    /// `E × M × OBS` batch through this).
+    pub fn state_into(&self, out: &mut Vec<f32>) {
+        for m in 0..self.agents() {
             out.extend_from_slice(&self.obs(m));
         }
-        out
     }
 
     /// From-scratch reference for [`Env::obs`] — the pre-engine
@@ -553,7 +619,11 @@ impl Env {
         let pos = self.users.pos(u);
         let server = &self.net.servers[m];
         let sg = self.subgraph_of[u];
-        let sg_size = if sg == usize::MAX { 1 } else { self.subgraph_size[sg] };
+        let sg_size = if sg == usize::MAX {
+            1
+        } else {
+            self.subgraph_size[sg]
+        };
         let n = self.cfg.n_users as f32;
         let rate = cm.uplink_rate(u, m);
 
@@ -593,7 +663,12 @@ impl Env {
                 }
             }
         }
-        o[17] = if placed > 0.0 { placed_here / placed } else { 0.0 };
+        o[17] = if placed > 0.0 {
+            placed_here / placed
+        } else {
+            0.0
+        };
+        o[18..].copy_from_slice(&self.repair_slots_now());
         o
     }
 
@@ -980,14 +1055,78 @@ mod tests {
             assert_eq!(env.subgraph_of.len(), env.users.capacity());
             let active: std::collections::HashSet<usize> =
                 env.users.active_users().into_iter().collect();
-            let in_order: std::collections::HashSet<usize> =
-                env.order.iter().copied().collect();
+            let in_order: std::collections::HashSet<usize> = env.order.iter().copied().collect();
             assert_eq!(active, in_order);
             env.reset();
             while !env.finished() {
                 env.step(0);
             }
         }
+    }
+
+    #[test]
+    fn repair_slots_zero_without_incremental_maintenance() {
+        // The maintenance observations (obs[18..21]) describe delta
+        // repair; in full-recut mode they must stay exactly zero
+        // through arbitrary churn/step interleavings.
+        let mut env = small_env(31);
+        let mut rng = Rng::seed_from(32);
+        for _ in 0..3 {
+            env.mutate(&mut rng);
+            env.reset();
+            for _ in 0..5 {
+                if env.finished() {
+                    break;
+                }
+                for m in 0..env.agents() {
+                    let o = env.obs(m);
+                    assert_eq!(&o[18..], &[0.0f32; 3], "maint slots leaked");
+                }
+                env.step(0);
+            }
+        }
+    }
+
+    #[test]
+    fn repair_slots_refresh_after_incremental_mutate() {
+        let mut env = small_env(33);
+        env.enable_incremental(crate::partition::IncrementalConfig::default());
+        // Enabled but no repair yet: still zero.
+        assert_eq!(&env.obs(0)[18..], &[0.0f32; 3]);
+        let mut rng = Rng::seed_from(34);
+        let mut saw_touch = false;
+        for _ in 0..6 {
+            env.mutate(&mut rng);
+            env.reset();
+            let st = env.last_repair.expect("incremental mutate must report");
+            let o = env.obs(0);
+            // Every agent sees the same maintenance slots.
+            for m in 1..env.agents() {
+                assert_eq!(&env.obs(m)[18..], &o[18..]);
+            }
+            let touched = st.joined + st.left + st.refine_moves + st.region_vertices;
+            if touched > 0 {
+                saw_touch = true;
+                assert!(o[18] > 0.0, "repair touched {touched} users but obs[18] == 0");
+            } else {
+                assert_eq!(o[18], 0.0);
+            }
+            if st.full_recut || st.regions > 0 {
+                assert!(o[20] > 0.0, "re-cuts ran but obs[20] == 0");
+            }
+            for v in &o[18..] {
+                assert!((0.0..=1.0).contains(v), "maint slot out of range: {v}");
+            }
+            // The cached slots match the from-scratch reference bit
+            // for bit (the property tests cover full interleavings).
+            let r = env.obs_recompute(0);
+            assert_eq!(&o[18..], &r[18..]);
+        }
+        assert!(saw_touch, "churn never produced a repair — test is vacuous");
+        // Disabling zeroes the slots in place.
+        env.disable_incremental();
+        assert_eq!(&env.obs(0)[18..], &[0.0f32; 3]);
+        assert_eq!(&env.obs_recompute(0)[18..], &[0.0f32; 3]);
     }
 
     #[test]

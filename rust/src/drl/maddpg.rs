@@ -11,6 +11,15 @@
 //! `explore_sigma` added to actions and clipped to [0, 1].  Each
 //! episode first churns the scenario (Algorithm 2 line 8), re-runs
 //! HiCut, then offloads users one by one.
+//!
+//! Training consumes **vectorized rollouts**: [`MaddpgTrainer::train`]
+//! replicates the environment into `MaddpgConfig::envs` episode slots
+//! (a [`VecEnv`]) and [`MaddpgTrainer::train_vec`] drives one
+//! `select_actions` round and at most one `train_step` per *vector*
+//! step, pushing the transitions of all E episodes into the shared
+//! replay buffer.  Finished slots auto-reset (churn + fresh episode)
+//! so the batch never shrinks; E = 1 reproduces the classic
+//! one-episode-at-a-time loop.
 
 use std::sync::Arc;
 
@@ -22,6 +31,7 @@ use crate::util::rng::Rng;
 
 use super::env::{Env, OBS};
 use super::replay::{Replay, Transition};
+use super::vec_env::VecEnv;
 
 /// Training configuration (defaults follow Table 2 / §6.1).
 #[derive(Clone, Debug)]
@@ -36,6 +46,9 @@ pub struct MaddpgConfig {
     pub replay_cap: usize,
     /// Churn the scenario between episodes (dynamic training, Fig. 11).
     pub churn: bool,
+    /// Parallel episode slots per vector step (`--envs`; 1 = the
+    /// classic single-episode loop).
+    pub envs: usize,
     pub seed: u64,
 }
 
@@ -48,6 +61,7 @@ impl Default for MaddpgConfig {
             explore_sigma: 0.1,
             replay_cap: 100_000,
             churn: true,
+            envs: 1,
             seed: 0xD71,
         }
     }
@@ -169,6 +183,30 @@ impl<'rt> MaddpgTrainer<'rt> {
         Ok(result)
     }
 
+    /// π(O) for all agents of all E slots in one round: `states` is
+    /// the `E × M × OBS` batch matrix a [`VecEnv`] assembles (each
+    /// slot's state *is* its concatenated observations, Eq. 19).  One
+    /// actor forward per slot against the cached parameter literal.
+    pub fn select_actions_batch(
+        &mut self,
+        states: &[f32],
+        envs: usize,
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> crate::Result<Vec<Vec<[f32; 2]>>> {
+        let per = self.m * OBS;
+        anyhow::ensure!(
+            states.len() == envs * per,
+            "batch states {} != {envs} slots x {per}",
+            states.len()
+        );
+        let mut out = Vec::with_capacity(envs);
+        for i in 0..envs {
+            out.push(self.select_actions(&states[i * per..(i + 1) * per], sigma, rng)?);
+        }
+        Ok(out)
+    }
+
     /// One MADDPG update on a replay mini-batch (Algorithm 2 l.15–20).
     pub fn train_step(&mut self, rng: &mut Rng) -> crate::Result<(f64, f64)> {
         let b = self.replay.sample(self.batch, rng);
@@ -263,28 +301,87 @@ impl<'rt> MaddpgTrainer<'rt> {
     }
 
     /// Full training run; returns the per-episode reward curve
-    /// (Fig. 11's DRLGO series).
-    pub fn train(
+    /// (Fig. 11's DRLGO series).  Replicates `env` into
+    /// `cfg.envs` vectorized episode slots, trains via
+    /// [`MaddpgTrainer::train_vec`], and leaves `env` holding slot 0's
+    /// final scenario so downstream evaluation keeps working.
+    pub fn train(&mut self, env: &mut Env, cfg: &MaddpgConfig) -> crate::Result<Vec<EpisodeStats>> {
+        let mut venv = VecEnv::replicate(env, cfg.envs.max(1), cfg.seed);
+        let curve = self.train_vec(&mut venv, cfg)?;
+        *env = venv.into_first();
+        Ok(curve)
+    }
+
+    /// The vectorized training loop: one batched action-selection
+    /// round and at most one gradient step per *vector* step, with the
+    /// transitions of all E slots pushed into the shared replay
+    /// buffer.  Runs until `cfg.episodes` episodes have completed
+    /// across the batch (auto-reset keeps every slot live).
+    pub fn train_vec(
         &mut self,
-        env: &mut Env,
+        venv: &mut VecEnv,
         cfg: &MaddpgConfig,
     ) -> crate::Result<Vec<EpisodeStats>> {
+        anyhow::ensure!(
+            venv.agents() == self.m,
+            "vec env has {} agents, manifest wants {}",
+            venv.agents(),
+            self.m
+        );
         let mut rng = Rng::seed_from(cfg.seed);
-        let mut curve = Vec::with_capacity(cfg.episodes);
-        for ep in 0..cfg.episodes {
-            if cfg.churn && ep > 0 {
-                env.mutate(&mut rng);
+        venv.set_churn(cfg.churn);
+        venv.reset_all();
+        let e = venv.len();
+        let sd = self.m * OBS;
+        let mut curve: Vec<EpisodeStats> = Vec::with_capacity(cfg.episodes);
+        let mut ep_reward = vec![0.0f64; e];
+        let mut ep_steps = vec![0usize; e];
+        let mut states = venv.states();
+        let mut vstep = 0usize;
+        while curve.len() < cfg.episodes {
+            let actions = self.select_actions_batch(&states, e, cfg.explore_sigma, &mut rng)?;
+            let results = venv.step(&actions);
+            vstep += 1;
+            for (i, res) in results.iter().enumerate() {
+                let s = states[i * sd..(i + 1) * sd].to_vec();
+                ep_reward[i] += res.outcome.rewards.iter().sum::<f64>();
+                ep_steps[i] += 1;
+                self.replay.push(Transition {
+                    s: s.clone(),
+                    a: actions[i].iter().flat_map(|a| a.iter().copied()).collect(),
+                    r: res.outcome.rewards.iter().map(|&r| r as f32).collect(),
+                    s2: res.next_state.clone(),
+                    done: res.outcome.done.iter().map(|&d| d as u8 as f32).collect(),
+                    obs: s,
+                    obs2: res.next_state.clone(),
+                });
+                if res.reset {
+                    let stats = EpisodeStats {
+                        episode: curve.len(),
+                        reward: ep_reward[i],
+                        system_cost: res.terminal_cost,
+                        critic_loss: self.losses.0,
+                        actor_loss: self.losses.1,
+                        steps: ep_steps[i],
+                    };
+                    log::debug!(
+                        "maddpg ep {} (slot {i}): reward {:.3} cost {:.3} closs {:.4}",
+                        stats.episode,
+                        stats.reward,
+                        stats.system_cost,
+                        stats.critic_loss
+                    );
+                    curve.push(stats);
+                    ep_reward[i] = 0.0;
+                    ep_steps[i] = 0;
+                }
             }
-            let mut stats = self.run_episode(env, cfg, true, &mut rng)?;
-            stats.episode = ep;
-            log::debug!(
-                "maddpg ep {ep}: reward {:.3} cost {:.3} closs {:.4}",
-                stats.reward,
-                stats.system_cost,
-                stats.critic_loss
-            );
-            curve.push(stats);
+            if self.replay.len() >= cfg.warmup && vstep % cfg.train_every == 0 {
+                self.train_step(&mut rng)?;
+            }
+            states = venv.states();
         }
+        curve.truncate(cfg.episodes);
         Ok(curve)
     }
 

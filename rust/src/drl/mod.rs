@@ -4,13 +4,17 @@
 //!   global state, two-dimensional agent actions, the cost-based
 //!   reward with the subgraph-colocation term R_sp (Eq. 25), and the
 //!   user-by-user episode protocol of Algorithm 2.
+//! * [`vec_env`] — E independent episodes of one shared scenario
+//!   stepped as a batch, with per-slot churn streams, thread fan-out
+//!   and auto-reset (the layer the training loops roll out on).
 //! * [`replay`] — experience replay buffer D.
 //! * [`maddpg`] — DRLGO: the MADDPG trainer driving the AOT-compiled
-//!   `actor_fwd` / `maddpg_train` executables, plus greedy policy
-//!   execution for evaluation.
+//!   `actor_fwd` / `maddpg_train` executables over vectorized
+//!   rollouts, plus greedy policy execution for evaluation.
 //! * [`ppo`] — PTOM: the single-agent PPO baseline (global state, no
-//!   HiCut, no R_sp).
-//! * [`baselines`] — GM (nearest server) and RM (random server).
+//!   HiCut, no R_sp), also trained on vectorized rollouts.
+//! * [`baselines`] — GM (nearest server) and RM (random server),
+//!   single-env and batched.
 //!
 //! Everything numeric runs through PJRT; this module owns only control
 //! flow, the environment and the buffers.
@@ -20,10 +24,12 @@ pub mod env;
 pub mod maddpg;
 pub mod ppo;
 pub mod replay;
+pub mod vec_env;
 
 pub use env::{Env, EnvConfig, StepOutcome};
 pub use maddpg::{MaddpgConfig, MaddpgTrainer};
 pub use ppo::{PpoConfig, PpoTrainer};
+pub use vec_env::{VecEnv, VecStep};
 
 /// Offloading method identifiers used across benches and the CLI.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

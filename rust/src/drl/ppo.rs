@@ -8,6 +8,13 @@
 //! The math lives in two AOT executables: `ppo_fwd` (logits + value)
 //! and `ppo_train` (one clipped-surrogate epoch on a fixed horizon of
 //! 256 steps).  GAE(γ = 0.99, λ = 0.95) is computed host-side.
+//!
+//! Training consumes **vectorized rollouts** ([`PpoTrainer::train`] /
+//! [`PpoTrainer::train_vec`]): E episode slots of a [`VecEnv`] step
+//! together, one policy-selection round per vector step, while each
+//! slot fills its *own* horizon buffer — GAE's recurrence runs over a
+//! single trajectory, so interleaving slots into one buffer would
+//! corrupt the advantages.  E = 1 reproduces the classic loop.
 
 use std::sync::Arc;
 
@@ -16,6 +23,7 @@ use crate::util::rng::Rng;
 
 use super::env::Env;
 use super::maddpg::EpisodeStats;
+use super::vec_env::VecEnv;
 
 #[derive(Clone, Debug)]
 pub struct PpoConfig {
@@ -25,6 +33,9 @@ pub struct PpoConfig {
     pub gamma: f64,
     pub lam: f64,
     pub churn: bool,
+    /// Parallel episode slots per vector step (`--envs`; 1 = the
+    /// classic single-episode loop).
+    pub envs: usize,
     pub seed: u64,
 }
 
@@ -36,6 +47,7 @@ impl Default for PpoConfig {
             gamma: 0.99,
             lam: 0.95,
             churn: true,
+            envs: 1,
             seed: 0x990,
         }
     }
@@ -77,7 +89,6 @@ pub struct PpoTrainer<'rt> {
     m_p: Vec<f32>,
     v_p: Vec<f32>,
     step: f32,
-    roll: Rollout,
     _rt: std::marker::PhantomData<&'rt Runtime>,
 }
 
@@ -101,15 +112,18 @@ impl<'rt> PpoTrainer<'rt> {
             v_p: vec![0.0; params.len()],
             params,
             step: init.get("ppo_step")?.f32_data[0],
-            roll: Rollout::default(),
             _rt: std::marker::PhantomData,
         })
     }
 
     /// Sample an action from the categorical policy; returns
     /// (action, log-prob, value).
-    pub fn select(&self, state: &[f32], rng: &mut Rng, greedy: bool)
-        -> crate::Result<(usize, f32, f32)> {
+    pub fn select(
+        &self,
+        state: &[f32],
+        rng: &mut Rng,
+        greedy: bool,
+    ) -> crate::Result<(usize, f32, f32)> {
         let p = lit(&[self.params.len()], &self.params)?;
         let s = lit(&[1, self.state_dim], state)?;
         let out = self.fwd.run_borrowed(&[&p, &s])?;
@@ -144,10 +158,39 @@ impl<'rt> PpoTrainer<'rt> {
         Ok((action, probs[action].max(1e-12).ln(), value))
     }
 
-    /// Run one PPO update over the stored horizon (must be full).
-    fn update(&mut self, epochs: usize, gamma: f64, lam: f64, last_value: f32)
-        -> crate::Result<(f64, f64)> {
-        let t = self.roll.len();
+    /// Sample actions for all E slots of a batch state matrix in one
+    /// round; returns per-slot `(action, log-prob, value)`.
+    pub fn select_batch(
+        &self,
+        states: &[f32],
+        envs: usize,
+        rng: &mut Rng,
+        greedy: bool,
+    ) -> crate::Result<Vec<(usize, f32, f32)>> {
+        anyhow::ensure!(
+            states.len() == envs * self.state_dim,
+            "batch states {} != {envs} slots x {}",
+            states.len(),
+            self.state_dim
+        );
+        let mut out = Vec::with_capacity(envs);
+        for i in 0..envs {
+            let s = &states[i * self.state_dim..(i + 1) * self.state_dim];
+            out.push(self.select(s, rng, greedy)?);
+        }
+        Ok(out)
+    }
+
+    /// Run one PPO update over a filled horizon buffer (consumed).
+    fn update(
+        &mut self,
+        roll: &mut Rollout,
+        epochs: usize,
+        gamma: f64,
+        lam: f64,
+        last_value: f32,
+    ) -> crate::Result<(f64, f64)> {
+        let t = roll.len();
         debug_assert_eq!(t, self.horizon);
         // GAE advantages + returns.
         let mut adv = vec![0.0f32; t];
@@ -156,18 +199,21 @@ impl<'rt> PpoTrainer<'rt> {
         for i in (0..t).rev() {
             let next_v = if i + 1 < t {
                 // value bootstrap is zeroed across episode boundaries
-                if self.roll.dones[i] > 0.5 { 0.0 } else { self.roll.values[i + 1] as f64 }
-            } else if self.roll.dones[i] > 0.5 {
+                if roll.dones[i] > 0.5 {
+                    0.0
+                } else {
+                    roll.values[i + 1] as f64
+                }
+            } else if roll.dones[i] > 0.5 {
                 0.0
             } else {
                 last_value as f64
             };
-            let nonterminal = if self.roll.dones[i] > 0.5 { 0.0 } else { 1.0 };
-            let delta =
-                self.roll.rewards[i] as f64 + gamma * next_v - self.roll.values[i] as f64;
+            let nonterminal = if roll.dones[i] > 0.5 { 0.0 } else { 1.0 };
+            let delta = roll.rewards[i] as f64 + gamma * next_v - roll.values[i] as f64;
             gae = delta + gamma * lam * nonterminal * gae;
             adv[i] = gae as f32;
-            ret[i] = adv[i] + self.roll.values[i];
+            ret[i] = adv[i] + roll.values[i];
         }
         // Normalize advantages.
         let mean = adv.iter().sum::<f32>() / t as f32;
@@ -177,7 +223,7 @@ impl<'rt> PpoTrainer<'rt> {
             *a = (*a - mean) / std;
         }
         let mut onehot = vec![0.0f32; t * self.actions];
-        for (i, &a) in self.roll.actions.iter().enumerate() {
+        for (i, &a) in roll.actions.iter().enumerate() {
             onehot[i * self.actions + a] = 1.0;
         }
         let (mut pl, mut vl) = (0.0, 0.0);
@@ -187,9 +233,9 @@ impl<'rt> PpoTrainer<'rt> {
                 lit(&[self.params.len()], &self.m_p)?,
                 lit(&[self.params.len()], &self.v_p)?,
                 lit(&[], &[self.step])?,
-                lit(&[t, self.state_dim], &self.roll.states)?,
+                lit(&[t, self.state_dim], &roll.states)?,
                 lit(&[t, self.actions], &onehot)?,
-                lit(&[t], &self.roll.logps)?,
+                lit(&[t], &roll.logps)?,
                 lit(&[t], &adv)?,
                 lit(&[t], &ret)?,
             ];
@@ -201,59 +247,99 @@ impl<'rt> PpoTrainer<'rt> {
             pl = out[4].get_first_element::<f32>()? as f64;
             vl = out[5].get_first_element::<f32>()? as f64;
         }
-        self.roll.clear();
+        roll.clear();
         Ok((pl, vl))
     }
 
     /// Full training: episodes over a (churning) environment.
-    pub fn train(&mut self, env: &mut Env, cfg: &PpoConfig)
-        -> crate::Result<Vec<EpisodeStats>> {
+    /// Replicates `env` into `cfg.envs` vectorized slots, trains via
+    /// [`PpoTrainer::train_vec`], and leaves `env` holding slot 0's
+    /// final scenario.
+    pub fn train(&mut self, env: &mut Env, cfg: &PpoConfig) -> crate::Result<Vec<EpisodeStats>> {
+        let mut venv = VecEnv::replicate(env, cfg.envs.max(1), cfg.seed);
+        let curve = self.train_vec(&mut venv, cfg)?;
+        *env = venv.into_first();
+        Ok(curve)
+    }
+
+    /// The vectorized training loop: one policy-selection round per
+    /// vector step; each slot fills its own horizon buffer and updates
+    /// independently when full (GAE runs over one trajectory).  Runs
+    /// until `cfg.episodes` episodes completed across the batch.
+    pub fn train_vec(
+        &mut self,
+        venv: &mut VecEnv,
+        cfg: &PpoConfig,
+    ) -> crate::Result<Vec<EpisodeStats>> {
+        anyhow::ensure!(
+            venv.state_dim() == self.state_dim,
+            "vec env state width {} != manifest state_dim {}",
+            venv.state_dim(),
+            self.state_dim
+        );
         let mut rng = Rng::seed_from(cfg.seed);
-        let mut curve = Vec::new();
-        for ep in 0..cfg.episodes {
-            if cfg.churn && ep > 0 {
-                env.mutate(&mut rng);
+        venv.set_churn(cfg.churn);
+        venv.reset_all();
+        let e = venv.len();
+        let sd = self.state_dim;
+        let mut rolls: Vec<Rollout> = (0..e).map(|_| Rollout::default()).collect();
+        let mut ep_reward = vec![0.0f64; e];
+        let mut ep_steps = vec![0usize; e];
+        let mut curve: Vec<EpisodeStats> = Vec::with_capacity(cfg.episodes);
+        let mut states = venv.states();
+        while curve.len() < cfg.episodes {
+            let picked = self.select_batch(&states, e, &mut rng, false)?;
+            let servers: Vec<usize> = picked.iter().map(|p| p.0).collect();
+            let results = venv.step_servers(&servers);
+            for i in 0..e {
+                let res = &results[i];
+                let (a, logp, v) = picked[i];
+                let r: f64 = res.outcome.rewards.iter().sum();
+                ep_reward[i] += r;
+                ep_steps[i] += 1;
+                let roll = &mut rolls[i];
+                roll.states.extend_from_slice(&states[i * sd..(i + 1) * sd]);
+                roll.actions.push(a);
+                roll.logps.push(logp);
+                roll.values.push(v);
+                roll.rewards.push(r as f32);
+                roll.dones.push(res.outcome.finished as u8 as f32);
+                if res.reset {
+                    let stats = EpisodeStats {
+                        episode: curve.len(),
+                        reward: ep_reward[i],
+                        system_cost: res.terminal_cost,
+                        critic_loss: 0.0,
+                        actor_loss: 0.0,
+                        steps: ep_steps[i],
+                    };
+                    log::debug!(
+                        "ppo ep {} (slot {i}): reward {:.3}",
+                        stats.episode,
+                        stats.reward
+                    );
+                    curve.push(stats);
+                    ep_reward[i] = 0.0;
+                    ep_steps[i] = 0;
+                }
             }
-            env.reset();
-            let mut reward = 0.0;
-            let mut steps = 0;
-            // The post-step state serves both the horizon-boundary
-            // value bootstrap and the next iteration's policy input —
-            // one state build per env step.
-            let mut s = env.state();
-            while !env.finished() {
-                let (a, logp, v) = self.select(&s, &mut rng, false)?;
-                let out = env.step(a);
-                let r: f64 = out.rewards.iter().sum();
-                reward += r;
-                steps += 1;
-                self.roll.states.extend_from_slice(&s);
-                self.roll.actions.push(a);
-                self.roll.logps.push(logp);
-                self.roll.values.push(v);
-                self.roll.rewards.push(r as f32);
-                self.roll.dones.push(out.finished as u8 as f32);
-                let s_next = env.state();
-                if self.roll.len() == self.horizon {
-                    let last_v = if env.finished() {
+            // Horizon-boundary updates, bootstrapping from the
+            // post-step (pre-reset) state of the same vector step.
+            for i in 0..e {
+                if rolls[i].len() == self.horizon {
+                    let res = &results[i];
+                    let last_v = if res.outcome.finished {
                         0.0
                     } else {
-                        self.select(&s_next, &mut rng, false)?.2
+                        self.select(&res.next_state, &mut rng, false)?.2
                     };
-                    self.update(cfg.epochs, cfg.gamma, cfg.lam, last_v)?;
+                    let mut roll = std::mem::take(&mut rolls[i]);
+                    self.update(&mut roll, cfg.epochs, cfg.gamma, cfg.lam, last_v)?;
                 }
-                s = s_next;
             }
-            curve.push(EpisodeStats {
-                episode: ep,
-                reward,
-                system_cost: env.evaluate().total(),
-                critic_loss: 0.0,
-                actor_loss: 0.0,
-                steps,
-            });
-            log::debug!("ppo ep {ep}: reward {reward:.3}");
+            states = venv.states();
         }
+        curve.truncate(cfg.episodes);
         Ok(curve)
     }
 

@@ -110,8 +110,7 @@ mod tests {
         }
         assert_eq!(r.len(), 3);
         // Contents are {2,3,4} in some ring order.
-        let vals: std::collections::HashSet<i32> =
-            r.buf.iter().map(|x| x.s[0] as i32).collect();
+        let vals: std::collections::HashSet<i32> = r.buf.iter().map(|x| x.s[0] as i32).collect();
         assert_eq!(vals, [2, 3, 4].into_iter().collect());
     }
 
@@ -135,5 +134,60 @@ mod tests {
         let r = Replay::new(4);
         let mut rng = Rng::seed_from(0);
         r.sample(1, &mut rng);
+    }
+
+    #[test]
+    fn sample_batch_larger_than_len_resamples() {
+        // Uniform sampling is with replacement: a batch bigger than
+        // the store must still fill completely, drawing only stored
+        // transitions.
+        let mut r = Replay::new(16);
+        for i in 0..3 {
+            r.push(t(i as f32));
+        }
+        let mut rng = Rng::seed_from(7);
+        let b = r.sample(10, &mut rng);
+        assert_eq!(b.len, 10);
+        assert_eq!(b.s.len(), 10 * 4);
+        for chunk in b.s.chunks(4) {
+            assert!((0.0..=2.0).contains(&chunk[0]), "sampled unknown value");
+        }
+    }
+
+    #[test]
+    fn eviction_is_fifo_oldest_first() {
+        let mut r = Replay::new(4);
+        for i in 0..4 {
+            r.push(t(i as f32));
+        }
+        // One over capacity: exactly transition 0 must be evicted.
+        r.push(t(4.0));
+        let vals: std::collections::HashSet<i32> = r.buf.iter().map(|x| x.s[0] as i32).collect();
+        assert_eq!(vals, [1, 2, 3, 4].into_iter().collect());
+        // Two more: 1 and 2 go next, in order.
+        r.push(t(5.0));
+        r.push(t(6.0));
+        let vals: std::collections::HashSet<i32> = r.buf.iter().map(|x| x.s[0] as i32).collect();
+        assert_eq!(vals, [3, 4, 5, 6].into_iter().collect());
+        assert_eq!(r.len(), 4);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_under_a_fixed_seed() {
+        let mut r = Replay::new(32);
+        for i in 0..20 {
+            r.push(t(i as f32));
+        }
+        let mut rng_a = Rng::seed_from(0xD5);
+        let mut rng_b = Rng::seed_from(0xD5);
+        let a = r.sample(64, &mut rng_a);
+        let b = r.sample(64, &mut rng_b);
+        assert_eq!(a.s, b.s);
+        assert_eq!(a.a, b.a);
+        assert_eq!(a.obs2, b.obs2);
+        // A different stream (almost surely) draws a different batch.
+        let mut rng_c = Rng::seed_from(0xD6);
+        let c = r.sample(64, &mut rng_c);
+        assert_ne!(a.s, c.s, "independent seeds produced identical batches");
     }
 }

@@ -1,0 +1,376 @@
+//! Vectorized multi-episode environments: E independent episodes of
+//! one shared scenario, stepped as a batch.
+//!
+//! DRLGO (Algorithm 2) trains one episode at a time, which leaves the
+//! learner idle between gradient steps and samples every transition
+//! from a single churn trajectory.  [`VecEnv`] replicates one fully
+//! configured [`Env`] into `E` *episode slots*:
+//!
+//! * the **scenario is shared immutably** — every slot starts from a
+//!   clone of the same dataset sample, edge topology, link draws and
+//!   system parameters, so the batch trains one policy on one problem
+//!   instance;
+//! * each slot owns an **independent churn stream** — slot `i`'s RNG
+//!   is the `i`-th [`Rng::fork`] of `Rng::seed_from(seed)` — so after
+//!   the first auto-reset the slots diverge into E distinct dynamic
+//!   trajectories of the same scenario;
+//! * stepping **fans out across worker threads** via
+//!   [`ThreadPool::map_scoped_mut`]: each slot is visited by exactly
+//!   one worker with exclusive access, so rollouts are deterministic
+//!   and *worker-count invariant* (`tests/properties.rs` proves both,
+//!   plus that an `E = 1` vector is trajectory-identical to a plain
+//!   [`Env`]);
+//! * finished episodes **auto-reset** (churn via the slot stream, then
+//!   `reset`), so the batch never shrinks mid-rollout — the
+//!   [`VecStep`] returned for the boundary step carries the terminal
+//!   state and evaluated system cost from *before* the reset.
+//!
+//! [`VecEnv::states`] assembles the batch state as one `E × M × OBS`
+//! row-major matrix (slot-major, then agent, then feature), which is
+//! exactly the layout the batched `select_actions` paths in
+//! [`crate::drl::maddpg`] / [`crate::drl::ppo`] slice per slot.
+//!
+//! Sharing/invalidation rules are the per-slot ones documented in
+//! [`crate::drl::env`]: a slot's observation caches are refreshed by
+//! its own `mutate`/`recut`/`reset` and are untouchable by siblings —
+//! there is no cross-slot mutable state at all.
+
+use crate::drl::env::{Env, EnvConfig, StepOutcome, OBS};
+use crate::graph::geb::Dataset;
+use crate::net::cost::CostBreakdown;
+use crate::net::params::SystemParams;
+use crate::partition::incremental::IncrementalConfig;
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+/// One slot's result of a vector step.
+#[derive(Clone, Debug)]
+pub struct VecStep {
+    /// The underlying environment step.
+    pub outcome: StepOutcome,
+    /// State after the step and *before* any auto-reset — the `s2` of
+    /// the transition this step generated.
+    pub next_state: Vec<f32>,
+    /// The episode finished and the slot auto-reset (churn + reset).
+    pub reset: bool,
+    /// Evaluated total system cost of the completed offload; only
+    /// meaningful when `reset` is true.
+    pub terminal_cost: f64,
+}
+
+/// One episode slot: an environment plus its private churn stream.
+struct Slot {
+    env: Env,
+    rng: Rng,
+    episodes: usize,
+}
+
+/// A pool of E independent episodes of one shared scenario.
+pub struct VecEnv {
+    slots: Vec<Slot>,
+    /// Worker threads for per-slot fan-out (1 = caller's thread).
+    workers: usize,
+    /// Churn the slot's scenario on every auto-reset (dynamic
+    /// training, Fig. 11); off = replay the same static episode.
+    churn: bool,
+}
+
+impl VecEnv {
+    /// Replicate a prototype environment into `envs` episode slots.
+    ///
+    /// Slot `i` starts from a clone of `proto` and owns the `i`-th
+    /// [`Rng::fork`] of `Rng::seed_from(seed)` as its churn stream —
+    /// the rule the E=1 equivalence property in `tests/properties.rs`
+    /// pins down.
+    pub fn replicate(proto: &Env, envs: usize, seed: u64) -> Self {
+        assert!(envs >= 1, "vector env needs at least one episode slot");
+        let mut seeder = Rng::seed_from(seed);
+        let slots = (0..envs)
+            .map(|_| Slot { env: proto.clone(), rng: seeder.fork(), episodes: 0 })
+            .collect();
+        VecEnv { slots, workers: 1, churn: true }
+    }
+
+    /// Build a fresh prototype from a dataset sample and replicate it
+    /// (`Env::new` + [`VecEnv::replicate`] with a salted churn seed).
+    pub fn new(
+        dataset: &Dataset,
+        params: SystemParams,
+        cfg: EnvConfig,
+        envs: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::seed_from(seed);
+        let proto = Env::new(dataset, params, cfg, &mut rng);
+        Self::replicate(&proto, envs, seed ^ 0x5EED_C0DE)
+    }
+
+    /// Number of episode slots E.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Agents per slot (M; identical across slots by construction).
+    pub fn agents(&self) -> usize {
+        self.slots[0].env.agents()
+    }
+
+    /// Per-slot state width (M·OBS) — one row of the batch matrix.
+    pub fn state_dim(&self) -> usize {
+        self.agents() * OBS
+    }
+
+    /// Set the fan-out worker count (`0` = one worker per slot).  The
+    /// rollout is identical for every value; this only changes how the
+    /// slots are spread over threads.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = if workers == 0 {
+            self.slots.len()
+        } else {
+            workers.max(1)
+        };
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Churn each slot's scenario on auto-reset (default on).
+    pub fn set_churn(&mut self, churn: bool) {
+        self.churn = churn;
+    }
+
+    /// Completed episodes across all slots.
+    pub fn episodes_completed(&self) -> usize {
+        self.slots.iter().map(|s| s.episodes).sum()
+    }
+
+    pub fn env(&self, i: usize) -> &Env {
+        &self.slots[i].env
+    }
+
+    pub fn env_mut(&mut self, i: usize) -> &mut Env {
+        &mut self.slots[i].env
+    }
+
+    /// Unwrap slot 0's environment (hand the trained-on scenario back
+    /// to single-env consumers like `run_scenario`).
+    pub fn into_first(self) -> Env {
+        self.slots.into_iter().next().expect("at least one slot").env
+    }
+
+    /// Switch every slot to delta-driven layout maintenance (see
+    /// [`Env::enable_incremental`]); the maintenance observation slots
+    /// start reporting per-slot repair telemetry.
+    pub fn enable_incremental(&mut self, cfg: IncrementalConfig) {
+        for slot in &mut self.slots {
+            slot.env.enable_incremental(cfg.clone());
+        }
+    }
+
+    /// Start a fresh episode in every slot (no churn).
+    pub fn reset_all(&mut self) {
+        for slot in &mut self.slots {
+            slot.env.reset();
+        }
+    }
+
+    /// Assemble the batch state: an `E × M × OBS` row-major matrix,
+    /// slot-major.  One O(M·OBS) copy per slot off the per-slot
+    /// observation engines.
+    pub fn states(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.slots.len() * self.state_dim());
+        for slot in &self.slots {
+            slot.env.state_into(&mut out);
+        }
+        out
+    }
+
+    /// Step every slot with a joint per-agent action (Eq. 22 decode),
+    /// one action matrix per slot.
+    pub fn step(&mut self, actions: &[Vec<[f32; 2]>]) -> Vec<VecStep> {
+        assert_eq!(actions.len(), self.slots.len(), "one joint action per slot");
+        self.step_with(|i, env| env.decode_action(&actions[i]))
+    }
+
+    /// Step every slot with an already-chosen server index (the PTOM
+    /// path; capacity redirects still apply inside [`Env::step`]).
+    pub fn step_servers(&mut self, servers: &[usize]) -> Vec<VecStep> {
+        assert_eq!(servers.len(), self.slots.len(), "one server per slot");
+        self.step_with(|i, _| servers[i])
+    }
+
+    /// The per-slot step body, fanned out across the worker threads:
+    /// pick a server, step, capture the post-step state, and auto-reset
+    /// finished episodes (churning through the slot's private stream
+    /// when enabled).  All randomness lives in the slot, so the result
+    /// is independent of the worker count.
+    fn step_with(&mut self, pick: impl Fn(usize, &Env) -> usize + Sync) -> Vec<VecStep> {
+        let churn = self.churn;
+        ThreadPool::map_scoped_mut(&mut self.slots, self.workers, |i, slot| {
+            if slot.env.finished() {
+                // Degenerate guard: a slot whose episode emptied out
+                // (e.g. churn removed every active user) resettles
+                // instead of panicking the whole batch.
+                if churn {
+                    slot.env.mutate(&mut slot.rng);
+                }
+                slot.env.reset();
+            }
+            let server = pick(i, &slot.env);
+            let outcome = slot.env.step(server);
+            let next_state = slot.env.state();
+            let mut reset = false;
+            let mut terminal_cost = 0.0;
+            if outcome.finished {
+                terminal_cost = slot.env.evaluate().total();
+                slot.episodes += 1;
+                if churn {
+                    slot.env.mutate(&mut slot.rng);
+                }
+                slot.env.reset();
+                reset = true;
+            }
+            VecStep { outcome, next_state, reset, terminal_cost }
+        })
+    }
+
+    /// Run an arbitrary single-env policy to completion in every slot
+    /// concurrently and evaluate the resulting offloads (Eqs. 12–13).
+    /// Unlike [`VecEnv::step`] this neither churns nor counts episodes
+    /// — it is the batched *evaluation* entry point
+    /// ([`crate::drl::baselines::run_greedy_vec`] rides it).
+    pub fn evaluate_with(&mut self, policy: impl Fn(usize, &mut Env) + Sync) -> Vec<CostBreakdown> {
+        ThreadPool::map_scoped_mut(&mut self.slots, self.workers, |i, slot| {
+            policy(i, &mut slot.env);
+            slot.env.evaluate()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::drl::env::testutil::{small_env, tiny_dataset};
+
+    fn small_vec(seed: u64, envs: usize) -> VecEnv {
+        let proto = small_env(seed);
+        VecEnv::replicate(&proto, envs, seed ^ 0xABCD)
+    }
+
+    #[test]
+    fn replicated_slots_share_the_scenario() {
+        let venv = small_vec(41, 3);
+        let a = venv.env(0);
+        for i in 1..venv.len() {
+            let b = venv.env(i);
+            assert_eq!(a.order, b.order);
+            assert_eq!(a.subgraph_of, b.subgraph_of);
+            assert_eq!(a.users.active_count(), b.users.active_count());
+        }
+        assert_eq!(venv.state_dim(), venv.agents() * OBS);
+    }
+
+    #[test]
+    fn states_concatenate_slot_states() {
+        let venv = small_vec(42, 4);
+        let s = venv.states();
+        let sd = venv.state_dim();
+        assert_eq!(s.len(), 4 * sd);
+        for i in 0..4 {
+            assert_eq!(&s[i * sd..(i + 1) * sd], &venv.env(i).state()[..]);
+        }
+    }
+
+    #[test]
+    fn auto_reset_keeps_the_batch_full() {
+        let mut venv = small_vec(43, 2);
+        // Static episodes (no churn) so every episode has exactly
+        // `active` steps and the reset count below is exact.
+        venv.set_churn(false);
+        venv.reset_all();
+        let active = venv.env(0).users.active_count();
+        let agents = venv.agents();
+        let mut resets = 0;
+        // Two full episodes' worth of vector steps: every slot must
+        // reset exactly twice and never report a finished state.
+        for step in 0..2 * active {
+            let servers: Vec<usize> = (0..venv.len()).map(|i| (step + i) % agents).collect();
+            for res in venv.step_servers(&servers) {
+                if res.reset {
+                    resets += 1;
+                    assert!(res.terminal_cost > 0.0, "terminal cost must be evaluated");
+                }
+            }
+            for i in 0..venv.len() {
+                assert!(!venv.env(i).finished(), "auto-reset must refill slot {i}");
+            }
+        }
+        assert_eq!(resets, 2 * venv.len());
+        assert_eq!(venv.episodes_completed(), resets);
+    }
+
+    #[test]
+    fn churned_slots_diverge_after_reset() {
+        let mut venv = small_vec(44, 2);
+        venv.set_churn(true);
+        venv.reset_all();
+        let active = venv.env(0).users.active_count();
+        for _ in 0..active {
+            venv.step_servers(&[0, 0]);
+        }
+        assert_eq!(venv.episodes_completed(), 2);
+        // Distinct churn streams: the slots' scenarios have diverged
+        // (different survivors, admissions or at least random-walk
+        // positions).
+        let fingerprint = |env: &Env| {
+            let mut fp: Vec<u64> = Vec::new();
+            fp.extend(env.users.active_users().iter().map(|&u| u as u64));
+            fp.extend(env.order.iter().map(|&u| u as u64));
+            for u in 0..env.users.capacity() {
+                let p = env.users.pos(u);
+                fp.push(p.x.to_bits());
+                fp.push(p.y.to_bits());
+            }
+            fp
+        };
+        assert_ne!(
+            fingerprint(venv.env(0)),
+            fingerprint(venv.env(1)),
+            "independent churn streams should diverge the slots"
+        );
+    }
+
+    #[test]
+    fn evaluate_with_runs_policies_in_every_slot() {
+        let mut venv = small_vec(45, 3);
+        let costs = venv.evaluate_with(|_, env| {
+            env.reset();
+            while !env.finished() {
+                env.step(0);
+            }
+        });
+        assert_eq!(costs.len(), 3);
+        for (i, c) in costs.iter().enumerate() {
+            assert!(c.total() > 0.0, "slot {i} cost not evaluated");
+            assert!(venv.env(i).finished());
+        }
+    }
+
+    #[test]
+    fn new_builds_from_a_dataset_sample() {
+        let ds = tiny_dataset(200);
+        let cfg = EnvConfig { n_users: 30, n_assocs: 60, ..EnvConfig::default() };
+        let mut venv = VecEnv::new(&ds, SystemParams::default(), cfg, 2, 46);
+        venv.set_workers(0);
+        assert_eq!(venv.workers(), 2);
+        venv.reset_all();
+        let res = venv.step_servers(&[0, 1]);
+        assert_eq!(res.len(), 2);
+        assert_eq!(res[0].next_state.len(), venv.state_dim());
+    }
+}

@@ -250,8 +250,7 @@ impl DynamicGraph {
         positions: &mut dyn FnMut(usize, &mut Rng) -> Pos,
         rng: &mut Rng,
     ) -> Vec<usize> {
-        let free: Vec<usize> =
-            (0..self.capacity()).filter(|&v| !self.mask[v]).collect();
+        let free: Vec<usize> = (0..self.capacity()).filter(|&v| !self.mask[v]).collect();
         let take = count.min(free.len());
         let chosen = &free[..take];
         for (i, &slot) in chosen.iter().enumerate() {
@@ -313,7 +312,8 @@ impl DynamicGraph {
                 .into_iter()
                 .filter(|&(u, v)| self.mask[u as usize] && self.mask[v as usize])
                 .collect();
-            if let Some(&(u, v)) = edges.get(rng.below(edges.len().max(1)).min(edges.len().saturating_sub(1))) {
+            let pick = rng.below(edges.len().max(1)).min(edges.len().saturating_sub(1));
+            if let Some(&(u, v)) = edges.get(pick) {
                 if !edges.is_empty() {
                     self.remove_assoc(u as usize, v as usize);
                 }
@@ -373,8 +373,7 @@ impl DynamicGraph {
             // over long training runs).
             let now_active = self.active_users();
             let active_n = now_active.len().max(1);
-            let mean_deg =
-                ((2 * self.active_edges()) as f64 / active_n as f64).round() as usize;
+            let mean_deg = ((2 * self.active_edges()) as f64 / active_n as f64).round() as usize;
             // Degree-proportional endpoint pool.
             let mut pool: Vec<usize> = Vec::with_capacity(2 * self.active_edges() + active_n);
             for &u in &now_active {
@@ -406,8 +405,7 @@ impl DynamicGraph {
         // population), degree-proportionally.
         let active = self.active_users();
         if active.len() >= 2 {
-            let desired =
-                (self.target_mean_deg * active.len() as f64 / 2.0).round() as usize;
+            let desired = (self.target_mean_deg * active.len() as f64 / 2.0).round() as usize;
             // Compute the deficit once (active_edges() is O(E)); count
             // successful insertions instead of re-scanning.
             let deficit = desired.saturating_sub(self.active_edges());

@@ -25,7 +25,11 @@ pub fn uniform_random(n: usize, edges: usize, rng: &mut Rng) -> Graph {
         if u == v {
             continue;
         }
-        let key = if u < v { (u as u64) << 32 | v as u64 } else { (v as u64) << 32 | u as u64 };
+        let key = if u < v {
+            (u as u64) << 32 | v as u64
+        } else {
+            (v as u64) << 32 | u as u64
+        };
         if seen.insert(key) {
             list.push((u.min(v) as u32, u.max(v) as u32));
         }

@@ -183,8 +183,7 @@ mod tests {
     use crate::util::proptest::check_seeds;
 
     fn path_graph(n: usize) -> Graph {
-        let edges: Vec<(u32, u32)> =
-            (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
         Graph::from_edges(n, &edges)
     }
 

@@ -1,7 +1,7 @@
 //! Scenario sampling (§6.3): draw `users` vertices and `assocs`
 //! associations from a dataset graph to form one EC scenario.
 //!
-//! The paper "randomly sample[s] 300 documents and 4800 citation links
+//! The paper "randomly samples 300 documents and 4800 citation links
 //! from PubMed" for training and resamples per evaluation; the sampler
 //! here does the same for any dataset: a BFS ball gives a locally
 //! connected user set (documents that actually cite each other), then
@@ -23,12 +23,7 @@ pub struct Scenario {
 /// Sample `n_users` vertices and exactly `n_assocs` associations
 /// (when achievable: capped by the complete graph, floored at the
 /// induced edges found).
-pub fn sample_scenario(
-    ds: &Dataset,
-    n_users: usize,
-    n_assocs: usize,
-    rng: &mut Rng,
-) -> Scenario {
+pub fn sample_scenario(ds: &Dataset, n_users: usize, n_assocs: usize, rng: &mut Rng) -> Scenario {
     assert!(n_users <= ds.n, "dataset {} has {} < {} vertices", ds.name, ds.n, n_users);
     // BFS ball from a random seed (restart on exhaustion) for locality.
     let mut chosen: Vec<u32> = Vec::with_capacity(n_users);

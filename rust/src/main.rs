@@ -38,6 +38,7 @@ fn app() -> App {
                 .opt("episodes", "100", "training episodes")
                 .opt("users", "300", "users per scenario")
                 .opt("assocs", "4800", "associations per scenario")
+                .opt("envs", "1", "parallel episode slots per vector step (vectorized rollout)")
                 .opt("out", "checkpoints", "checkpoint directory")
                 .opt("config", "configs/table2.toml", "config file")
                 .opt("seed", "3401", "rng seed"),
@@ -47,6 +48,7 @@ fn app() -> App {
                 .opt("users", "150", "users")
                 .opt("assocs", "900", "associations")
                 .opt("episodes", "40", "training episodes for the DRL methods")
+                .opt("envs", "1", "parallel episode slots for DRL training")
                 .opt("config", "configs/table2.toml", "config file")
                 .opt("seed", "11", "rng seed")
                 .switch("no-inference", "skip fleet GNN inference"),
@@ -126,10 +128,16 @@ fn cmd_info(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
         println!("  {k:<16} {v:.3}");
     }
     println!("\nTable 2 parameters (SI units):");
-    println!("  servers={}  plane={}m  noise={:.1e}W", params.servers, params.plane_m, params.noise_w);
+    println!(
+        "  servers={}  plane={}m  noise={:.1e}W",
+        params.servers, params.plane_m, params.noise_w
+    );
     println!("  P_user={:?}W  P_server={:?}W", params.p_user_w, params.p_server_w);
     println!("  B_user={:?}Hz  B_server={:.1e}Hz", params.bw_user_hz, params.bw_server_hz);
-    println!("  f_k={:?}Hz  μ={:.1e}  ϑ={:.1e}  φ={:.1e}", params.f_hz, params.mu_j_bit, params.theta_j, params.phi_j);
+    println!(
+        "  f_k={:?}Hz  μ={:.1e}  ϑ={:.1e}  φ={:.1e}",
+        params.f_hz, params.mu_j_bit, params.theta_j, params.phi_j
+    );
     Ok(())
 }
 
@@ -199,22 +207,22 @@ fn cmd_train(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
     let users = matches.usize("users");
     let assocs = matches.usize("assocs");
     let seed = matches.usize("seed") as u64;
+    let envs = matches.usize("envs").max(1);
     let outdir = std::path::PathBuf::from(matches.str("out"));
     std::fs::create_dir_all(&outdir)?;
     let method = matches.str("method").to_string();
     match method.as_str() {
         "drlgo" | "drl-only" => {
-            let cfg = MaddpgConfig { episodes, seed, ..MaddpgConfig::default() };
+            let cfg = MaddpgConfig { episodes, seed, envs, ..MaddpgConfig::default() };
             let ablation = method == "drl-only";
-            let (trainer, _env, curve) =
-                ctrl.train_drlgo(&dataset, ablation, users, assocs, &cfg)?;
+            let (trainer, _env, curve) = ctrl.train_drlgo(&dataset, ablation, users, assocs, &cfg)?;
             let ckpt = outdir.join(format!("{method}_{dataset}.gta"));
             trainer.save(&ckpt)?;
             println!("saved checkpoint {}", ckpt.display());
             print_curve(&curve);
         }
         "ptom" => {
-            let cfg = PpoConfig { episodes, seed, ..PpoConfig::default() };
+            let cfg = PpoConfig { episodes, seed, envs, ..PpoConfig::default() };
             let (_trainer, _env, curve) = ctrl.train_ptom(&dataset, users, assocs, &cfg)?;
             print_curve(&curve);
         }
@@ -244,12 +252,13 @@ fn cmd_simulate(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()
     let users = matches.usize("users");
     let assocs = matches.usize("assocs");
     let episodes = matches.usize("episodes");
+    let envs = matches.usize("envs").max(1);
     let seed = matches.usize("seed") as u64;
     let inference = !matches.switch("no-inference");
 
-    let mcfg = MaddpgConfig { episodes, seed, ..MaddpgConfig::default() };
+    let mcfg = MaddpgConfig { episodes, seed, envs, ..MaddpgConfig::default() };
     let (mut drlgo, _, _) = ctrl.train_drlgo(&dataset, false, users, assocs, &mcfg)?;
-    let pcfg = PpoConfig { episodes, seed, ..PpoConfig::default() };
+    let pcfg = PpoConfig { episodes, seed, envs, ..PpoConfig::default() };
     let (mut ptom, _, _) = ctrl.train_ptom(&dataset, users, assocs, &pcfg)?;
 
     let mut table = Table::new(
@@ -318,5 +327,7 @@ fn cmd_serve(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
             Box::leak(policy.clone().into_boxed_str()),
         ))
     };
-    graphedge::serving::serve_loop(&ctrl, &dataset, &model, users, assocs, requests, seed, placement)
+    graphedge::serving::serve_loop(
+        &ctrl, &dataset, &model, users, assocs, requests, seed, placement,
+    )
 }

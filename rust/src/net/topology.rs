@@ -91,7 +91,7 @@ impl EdgeNetwork {
 /// Per-scenario user↔AP bandwidth draws (B_{i,m} of Eq. 3).
 #[derive(Clone, Debug)]
 pub struct UserLinks {
-    /// bw[user][server] in Hz.
+    /// `bw[user][server]` in Hz.
     pub bw_hz: Vec<Vec<f64>>,
     /// User transmit powers P_i, watts.
     pub p_w: Vec<f64>,

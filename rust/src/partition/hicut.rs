@@ -60,11 +60,7 @@ pub fn hicut(g: &Graph, alive: impl Fn(usize) -> bool) -> Partition {
 /// into the layout.  It also mirrors full [`hicut`], whose outer loop
 /// scans seeds in ascending vertex order — the shard-merge equivalence
 /// proof leans on exactly this property.
-pub fn hicut_region(
-    g: &Graph,
-    region: &[usize],
-    alive: impl Fn(usize) -> bool,
-) -> Vec<Vec<usize>> {
+pub fn hicut_region(g: &Graph, region: &[usize], alive: impl Fn(usize) -> bool) -> Vec<Vec<usize>> {
     let mut assigned = vec![true; g.len()];
     let mut starts: Vec<usize> = Vec::with_capacity(region.len());
     for &v in region {
@@ -313,8 +309,7 @@ mod tests {
                     seen[v] += 1;
                 }
             }
-            let in_region: std::collections::HashSet<usize> =
-                region.iter().copied().collect();
+            let in_region: std::collections::HashSet<usize> = region.iter().copied().collect();
             (0..n).all(|v| seen[v] == usize::from(in_region.contains(&v)))
         });
     }

@@ -61,6 +61,11 @@ pub struct RepairStats {
 
 /// Owns the live [`Partition`] of a churning scenario and repairs it
 /// from [`GraphDelta`] batches instead of recutting the world.
+///
+/// `Clone` clones the live layout and all bookkeeping — the vectorized
+/// environment replicates a fully-configured [`crate::drl::Env`]
+/// (partitioner included) into independent episode slots.
+#[derive(Clone)]
 pub struct IncrementalPartitioner {
     pub cfg: IncrementalConfig,
     monitor: DriftMonitor,
@@ -357,7 +362,11 @@ impl IncrementalPartitioner {
     /// neighbors (locally minimizes new cut edges); singleton if none.
     fn attach(&mut self, v: usize, g: &Graph, scratch: &mut HashMap<usize, usize>) {
         let (_, best, _) = self.neighbor_slots(g, v, NONE, scratch);
-        let s = if best == NONE { self.alloc_slot() } else { best };
+        let s = if best == NONE {
+            self.alloc_slot()
+        } else {
+            best
+        };
         self.assign(v, s);
         for &nb in g.neighbors(v) {
             let t = self.assignment[nb as usize];
@@ -384,8 +393,7 @@ impl IncrementalPartitioner {
         if self.cfg.refine_passes == 0 || touched.is_empty() {
             return 0;
         }
-        let cap =
-            ((self.covered as f64 * self.cfg.max_subgraph_frac) as usize).max(8);
+        let cap = ((self.covered as f64 * self.cfg.max_subgraph_frac) as usize).max(8);
         let mut moves = 0;
         for _ in 0..self.cfg.refine_passes {
             let mut moved_any = false;
@@ -722,8 +730,7 @@ mod tests {
         let mut rng = Rng::seed_from(2);
         let mut users = two_triangles(&mut rng);
         users.record_deltas(true);
-        let mut inc =
-            IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
+        let mut inc = IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
         users.remove_users(&[2]);
         let added = users.add_users(1, &mut |_, _| crate::graph::dynamic::Pos {
             x: 0.0,
@@ -747,8 +754,7 @@ mod tests {
         let mut rng = Rng::seed_from(3);
         let mut users = two_triangles(&mut rng);
         users.record_deltas(true);
-        let mut inc =
-            IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
+        let mut inc = IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
         let before = inc.cut_edges_now();
         // A second bridge between the triangles is a new cut edge.
         assert!(users.add_association(0, 5));
@@ -834,8 +840,7 @@ mod tests {
         let g = crate::graph::generate::preferential_attachment(120, 4, &mut rng);
         let mut users = DynamicGraph::new(g, vec![1.0; 120], 2000.0, &mut rng);
         users.record_deltas(true);
-        let mut inc =
-            IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
+        let mut inc = IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
         let cfg = ChurnConfig::default();
         for _ in 0..10 {
             users.step(&cfg, &mut rng);

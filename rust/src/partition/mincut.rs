@@ -20,7 +20,7 @@ use crate::util::rng::Rng;
 
 /// Dinic max-flow over a fixed vertex set.
 pub struct Dinic {
-    /// head[v] = first arc index, or u32::MAX.
+    /// `head[v]` = first arc index, or `u32::MAX`.
     head: Vec<u32>,
     /// Arc arrays: to, next, cap (residual).
     to: Vec<u32>,
@@ -172,8 +172,7 @@ pub fn mincut_partition(
             break;
         };
         let frag = fragments.swap_remove(idx);
-        let index: HashMap<usize, usize> =
-            frag.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+        let index: HashMap<usize, usize> = frag.iter().enumerate().map(|(i, &v)| (v, i)).collect();
         let mut dinic = Dinic::new(frag.len());
         for &v in &frag {
             for &u in g.neighbors(v) {

@@ -69,11 +69,7 @@ impl Partition {
     }
 
     /// Weighted cut (Fig. 6's comparison uses integer edge weights).
-    pub fn cut_weight(
-        &self,
-        g: &Graph,
-        w: &std::collections::HashMap<(u32, u32), u32>,
-    ) -> u64 {
+    pub fn cut_weight(&self, g: &Graph, w: &std::collections::HashMap<(u32, u32), u32>) -> u64 {
         let a = self.assignment(g.len());
         g.edge_list()
             .iter()

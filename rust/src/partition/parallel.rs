@@ -78,8 +78,7 @@ pub fn parallel_hicut(
         return hicut(g, |v| mask[v]);
     }
     let shards = pack_shards(g, &comps, k);
-    let per_shard =
-        ThreadPool::map_scoped(&shards, k, |shard| hicut_region(g, shard, |v| mask[v]));
+    let per_shard = ThreadPool::map_scoped(&shards, k, |shard| hicut_region(g, shard, |v| mask[v]));
     merge(per_shard)
 }
 

@@ -128,8 +128,7 @@ impl Runtime {
         let exe = self.client.compile(&comp)?;
         log::info!("runtime: compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
         METRICS.observe("runtime.compile", t0.elapsed().as_secs_f64());
-        let executable =
-            std::sync::Arc::new(Executable { name: name.to_string(), spec, exe });
+        let executable = std::sync::Arc::new(Executable { name: name.to_string(), spec, exe });
         self.cache
             .lock()
             .unwrap()

@@ -123,8 +123,7 @@ impl<'a> Fleet<'a> {
             report.batch_sizes.push(padded.real_size());
             // Keep predictions only for owned vertices (halo rows are
             // another server's responsibility).
-            let owned_set: std::collections::HashSet<usize> =
-                owned.iter().copied().collect();
+            let owned_set: std::collections::HashSet<usize> = owned.iter().copied().collect();
             for (row, &v) in padded.vertices.iter().enumerate() {
                 if owned_set.contains(&v) {
                     report.predictions[v] = classes[row];

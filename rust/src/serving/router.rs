@@ -81,8 +81,7 @@ impl Router {
         let mut out = Vec::new();
         for (server, q) in self.queues.iter_mut().enumerate() {
             while q.len() >= self.policy.max_batch {
-                let batch: Vec<usize> =
-                    q.drain(..self.policy.max_batch).map(|r| r.user).collect();
+                let batch: Vec<usize> = q.drain(..self.policy.max_batch).map(|r| r.user).collect();
                 self.dispatched_batches += 1;
                 self.dispatched_requests += batch.len();
                 out.push((server, batch));

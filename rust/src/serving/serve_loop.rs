@@ -129,7 +129,11 @@ pub fn serve_dynamic(
         ctrl, dataset, model, n_users, n_assocs, steps, requests_per_step, seed,
         incremental, workers,
     )?;
-    let mode = if incremental { "incremental repair" } else { "full recut" };
+    let mode = if incremental {
+        "incremental repair"
+    } else {
+        "full recut"
+    };
     println!("\n== dynamic serving ({dataset}/{model}, {mode}, {workers} worker(s)) ==");
     println!("steps            {}", stats.steps);
     println!("requests         {}", stats.requests);
@@ -228,8 +232,7 @@ pub fn serve_dynamic_run(
                 svc.feat_pad,
             );
             let classes = svc.classify(&padded)?;
-            let in_batch: std::collections::HashSet<usize> =
-                batch.iter().copied().collect();
+            let in_batch: std::collections::HashSet<usize> = batch.iter().copied().collect();
             for (row, &v) in padded.vertices.iter().enumerate() {
                 if in_batch.contains(&v) {
                     classified += 1;
@@ -255,7 +258,11 @@ pub fn serve_dynamic_run(
         local_recuts,
         cut_edges_final,
         drift_final,
-        accuracy: if classified == 0 { 0.0 } else { correct as f64 / classified as f64 },
+        accuracy: if classified == 0 {
+            0.0
+        } else {
+            correct as f64 / classified as f64
+        },
         latency_p50_s: latency.percentile(50.0),
         latency_p99_s: latency.percentile(99.0),
     })
@@ -360,8 +367,7 @@ pub fn serve_run_with(
             );
             let classes = ctx.svc.classify(&padded)?;
             let done = Instant::now();
-            let in_batch: std::collections::HashSet<usize> =
-                users.iter().copied().collect();
+            let in_batch: std::collections::HashSet<usize> = users.iter().copied().collect();
             // Latency for each fulfilled request.
             pending.retain(|&(req, user)| {
                 if in_batch.contains(&user) {
@@ -413,7 +419,11 @@ pub fn serve_run_with(
         latency_p50_s: latency.percentile(50.0),
         latency_p99_s: latency.percentile(99.0),
         mean_batch: batch_sizes.mean(),
-        accuracy: if classified == 0 { 0.0 } else { correct as f64 / classified as f64 },
+        accuracy: if classified == 0 {
+            0.0
+        } else {
+            correct as f64 / classified as f64
+        },
     })
 }
 

@@ -89,7 +89,7 @@ impl Value {
         }
     }
 
-    /// Array of numbers → Vec<usize> (shape lists in the manifest).
+    /// Array of numbers → `Vec<usize>` (shape lists in the manifest).
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()?
             .iter()

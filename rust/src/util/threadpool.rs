@@ -115,6 +115,56 @@ impl ThreadPool {
         }
     }
 
+    /// Run `f(index, &mut item)` on every item of `items` in parallel,
+    /// collecting results in input order.  The mutable counterpart of
+    /// [`ThreadPool::map_scoped`]: items are split into `workers`
+    /// contiguous chunks, each owned by one scoped thread, so every
+    /// item is visited exactly once with exclusive access.  For a
+    /// deterministic `f` the result is therefore *independent of the
+    /// worker count* — the invariant the vectorized environment
+    /// ([`crate::drl::vec_env`]) leans on.
+    pub fn map_scoped_mut<T, R, F>(items: &mut [T], workers: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        assert!(workers >= 1);
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if workers == 1 || n == 1 {
+            // Sequential fast path: no thread spawn per call.
+            return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let chunk = n.div_ceil(workers.min(n));
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        thread::scope(|s| {
+            let f = &f;
+            let mut rest_items = &mut items[..];
+            let mut rest_out = &mut out[..];
+            let mut base = 0usize;
+            while !rest_items.is_empty() {
+                let take = chunk.min(rest_items.len());
+                let (chunk_items, tail_items) = rest_items.split_at_mut(take);
+                let (chunk_out, tail_out) = rest_out.split_at_mut(take);
+                rest_items = tail_items;
+                rest_out = tail_out;
+                let start = base;
+                base += take;
+                s.spawn(move || {
+                    for (j, (item, slot)) in
+                        chunk_items.iter_mut().zip(chunk_out.iter_mut()).enumerate()
+                    {
+                        *slot = Some(f(start + j, item));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|r| r.expect("worker filled slot")).collect()
+    }
+
     /// Run `f` on every item of `items` in parallel, collecting results
     /// in input order.  Uses scoped threads so borrows are fine.
     pub fn map_scoped<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
@@ -125,8 +175,7 @@ impl ThreadPool {
     {
         assert!(workers >= 1);
         let next = AtomicUsize::new(0);
-        let results: Vec<Mutex<Option<R>>> =
-            items.iter().map(|_| Mutex::new(None)).collect();
+        let results: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
         thread::scope(|s| {
             for _ in 0..workers.min(items.len().max(1)) {
                 s.spawn(|| loop {
@@ -187,6 +236,44 @@ mod tests {
     fn map_scoped_single_worker() {
         let items = vec![1, 2, 3];
         assert_eq!(ThreadPool::map_scoped(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn map_scoped_mut_mutates_every_item_in_order() {
+        let mut items: Vec<usize> = (0..57).collect();
+        let out = ThreadPool::map_scoped_mut(&mut items, 8, |i, x| {
+            *x += 100;
+            (i, *x)
+        });
+        assert_eq!(items, (100..157).collect::<Vec<_>>());
+        assert_eq!(out, (0..57).map(|i| (i, i + 100)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_scoped_mut_result_is_worker_count_invariant() {
+        let reference: Vec<usize> = (0..23).map(|i| i * 3 + 1).collect();
+        for workers in [1usize, 2, 3, 8, 32] {
+            let mut items: Vec<usize> = (0..23).collect();
+            let out = ThreadPool::map_scoped_mut(&mut items, workers, |_, x| {
+                *x = *x * 3 + 1;
+                *x
+            });
+            assert_eq!(out, reference, "diverged at {workers} workers");
+            assert_eq!(items, reference);
+        }
+    }
+
+    #[test]
+    fn map_scoped_mut_handles_empty_and_single() {
+        let mut empty: Vec<usize> = Vec::new();
+        let out = ThreadPool::map_scoped_mut(&mut empty, 4, |_, x| *x);
+        assert!(out.is_empty());
+        let mut one = vec![7usize];
+        let out = ThreadPool::map_scoped_mut(&mut one, 4, |i, x| {
+            *x += i + 1;
+            *x
+        });
+        assert_eq!(out, vec![8]);
     }
 
     #[test]

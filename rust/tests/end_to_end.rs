@@ -96,8 +96,7 @@ fn hicut_layout_reduces_cross_server_traffic_for_greedy_colocation() {
 #[test]
 fn serve_run_reports_latency_and_accuracy() {
     let ctrl = controller();
-    let stats =
-        graphedge::serving::serve_run(&ctrl, "pubmed", "sgc", 64, 160, 120, 3).unwrap();
+    let stats = graphedge::serving::serve_run(&ctrl, "pubmed", "sgc", 64, 160, 120, 3).unwrap();
     assert_eq!(stats.requests, 120);
     assert!(stats.batches > 0);
     assert!(stats.latency_p50_s >= 0.0);

@@ -105,8 +105,7 @@ fn sharded_hicut_is_indistinguishable_from_sequential() {
         let n = rng.range(4, 120);
         let e = rng.below((n * (n - 1) / 2).min(3 * n));
         let g = uniform_random(n, e, rng);
-        let dead: std::collections::HashSet<usize> =
-            (0..n).filter(|_| rng.chance(0.3)).collect();
+        let dead: std::collections::HashSet<usize> = (0..n).filter(|_| rng.chance(0.3)).collect();
         let alive = |v: usize| !dead.contains(&v);
         let seq = hicut(&g, &alive);
         for workers in [2usize, 5] {
@@ -125,8 +124,7 @@ fn sharded_hicut_is_indistinguishable_from_sequential() {
     check_seeds(40, |rng| {
         let n = rng.range(4, 100);
         let g = preferential_attachment(n, 1 + rng.below(4), rng);
-        let dead: std::collections::HashSet<usize> =
-            (0..n).filter(|_| rng.chance(0.4)).collect();
+        let dead: std::collections::HashSet<usize> = (0..n).filter(|_| rng.chance(0.4)).collect();
         let alive = |v: usize| !dead.contains(&v);
         let seq = hicut(&g, &alive);
         let par = parallel_hicut_pool(&g, &alive, &pool);
@@ -324,6 +322,93 @@ fn uplink_rate_decreases_with_distance() {
 
 fn bits_eq(a: &[f32], b: &[f32]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn vec_env_of_one_is_trajectory_identical_to_a_plain_env() {
+    // The VecEnv acceptance property, part 1: a vector of E=1 slots
+    // replays exactly the plain-`Env` trajectory — same states (bit
+    // for bit), same assignments, rewards and episode boundaries —
+    // when the plain env churns through the documented slot stream
+    // (the i-th `fork` of `Rng::seed_from(seed)`).
+    use graphedge::drl::vec_env::VecEnv;
+    use graphedge::drl::{Env, EnvConfig};
+    check_seeds(10, |rng| {
+        let ds = graphedge::graph::Dataset::synthetic(150, rng);
+        let cfg = EnvConfig { n_users: 30, n_assocs: 70, ..EnvConfig::default() };
+        let proto = Env::new(&ds, SystemParams::default(), cfg, rng);
+        let churn_seed = rng.next_u64();
+        let mut venv = VecEnv::replicate(&proto, 1, churn_seed);
+        venv.reset_all(); // churn-on-reset is the default
+        let mut env = proto.clone();
+        let mut churn = Rng::seed_from(churn_seed).fork();
+        env.reset();
+        let agents = env.agents();
+        for step in 0..120usize {
+            if !bits_eq(&venv.states(), &env.state()) {
+                return false;
+            }
+            let server = step % agents;
+            let vres = venv.step_servers(&[server]);
+            let out = env.step(server);
+            if vres[0].outcome.assigned != out.assigned
+                || vres[0].outcome.finished != out.finished
+                || vres[0].outcome.rewards != out.rewards
+            {
+                return false;
+            }
+            if out.finished {
+                // Episode boundary: the vector reports the terminal
+                // cost and auto-resets; mirror it by hand.
+                if !vres[0].reset
+                    || (vres[0].terminal_cost - env.evaluate().total()).abs() > 1e-9
+                {
+                    return false;
+                }
+                env.mutate(&mut churn);
+                env.reset();
+            } else if !bits_eq(&vres[0].next_state, &env.state()) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn vec_env_rollouts_are_deterministic_and_worker_count_invariant() {
+    // The VecEnv acceptance property, part 2: an E>1 rollout is a pure
+    // function of (prototype, seed, actions) — re-running it under any
+    // worker count reproduces every outcome, state and terminal cost
+    // bit for bit.
+    use graphedge::drl::vec_env::VecEnv;
+    use graphedge::drl::{Env, EnvConfig};
+    let mut rng = Rng::seed_from(0xC0FE);
+    let ds = graphedge::graph::Dataset::synthetic(150, &mut rng);
+    let cfg = EnvConfig { n_users: 30, n_assocs: 70, ..EnvConfig::default() };
+    let proto = Env::new(&ds, SystemParams::default(), cfg, &mut rng);
+    let agents = proto.agents();
+    let rollout = |workers: usize| -> Vec<u64> {
+        let mut venv = VecEnv::replicate(&proto, 4, 0x99);
+        venv.set_workers(workers);
+        venv.reset_all();
+        let mut trace: Vec<u64> = Vec::new();
+        for step in 0..90usize {
+            let servers: Vec<usize> = (0..4).map(|i| (step + i) % agents).collect();
+            for res in venv.step_servers(&servers) {
+                trace.push(res.outcome.assigned as u64);
+                trace.push(res.reset as u64);
+                trace.push(res.terminal_cost.to_bits());
+                trace.extend(res.next_state.iter().map(|v| u64::from(v.to_bits())));
+            }
+            trace.extend(venv.states().iter().map(|v| u64::from(v.to_bits())));
+        }
+        trace
+    };
+    let reference = rollout(1);
+    for workers in [2usize, 3, 4, 7] {
+        assert_eq!(rollout(workers), reference, "rollout diverged at {workers} workers");
+    }
 }
 
 #[test]

@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Schema check for BENCH_partition.json (the CI bench-smoke gate).
+
+The perf benches (`env_step`, `partition_incremental`,
+`partition_parallel`, `vec_env`) each merge one top-level section into
+the shared results file.  This script fails CI when a bench stopped
+writing its section, dropped a key, or produced non-finite numbers —
+the failure modes of silent bench bit-rot.
+
+Usage: check_bench_schema.py [BENCH_partition.json]
+"""
+
+import json
+import math
+import sys
+
+# Per-section scalar keys every bench run must produce.
+SECTION_KEYS = {
+    "env": [
+        "n_users",
+        "agents",
+        "obs_dim",
+        "reps",
+        "state_cached_s",
+        "state_recompute_s",
+        "state_speedup",
+        "episode_cached_s",
+        "episode_recompute_s",
+        "episode_speedup",
+        "mutate_reset_s",
+    ],
+    "incremental": ["n_users", "mean_degree", "steps"],
+    "parallel": ["n_users", "communities", "mean_degree", "reps"],
+    "vec_env": ["n_users", "agents", "obs_dim", "reps"],
+}
+
+# Sections carrying a "runs" array, with required per-run keys.
+RUN_KEYS = {
+    "incremental": [
+        "churn",
+        "repair_step_s",
+        "full_step_s",
+        "speedup",
+        "cut_ratio_mean",
+        "full_fallbacks",
+        "local_recuts",
+    ],
+    "parallel": ["workers", "sequential_s", "sharded_s", "speedup"],
+    "vec_env": [
+        "envs",
+        "workers",
+        "state_assembly_s",
+        "rollout_steps_per_s",
+        "episodes",
+    ],
+}
+
+
+def fail(msg: str) -> None:
+    print(f"BENCH schema check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def require_number(section: str, key: str, value: object) -> None:
+    if not isinstance(value, (int, float)) or isinstance(value, bool):
+        fail(f"{section}.{key} is {value!r}, expected a number")
+    if not math.isfinite(value):
+        fail(f"{section}.{key} is non-finite ({value!r})")
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_partition.json"
+    try:
+        with open(path, encoding="utf-8") as fh:
+            root = json.load(fh)
+    except FileNotFoundError:
+        fail(f"{path} not found — did the benches run?")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+    if not isinstance(root, dict):
+        fail(f"{path} top level is {type(root).__name__}, expected an object")
+
+    for section, keys in SECTION_KEYS.items():
+        if section not in root:
+            fail(f"missing section {section!r} — its bench did not write")
+        body = root[section]
+        if not isinstance(body, dict):
+            fail(f"section {section!r} is {type(body).__name__}, expected object")
+        for key in keys:
+            if key not in body:
+                fail(f"{section}.{key} missing")
+            require_number(section, key, body[key])
+
+    for section, keys in RUN_KEYS.items():
+        runs = root[section].get("runs")
+        if not isinstance(runs, list) or not runs:
+            fail(f"{section}.runs missing or empty")
+        for i, run in enumerate(runs):
+            if not isinstance(run, dict):
+                fail(f"{section}.runs[{i}] is not an object")
+            for key in keys:
+                if key not in run:
+                    fail(f"{section}.runs[{i}].{key} missing")
+                require_number(f"{section}.runs[{i}]", key, run[key])
+
+    names = ", ".join(sorted(SECTION_KEYS))
+    print(f"BENCH schema check OK: {path} has valid sections [{names}]")
+
+
+if __name__ == "__main__":
+    main()
