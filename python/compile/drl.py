@@ -26,7 +26,13 @@ import jax.numpy as jnp
 
 M = 4            #: number of edge servers / agents (2000m plane, 500m cells)
 OBS = 21         #: per-agent observation dim incl. the three layout-
-                 #: maintenance slots (see rust drl::env docs)
+                 #: maintenance slots (see rust drl::env docs).  The
+                 #: scenario-diversity VecEnv (rust scenario::/vec_env)
+                 #: does NOT change this layout: batch rows are
+                 #: per-agent (M fixed by the manifest), per-slot user
+                 #: counts only alter episode lengths and the per-slot
+                 #: normalizers, so these artifacts serve mixed
+                 #: scenario sets unchanged.
 ACT = 2          #: paper Eq. (22): two-dimensional agent action in [0,1]^2
 HID = 64         #: hidden width (§6.1)
 STATE = M * OBS  #: global state = concat of local observations (Eq. 19)

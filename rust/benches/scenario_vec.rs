@@ -1,0 +1,204 @@
+//! §Perf — scenario-diversity rollout: generation cost of a mixed
+//! [`graphedge::scenario::ScenarioSet`] and the throughput of a
+//! heterogeneous-slot [`graphedge::drl::vec_env::VecEnv`] (every slot
+//! its own generated topology) across batch widths.
+//!
+//! Before any timing counts, the heterogeneous vector is asserted
+//! deterministic: the same (set, seed, actions) rollout re-run under a
+//! different build/step worker count must reproduce every assignment
+//! bit for bit — the property `tests/properties.rs` proves across
+//! seeds, re-checked here on the bench scenario.
+//!
+//! Three measurements per E:
+//!
+//! * **set generation** — materializing E train + holdout scenarios
+//!   from the `mixed` spec (topology, positions, server + link draws);
+//! * **state assembly** — one `states()` call over the mixed slots;
+//! * **rollout throughput** — round-robin vector steps with churn +
+//!   auto-reset on, in env steps per second.
+//!
+//! Emits `bench_results/scenario_vec.csv` and merges a `"scenario"`
+//! section into `BENCH_partition.json` (repo root when present), next
+//! to the `env`/`incremental`/`parallel`/`vec_env` sections.
+
+use std::collections::BTreeMap;
+
+use graphedge::bench::{fmt_secs, time_reps, write_bench_section, Table};
+use graphedge::drl::env::OBS;
+use graphedge::drl::vec_env::VecEnv;
+use graphedge::drl::{baselines, EnvConfig};
+use graphedge::net::SystemParams;
+use graphedge::scenario::ScenarioSet;
+use graphedge::util::json::Value;
+
+fn build_set(params: &SystemParams, n_users: usize, n_assocs: usize, envs: usize) -> ScenarioSet {
+    ScenarioSet::from_spec("mixed", n_users, n_assocs, params, envs, 0x5CE0).unwrap()
+}
+
+/// Same set + seed + actions, different worker counts: the rollout
+/// must be bit-identical (see the module docs).
+fn assert_worker_invariant(set: &ScenarioSet, cfg: &EnvConfig, envs: usize) {
+    let rollout = |build_workers: usize, step_workers: usize| -> Vec<u64> {
+        let mut venv = VecEnv::from_scenario_set(set, cfg, envs, 0xAB, build_workers);
+        venv.set_workers(step_workers);
+        venv.reset_all();
+        let agents = venv.agents();
+        let mut trace = Vec::new();
+        for step in 0..24usize {
+            let servers: Vec<usize> = (0..envs).map(|i| (step + i) % agents).collect();
+            for res in venv.step_servers(&servers) {
+                trace.push(res.outcome.assigned as u64);
+                trace.push(res.reset as u64);
+            }
+        }
+        trace
+    };
+    assert_eq!(
+        rollout(1, 1),
+        rollout(envs.max(2), 2),
+        "heterogeneous rollout diverged across worker counts"
+    );
+}
+
+struct Run {
+    envs: usize,
+    workers: usize,
+    gen_s: f64,
+    assembly_s: f64,
+    steps_per_s: f64,
+    episodes: usize,
+}
+
+fn main() {
+    let smoke = std::env::var("GRAPHEDGE_BENCH_SMOKE").is_ok();
+    let full_suite = std::env::var("GRAPHEDGE_BENCH_FULL").is_ok();
+    let (n_users, n_assocs, reps) = if smoke {
+        (40, 90, 1)
+    } else if full_suite {
+        (300, 4800, 10)
+    } else {
+        (150, 1200, 5)
+    };
+
+    let params = SystemParams::default();
+    let cfg = EnvConfig { n_users, n_assocs, ..EnvConfig::default() };
+    println!(
+        "scenario vec: mixed spec (uniform/pa/clustered/hotspot), \
+         {n_users} users x {n_assocs} assocs per slot, OBS={OBS}"
+    );
+
+    {
+        let probe = build_set(&params, n_users, n_assocs, 4);
+        assert_worker_invariant(&probe, &cfg, 4);
+        println!("heterogeneous rollout verified worker-count invariant");
+    }
+
+    let mut t = Table::new(
+        "scenario-diversity rollout across batch widths",
+        &["E", "workers", "set gen", "states() / call", "rollout steps/s", "episodes"],
+    );
+    let mut runs = Vec::new();
+    for envs in [4usize, 8] {
+        // 1. Set generation (E train + E/4 holdout scenarios).
+        let gen = time_reps(1, reps.max(2), || {
+            std::hint::black_box(build_set(&params, n_users, n_assocs, envs));
+        });
+        let set = build_set(&params, n_users, n_assocs, envs);
+        let mut venv = VecEnv::from_scenario_set(&set, &cfg, envs, 0xFACE, envs);
+        venv.set_workers(0); // one worker per slot
+        let workers = venv.workers();
+
+        // 2. Batch state assembly over heterogeneous slots.
+        let assembly = time_reps(3, reps.max(3) * 10, || {
+            std::hint::black_box(venv.states());
+        });
+
+        // 3. Rollout throughput: round-robin policy, churn + auto-reset
+        // on (the training loop's steady state).
+        venv.set_churn(true);
+        venv.reset_all();
+        let agents = venv.agents();
+        let vsteps_per_rep = if smoke { 8 } else { 2 * n_users };
+        let mut servers = vec![0usize; envs];
+        let mut step = 0usize;
+        let roll = time_reps(1, reps, || {
+            for _ in 0..vsteps_per_rep {
+                for (i, s) in servers.iter_mut().enumerate() {
+                    *s = (step + i) % agents;
+                }
+                std::hint::black_box(venv.step_servers(&servers));
+                step += 1;
+            }
+        });
+        let steps_per_s = (vsteps_per_rep * envs) as f64 / roll.mean().max(1e-12);
+
+        // 4. Greedy evaluation over the holdout split exercises the
+        // same machinery on scenarios training never saw.
+        let eval_costs = baselines::run_greedy_eval_set(&set, &cfg, workers);
+        assert_eq!(eval_costs.len(), set.eval.len());
+
+        let episodes = venv.episodes_completed();
+        t.row(vec![
+            envs.to_string(),
+            workers.to_string(),
+            fmt_secs(gen.mean()),
+            fmt_secs(assembly.mean()),
+            format!("{steps_per_s:.0}"),
+            episodes.to_string(),
+        ]);
+        runs.push(Run {
+            envs,
+            workers,
+            gen_s: gen.mean(),
+            assembly_s: assembly.mean(),
+            steps_per_s,
+            episodes,
+        });
+    }
+    t.emit("scenario_vec");
+
+    let obj = |pairs: Vec<(&str, Value)>| {
+        Value::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect::<BTreeMap<_, _>>(),
+        )
+    };
+    let section = obj(vec![
+        (
+            "_note",
+            Value::Str(
+                "Regenerate with `cargo bench --bench scenario_vec` (the bench \
+                 rewrites this section).  The heterogeneous rollout is asserted \
+                 worker-count invariant before timing."
+                    .into(),
+            ),
+        ),
+        ("n_users", Value::Num(n_users as f64)),
+        ("n_assocs", Value::Num(n_assocs as f64)),
+        ("obs_dim", Value::Num(OBS as f64)),
+        ("reps", Value::Num(reps as f64)),
+        (
+            "runs",
+            Value::Arr(
+                runs.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("envs", Value::Num(r.envs as f64)),
+                            ("workers", Value::Num(r.workers as f64)),
+                            ("set_gen_s", Value::Num(r.gen_s)),
+                            ("state_assembly_s", Value::Num(r.assembly_s)),
+                            ("rollout_steps_per_s", Value::Num(r.steps_per_s)),
+                            ("episodes", Value::Num(r.episodes as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match write_bench_section("BENCH_partition.json", "scenario", section) {
+        Ok(path) => println!("[wrote {path}]"),
+        Err(e) => eprintln!("could not write BENCH_partition.json: {e}"),
+    }
+}

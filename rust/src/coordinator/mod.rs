@@ -132,11 +132,20 @@ impl Controller {
 
     /// Train DRLGO (or the DRL-only ablation) on a dataset sample.
     ///
-    /// The sampled scenario is replicated into `cfg.envs` vectorized
-    /// episode slots ([`crate::drl::VecEnv`]) and trained with one
-    /// batched `select_actions`/`train_step` round per vector step;
-    /// the returned [`Env`] is slot 0's final scenario, ready for
-    /// [`Controller::run_scenario`].
+    /// The sampled scenario seeds `cfg.envs` vectorized episode slots
+    /// ([`crate::drl::VecEnv`]) trained with one batched
+    /// `select_actions`/`train_step` round per vector step.  With
+    /// `cfg.scenarios` unset every slot replicates the sample; with a
+    /// spec (`--scenarios mixed`, `clustered:5@200x800,…` — see
+    /// [`crate::scenario::set`]) each slot instead owns its own
+    /// generated topology, training one policy across diverse
+    /// scenarios (the dataset sample then only seeds the prototype's
+    /// config and is replaced slot by slot).  The returned [`Env`] is
+    /// slot 0's final scenario, ready for
+    /// [`Controller::run_scenario`] — except that generated scenarios
+    /// have no dataset backing, so `run_inference` must stay off for
+    /// them (cost evaluation works either way; the guard in
+    /// `run_scenario` rejects the mismatch).
     pub fn train_drlgo(
         &self,
         dataset: &str,
@@ -158,13 +167,17 @@ impl Controller {
             env.recut();
             env.reset();
         }
+        if let Some(spec) = &cfg.scenarios {
+            log::info!("DRLGO training on a scenario-diverse vector: {spec}");
+        }
         let mut trainer = MaddpgTrainer::new(&self.rt, cfg.replay_cap)?;
         let curve = trainer.train(&mut env, cfg)?;
         Ok((trainer, env, curve))
     }
 
     /// Train the PTOM baseline (vectorized like
-    /// [`Controller::train_drlgo`], over `cfg.envs` episode slots).
+    /// [`Controller::train_drlgo`], over `cfg.envs` episode slots;
+    /// `cfg.scenarios` selects scenario-diverse slots the same way).
     pub fn train_ptom(
         &self,
         dataset: &str,
@@ -280,6 +293,16 @@ impl Controller {
 
         if run_inference {
             let ds = self.dataset(dataset)?;
+            // Generated scenarios (`--scenarios`) carry an identity
+            // user map with no dataset backing: their "documents"
+            // would read unrelated dataset rows — or index out of
+            // bounds — so fleet inference is only defined for sampled
+            // scenarios.
+            anyhow::ensure!(
+                env.scenario.users.iter().all(|&u| (u as usize) < ds.n),
+                "scenario users out of range for dataset {dataset}: generated \
+                 scenarios have no dataset backing — evaluate them without inference"
+            );
             let svc = GnnService::load(&self.rt, model, dataset)?;
             // The fleet reads the *current* user graph (post-churn).
             let scenario = crate::graph::sample::Scenario {

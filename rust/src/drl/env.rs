@@ -77,16 +77,16 @@
 //! [`Env::recut`] afterwards — exactly the call it already needs for
 //! the layout itself to be refreshed.
 //!
-//! **Vectorized rollout.**  [`crate::drl::vec_env::VecEnv`] replicates
-//! one environment into E independent episode slots: the scenario
-//! (dataset sample, topology, link draws, system parameters) is shared
-//! by cloning and never mutated in place across slots — each slot owns
-//! its `Env`, its churn RNG stream and therefore its own `ObsState`,
-//! so per-slot stepping parallelizes without any cross-slot
-//! invalidation.  The sharing rule is exactly the invalidation rule
-//! above, applied per slot: a slot's caches are refreshed by *its own*
-//! `mutate`/`recut`/`reset`, and nothing a sibling slot does can touch
-//! them.
+//! **Vectorized rollout.**  [`crate::drl::vec_env::VecEnv`] runs E
+//! independent episode slots — clones of one environment (replicate
+//! mode) or one [`Env::from_scenario`] per generated
+//! [`crate::scenario::Scenario`] (scenario-diversity mode).  Either
+//! way each slot owns its `Env`, its churn RNG stream and therefore
+//! its own `ObsState`, so per-slot stepping parallelizes without any
+//! cross-slot invalidation.  The sharing rule is exactly the
+//! invalidation rule above, applied per slot: a slot's caches are
+//! refreshed by *its own* `mutate`/`recut`/`reset`, and nothing a
+//! sibling slot does can touch them.
 //!
 //! The pre-engine implementation survives as [`Env::obs_recompute`] /
 //! [`Env::state_recompute`]; `tests/properties.rs` proves the cached
@@ -228,6 +228,27 @@ impl Env {
         let task_mb: Vec<f64> = (0..cfg.n_users).map(|_| dataset.task_mbit(0)).collect();
         let users = DynamicGraph::new(scenario.graph.clone(), task_mb, params.plane_m, rng);
         let layer_dims = vec![dataset.feat_dim.min(1500), 64, dataset.classes];
+        Self::assemble(cfg, params, net, links, users, scenario, layer_dims)
+    }
+
+    /// Shared constructor tail: zero the episode state, run the
+    /// initial layout cut and start the first episode.  Both
+    /// construction paths ([`Env::new`], [`Env::from_scenario`])
+    /// funnel through here so new fields get one initialization site.
+    fn assemble(
+        cfg: EnvConfig,
+        params: SystemParams,
+        net: EdgeNetwork,
+        links: UserLinks,
+        users: DynamicGraph,
+        scenario: Scenario,
+        layer_dims: Vec<usize>,
+    ) -> Self {
+        let mut cfg = cfg;
+        // Churn must walk the same plane the positions and the
+        // obs-normalizers live on; `ChurnConfig::default()` only
+        // matches the default Table 2 plane.
+        cfg.churn.plane_m = params.plane_m;
         let mut env = Env {
             cfg,
             profile: GnnProfile::Gcn,
@@ -254,6 +275,45 @@ impl Env {
         env.recut();
         env.reset();
         env
+    }
+
+    /// Build an environment from a *generated* scenario
+    /// ([`crate::scenario::Scenario`]): the topology, positions,
+    /// per-scenario server draws, link draws and task sizes all come
+    /// from the scenario, so two environments built from equal
+    /// fingerprints are identical.  `cfg.n_users` / `cfg.n_assocs` are
+    /// overridden by the scenario's own shape (they normalize the
+    /// observations, so they must describe *this* slot, not the run's
+    /// nominal size); the behavioral knobs (`use_hicut`, `use_rsp`,
+    /// churn rates, …) are taken from `cfg` as given.
+    pub fn from_scenario(sc: &crate::scenario::Scenario, cfg: EnvConfig) -> Self {
+        let mut cfg = cfg;
+        cfg.n_users = sc.n_users();
+        cfg.n_assocs = sc.graph.num_edges();
+        let users = DynamicGraph::with_positions(
+            sc.graph.clone(),
+            sc.task_mb.clone(),
+            sc.positions.clone(),
+        );
+        // Generated scenarios have no backing dataset, so the user map
+        // is all-sentinel: the only readers are the fleet-inference
+        // paths, and `Controller::run_scenario` rejects inference on
+        // out-of-range users — deterministically, thanks to the
+        // sentinel — instead of scoring against unrelated dataset
+        // rows.
+        let scenario = Scenario {
+            users: vec![u32::MAX; sc.n_users()],
+            graph: sc.graph.clone(),
+        };
+        Self::assemble(
+            cfg,
+            sc.params.clone(),
+            sc.net.clone(),
+            sc.links.clone(),
+            users,
+            scenario,
+            sc.layer_dims.clone(),
+        )
     }
 
     pub fn agents(&self) -> usize {

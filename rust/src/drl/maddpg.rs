@@ -49,6 +49,12 @@ pub struct MaddpgConfig {
     /// Parallel episode slots per vector step (`--envs`; 1 = the
     /// classic single-episode loop).
     pub envs: usize,
+    /// Scenario-diversity spec (`--scenarios`; see
+    /// [`crate::scenario::set`]): `None`/`"replicate"` clones one
+    /// sampled scenario into every slot, any other spec generates a
+    /// [`crate::scenario::ScenarioSet`] and gives each slot its own
+    /// topology.
+    pub scenarios: Option<String>,
     pub seed: u64,
 }
 
@@ -62,6 +68,7 @@ impl Default for MaddpgConfig {
             replay_cap: 100_000,
             churn: true,
             envs: 1,
+            scenarios: None,
             seed: 0xD71,
         }
     }
@@ -301,12 +308,15 @@ impl<'rt> MaddpgTrainer<'rt> {
     }
 
     /// Full training run; returns the per-episode reward curve
-    /// (Fig. 11's DRLGO series).  Replicates `env` into
-    /// `cfg.envs` vectorized episode slots, trains via
+    /// (Fig. 11's DRLGO series).  Builds the `cfg.envs`-slot vector
+    /// via [`VecEnv::for_training`] — replicating `env` in
+    /// single-scenario mode, or giving each slot its own generated
+    /// scenario when `cfg.scenarios` holds a spec — trains via
     /// [`MaddpgTrainer::train_vec`], and leaves `env` holding slot 0's
     /// final scenario so downstream evaluation keeps working.
     pub fn train(&mut self, env: &mut Env, cfg: &MaddpgConfig) -> crate::Result<Vec<EpisodeStats>> {
-        let mut venv = VecEnv::replicate(env, cfg.envs.max(1), cfg.seed);
+        let mut venv =
+            VecEnv::for_training(env, cfg.envs.max(1), cfg.scenarios.as_deref(), cfg.seed)?;
         let curve = self.train_vec(&mut venv, cfg)?;
         *env = venv.into_first();
         Ok(curve)

@@ -4,9 +4,11 @@
 //!   global state, two-dimensional agent actions, the cost-based
 //!   reward with the subgraph-colocation term R_sp (Eq. 25), and the
 //!   user-by-user episode protocol of Algorithm 2.
-//! * [`vec_env`] — E independent episodes of one shared scenario
-//!   stepped as a batch, with per-slot churn streams, thread fan-out
-//!   and auto-reset (the layer the training loops roll out on).
+//! * [`vec_env`] — E independent episodes stepped as a batch, with
+//!   per-slot churn streams, thread fan-out and auto-reset (the layer
+//!   the training loops roll out on).  Slots either replicate one
+//!   shared scenario or each own a distinct generated
+//!   [`crate::scenario::Scenario`] (`--scenarios`).
 //! * [`replay`] — experience replay buffer D.
 //! * [`maddpg`] — DRLGO: the MADDPG trainer driving the AOT-compiled
 //!   `actor_fwd` / `maddpg_train` executables over vectorized

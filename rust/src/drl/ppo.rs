@@ -36,6 +36,12 @@ pub struct PpoConfig {
     /// Parallel episode slots per vector step (`--envs`; 1 = the
     /// classic single-episode loop).
     pub envs: usize,
+    /// Scenario-diversity spec (`--scenarios`; see
+    /// [`crate::scenario::set`]): `None`/`"replicate"` clones one
+    /// sampled scenario into every slot, any other spec generates a
+    /// [`crate::scenario::ScenarioSet`] and gives each slot its own
+    /// topology.
+    pub scenarios: Option<String>,
     pub seed: u64,
 }
 
@@ -48,6 +54,7 @@ impl Default for PpoConfig {
             lam: 0.95,
             churn: true,
             envs: 1,
+            scenarios: None,
             seed: 0x990,
         }
     }
@@ -251,12 +258,15 @@ impl<'rt> PpoTrainer<'rt> {
         Ok((pl, vl))
     }
 
-    /// Full training: episodes over a (churning) environment.
-    /// Replicates `env` into `cfg.envs` vectorized slots, trains via
+    /// Full training: episodes over a (churning) environment.  Builds
+    /// the `cfg.envs`-slot vector via [`VecEnv::for_training`]
+    /// (replicate mode, or one generated scenario per slot when
+    /// `cfg.scenarios` holds a spec), trains via
     /// [`PpoTrainer::train_vec`], and leaves `env` holding slot 0's
     /// final scenario.
     pub fn train(&mut self, env: &mut Env, cfg: &PpoConfig) -> crate::Result<Vec<EpisodeStats>> {
-        let mut venv = VecEnv::replicate(env, cfg.envs.max(1), cfg.seed);
+        let mut venv =
+            VecEnv::for_training(env, cfg.envs.max(1), cfg.scenarios.as_deref(), cfg.seed)?;
         let curve = self.train_vec(&mut venv, cfg)?;
         *env = venv.into_first();
         Ok(curve)

@@ -1,19 +1,33 @@
-//! Vectorized multi-episode environments: E independent episodes of
-//! one shared scenario, stepped as a batch.
+//! Vectorized multi-episode environments: E independent episodes
+//! stepped as a batch — of one shared scenario
+//! ([`VecEnv::replicate`]) or of E *distinct* scenarios
+//! ([`VecEnv::from_scenario_set`]).
 //!
 //! DRLGO (Algorithm 2) trains one episode at a time, which leaves the
 //! learner idle between gradient steps and samples every transition
-//! from a single churn trajectory.  [`VecEnv`] replicates one fully
-//! configured [`Env`] into `E` *episode slots*:
+//! from a single churn trajectory.  [`VecEnv`] runs `E` *episode
+//! slots* instead:
 //!
-//! * the **scenario is shared immutably** — every slot starts from a
-//!   clone of the same dataset sample, edge topology, link draws and
-//!   system parameters, so the batch trains one policy on one problem
-//!   instance;
+//! * in **replicate mode** the scenario is shared immutably — every
+//!   slot starts from a clone of the same dataset sample, edge
+//!   topology, link draws and system parameters, so the batch trains
+//!   one policy on one problem instance;
+//! * in **scenario-diversity mode** each slot owns its *own*
+//!   generated [`crate::scenario::Scenario`] — its own graph, user
+//!   count, positions, bandwidth and CPU-rate draws — so one policy
+//!   trains across heterogeneous topologies (the generalization §5's
+//!   dynamic-adaptation claim rests on).  The only cross-slot
+//!   invariant is the agent count M (fixed by
+//!   [`crate::net::params::SystemParams`]; asserted at construction):
+//!   the batch state stays one dense `E × M × OBS` matrix with **no
+//!   padding and no masked rows**, because state rows are per-*server*
+//!   and per-slot user counts surface only as episode lengths (see
+//!   the padding/masking contract in [`crate::scenario`]);
 //! * each slot owns an **independent churn stream** — slot `i`'s RNG
 //!   is the `i`-th [`Rng::fork`] of `Rng::seed_from(seed)` — so after
-//!   the first auto-reset the slots diverge into E distinct dynamic
-//!   trajectories of the same scenario;
+//!   the first auto-reset replicated slots diverge into E distinct
+//!   dynamic trajectories (and diverse slots churn their own
+//!   scenarios independently);
 //! * stepping **fans out across worker threads** via
 //!   [`ThreadPool::map_scoped_mut`]: each slot is visited by exactly
 //!   one worker with exclusive access, so rollouts are deterministic
@@ -40,6 +54,7 @@ use crate::graph::geb::Dataset;
 use crate::net::cost::CostBreakdown;
 use crate::net::params::SystemParams;
 use crate::partition::incremental::IncrementalConfig;
+use crate::scenario::ScenarioSet;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
@@ -65,7 +80,8 @@ struct Slot {
     episodes: usize,
 }
 
-/// A pool of E independent episodes of one shared scenario.
+/// A pool of E independent episodes — replicated from one shared
+/// scenario, or each over its own generated scenario (same M).
 pub struct VecEnv {
     slots: Vec<Slot>,
     /// Worker threads for per-slot fan-out (1 = caller's thread).
@@ -83,12 +99,108 @@ impl VecEnv {
     /// the rule the E=1 equivalence property in `tests/properties.rs`
     /// pins down.
     pub fn replicate(proto: &Env, envs: usize, seed: u64) -> Self {
-        assert!(envs >= 1, "vector env needs at least one episode slot");
+        Self::from_envs((0..envs).map(|_| proto.clone()).collect(), seed)
+    }
+
+    /// Wrap pre-built environments — one per slot, possibly of
+    /// *different* scenarios (graphs, user counts, link draws).  Slot
+    /// `i` owns the `i`-th [`Rng::fork`] of `Rng::seed_from(seed)` as
+    /// its churn stream, exactly as in [`VecEnv::replicate`].  All
+    /// slots must share the agent count M (the batch-matrix width).
+    pub fn from_envs(envs: Vec<Env>, seed: u64) -> Self {
+        assert!(!envs.is_empty(), "vector env needs at least one episode slot");
+        let m = envs[0].agents();
+        for (i, env) in envs.iter().enumerate() {
+            assert_eq!(
+                env.agents(),
+                m,
+                "slot {i} has {} agents, slot 0 has {m}: scenario sets must share M",
+                env.agents()
+            );
+        }
         let mut seeder = Rng::seed_from(seed);
-        let slots = (0..envs)
-            .map(|_| Slot { env: proto.clone(), rng: seeder.fork(), episodes: 0 })
+        let slots = envs
+            .into_iter()
+            .map(|env| Slot { env, rng: seeder.fork(), episodes: 0 })
             .collect();
         VecEnv { slots, workers: 1, churn: true }
+    }
+
+    /// Build a scenario-diverse vector: slot `i` gets its own
+    /// environment from the set's train split (round-robin over
+    /// [`ScenarioSet::train_scenario`]).  Environment construction —
+    /// including each slot's initial HiCut — fans out over
+    /// `build_workers` threads of the shared [`ThreadPool`] machinery;
+    /// construction is deterministic, so the result is identical for
+    /// every worker count.  `cfg` supplies the behavioral knobs
+    /// (`use_hicut`, `use_rsp`, churn, …); each slot's user/assoc
+    /// counts come from its scenario (see [`Env::from_scenario`]).
+    pub fn from_scenario_set(
+        set: &ScenarioSet,
+        cfg: &EnvConfig,
+        envs: usize,
+        seed: u64,
+        build_workers: usize,
+    ) -> Self {
+        assert!(envs >= 1, "vector env needs at least one episode slot");
+        let picks: Vec<&crate::scenario::Scenario> =
+            (0..envs).map(|i| set.train_scenario(i)).collect();
+        Self::from_scenarios(&picks, cfg, seed, build_workers)
+    }
+
+    /// One slot per scenario, built in parallel — the shared
+    /// construction fan-out behind [`VecEnv::from_scenario_set`]
+    /// (train split) and
+    /// [`crate::drl::baselines::run_greedy_eval_set`] (eval split).
+    pub fn from_scenarios(
+        scenarios: &[&crate::scenario::Scenario],
+        cfg: &EnvConfig,
+        seed: u64,
+        build_workers: usize,
+    ) -> Self {
+        let built = ThreadPool::map_scoped(scenarios, build_workers.max(1), |sc| {
+            Env::from_scenario(sc, cfg.clone())
+        });
+        Self::from_envs(built, seed)
+    }
+
+    /// The training loops' entry point: `replicate` mode (`None`,
+    /// empty, or the literal `"replicate"`) clones `proto` into every
+    /// slot — bit-identical to the pre-scenario-subsystem behavior —
+    /// while any other spec string (see [`crate::scenario::set`])
+    /// generates a [`ScenarioSet`] of exactly `envs` train scenarios
+    /// (no held-out split: training never reads it — callers that
+    /// want a holdout build their own set via
+    /// [`ScenarioSet::from_spec`], whose train scenarios are identical
+    /// because eval forks come after the train forks) and gives each
+    /// slot its own scenario.
+    pub fn for_training(
+        proto: &Env,
+        envs: usize,
+        scenarios: Option<&str>,
+        seed: u64,
+    ) -> crate::Result<Self> {
+        match scenarios.map(str::trim) {
+            None | Some("") | Some("replicate") => Ok(Self::replicate(proto, envs, seed)),
+            Some(spec) => {
+                let specs = crate::scenario::parse_spec_list(
+                    spec,
+                    proto.cfg.n_users,
+                    proto.cfg.n_assocs,
+                )?;
+                let set = ScenarioSet::generate(&specs, &proto.params, envs.max(1), 0, seed);
+                // Salt the churn seeding (cf. `VecEnv::new`): with the
+                // raw seed, slot i's churn stream would be the same
+                // fork that just generated scenario i.
+                let churn_seed = seed ^ 0x5CEA_A105;
+                // Construction is worker-count invariant, so default
+                // to one build worker per slot (each slot's initial
+                // HiCut is the dominant cost); an explicit env-level
+                // worker count still wins.
+                let build_workers = if proto.workers > 1 { proto.workers } else { envs };
+                Ok(Self::from_scenario_set(&set, &proto.cfg, envs, churn_seed, build_workers))
+            }
+        }
     }
 
     /// Build a fresh prototype from a dataset sample and replicate it
@@ -359,6 +471,87 @@ mod tests {
             assert!(c.total() > 0.0, "slot {i} cost not evaluated");
             assert!(venv.env(i).finished());
         }
+    }
+
+    #[test]
+    fn scenario_set_slots_hold_distinct_scenarios() {
+        use crate::scenario::ScenarioSet;
+        let params = SystemParams::default();
+        // Two entries with *different user counts*: slots must differ
+        // in episode length yet share the batch-matrix width.
+        let spec = "uniform@30x60,clustered:3@50x120";
+        let set = ScenarioSet::from_spec(spec, 0, 0, &params, 4, 51).unwrap();
+        let cfg = EnvConfig { n_users: 0, n_assocs: 0, ..EnvConfig::default() };
+        let mut venv = VecEnv::from_scenario_set(&set, &cfg, 4, 52, 1);
+        assert_eq!(venv.len(), 4);
+        assert_eq!(venv.env(0).users.capacity(), 30);
+        assert_eq!(venv.env(1).users.capacity(), 50);
+        assert_eq!(venv.env(2).users.capacity(), 30);
+        assert_ne!(
+            venv.env(0).users.graph().num_edges(),
+            venv.env(1).users.graph().num_edges(),
+            "slots should hold different graphs"
+        );
+        // Per-slot cfg mirrors the slot's own scenario.
+        assert_eq!(venv.env(0).cfg.n_users, 30);
+        assert_eq!(venv.env(1).cfg.n_users, 50);
+        // One dense batch matrix, no padding: rows are per-server.
+        let sd = venv.state_dim();
+        assert_eq!(venv.states().len(), 4 * sd);
+
+        // Mixed-slot stepping with auto-reset: the short slots finish
+        // earlier and reset while the long ones keep going.
+        venv.set_churn(false);
+        venv.reset_all();
+        let agents = venv.agents();
+        let mut resets = vec![0usize; 4];
+        for step in 0..60usize {
+            let servers: Vec<usize> = (0..4).map(|i| (step + i) % agents).collect();
+            for (i, res) in venv.step_servers(&servers).iter().enumerate() {
+                assert_eq!(res.next_state.len(), sd);
+                if res.reset {
+                    resets[i] += 1;
+                }
+            }
+        }
+        // 60 steps = two full episodes of the 30-user slots, one of
+        // the 50-user slots (60 / 50 = 1).
+        assert_eq!(resets, vec![2, 1, 2, 1]);
+    }
+
+    #[test]
+    fn for_training_replicate_matches_replicate_bit_for_bit() {
+        // The single-scenario mode of the training entry point must be
+        // indistinguishable from the pre-scenario-subsystem replicate.
+        let proto = small_env(61);
+        for spec in [None, Some(""), Some("replicate")] {
+            let mut a = VecEnv::for_training(&proto, 2, spec, 0x5E).unwrap();
+            let mut b = VecEnv::replicate(&proto, 2, 0x5E);
+            a.reset_all();
+            b.reset_all();
+            for step in 0..40usize {
+                let servers = vec![step % a.agents(); 2];
+                let ra = a.step_servers(&servers);
+                let rb = b.step_servers(&servers);
+                for (x, y) in ra.iter().zip(&rb) {
+                    assert_eq!(x.outcome.assigned, y.outcome.assigned);
+                    assert_eq!(x.reset, y.reset);
+                    assert_eq!(x.next_state, y.next_state);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_training_spec_builds_a_diverse_vector() {
+        let proto = small_env(62);
+        let venv = VecEnv::for_training(&proto, 4, Some("mixed"), 0x5F).unwrap();
+        assert_eq!(venv.len(), 4);
+        assert_eq!(venv.agents(), proto.agents());
+        // Generated slots, not clones of the prototype.
+        let (e0, e1) = (venv.env(0), venv.env(1));
+        assert_ne!(e0.users.graph().num_edges(), e1.users.graph().num_edges());
+        assert!(VecEnv::for_training(&proto, 2, Some("warp-drive"), 1).is_err());
     }
 
     #[test]

@@ -106,10 +106,20 @@ impl DynamicGraph {
     /// task sizes supplied by the caller (from dataset feature dims).
     pub fn new(graph: Graph, task_mb: Vec<f64>, plane_m: f64, rng: &mut Rng) -> Self {
         let n = graph.len();
-        assert_eq!(task_mb.len(), n);
         let pos = (0..n)
             .map(|_| Pos { x: rng.range_f64(0.0, plane_m), y: rng.range_f64(0.0, plane_m) })
             .collect();
+        Self::with_positions(graph, task_mb, pos)
+    }
+
+    /// Build with all users alive at caller-supplied positions — the
+    /// constructor the scenario generators use, where positions are
+    /// part of the generated scenario (clustered/hotspot layouts)
+    /// rather than fresh uniform draws.
+    pub fn with_positions(graph: Graph, task_mb: Vec<f64>, pos: Vec<Pos>) -> Self {
+        let n = graph.len();
+        assert_eq!(task_mb.len(), n);
+        assert_eq!(pos.len(), n);
         let target_mean_deg = 2.0 * graph.num_edges() as f64 / n.max(1) as f64;
         DynamicGraph {
             graph,

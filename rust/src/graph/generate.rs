@@ -12,29 +12,79 @@ use crate::util::rng::Rng;
 
 /// Uniform random graph with exactly `edges` distinct edges.
 ///
-/// Uses rejection sampling with a hash set — fine up to the Fig. 6
-/// maximum of 8M edges over 20k vertices (4% of all pairs).
+/// Below half density this uses rejection sampling with a hash set —
+/// fine up to the Fig. 6 maximum of 8M edges over 20k vertices (4% of
+/// all pairs), and kept so existing seeds reproduce their graphs.  At
+/// or above half density the rejection loop degenerates (the expected
+/// tries per fresh edge diverge as `edges → max_edges`, and the
+/// complete graph never terminates), so dense requests switch to
+/// Floyd's algorithm over pair ranks: exactly `edges` distinct pairs
+/// in O(edges) expected draws, terminating even at `edges ==
+/// max_edges`.
 pub fn uniform_random(n: usize, edges: usize, rng: &mut Rng) -> Graph {
-    let max_edges = n * (n - 1) / 2;
+    let max_edges = if n < 2 { 0 } else { n * (n - 1) / 2 };
     assert!(edges <= max_edges, "cannot fit {edges} edges into {n} vertices");
+    if edges == 0 {
+        return Graph::new(n);
+    }
+    if edges <= max_edges / 2 {
+        // Sparse: rejection sampling (≤ 2 expected tries per edge).
+        let mut seen = std::collections::HashSet::with_capacity(edges * 2);
+        let mut list = Vec::with_capacity(edges);
+        while list.len() < edges {
+            let u = rng.below(n);
+            let v = rng.below(n);
+            if u == v {
+                continue;
+            }
+            let key = if u < v {
+                (u as u64) << 32 | v as u64
+            } else {
+                (v as u64) << 32 | u as u64
+            };
+            if seen.insert(key) {
+                list.push((u.min(v) as u32, u.max(v) as u32));
+            }
+        }
+        return Graph::from_edges(n, &list);
+    }
+    // Dense: Floyd's subset sampling over the pair ranks
+    // [0, max_edges).  Each round inserts exactly one fresh rank (j
+    // itself cannot have been chosen earlier: previous rounds only
+    // insert values ≤ their own smaller j), so the loop runs exactly
+    // `edges` times regardless of density.
     let mut seen = std::collections::HashSet::with_capacity(edges * 2);
     let mut list = Vec::with_capacity(edges);
-    while list.len() < edges {
-        let u = rng.below(n);
-        let v = rng.below(n);
-        if u == v {
-            continue;
+    for j in (max_edges - edges)..max_edges {
+        let t = rng.below(j + 1);
+        let rank = if seen.insert(t as u64) { t } else { j };
+        if rank == j {
+            seen.insert(j as u64);
         }
-        let key = if u < v {
-            (u as u64) << 32 | v as u64
-        } else {
-            (v as u64) << 32 | u as u64
-        };
-        if seen.insert(key) {
-            list.push((u.min(v) as u32, u.max(v) as u32));
-        }
+        list.push(unrank_pair(n, rank));
     }
     Graph::from_edges(n, &list)
+}
+
+/// Inverse of the row-major pair ranking: rank `r` in
+/// `[0, n·(n-1)/2)` → the r-th pair `(u, v)` with `u < v`, ordered by
+/// `u` then `v`.  Rows are located by binary search on the cumulative
+/// pair count `C(u) = u·(n-1) − u·(u-1)/2`.
+fn unrank_pair(n: usize, r: usize) -> (u32, u32) {
+    let cum = |u: usize| u * (n - 1) - u * (u.saturating_sub(1)) / 2;
+    let (mut lo, mut hi) = (0usize, n - 1);
+    // Largest u with C(u) <= r.
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if cum(mid) <= r {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    let u = lo;
+    let v = u + 1 + (r - cum(u));
+    (u as u32, v as u32)
 }
 
 /// Random integer edge weights in `[lo, hi]` keyed by canonical edge —
@@ -54,6 +104,14 @@ pub fn random_weights(
 
 /// Preferential-attachment graph (degree-proportional endpoint choice),
 /// ~`mean_degree/2` attachments per incoming vertex.
+///
+/// Degenerate sizes are safe by construction: `m >= 1` always, so the
+/// seed clique `(m + 1).min(n)` has at least two vertices (and hence a
+/// non-empty attachment pool) whenever any vertex remains to attach
+/// (`n > seed` implies `n >= 2` implies `seed >= 2`).  `n <= 1` builds
+/// an edgeless graph and `n <= mean_degree / 2` collapses to the
+/// complete graph — both panic-free and connected (see the tiny-n
+/// tests below).
 pub fn preferential_attachment(n: usize, mean_degree: usize, rng: &mut Rng) -> Graph {
     let m = (mean_degree / 2).max(1);
     let mut g = Graph::new(n);
@@ -127,6 +185,79 @@ mod tests {
         let mean = 2.0 * g.num_edges() as f64 / g.len() as f64;
         let max = (0..g.len()).map(|v| g.degree(v)).max().unwrap() as f64;
         assert!(max > 4.0 * mean, "max {max} mean {mean}");
+    }
+
+    #[test]
+    fn uniform_random_dense_terminates_with_exact_counts() {
+        // Regression: the rejection sampler degenerated toward
+        // non-termination as `edges -> max_edges` (the complete graph
+        // never finished).  The Floyd path must terminate and still
+        // deliver exact counts at and near full density.
+        for n in [2usize, 5, 12, 40] {
+            let max_edges = n * (n - 1) / 2;
+            for edges in [max_edges, max_edges.saturating_sub(1), max_edges * 4 / 5] {
+                let mut rng = Rng::seed_from(7 + n as u64);
+                let g = uniform_random(n, edges, &mut rng);
+                assert_eq!(g.len(), n);
+                assert_eq!(g.num_edges(), edges, "n={n} edges={edges}");
+            }
+        }
+        // The complete graph really is complete.
+        let mut rng = Rng::seed_from(8);
+        let g = uniform_random(9, 36, &mut rng);
+        for u in 0..9 {
+            for v in (u + 1)..9 {
+                assert!(g.has_edge(u, v), "missing edge ({u},{v})");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_random_tiny_vertex_counts() {
+        let mut rng = Rng::seed_from(9);
+        assert_eq!(uniform_random(0, 0, &mut rng).len(), 0);
+        assert_eq!(uniform_random(1, 0, &mut rng).num_edges(), 0);
+        let g = uniform_random(2, 1, &mut rng);
+        assert!(g.has_edge(0, 1));
+    }
+
+    #[test]
+    fn unrank_pair_bijects_onto_ordered_pairs() {
+        for n in [2usize, 3, 7, 23] {
+            let mut seen = std::collections::HashSet::new();
+            for r in 0..n * (n - 1) / 2 {
+                let (u, v) = unrank_pair(n, r);
+                assert!(u < v && (v as usize) < n, "n={n} r={r} -> ({u},{v})");
+                assert!(seen.insert((u, v)), "rank {r} duplicated pair ({u},{v})");
+            }
+        }
+    }
+
+    #[test]
+    fn preferential_attachment_tiny_n_is_connected_and_panic_free() {
+        // The seed-clique clamp audit: n in {1, 2, 3} across degenerate
+        // mean degrees (incl. n <= mean_degree/2) must neither panic
+        // nor fragment the graph.
+        for n in [1usize, 2, 3] {
+            for mean_degree in [0usize, 1, 2, 6, 100] {
+                let mut rng = Rng::seed_from((n * 100 + mean_degree) as u64);
+                let g = preferential_attachment(n, mean_degree, &mut rng);
+                assert_eq!(g.len(), n);
+                if n == 1 {
+                    assert_eq!(g.num_edges(), 0);
+                } else {
+                    let comps = g.components(|_| true);
+                    assert_eq!(
+                        comps.len(),
+                        1,
+                        "n={n} mean_degree={mean_degree} fragmented: {comps:?}"
+                    );
+                }
+            }
+        }
+        // n = 0 is a valid (empty) request too.
+        let mut rng = Rng::seed_from(3);
+        assert_eq!(preferential_attachment(0, 4, &mut rng).len(), 0);
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub mod graph;
 pub mod net;
 pub mod partition;
 pub mod runtime;
+pub mod scenario;
 pub mod serving;
 pub mod tensor;
 pub mod util;

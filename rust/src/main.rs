@@ -39,6 +39,12 @@ fn app() -> App {
                 .opt("users", "300", "users per scenario")
                 .opt("assocs", "4800", "associations per scenario")
                 .opt("envs", "1", "parallel episode slots per vector step (vectorized rollout)")
+                .opt(
+                    "scenarios",
+                    "replicate",
+                    "per-slot scenarios: replicate | mixed | list of \
+                     uniform|pa[:deg]|clustered[:k]|hotspot[:k], each with optional @NxE size",
+                )
                 .opt("out", "checkpoints", "checkpoint directory")
                 .opt("config", "configs/table2.toml", "config file")
                 .opt("seed", "3401", "rng seed"),
@@ -49,6 +55,7 @@ fn app() -> App {
                 .opt("assocs", "900", "associations")
                 .opt("episodes", "40", "training episodes for the DRL methods")
                 .opt("envs", "1", "parallel episode slots for DRL training")
+                .opt("scenarios", "replicate", "per-slot training scenarios (see train --help)")
                 .opt("config", "configs/table2.toml", "config file")
                 .opt("seed", "11", "rng seed")
                 .switch("no-inference", "skip fleet GNN inference"),
@@ -208,12 +215,13 @@ fn cmd_train(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
     let assocs = matches.usize("assocs");
     let seed = matches.usize("seed") as u64;
     let envs = matches.usize("envs").max(1);
+    let scenarios = scenarios_flag(matches);
     let outdir = std::path::PathBuf::from(matches.str("out"));
     std::fs::create_dir_all(&outdir)?;
     let method = matches.str("method").to_string();
     match method.as_str() {
         "drlgo" | "drl-only" => {
-            let cfg = MaddpgConfig { episodes, seed, envs, ..MaddpgConfig::default() };
+            let cfg = MaddpgConfig { episodes, seed, envs, scenarios, ..MaddpgConfig::default() };
             let ablation = method == "drl-only";
             let (trainer, _env, curve) = ctrl.train_drlgo(&dataset, ablation, users, assocs, &cfg)?;
             let ckpt = outdir.join(format!("{method}_{dataset}.gta"));
@@ -222,13 +230,22 @@ fn cmd_train(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
             print_curve(&curve);
         }
         "ptom" => {
-            let cfg = PpoConfig { episodes, seed, envs, ..PpoConfig::default() };
+            let cfg = PpoConfig { episodes, seed, envs, scenarios, ..PpoConfig::default() };
             let (_trainer, _env, curve) = ctrl.train_ptom(&dataset, users, assocs, &cfg)?;
             print_curve(&curve);
         }
         other => anyhow::bail!("unknown method {other}"),
     }
     Ok(())
+}
+
+/// The `--scenarios` flag, normalized: `replicate` (the default) and
+/// the empty string mean single-scenario mode (`None`).
+fn scenarios_flag(matches: &graphedge::util::cli::Matches) -> Option<String> {
+    match matches.str("scenarios").trim() {
+        "" | "replicate" => None,
+        spec => Some(spec.to_string()),
+    }
 }
 
 fn print_curve(curve: &[graphedge::drl::maddpg::EpisodeStats]) {
@@ -255,10 +272,17 @@ fn cmd_simulate(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()
     let envs = matches.usize("envs").max(1);
     let seed = matches.usize("seed") as u64;
     let inference = !matches.switch("no-inference");
+    let scenarios = scenarios_flag(matches);
 
-    let mcfg = MaddpgConfig { episodes, seed, envs, ..MaddpgConfig::default() };
+    let mcfg = MaddpgConfig {
+        episodes,
+        seed,
+        envs,
+        scenarios: scenarios.clone(),
+        ..MaddpgConfig::default()
+    };
     let (mut drlgo, _, _) = ctrl.train_drlgo(&dataset, false, users, assocs, &mcfg)?;
-    let pcfg = PpoConfig { episodes, seed, envs, ..PpoConfig::default() };
+    let pcfg = PpoConfig { episodes, seed, envs, scenarios, ..PpoConfig::default() };
     let (mut ptom, _, _) = ctrl.train_ptom(&dataset, users, assocs, &pcfg)?;
 
     let mut table = Table::new(

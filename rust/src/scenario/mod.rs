@@ -1,0 +1,529 @@
+//! Scenario generation: the new-workload axis of the north star.
+//!
+//! The paper trains DRLGO on *one* sampled scenario per run, which
+//! leaves the policy blind to topologies it never saw — yet §5's claim
+//! of "good effectiveness and dynamic adaptation … even in dynamic
+//! scenarios" is exactly a claim about unseen user topologies.  This
+//! module turns the scenario into a first-class, generatable object:
+//!
+//! * [`ScenarioSpec`] describes one edge-computing scenario — user
+//!   count, association budget and a [`ScenarioKind`] from the
+//!   generator family:
+//!   - **uniform** — uniform-random associations, uniform positions
+//!     (the Fig. 6 random-graph setting);
+//!   - **pa** — preferential attachment (promoted from
+//!     [`crate::graph::generate::preferential_attachment`]), the
+//!     heavy-tailed citation-shaped topology;
+//!   - **clustered** — planted community structure (most associations
+//!     intra-community, communities spatially co-located), the regime
+//!     HiCut is built to exploit;
+//!   - **hotspot** — users concentrated around a few servers with a
+//!     skewed weight profile, the load-imbalance regime where capacity
+//!     redirects dominate.
+//! * [`ScenarioSpec::generate`] materializes a [`Scenario`]: the user
+//!   graph, user positions, per-scenario [`EdgeNetwork`] (server CPU
+//!   rates and capacities), [`UserLinks`] bandwidth draws and task
+//!   sizes.  Generation is **deterministic from a forked RNG stream**:
+//!   every internal stage (topology, network, positions, links) draws
+//!   from its own [`Rng::fork`] of the caller's stream, so a spec plus
+//!   a seed pins the scenario bit for bit — the property
+//!   `tests/properties.rs` checks via [`Scenario::fingerprint`].
+//! * [`ScenarioSet`] (see [`set`]) samples a family of scenarios from
+//!   a spec list with a train/eval split, the unit
+//!   [`crate::drl::vec_env::VecEnv::from_scenario_set`] builds
+//!   per-slot environments from.
+//!
+//! # The padding/masking contract
+//!
+//! Heterogeneous slots do **not** change the training batch shape.
+//! The global state is per-*agent*, not per-user (Eq. 19): every slot
+//! contributes one `M × OBS` row block to the `E × M × OBS` matrix,
+//! and M — the server count — is fixed by [`SystemParams`] across the
+//! whole set ([`crate::drl::vec_env::VecEnv`] asserts it).  Per-slot
+//! user counts therefore never need padded observation rows; they
+//! surface only as
+//!
+//! * different *episode lengths* (a 100-user slot finishes its
+//!   offloading round before a 300-user slot), which the vector's
+//!   auto-reset absorbs — a finished slot starts its next episode
+//!   while its siblings keep stepping, so no batch row is ever masked
+//!   out or stale; and
+//! * per-slot normalization: observation features that divide by N
+//!   (obs\[4\], obs\[7\], obs\[14\]) use the *slot's own* user count,
+//!   so a small scenario's features occupy the same ~\[0, 1\] range as
+//!   a large one's.
+//!
+//! In short: rows are per-server and servers are shared, so the
+//! "padding" is the identity and the "mask" is the auto-reset.
+
+pub mod set;
+
+pub use set::{parse_spec_list, ScenarioSet};
+
+use crate::graph::dynamic::Pos;
+use crate::graph::generate::{preferential_attachment, uniform_random};
+use crate::graph::Graph;
+use crate::net::params::SystemParams;
+use crate::net::topology::{EdgeNetwork, UserLinks};
+use crate::util::rng::Rng;
+
+/// Which generator of the family produces the user topology and the
+/// position layout (see the module docs for the regimes).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScenarioKind {
+    /// Uniform-random associations, uniform positions.
+    UniformRandom,
+    /// Preferential attachment with this mean degree; heavy-tailed.
+    PreferentialAttachment { mean_degree: usize },
+    /// Planted communities: `1 - p_inter` of the associations stay
+    /// intra-community and communities cluster spatially.
+    Clustered { communities: usize, p_inter: f64 },
+    /// Users concentrated around `hotspots` servers with Zipf-skewed
+    /// weights — the skewed-server-load regime.
+    Hotspot { hotspots: usize },
+}
+
+impl ScenarioKind {
+    /// Short name used in spec strings and bench labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::UniformRandom => "uniform",
+            ScenarioKind::PreferentialAttachment { .. } => "pa",
+            ScenarioKind::Clustered { .. } => "clustered",
+            ScenarioKind::Hotspot { .. } => "hotspot",
+        }
+    }
+}
+
+/// Declarative description of one scenario (what to generate).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub kind: ScenarioKind,
+    pub n_users: usize,
+    /// Association budget.  The uniform and clustered generators hit
+    /// it exactly (capped by the complete graph); the PA-based kinds
+    /// (`pa`, `hotspot`) treat it as a target via their mean degree
+    /// and typically land slightly under it.
+    pub n_assocs: usize,
+    /// Feature dimensionality backing task sizes and GNN layer dims
+    /// (the paper maps one feature dimension to 1 kb, §6.1).
+    pub feat_dim: usize,
+    pub classes: usize,
+}
+
+impl ScenarioSpec {
+    /// Spec with the default GNN shape (500-dim features, 3 classes —
+    /// the cost-model defaults used across the test suite).
+    pub fn new(kind: ScenarioKind, n_users: usize, n_assocs: usize) -> Self {
+        ScenarioSpec { kind, n_users, n_assocs, feat_dim: 500, classes: 3 }
+    }
+
+    /// Task data size in Mbit per user (1 kb per feature dimension,
+    /// capped at 1500 dims — mirrors [`crate::graph::geb::Dataset`]).
+    pub fn task_mbit(&self) -> f64 {
+        (self.feat_dim.min(1500) as f64) * 1.0e3 / 1.0e6
+    }
+
+    /// GNN layer dimensions for the cost model (Eqs. 10–11).
+    pub fn layer_dims(&self) -> Vec<usize> {
+        vec![self.feat_dim.min(1500), 64, self.classes]
+    }
+
+    /// Materialize the scenario.  Deterministic in (`self`, `params`,
+    /// the state of `rng`): each stage draws from its own fork of
+    /// `rng`, in a fixed order, so the result is bit-reproducible and
+    /// independent of how the caller schedules the work.
+    pub fn generate(&self, params: &SystemParams, rng: &mut Rng) -> Scenario {
+        assert!(self.n_users >= 1, "a scenario needs at least one user");
+        let mut topo_rng = rng.fork();
+        let mut net_rng = rng.fork();
+        let mut pos_rng = rng.fork();
+        let mut link_rng = rng.fork();
+
+        let n = self.n_users;
+        let max_edges = if n < 2 { 0 } else { n * (n - 1) / 2 };
+        let edges = self.n_assocs.min(max_edges);
+        let net = EdgeNetwork::build(params, n, &mut net_rng);
+        let (graph, positions) = match &self.kind {
+            ScenarioKind::UniformRandom => (
+                uniform_random(n, edges, &mut topo_rng),
+                uniform_positions(n, params.plane_m, &mut pos_rng),
+            ),
+            ScenarioKind::PreferentialAttachment { mean_degree } => (
+                preferential_attachment(n, *mean_degree, &mut topo_rng),
+                uniform_positions(n, params.plane_m, &mut pos_rng),
+            ),
+            ScenarioKind::Clustered { communities, p_inter } => {
+                let k = (*communities).clamp(1, n);
+                let graph = clustered_graph(n, edges, k, *p_inter, &mut topo_rng);
+                let positions = clustered_positions(n, k, params.plane_m, &mut pos_rng);
+                (graph, positions)
+            }
+            ScenarioKind::Hotspot { hotspots } => {
+                let mean_degree = ((2 * edges) / n.max(1)).max(1);
+                let graph = preferential_attachment(n, mean_degree, &mut topo_rng);
+                let positions =
+                    hotspot_positions(n, &net, (*hotspots).max(1), params.plane_m, &mut pos_rng);
+                (graph, positions)
+            }
+        };
+        let links = UserLinks::draw(params, n, net.len(), &mut link_rng);
+        Scenario {
+            spec: self.clone(),
+            params: params.clone(),
+            graph,
+            positions,
+            net,
+            links,
+            task_mb: vec![self.task_mbit(); n],
+            layer_dims: self.layer_dims(),
+        }
+    }
+}
+
+/// One materialized EC scenario: everything an environment needs that
+/// is *scenario-specific* — graph, positions, per-scenario server
+/// draws, link draws, task sizes and GNN shape.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub spec: ScenarioSpec,
+    pub params: SystemParams,
+    pub graph: Graph,
+    pub positions: Vec<Pos>,
+    pub net: EdgeNetwork,
+    pub links: UserLinks,
+    pub task_mb: Vec<f64>,
+    pub layer_dims: Vec<usize>,
+}
+
+impl Scenario {
+    pub fn n_users(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// FNV-1a digest over every generated field (topology, position
+    /// bits, network draws, link draws, task sizes, layer dims).  Two
+    /// scenarios with equal fingerprints are bit-identical for every
+    /// purpose the environment has — the determinism property in
+    /// `tests/properties.rs` is stated through this.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.word(self.n_users() as u64);
+        for (u, v) in self.graph.edge_list() {
+            h.word((u as u64) << 32 | v as u64);
+        }
+        for p in &self.positions {
+            h.word(p.x.to_bits());
+            h.word(p.y.to_bits());
+        }
+        for s in &self.net.servers {
+            h.word(s.pos.x.to_bits());
+            h.word(s.pos.y.to_bits());
+            h.word(s.f_hz.to_bits());
+            h.word(s.p_w.to_bits());
+            h.word(s.capacity as u64);
+        }
+        for row in &self.links.bw_hz {
+            for bw in row {
+                h.word(bw.to_bits());
+            }
+        }
+        for p in &self.links.p_w {
+            h.word(p.to_bits());
+        }
+        for t in &self.task_mb {
+            h.word(t.to_bits());
+        }
+        for &d in &self.layer_dims {
+            h.word(d as u64);
+        }
+        h.finish()
+    }
+}
+
+/// Minimal FNV-1a accumulator (no hashing crates offline).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xCBF2_9CE4_8422_2325)
+    }
+
+    fn word(&mut self, w: u64) {
+        for byte in w.to_le_bytes() {
+            self.0 ^= byte as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn uniform_positions(n: usize, plane_m: f64, rng: &mut Rng) -> Vec<Pos> {
+    (0..n)
+        .map(|_| Pos { x: rng.range_f64(0.0, plane_m), y: rng.range_f64(0.0, plane_m) })
+        .collect()
+}
+
+/// Contiguous community blocks: vertex `v` belongs to the community
+/// whose block `[starts[c], starts[c+1])` contains it.
+fn community_starts(n: usize, k: usize) -> Vec<usize> {
+    (0..=k).map(|c| c * n / k).collect()
+}
+
+/// Planted-partition topology: `1 - p_inter` of the `edges` budget
+/// drawn inside contiguous community blocks, the rest across blocks,
+/// topped up with arbitrary pairs if either pool stalls (tiny or
+/// near-complete communities).
+fn clustered_graph(n: usize, edges: usize, k: usize, p_inter: f64, rng: &mut Rng) -> Graph {
+    let starts = community_starts(n, k);
+    let mut g = Graph::new(n);
+    let inter_target = ((edges as f64) * p_inter.clamp(0.0, 1.0)).round() as usize;
+    let intra_target = edges.saturating_sub(inter_target);
+    // Intra-community associations.
+    let mut got = 0usize;
+    let mut tries = 0usize;
+    while got < intra_target && tries < 60 * intra_target.max(1) {
+        tries += 1;
+        let u = rng.below(n);
+        let c = starts.partition_point(|&s| s <= u) - 1;
+        let (lo, hi) = (starts[c], starts[c + 1]);
+        if hi - lo < 2 {
+            continue;
+        }
+        let v = rng.range(lo, hi);
+        if u != v && g.add_edge(u, v) {
+            got += 1;
+        }
+    }
+    // Inter-community associations.
+    let mut got = 0usize;
+    let mut tries = 0usize;
+    while got < inter_target && tries < 60 * inter_target.max(1) && k >= 2 {
+        tries += 1;
+        let u = rng.below(n);
+        let v = rng.below(n);
+        let cu = starts.partition_point(|&s| s <= u) - 1;
+        let cv = starts.partition_point(|&s| s <= v) - 1;
+        if cu != cv && g.add_edge(u, v) {
+            got += 1;
+        }
+    }
+    // Top up with arbitrary pairs so the edge budget is exact even
+    // when a pool saturated (e.g. complete communities).
+    let mut tries = 0usize;
+    while g.num_edges() < edges && tries < 60 * edges.max(1) {
+        tries += 1;
+        let u = rng.below(n);
+        let v = rng.below(n);
+        if u != v {
+            g.add_edge(u, v);
+        }
+    }
+    // Deterministic completion: at near-complete densities the
+    // rejection top-up is a coupon collector and can exhaust its try
+    // budget short of the target — enumerate the remaining non-edges
+    // instead of silently under-delivering (the caller capped `edges`
+    // at the complete graph, so this always reaches the budget).
+    if g.num_edges() < edges {
+        'fill: for u in 0..n {
+            for v in (u + 1)..n {
+                if g.num_edges() >= edges {
+                    break 'fill;
+                }
+                g.add_edge(u, v);
+            }
+        }
+    }
+    g
+}
+
+/// Communities co-located on the plane: one uniform center per
+/// community, members uniform in a square around it (clamped).
+fn clustered_positions(n: usize, k: usize, plane_m: f64, rng: &mut Rng) -> Vec<Pos> {
+    let starts = community_starts(n, k);
+    let spread = plane_m / (k as f64).sqrt().max(1.0) / 2.0;
+    let mut pos = vec![Pos { x: 0.0, y: 0.0 }; n];
+    for c in 0..k {
+        let center = Pos { x: rng.range_f64(0.0, plane_m), y: rng.range_f64(0.0, plane_m) };
+        for p in &mut pos[starts[c]..starts[c + 1]] {
+            *p = Pos {
+                x: (center.x + rng.range_f64(-spread, spread)).clamp(0.0, plane_m),
+                y: (center.y + rng.range_f64(-spread, spread)).clamp(0.0, plane_m),
+            };
+        }
+    }
+    pos
+}
+
+/// Users piled around `hotspots` servers with Zipf-ish weights
+/// (hotspot `i` draws ∝ 1/(i+1)), a tight spread around each anchor —
+/// the skewed-server-load regime.
+fn hotspot_positions(
+    n: usize,
+    net: &EdgeNetwork,
+    hotspots: usize,
+    plane_m: f64,
+    rng: &mut Rng,
+) -> Vec<Pos> {
+    let anchors: Vec<Pos> = net
+        .servers
+        .iter()
+        .take(hotspots.min(net.len()).max(1))
+        .map(|s| s.pos)
+        .collect();
+    let weights: Vec<f64> = (0..anchors.len()).map(|i| 1.0 / (i + 1) as f64).collect();
+    let total: f64 = weights.iter().sum();
+    let spread = plane_m * 0.08;
+    (0..n)
+        .map(|_| {
+            let mut pick = rng.range_f64(0.0, total);
+            let mut a = anchors.len() - 1;
+            for (i, w) in weights.iter().enumerate() {
+                if pick < *w {
+                    a = i;
+                    break;
+                }
+                pick -= w;
+            }
+            Pos {
+                x: (anchors[a].x + rng.range_f64(-spread, spread)).clamp(0.0, plane_m),
+                y: (anchors[a].y + rng.range_f64(-spread, spread)).clamp(0.0, plane_m),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(kind: ScenarioKind) -> ScenarioSpec {
+        ScenarioSpec::new(kind, 120, 400)
+    }
+
+    #[test]
+    fn every_kind_generates_with_exact_shape() {
+        let params = SystemParams::default();
+        for kind in [
+            ScenarioKind::UniformRandom,
+            ScenarioKind::PreferentialAttachment { mean_degree: 6 },
+            ScenarioKind::Clustered { communities: 4, p_inter: 0.05 },
+            ScenarioKind::Hotspot { hotspots: 2 },
+        ] {
+            let mut rng = Rng::seed_from(11);
+            let sc = spec(kind.clone()).generate(&params, &mut rng);
+            assert_eq!(sc.n_users(), 120, "{}", kind.name());
+            assert_eq!(sc.positions.len(), 120);
+            assert_eq!(sc.task_mb.len(), 120);
+            assert_eq!(sc.net.len(), params.servers);
+            assert_eq!(sc.links.bw_hz.len(), 120);
+            assert!(sc.graph.num_edges() > 0, "{} generated no edges", kind.name());
+            for p in &sc.positions {
+                assert!((0.0..=params.plane_m).contains(&p.x));
+                assert!((0.0..=params.plane_m).contains(&p.y));
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_and_clustered_hit_the_assoc_budget_exactly() {
+        let params = SystemParams::default();
+        for kind in [
+            ScenarioKind::UniformRandom,
+            ScenarioKind::Clustered { communities: 4, p_inter: 0.05 },
+        ] {
+            let mut rng = Rng::seed_from(13);
+            let sc = spec(kind).generate(&params, &mut rng);
+            assert_eq!(sc.graph.num_edges(), 400);
+        }
+    }
+
+    #[test]
+    fn clustered_budget_exact_even_at_complete_density() {
+        // The rejection top-up stalls near full density; the
+        // deterministic completion must still deliver the exact
+        // budget, up to and including the complete graph.
+        let params = SystemParams::default();
+        let max_edges = 40 * 39 / 2;
+        for edges in [max_edges, max_edges - 3] {
+            let spec = ScenarioSpec::new(
+                ScenarioKind::Clustered { communities: 2, p_inter: 0.05 },
+                40,
+                edges,
+            );
+            let sc = spec.generate(&params, &mut Rng::seed_from(51));
+            assert_eq!(sc.graph.num_edges(), edges);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let params = SystemParams::default();
+        let s = spec(ScenarioKind::Clustered { communities: 5, p_inter: 0.1 });
+        let a = s.generate(&params, &mut Rng::seed_from(77));
+        let b = s.generate(&params, &mut Rng::seed_from(77));
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = s.generate(&params, &mut Rng::seed_from(78));
+        assert_ne!(a.fingerprint(), c.fingerprint(), "seeds must diverge");
+    }
+
+    #[test]
+    fn clustered_associations_are_mostly_intra_community() {
+        let params = SystemParams::default();
+        let s = spec(ScenarioKind::Clustered { communities: 4, p_inter: 0.05 });
+        let mut rng = Rng::seed_from(21);
+        let sc = s.generate(&params, &mut rng);
+        let starts = community_starts(120, 4);
+        let comm = |v: usize| starts.partition_point(|&s| s <= v) - 1;
+        let inter = sc
+            .graph
+            .edge_list()
+            .iter()
+            .filter(|&&(u, v)| comm(u as usize) != comm(v as usize))
+            .count();
+        // 5% target with top-up slack: anything under 20% is clearly
+        // community structure (uniform would sit near 75%).
+        assert!(
+            inter * 5 < sc.graph.num_edges(),
+            "{inter}/{} inter-community edges",
+            sc.graph.num_edges()
+        );
+    }
+
+    #[test]
+    fn hotspot_positions_skew_toward_the_first_server() {
+        let params = SystemParams::default();
+        let s = spec(ScenarioKind::Hotspot { hotspots: 2 });
+        let mut rng = Rng::seed_from(31);
+        let sc = s.generate(&params, &mut rng);
+        // Every user sits near one of the two anchors, and the first
+        // anchor (weight 1) attracts more than the second (weight 1/2).
+        let (a0, a1) = (sc.net.servers[0].pos, sc.net.servers[1].pos);
+        let spread = params.plane_m * 0.08;
+        let near = |p: &Pos, a: Pos| (p.x - a.x).abs() <= spread && (p.y - a.y).abs() <= spread;
+        let n0 = sc.positions.iter().filter(|p| near(p, a0)).count();
+        let n1 = sc.positions.iter().filter(|p| near(p, a1)).count();
+        assert_eq!(n0 + n1, 120, "positions strayed from the hotspots");
+        assert!(n0 > n1, "skew inverted: {n0} vs {n1}");
+    }
+
+    #[test]
+    fn tiny_scenarios_generate_without_panic() {
+        let params = SystemParams::default();
+        for kind in [
+            ScenarioKind::UniformRandom,
+            ScenarioKind::PreferentialAttachment { mean_degree: 4 },
+            ScenarioKind::Clustered { communities: 8, p_inter: 0.2 },
+            ScenarioKind::Hotspot { hotspots: 99 },
+        ] {
+            for n in [1usize, 2, 3] {
+                let mut rng = Rng::seed_from(41);
+                let sc = ScenarioSpec::new(kind.clone(), n, 10).generate(&params, &mut rng);
+                assert_eq!(sc.n_users(), n);
+            }
+        }
+    }
+}

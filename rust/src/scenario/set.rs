@@ -1,0 +1,271 @@
+//! Scenario *sets*: families of generated scenarios with a train/eval
+//! split, plus the spec-string grammar the CLI exposes.
+//!
+//! # Spec strings (`--scenarios`)
+//!
+//! A spec string is either the literal `replicate` (single-scenario
+//! mode — every vector slot clones the same sampled scenario, exactly
+//! the pre-scenario-subsystem behavior), the shorthand `mixed` (one of
+//! each generator kind), or a comma-separated list of entries:
+//!
+//! ```text
+//! entry     := kind [":" param] ["@" users "x" assocs]
+//! kind      := "uniform" | "pa" | "clustered" | "hotspot"
+//! param     := pa mean degree | clustered community count
+//!            | hotspot anchor count
+//! ```
+//!
+//! Examples: `mixed`, `uniform,pa:6`, `clustered:5@200x800,hotspot:2`.
+//! Entries without an `@` suffix inherit the run's `--users`/`--assocs`
+//! values, so slots can hold genuinely different *user counts*, not
+//! just different topologies.
+//!
+//! # Determinism
+//!
+//! [`ScenarioSet::generate`] derives scenario `i` from the `i`-th
+//! [`Rng::fork`] of `Rng::seed_from(seed)` — the same stream rule the
+//! vectorized environment uses for churn — so a (spec list, seed) pair
+//! pins the whole set bit for bit regardless of worker counts or
+//! construction order.
+
+use anyhow::{bail, Context};
+
+use crate::net::params::SystemParams;
+use crate::util::rng::Rng;
+
+use super::{Scenario, ScenarioKind, ScenarioSpec};
+
+/// A generated scenario family with train/eval index splits.
+#[derive(Clone, Debug)]
+pub struct ScenarioSet {
+    pub scenarios: Vec<Scenario>,
+    /// Indices into `scenarios` used for training slots.
+    pub train: Vec<usize>,
+    /// Held-out indices for evaluation.
+    pub eval: Vec<usize>,
+}
+
+impl ScenarioSet {
+    /// Generate `train_count + eval_count` scenarios, cycling through
+    /// `specs`; the first `train_count` are the train split, the rest
+    /// the eval split.  Scenario `i` is generated from the `i`-th fork
+    /// of `Rng::seed_from(seed)`.
+    pub fn generate(
+        specs: &[ScenarioSpec],
+        params: &SystemParams,
+        train_count: usize,
+        eval_count: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(!specs.is_empty(), "scenario set needs at least one spec");
+        assert!(train_count >= 1, "scenario set needs at least one train scenario");
+        let mut seeder = Rng::seed_from(seed);
+        let total = train_count + eval_count;
+        let scenarios: Vec<Scenario> = (0..total)
+            .map(|i| {
+                let mut rng = seeder.fork();
+                specs[i % specs.len()].generate(params, &mut rng)
+            })
+            .collect();
+        ScenarioSet {
+            scenarios,
+            train: (0..train_count).collect(),
+            eval: (train_count..total).collect(),
+        }
+    }
+
+    /// Parse a spec string (see the module docs) and generate a set
+    /// sized for `slots` vector slots: `slots` train scenarios plus
+    /// `max(1, slots / 4)` held-out eval scenarios.
+    pub fn from_spec(
+        spec: &str,
+        n_users: usize,
+        n_assocs: usize,
+        params: &SystemParams,
+        slots: usize,
+        seed: u64,
+    ) -> crate::Result<Self> {
+        let specs = parse_spec_list(spec, n_users, n_assocs)?;
+        let slots = slots.max(1);
+        Ok(Self::generate(&specs, params, slots, (slots / 4).max(1), seed))
+    }
+
+    pub fn len(&self) -> usize {
+        self.scenarios.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+
+    /// The train-split scenario backing vector slot `i` (round-robin).
+    pub fn train_scenario(&self, i: usize) -> &Scenario {
+        &self.scenarios[self.train[i % self.train.len()]]
+    }
+
+    /// Eval-split scenarios, in order.
+    pub fn eval_scenarios(&self) -> impl Iterator<Item = &Scenario> {
+        self.eval.iter().map(|&i| &self.scenarios[i])
+    }
+}
+
+/// Parse a `--scenarios` entry list into specs (see the module docs
+/// for the grammar).  `replicate` (the single-scenario mode) is *not*
+/// accepted here — callers dispatch on it before parsing.
+pub fn parse_spec_list(
+    spec: &str,
+    n_users: usize,
+    n_assocs: usize,
+) -> crate::Result<Vec<ScenarioSpec>> {
+    let spec = spec.trim();
+    if spec.is_empty() || spec == "replicate" {
+        bail!("spec {spec:?} is the single-scenario mode, not a generator list");
+    }
+    if spec == "mixed" {
+        if n_users == 0 {
+            bail!("spec \"mixed\" requests zero users (set --users or use @NxE entries)");
+        }
+        let mean_degree = default_mean_degree(n_users, n_assocs);
+        return Ok(vec![
+            ScenarioSpec::new(ScenarioKind::UniformRandom, n_users, n_assocs),
+            ScenarioSpec::new(
+                ScenarioKind::PreferentialAttachment { mean_degree },
+                n_users,
+                n_assocs,
+            ),
+            ScenarioSpec::new(
+                ScenarioKind::Clustered { communities: 4, p_inter: 0.05 },
+                n_users,
+                n_assocs,
+            ),
+            ScenarioSpec::new(ScenarioKind::Hotspot { hotspots: 2 }, n_users, n_assocs),
+        ]);
+    }
+    spec.split(',')
+        .map(|entry| parse_entry(entry.trim(), n_users, n_assocs))
+        .collect()
+}
+
+fn default_mean_degree(n_users: usize, n_assocs: usize) -> usize {
+    ((2 * n_assocs) / n_users.max(1)).max(1)
+}
+
+fn parse_entry(entry: &str, n_users: usize, n_assocs: usize) -> crate::Result<ScenarioSpec> {
+    // kind[:param][@users x assocs]
+    let (head, size) = match entry.split_once('@') {
+        Some((h, s)) => (h, Some(s)),
+        None => (entry, None),
+    };
+    let (n_users, n_assocs) = match size {
+        None => (n_users, n_assocs),
+        Some(s) => {
+            let (u, a) = s
+                .split_once('x')
+                .with_context(|| format!("size {s:?} in {entry:?} wants USERSxASSOCS"))?;
+            (
+                u.trim().parse().with_context(|| format!("bad user count in {entry:?}"))?,
+                a.trim().parse().with_context(|| format!("bad assoc count in {entry:?}"))?,
+            )
+        }
+    };
+    if n_users == 0 {
+        bail!("entry {entry:?} requests zero users");
+    }
+    let (kind, param) = match head.split_once(':') {
+        Some((k, p)) => (k.trim(), Some(p.trim())),
+        None => (head.trim(), None),
+    };
+    let parse_param = |default: usize| -> crate::Result<usize> {
+        match param {
+            None => Ok(default),
+            Some(p) => p.parse().with_context(|| format!("bad parameter in {entry:?}")),
+        }
+    };
+    let kind = match kind {
+        "uniform" => {
+            if param.is_some() {
+                bail!("uniform takes no parameter (got {entry:?})");
+            }
+            ScenarioKind::UniformRandom
+        }
+        "pa" => ScenarioKind::PreferentialAttachment {
+            mean_degree: parse_param(default_mean_degree(n_users, n_assocs))?.max(1),
+        },
+        "clustered" => ScenarioKind::Clustered {
+            communities: parse_param(4)?.max(1),
+            p_inter: 0.05,
+        },
+        "hotspot" => ScenarioKind::Hotspot { hotspots: parse_param(2)?.max(1) },
+        other => bail!("unknown scenario kind {other:?} (want uniform|pa|clustered|hotspot)"),
+    };
+    Ok(ScenarioSpec::new(kind, n_users, n_assocs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_expands_to_all_four_kinds() {
+        let specs = parse_spec_list("mixed", 100, 300).unwrap();
+        let names: Vec<&str> = specs.iter().map(|s| s.kind.name()).collect();
+        assert_eq!(names, vec!["uniform", "pa", "clustered", "hotspot"]);
+        assert!(specs.iter().all(|s| s.n_users == 100 && s.n_assocs == 300));
+    }
+
+    #[test]
+    fn entries_parse_params_and_sizes() {
+        let specs = parse_spec_list("pa:8,clustered:5@60x120,hotspot", 100, 300).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].kind, ScenarioKind::PreferentialAttachment { mean_degree: 8 });
+        assert_eq!(specs[0].n_users, 100);
+        assert!(matches!(specs[1].kind, ScenarioKind::Clustered { communities: 5, .. }));
+        assert_eq!((specs[1].n_users, specs[1].n_assocs), (60, 120));
+        assert_eq!(specs[2].kind, ScenarioKind::Hotspot { hotspots: 2 });
+    }
+
+    #[test]
+    fn bad_entries_are_rejected() {
+        assert!(parse_spec_list("", 10, 20).is_err());
+        assert!(parse_spec_list("replicate", 10, 20).is_err());
+        assert!(parse_spec_list("mixed", 0, 20).is_err());
+        assert!(parse_spec_list("warp-drive", 10, 20).is_err());
+        assert!(parse_spec_list("uniform:3", 10, 20).is_err());
+        assert!(parse_spec_list("pa:x", 10, 20).is_err());
+        assert!(parse_spec_list("pa@0x5", 10, 20).is_err());
+        assert!(parse_spec_list("pa@12", 10, 20).is_err());
+    }
+
+    #[test]
+    fn set_generation_splits_and_cycles() {
+        let params = SystemParams::default();
+        let specs = parse_spec_list("uniform@40x80,pa:4@30x60", 0, 0).unwrap();
+        let set = ScenarioSet::generate(&specs, &params, 5, 2, 99);
+        assert_eq!(set.len(), 7);
+        assert_eq!(set.train, vec![0, 1, 2, 3, 4]);
+        assert_eq!(set.eval, vec![5, 6]);
+        // Specs cycle across the whole set: even indices uniform (40
+        // users), odd ones PA (30 users).
+        for (i, sc) in set.scenarios.iter().enumerate() {
+            let want = if i % 2 == 0 { 40 } else { 30 };
+            assert_eq!(sc.n_users(), want, "scenario {i}");
+        }
+        // Round-robin slot assignment wraps.
+        assert_eq!(set.train_scenario(5).n_users(), set.train_scenario(0).n_users());
+        assert_eq!(set.eval_scenarios().count(), 2);
+    }
+
+    #[test]
+    fn from_spec_is_deterministic_in_the_seed() {
+        let params = SystemParams::default();
+        let a = ScenarioSet::from_spec("mixed", 60, 150, &params, 4, 7).unwrap();
+        let b = ScenarioSet::from_spec("mixed", 60, 150, &params, 4, 7).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+            assert_eq!(x.fingerprint(), y.fingerprint());
+        }
+        // Distinct slots hold distinct scenarios (different generators
+        // and independent streams).
+        assert_ne!(a.scenarios[0].fingerprint(), a.scenarios[1].fingerprint());
+    }
+}

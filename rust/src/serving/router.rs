@@ -32,9 +32,21 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Router state: a queue per server.
+/// Router state: a queue per server, plus the open batch window.
+///
+/// `deadlines[s]` is when server `s`'s *forming batch* opened: set by
+/// the first [`Router::submit`] into a windowless server, re-anchored
+/// to the residue's oldest request when [`Router::ready_batches`]
+/// drains full batches, and cleared whenever the queue empties.  The
+/// timeout test reads this anchor — which makes clearing it on
+/// [`Router::flush`] mandatory (see the regression note there).
+/// Invariant: `deadlines[s]` is `Some(q[0].enqueued)` exactly while
+/// queue `s` is non-empty.
 pub struct Router {
     queues: Vec<Vec<Request>>,
+    /// Per-server batch deadline anchor: when the oldest queued
+    /// request arrived (`None` = empty queue, no window open).
+    deadlines: Vec<Option<Instant>>,
     policy: BatchPolicy,
     pub dispatched_batches: usize,
     pub dispatched_requests: usize,
@@ -48,6 +60,7 @@ impl Router {
         let policy = BatchPolicy { max_batch: policy.max_batch.max(1), ..policy };
         Router {
             queues: vec![Vec::new(); servers],
+            deadlines: vec![None; servers],
             policy,
             dispatched_batches: 0,
             dispatched_requests: 0,
@@ -55,11 +68,15 @@ impl Router {
     }
 
     /// Route a request according to the offloading decision; returns
-    /// the chosen server.
+    /// the chosen server.  The first request into an empty queue opens
+    /// that server's `max_wait` window.
     pub fn submit(&mut self, user: usize, offload: &Offload, now: Instant) -> Option<usize> {
         let server = offload.server[user];
         if server == UNASSIGNED {
             return None;
+        }
+        if self.deadlines[server].is_none() {
+            self.deadlines[server] = Some(now);
         }
         self.queues[server].push(Request { user, enqueued: now });
         Some(server)
@@ -76,29 +93,48 @@ impl Router {
     /// holding ≥ 2·`max_batch` requests (a burst between poll points)
     /// previously shipped one batch and stranded the residue until the
     /// next timeout.  After the full batches, any remainder whose
-    /// oldest request has waited past `max_wait` ships too.
+    /// window opened more than `max_wait` ago ships too; a surviving
+    /// residue re-anchors its window to its own oldest request.
     pub fn ready_batches(&mut self, now: Instant) -> Vec<(usize, Vec<usize>)> {
         let mut out = Vec::new();
         for (server, q) in self.queues.iter_mut().enumerate() {
+            let mut drained_full = false;
             while q.len() >= self.policy.max_batch {
                 let batch: Vec<usize> = q.drain(..self.policy.max_batch).map(|r| r.user).collect();
                 self.dispatched_batches += 1;
                 self.dispatched_requests += batch.len();
                 out.push((server, batch));
+                drained_full = true;
             }
-            if !q.is_empty()
-                && now.duration_since(q[0].enqueued) >= self.policy.max_wait
-            {
-                let batch: Vec<usize> = q.drain(..).map(|r| r.user).collect();
-                self.dispatched_batches += 1;
-                self.dispatched_requests += batch.len();
-                out.push((server, batch));
+            if drained_full {
+                // The residue's window starts at its own oldest request.
+                self.deadlines[server] = q.first().map(|r| r.enqueued);
+            }
+            if let Some(opened) = self.deadlines[server] {
+                if now.duration_since(opened) >= self.policy.max_wait {
+                    let batch: Vec<usize> = q.drain(..).map(|r| r.user).collect();
+                    self.dispatched_batches += 1;
+                    self.dispatched_requests += batch.len();
+                    out.push((server, batch));
+                    self.deadlines[server] = None;
+                }
             }
         }
         out
     }
 
-    /// Force-flush everything (end of run).
+    /// Force-flush everything (end of run — or a layout change that
+    /// invalidates queued placements).
+    ///
+    /// Clears every per-server batch deadline along with the queues:
+    /// a post-flush `submit` must open a *fresh* `max_wait` window.
+    /// (The pre-cache implementation re-derived the window from
+    /// `q[0].enqueued` on every poll and so could not hold a stale
+    /// anchor; with the cached deadline, every drain path — this one
+    /// included — must clear it, or the next batch after a flush ships
+    /// on its predecessor's aged clock at the first poll.  The
+    /// `flush_clears_batch_deadlines` regression test pins exactly
+    /// that contract.)
     pub fn flush(&mut self) -> Vec<(usize, Vec<usize>)> {
         let mut out = Vec::new();
         for (server, q) in self.queues.iter_mut().enumerate() {
@@ -109,6 +145,7 @@ impl Router {
                 self.dispatched_requests += batch.len();
                 out.push((server, batch));
             }
+            self.deadlines[server] = None;
         }
         out
     }
@@ -230,6 +267,59 @@ mod tests {
         let batches = r.ready_batches(t);
         assert_eq!(batches, vec![(0, vec![0]), (0, vec![1]), (0, vec![2])]);
         assert!(r.flush().is_empty());
+    }
+
+    #[test]
+    fn flush_clears_batch_deadlines() {
+        // Pins the cached-deadline contract: if a force-flush left the
+        // batch-window anchor behind, the first request of the *next*
+        // batch would inherit a deadline already in the past and ship
+        // alone on the next poll instead of waiting out a fresh
+        // max_wait window.
+        let max_wait = Duration::from_millis(50);
+        let mut r = Router::new(1, BatchPolicy { max_batch: 100, max_wait });
+        let off = offload_all_to(0, 8);
+        let t0 = Instant::now();
+        r.submit(0, &off, t0);
+        r.submit(1, &off, t0);
+        // Age the queue well past its window, then force-flush it.
+        let aged = t0 + Duration::from_secs(30);
+        let flushed = r.flush();
+        assert_eq!(flushed, vec![(0, vec![0, 1])]);
+        assert_eq!(r.queue_len(0), 0);
+
+        // Refill after the flush: the new batch's window opens at its
+        // own first request, not at the flushed batch's.
+        let t1 = aged + Duration::from_secs(5);
+        r.submit(2, &off, t1);
+        r.submit(3, &off, t1 + Duration::from_millis(1));
+        assert!(
+            r.ready_batches(t1 + max_wait / 2).is_empty(),
+            "post-flush batch dispatched on a stale deadline"
+        );
+        let batches = r.ready_batches(t1 + max_wait);
+        assert_eq!(batches, vec![(0, vec![2, 3])]);
+    }
+
+    #[test]
+    fn residue_window_restarts_at_its_own_oldest_request() {
+        // The full-batch drain re-anchors the survivor's window: the
+        // residue ships max_wait after *its* arrival, not the burst's.
+        let max_wait = Duration::from_millis(50);
+        let mut r = Router::new(1, BatchPolicy { max_batch: 3, max_wait });
+        let off = offload_all_to(0, 8);
+        let t0 = Instant::now();
+        for u in 0..3 {
+            r.submit(u, &off, t0);
+        }
+        let t1 = t0 + Duration::from_millis(40);
+        r.submit(3, &off, t1);
+        // Poll right after the late arrival: the full batch ships, the
+        // residue's clock starts at t1.
+        let batches = r.ready_batches(t1);
+        assert_eq!(batches, vec![(0, vec![0, 1, 2])]);
+        assert!(r.ready_batches(t1 + max_wait / 2).is_empty());
+        assert_eq!(r.ready_batches(t1 + max_wait), vec![(0, vec![3])]);
     }
 
     #[test]

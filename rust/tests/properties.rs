@@ -412,6 +412,112 @@ fn vec_env_rollouts_are_deterministic_and_worker_count_invariant() {
 }
 
 #[test]
+fn scenario_generation_is_bit_deterministic() {
+    // The scenario-subsystem acceptance property, part 1: a
+    // (ScenarioSpec, seed) pair pins the generated Scenario bit for
+    // bit — same topology, positions, server draws, link draws — no
+    // matter how many times or in what context it is generated.
+    use graphedge::scenario::{parse_spec_list, ScenarioSet};
+    let params = SystemParams::default();
+    for spec in ["mixed", "clustered:5@80x300,hotspot:3", "uniform,pa:8@60x100"] {
+        let specs = parse_spec_list(spec, 70, 210).unwrap();
+        for seed in [1u64, 0xABC, 9999] {
+            let a = ScenarioSet::generate(&specs, &params, 6, 2, seed);
+            let b = ScenarioSet::generate(&specs, &params, 6, 2, seed);
+            let fa: Vec<u64> = a.scenarios.iter().map(|s| s.fingerprint()).collect();
+            let fb: Vec<u64> = b.scenarios.iter().map(|s| s.fingerprint()).collect();
+            assert_eq!(fa, fb, "spec {spec:?} seed {seed} not deterministic");
+            // Distinct slots get distinct forked streams.
+            assert_ne!(fa[0], fa[1], "spec {spec:?} seed {seed} collapsed slots");
+            let c = ScenarioSet::generate(&specs, &params, 6, 2, seed ^ 0x5A5A);
+            assert_ne!(c.scenarios[0].fingerprint(), fa[0], "different seeds must diverge");
+        }
+    }
+}
+
+#[test]
+fn scenario_vec_env_rollouts_are_worker_count_invariant() {
+    // The scenario-subsystem acceptance property, part 2: a
+    // heterogeneous vector (distinct graphs *and* user counts per
+    // slot) is a pure function of (set, config, seed, actions) — both
+    // the per-slot environment *construction* fan-out and the rollout
+    // fan-out reproduce every state and outcome bit for bit under any
+    // worker count.
+    use graphedge::drl::vec_env::VecEnv;
+    use graphedge::drl::EnvConfig;
+    use graphedge::scenario::ScenarioSet;
+    let params = SystemParams::default();
+    let spec = "uniform@40x90,clustered:3@60x150,hotspot@30x60";
+    let set = ScenarioSet::from_spec(spec, 0, 0, &params, 3, 0xD1CE).unwrap();
+    let cfg = EnvConfig { n_users: 0, n_assocs: 0, ..EnvConfig::default() };
+    let rollout = |build_workers: usize, step_workers: usize| -> Vec<u64> {
+        let mut venv = VecEnv::from_scenario_set(&set, &cfg, 3, 0x77, build_workers);
+        venv.set_workers(step_workers);
+        venv.reset_all();
+        let agents = venv.agents();
+        let mut trace: Vec<u64> = Vec::new();
+        for step in 0..70usize {
+            let servers: Vec<usize> = (0..3).map(|i| (step + i) % agents).collect();
+            for res in venv.step_servers(&servers) {
+                trace.push(res.outcome.assigned as u64);
+                trace.push(res.reset as u64);
+                trace.push(res.terminal_cost.to_bits());
+            }
+            trace.extend(venv.states().iter().map(|v| u64::from(v.to_bits())));
+        }
+        trace
+    };
+    let reference = rollout(1, 1);
+    for (bw, sw) in [(2usize, 3usize), (4, 1), (1, 3), (3, 2)] {
+        assert_eq!(
+            rollout(bw, sw),
+            reference,
+            "diverged at build_workers={bw} step_workers={sw}"
+        );
+    }
+}
+
+#[test]
+fn replicate_mode_unchanged_by_the_scenario_subsystem() {
+    // The bugfix guarantee: single-scenario training
+    // (`--scenarios replicate`, the default) goes through the same
+    // VecEnv::for_training entry point as diverse sets, yet must
+    // reproduce VecEnv::replicate — and hence the pre-subsystem
+    // trajectories pinned by the E=1 property above — bit for bit.
+    use graphedge::drl::vec_env::VecEnv;
+    use graphedge::drl::{Env, EnvConfig};
+    check_seeds(8, |rng| {
+        let ds = graphedge::graph::Dataset::synthetic(140, rng);
+        let cfg = EnvConfig { n_users: 25, n_assocs: 60, ..EnvConfig::default() };
+        let proto = Env::new(&ds, SystemParams::default(), cfg, rng);
+        let seed = rng.next_u64();
+        let mut a = VecEnv::for_training(&proto, 3, Some("replicate"), seed).unwrap();
+        let mut b = VecEnv::replicate(&proto, 3, seed);
+        a.reset_all();
+        b.reset_all();
+        let agents = proto.agents();
+        for step in 0..80usize {
+            let servers: Vec<usize> = (0..3).map(|i| (step + i) % agents).collect();
+            let ra = a.step_servers(&servers);
+            let rb = b.step_servers(&servers);
+            for (x, y) in ra.iter().zip(&rb) {
+                if x.outcome.assigned != y.outcome.assigned
+                    || x.outcome.rewards != y.outcome.rewards
+                    || x.reset != y.reset
+                    || !bits_eq(&x.next_state, &y.next_state)
+                {
+                    return false;
+                }
+            }
+            if !bits_eq(&a.states(), &b.states()) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
 fn cached_observations_bit_identical_to_recompute_under_churn() {
     // The observation-engine acceptance property: across interleaved
     // `mutate` / `reset` / `step` sequences — in both full-recut and

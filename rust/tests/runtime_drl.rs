@@ -61,6 +61,33 @@ fn maddpg_short_training_runs_and_updates() {
 }
 
 #[test]
+fn maddpg_trains_on_a_mixed_scenario_set() {
+    // Scenario-diversity end-to-end: every vector slot holds its own
+    // generated topology (different graphs and user counts), and
+    // train_vec consumes the heterogeneous batch exactly like a
+    // replicated one.
+    let rt = runtime();
+    let mut env = tiny_env(&rt, 7);
+    let mut tr = MaddpgTrainer::new(&rt, 10_000).unwrap();
+    let cfg = MaddpgConfig {
+        episodes: 4,
+        warmup: 32,
+        train_every: 8,
+        envs: 4,
+        scenarios: Some("uniform@24x50,clustered:3@36x90".into()),
+        ..MaddpgConfig::default()
+    };
+    let curve = tr.train(&mut env, &cfg).unwrap();
+    assert_eq!(curve.len(), 4);
+    assert!(curve.iter().all(|s| s.reward.is_finite() && s.system_cost > 0.0));
+    // Slot 0's scenario (a generated 24-user uniform graph) is handed
+    // back for downstream evaluation.
+    assert_eq!(env.users.capacity(), 24);
+    tr.policy_offload(&mut env).unwrap();
+    assert!(env.offload.all_assigned(&env.users.active_users()));
+}
+
+#[test]
 fn maddpg_checkpoint_round_trip() {
     let rt = runtime();
     let mut tr = MaddpgTrainer::new(&rt, 1000).unwrap();

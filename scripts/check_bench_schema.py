@@ -2,10 +2,10 @@
 """Schema check for BENCH_partition.json (the CI bench-smoke gate).
 
 The perf benches (`env_step`, `partition_incremental`,
-`partition_parallel`, `vec_env`) each merge one top-level section into
-the shared results file.  This script fails CI when a bench stopped
-writing its section, dropped a key, or produced non-finite numbers —
-the failure modes of silent bench bit-rot.
+`partition_parallel`, `vec_env`, `scenario_vec`) each merge one
+top-level section into the shared results file.  This script fails CI
+when a bench stopped writing its section, dropped a key, or produced
+non-finite numbers — the failure modes of silent bench bit-rot.
 
 Usage: check_bench_schema.py [BENCH_partition.json]
 """
@@ -32,6 +32,7 @@ SECTION_KEYS = {
     "incremental": ["n_users", "mean_degree", "steps"],
     "parallel": ["n_users", "communities", "mean_degree", "reps"],
     "vec_env": ["n_users", "agents", "obs_dim", "reps"],
+    "scenario": ["n_users", "n_assocs", "obs_dim", "reps"],
 }
 
 # Sections carrying a "runs" array, with required per-run keys.
@@ -49,6 +50,14 @@ RUN_KEYS = {
     "vec_env": [
         "envs",
         "workers",
+        "state_assembly_s",
+        "rollout_steps_per_s",
+        "episodes",
+    ],
+    "scenario": [
+        "envs",
+        "workers",
+        "set_gen_s",
         "state_assembly_s",
         "rollout_steps_per_s",
         "episodes",
