@@ -28,6 +28,7 @@ use anyhow::Context;
 use crate::runtime::{lit, Executable, Runtime};
 use crate::tensor::{Archive, Tensor};
 use crate::util::rng::Rng;
+use crate::util::trace;
 
 use super::env::{Env, OBS};
 use super::replay::{Replay, Transition};
@@ -85,6 +86,29 @@ pub struct EpisodeStats {
     pub critic_loss: f64,
     pub actor_loss: f64,
     pub steps: usize,
+    /// Layout drift of the episode's environment at episode end (cut
+    /// edges vs the incremental reference; 0 without incremental).
+    pub drift: f64,
+}
+
+impl EpisodeStats {
+    /// Emit this record as a `train.episode` trace instant (the
+    /// training-telemetry series; see [`crate::drl::telemetry`]).
+    pub fn record(&self, slot: usize) {
+        trace::instant(
+            "train.episode",
+            &[
+                ("episode", self.episode as f64),
+                ("slot", slot as f64),
+                ("reward", self.reward),
+                ("system_cost", self.system_cost),
+                ("critic_loss", self.critic_loss),
+                ("actor_loss", self.actor_loss),
+                ("steps", self.steps as f64),
+                ("drift", self.drift),
+            ],
+        );
+    }
 }
 
 pub struct MaddpgTrainer<'rt> {
@@ -297,14 +321,17 @@ impl<'rt> MaddpgTrainer<'rt> {
             }
             obs = obs2;
         }
-        Ok(EpisodeStats {
+        let stats = EpisodeStats {
             episode: 0,
             reward,
             system_cost: env.evaluate().total(),
             critic_loss: self.losses.0,
             actor_loss: self.losses.1,
             steps,
-        })
+            drift: env.layout_maintenance_stats(0).2,
+        };
+        stats.record(0);
+        Ok(stats)
     }
 
     /// Full training run; returns the per-episode reward curve
@@ -373,7 +400,12 @@ impl<'rt> MaddpgTrainer<'rt> {
                         critic_loss: self.losses.0,
                         actor_loss: self.losses.1,
                         steps: ep_steps[i],
+                        // The slot has already auto-reset, so this is
+                        // the drift entering the *next* episode — the
+                        // closest per-slot reading available here.
+                        drift: venv.env(i).layout_maintenance_stats(0).2,
                     };
+                    stats.record(i);
                     log::debug!(
                         "maddpg ep {} (slot {i}): reward {:.3} cost {:.3} closs {:.4}",
                         stats.episode,

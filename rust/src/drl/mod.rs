@@ -17,6 +17,8 @@
 //!   HiCut, no R_sp), also trained on vectorized rollouts.
 //! * [`baselines`] — GM (nearest server) and RM (random server),
 //!   single-env and batched.
+//! * [`telemetry`] — per-episode training curves exported as JSONL
+//!   (`graphedge train --telemetry <path>`).
 //!
 //! Everything numeric runs through PJRT; this module owns only control
 //! flow, the environment and the buffers.
@@ -26,6 +28,7 @@ pub mod env;
 pub mod maddpg;
 pub mod ppo;
 pub mod replay;
+pub mod telemetry;
 pub mod vec_env;
 
 pub use env::{Env, EnvConfig, StepOutcome};

@@ -322,7 +322,9 @@ impl<'rt> PpoTrainer<'rt> {
                         critic_loss: 0.0,
                         actor_loss: 0.0,
                         steps: ep_steps[i],
+                        drift: venv.env(i).layout_maintenance_stats(0).2,
                     };
+                    stats.record(i);
                     log::debug!(
                         "ppo ep {} (slot {i}): reward {:.3}",
                         stats.episode,

@@ -1,0 +1,102 @@
+//! Training telemetry export: the per-episode curve as JSONL.
+//!
+//! Both trainers ([`crate::drl::maddpg`], [`crate::drl::ppo`]) return
+//! their reward curve as `Vec<EpisodeStats>`; `graphedge train
+//! --telemetry <path>` writes it through [`write_episode_jsonl`] — one
+//! object per episode with `episode`, `reward`, `system_cost`,
+//! `critic_loss`, `actor_loss`, `steps` and `drift` keys — so runs can
+//! be diffed and plotted without scraping the printed table.  The
+//! schema is validated offline by `scripts/check_trace_schema.py
+//! --train`.
+//!
+//! This is the *summary* series; the step-grained view of the same
+//! runs (spans, `train.episode` instants) comes from
+//! [`crate::util::trace`] via `GRAPHEDGE_TRACE`.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use super::maddpg::EpisodeStats;
+
+fn push_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// One episode record as a single JSONL line (no trailing newline).
+pub fn episode_to_json(s: &EpisodeStats) -> String {
+    let mut line = String::with_capacity(128);
+    line.push_str(&format!("{{\"episode\":{},\"reward\":", s.episode));
+    push_f64(&mut line, s.reward);
+    line.push_str(",\"system_cost\":");
+    push_f64(&mut line, s.system_cost);
+    line.push_str(",\"critic_loss\":");
+    push_f64(&mut line, s.critic_loss);
+    line.push_str(",\"actor_loss\":");
+    push_f64(&mut line, s.actor_loss);
+    line.push_str(&format!(",\"steps\":{},\"drift\":", s.steps));
+    push_f64(&mut line, s.drift);
+    line.push('}');
+    line
+}
+
+/// Write a training curve as JSONL, one episode per line.
+pub fn write_episode_jsonl(path: &Path, curve: &[EpisodeStats]) -> crate::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for s in curve {
+        writeln!(f, "{}", episode_to_json(s))?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(episode: usize) -> EpisodeStats {
+        EpisodeStats {
+            episode,
+            reward: -3.25,
+            system_cost: 12.5,
+            critic_loss: 0.125,
+            actor_loss: f64::NAN,
+            steps: 40,
+            drift: 0.0625,
+        }
+    }
+
+    #[test]
+    fn episode_lines_are_valid_json() {
+        let line = episode_to_json(&stats(7));
+        let v = crate::util::json::Value::parse(&line).expect("valid JSON");
+        assert_eq!(v.path(&["episode"]).unwrap().as_usize(), Some(7));
+        assert_eq!(v.path(&["reward"]).unwrap().as_f64(), Some(-3.25));
+        assert_eq!(v.path(&["steps"]).unwrap().as_usize(), Some(40));
+        assert_eq!(v.path(&["drift"]).unwrap().as_f64(), Some(0.0625));
+        // Non-finite values must not break the line.
+        assert!(matches!(
+            v.path(&["actor_loss"]),
+            Some(crate::util::json::Value::Null)
+        ));
+    }
+
+    #[test]
+    fn write_episode_jsonl_emits_one_line_per_episode() {
+        let curve: Vec<EpisodeStats> = (0..5).map(stats).collect();
+        let dir = std::env::temp_dir().join(format!("ge_telemetry_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("curve.jsonl");
+        write_episode_jsonl(&path, &curve).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 5);
+        for (i, line) in text.lines().enumerate() {
+            let v = crate::util::json::Value::parse(line).unwrap();
+            assert_eq!(v.path(&["episode"]).unwrap().as_usize(), Some(i));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

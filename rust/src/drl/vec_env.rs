@@ -57,6 +57,7 @@ use crate::partition::incremental::IncrementalConfig;
 use crate::scenario::ScenarioSet;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
+use crate::util::trace;
 
 /// One slot's result of a vector step.
 #[derive(Clone, Debug)]
@@ -323,7 +324,14 @@ impl VecEnv {
     /// is independent of the worker count.
     fn step_with(&mut self, pick: impl Fn(usize, &Env) -> usize + Sync) -> Vec<VecStep> {
         let churn = self.churn;
+        let _step_span =
+            trace::span_with("vec_env.step", &[("envs", self.slots.len() as f64)]);
         ThreadPool::map_scoped_mut(&mut self.slots, self.workers, |i, slot| {
+            // Worker-thread spans are roots of their own thread's
+            // stream; `vec_env.step` on the caller brackets them in
+            // time, not by parent id.
+            let _slot_span =
+                trace::span_with("vec_env.slot_step", &[("slot", i as f64)]);
             if slot.env.finished() {
                 // Degenerate guard: a slot whose episode emptied out
                 // (e.g. churn removed every active user) resettles

@@ -46,6 +46,7 @@ fn app() -> App {
                      uniform|pa[:deg]|clustered[:k]|hotspot[:k], each with optional @NxE size",
                 )
                 .opt("out", "checkpoints", "checkpoint directory")
+                .opt("telemetry", "", "write per-episode training telemetry JSONL here")
                 .opt("config", "configs/table2.toml", "config file")
                 .opt("seed", "3401", "rng seed"),
             Command::new("simulate", "evaluate offloading methods on one scenario")
@@ -68,6 +69,13 @@ fn app() -> App {
                 .opt("policy", "", "DRLGO checkpoint (.gta); empty = greedy placement")
                 .opt("steps", "0", "churn steps (0 = static scenario)")
                 .opt("per-step", "40", "requests per churn step (dynamic mode)")
+                .opt(
+                    "scenario",
+                    "",
+                    "generated scenario spec (synthetic mode, no artifacts needed; \
+                     e.g. uniform@120x360)",
+                )
+                .opt("trace", "", "write span/event JSONL to this path")
                 .opt("config", "configs/table2.toml", "config file")
                 .opt("seed", "5", "rng seed")
                 .opt("workers", "1", "layout worker threads, dynamic mode (0 = auto)")
@@ -78,6 +86,9 @@ fn app() -> App {
 
 fn main() {
     graphedge::util::logging::init();
+    // GRAPHEDGE_TRACE=<path> enables tracing process-wide; the buffer
+    // is written on exit (the serve --trace flag overrides this).
+    graphedge::util::trace::init_from_env();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let matches = match app().parse(&args) {
         Ok(m) => m,
@@ -98,6 +109,11 @@ fn main() {
             std::process::exit(2);
         }
     };
+    match graphedge::util::trace::flush_env_trace() {
+        Some(Ok(path)) => eprintln!("trace: wrote {}", path.display()),
+        Some(Err(e)) => eprintln!("warning: failed to write GRAPHEDGE_TRACE file: {e}"),
+        None => {}
+    }
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -219,7 +235,7 @@ fn cmd_train(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
     let outdir = std::path::PathBuf::from(matches.str("out"));
     std::fs::create_dir_all(&outdir)?;
     let method = matches.str("method").to_string();
-    match method.as_str() {
+    let curve = match method.as_str() {
         "drlgo" | "drl-only" => {
             let cfg = MaddpgConfig { episodes, seed, envs, scenarios, ..MaddpgConfig::default() };
             let ablation = method == "drl-only";
@@ -227,14 +243,21 @@ fn cmd_train(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
             let ckpt = outdir.join(format!("{method}_{dataset}.gta"));
             trainer.save(&ckpt)?;
             println!("saved checkpoint {}", ckpt.display());
-            print_curve(&curve);
+            curve
         }
         "ptom" => {
             let cfg = PpoConfig { episodes, seed, envs, scenarios, ..PpoConfig::default() };
             let (_trainer, _env, curve) = ctrl.train_ptom(&dataset, users, assocs, &cfg)?;
-            print_curve(&curve);
+            curve
         }
         other => anyhow::bail!("unknown method {other}"),
+    };
+    print_curve(&curve);
+    let telemetry = matches.str("telemetry").to_string();
+    if !telemetry.is_empty() {
+        let path = std::path::Path::new(&telemetry);
+        graphedge::drl::telemetry::write_episode_jsonl(path, &curve)?;
+        println!("telemetry: {} episodes -> {telemetry}", curve.len());
     }
     Ok(())
 }
@@ -318,15 +341,46 @@ fn cmd_simulate(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()
 }
 
 fn cmd_serve(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
+    use graphedge::util::trace;
+    let trace_path = matches.str("trace").to_string();
+    if !trace_path.is_empty() {
+        trace::set_enabled(true);
+    }
+    let result = cmd_serve_inner(matches);
+    if !trace_path.is_empty() {
+        let events = trace::drain();
+        trace::write_jsonl(std::path::Path::new(&trace_path), &events)?;
+        println!("trace           {} events -> {trace_path}", events.len());
+    }
+    result
+}
+
+fn cmd_serve_inner(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
     let params = load_params(matches);
+    let users = matches.usize("users");
+    let assocs = matches.usize("assocs");
+    let seed = matches.usize("seed") as u64;
+    let steps = matches.usize("steps");
+    let scenario = matches.str("scenario").to_string();
+    if !scenario.is_empty() {
+        // Synthetic mode: generated scenario, no-op model stage — runs
+        // without runtime artifacts (this is the CI trace-smoke path).
+        return graphedge::serving::serve_synthetic(
+            &params,
+            &scenario,
+            users,
+            assocs,
+            steps.max(1),
+            matches.usize("per-step"),
+            seed,
+            matches.switch("incremental"),
+            matches.workers(),
+        );
+    }
     let ctrl = Controller::new(params)?;
     let dataset = matches.str("dataset").to_string();
     let model = matches.str("model").to_string();
-    let users = matches.usize("users");
-    let assocs = matches.usize("assocs");
     let requests = matches.usize("requests");
-    let seed = matches.usize("seed") as u64;
-    let steps = matches.usize("steps");
     if steps > 0 {
         // Dynamic mode: §3.2 churn every step; the layout is repaired
         // from GraphDeltas (--incremental) or recut in full.

@@ -22,6 +22,8 @@
 
 use std::collections::HashMap;
 
+use once_cell::sync::Lazy;
+
 use super::drift::DriftMonitor;
 use super::IncrementalConfig;
 use crate::graph::dynamic::{DynamicGraph, GraphDelta};
@@ -29,7 +31,14 @@ use crate::graph::Graph;
 use crate::partition::hicut::{hicut, hicut_region};
 use crate::partition::parallel::parallel_hicut;
 use crate::partition::Partition;
+use crate::util::metrics::{Gauge, GLOBAL as METRICS};
 use crate::util::threadpool::ThreadPool;
+use crate::util::trace;
+
+static CUT_EDGES_GAUGE: Lazy<Gauge> =
+    Lazy::new(|| METRICS.gauge_handle("partition.cut_edges"));
+static DRIFT_PPM_GAUGE: Lazy<Gauge> =
+    Lazy::new(|| METRICS.gauge_handle("partition.drift_ppm"));
 
 const NONE: usize = usize::MAX;
 
@@ -123,6 +132,7 @@ impl IncrementalPartitioner {
     /// sharded across workers when configured (identical layout either
     /// way; see [`crate::partition::parallel`]).
     pub fn full_recut(&mut self, users: &DynamicGraph) {
+        let mut span = trace::span("partition.full_recut");
         let g = users.graph();
         let p = if self.cfg.workers > 1 {
             parallel_hicut(g, |v| users.is_active(v), self.cfg.workers)
@@ -130,6 +140,8 @@ impl IncrementalPartitioner {
             hicut(g, |v| users.is_active(v))
         };
         self.adopt(g, p.subgraphs);
+        span.field("vertices", self.covered as f64);
+        span.field("cut_edges", self.cut as f64);
     }
 
     /// Adopt an externally computed layout as the new reference.
@@ -160,6 +172,7 @@ impl IncrementalPartitioner {
     /// Repair the layout after one churn step described by `deltas`
     /// (the drained journal; `users` is the post-step graph).
     pub fn apply(&mut self, users: &DynamicGraph, deltas: &[GraphDelta]) -> RepairStats {
+        let mut span = trace::span("partition.repair");
         let g = users.graph();
         assert_eq!(
             self.assignment.len(),
@@ -221,6 +234,27 @@ impl IncrementalPartitioner {
         }
         stats.cut_edges = self.cut;
         stats.reference_cut = self.monitor.reference();
+
+        // Telemetry: the repair span's outcome, plus a drift instant
+        // and the live layout gauges every batch.
+        span.field("deltas", stats.deltas as f64);
+        span.field("joined", stats.joined as f64);
+        span.field("left", stats.left as f64);
+        span.field("refine_moves", stats.refine_moves as f64);
+        span.field("regions", stats.regions as f64);
+        span.field("full_recut", f64::from(u8::from(stats.full_recut)));
+        span.field("cut_edges", stats.cut_edges as f64);
+        let drift = self.monitor.drift(self.cut);
+        trace::instant(
+            "partition.drift",
+            &[
+                ("drift", drift),
+                ("cut_edges", self.cut as f64),
+                ("reference", self.monitor.reference() as f64),
+            ],
+        );
+        CUT_EDGES_GAUGE.set(self.cut as i64);
+        DRIFT_PPM_GAUGE.set((drift * 1e6) as i64);
         stats
     }
 

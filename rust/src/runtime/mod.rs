@@ -29,13 +29,17 @@ use std::sync::Mutex;
 use anyhow::{bail, Context};
 
 use crate::tensor::Matrix;
-use crate::util::metrics::GLOBAL as METRICS;
+use crate::util::metrics::{Histogram, GLOBAL as METRICS};
+use crate::util::trace;
 
 /// A compiled artifact plus its manifest binding.
 pub struct Executable {
     pub name: String,
     pub spec: ExeSpec,
     exe: xla::PjRtLoadedExecutable,
+    /// `runtime.exec.<name>` latency handle, interned once at load so
+    /// the execute paths never allocate a metric key.
+    exec_hist: Histogram,
 }
 
 impl Executable {
@@ -50,10 +54,11 @@ impl Executable {
                 inputs.len()
             );
         }
+        let _span = trace::span("runtime.exec");
         let t0 = std::time::Instant::now();
         let result = self.exe.execute::<xla::Literal>(inputs)?;
         let tuple = result[0][0].to_literal_sync()?;
-        METRICS.observe(&format!("runtime.exec.{}", self.name), t0.elapsed().as_secs_f64());
+        self.exec_hist.observe(t0.elapsed().as_secs_f64());
         Ok(tuple.to_tuple()?)
     }
 
@@ -68,10 +73,11 @@ impl Executable {
                 inputs.len()
             );
         }
+        let _span = trace::span("runtime.exec");
         let t0 = std::time::Instant::now();
         let result = self.exe.execute::<&xla::Literal>(inputs)?;
         let tuple = result[0][0].to_literal_sync()?;
-        METRICS.observe(&format!("runtime.exec.{}", self.name), t0.elapsed().as_secs_f64());
+        self.exec_hist.observe(t0.elapsed().as_secs_f64());
         Ok(tuple.to_tuple()?)
     }
 }
@@ -128,7 +134,9 @@ impl Runtime {
         let exe = self.client.compile(&comp)?;
         log::info!("runtime: compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
         METRICS.observe("runtime.compile", t0.elapsed().as_secs_f64());
-        let executable = std::sync::Arc::new(Executable { name: name.to_string(), spec, exe });
+        let exec_hist = METRICS.histogram_handle(&format!("runtime.exec.{name}"));
+        let executable =
+            std::sync::Arc::new(Executable { name: name.to_string(), spec, exe, exec_hist });
         self.cache
             .lock()
             .unwrap()

@@ -9,13 +9,20 @@
 //! (`message passing`, §1), which the fleet counts in bytes and in the
 //! cost model's terms.
 
+use once_cell::sync::Lazy;
+
 use crate::graph::sample::Scenario;
 use crate::graph::Dataset;
 use crate::net::cost::{CostModel, Offload, UNASSIGNED};
-use crate::util::metrics::GLOBAL as METRICS;
+use crate::util::metrics::{Counter, Histogram, GLOBAL as METRICS};
 
 use super::gnn::GnnService;
 use super::padded::PaddedGraph;
+
+static HALO_FETCHES: Lazy<Counter> =
+    Lazy::new(|| METRICS.counter_handle("fleet.halo_fetches"));
+static ROUND_EXECUTE_S: Lazy<Histogram> =
+    Lazy::new(|| METRICS.histogram_handle("fleet.round_execute_s"));
 
 /// Outcome of one full inference round across the fleet.
 #[derive(Clone, Debug, Default)]
@@ -130,8 +137,8 @@ impl<'a> Fleet<'a> {
                 }
             }
         }
-        METRICS.add("fleet.halo_fetches", report.halo_fetches as u64);
-        METRICS.observe("fleet.round_execute_s", report.execute_s);
+        HALO_FETCHES.add(report.halo_fetches as u64);
+        ROUND_EXECUTE_S.observe(report.execute_s);
         Ok(report)
     }
 

@@ -23,7 +23,7 @@ pub mod router;
 pub use fleet::{Fleet, InferenceReport};
 pub use serve_loop::{
     serve_dynamic, serve_dynamic_run, serve_loop, serve_run, serve_run_with,
-    DynamicServeStats, Placement, ServeStats,
+    serve_synthetic, serve_synthetic_run, DynamicServeStats, Placement, ServeStats,
 };
 pub use gnn::GnnService;
 pub use padded::PaddedGraph;

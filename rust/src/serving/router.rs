@@ -10,6 +10,14 @@
 use std::time::{Duration, Instant};
 
 use crate::net::cost::{Offload, UNASSIGNED};
+use crate::util::trace;
+
+/// `reason` field values of the `router.batch_close` trace event.
+pub const CLOSE_FULL: f64 = 0.0;
+/// Batch shipped because its `max_wait` window expired.
+pub const CLOSE_TIMEOUT: f64 = 1.0;
+/// Batch shipped by a force-[`Router::flush`].
+pub const CLOSE_FLUSH: f64 = 2.0;
 
 /// One enqueued inference request.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -79,6 +87,14 @@ impl Router {
             self.deadlines[server] = Some(now);
         }
         self.queues[server].push(Request { user, enqueued: now });
+        trace::instant(
+            "router.enqueue",
+            &[
+                ("user", user as f64),
+                ("server", server as f64),
+                ("depth", self.queues[server].len() as f64),
+            ],
+        );
         Some(server)
     }
 
@@ -103,6 +119,14 @@ impl Router {
                 let batch: Vec<usize> = q.drain(..self.policy.max_batch).map(|r| r.user).collect();
                 self.dispatched_batches += 1;
                 self.dispatched_requests += batch.len();
+                trace::instant(
+                    "router.batch_close",
+                    &[
+                        ("server", server as f64),
+                        ("size", batch.len() as f64),
+                        ("reason", CLOSE_FULL),
+                    ],
+                );
                 out.push((server, batch));
                 drained_full = true;
             }
@@ -115,6 +139,14 @@ impl Router {
                     let batch: Vec<usize> = q.drain(..).map(|r| r.user).collect();
                     self.dispatched_batches += 1;
                     self.dispatched_requests += batch.len();
+                    trace::instant(
+                        "router.batch_close",
+                        &[
+                            ("server", server as f64),
+                            ("size", batch.len() as f64),
+                            ("reason", CLOSE_TIMEOUT),
+                        ],
+                    );
                     out.push((server, batch));
                     self.deadlines[server] = None;
                 }
@@ -143,6 +175,14 @@ impl Router {
                 let batch: Vec<usize> = q.drain(..take).map(|r| r.user).collect();
                 self.dispatched_batches += 1;
                 self.dispatched_requests += batch.len();
+                trace::instant(
+                    "router.batch_close",
+                    &[
+                        ("server", server as f64),
+                        ("size", batch.len() as f64),
+                        ("reason", CLOSE_FLUSH),
+                    ],
+                );
                 out.push((server, batch));
             }
             self.deadlines[server] = None;

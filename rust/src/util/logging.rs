@@ -1,7 +1,10 @@
 //! Minimal env-filtered logging backend for the `log` facade.
 //!
-//! `GRAPHEDGE_LOG=debug` (or error/warn/info/trace) selects the level;
-//! default is `info`.  Output goes to stderr with elapsed-time stamps.
+//! `GRAPHEDGE_LOG` selects the level: one of `off`, `error`, `warn`,
+//! `info` (the default), `debug`, `trace`.  An unrecognized value gets
+//! a one-time stderr warning naming the bad value and the accepted set
+//! — it does *not* silently become `info`-with-no-explanation.  Output
+//! goes to stderr with elapsed-time stamps.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
@@ -13,12 +16,12 @@ static START: Lazy<Instant> = Lazy::new(Instant::now);
 static INSTALLED: AtomicBool = AtomicBool::new(false);
 
 struct Logger {
-    level: Level,
+    filter: LevelFilter,
 }
 
 impl Log for Logger {
     fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.level
+        metadata.level() <= self.filter
     }
 
     fn log(&self, record: &Record) {
@@ -37,38 +40,78 @@ impl Log for Logger {
     fn flush(&self) {}
 }
 
+/// Parse a `GRAPHEDGE_LOG` value.  `Ok` for the accepted set
+/// (case-insensitive; empty = default `info`), `Err` echoes the bad
+/// value back for the warning.
+fn parse_level(raw: &str) -> Result<LevelFilter, String> {
+    match raw.to_lowercase().as_str() {
+        "" => Ok(LevelFilter::Info),
+        "off" | "none" => Ok(LevelFilter::Off),
+        "error" => Ok(LevelFilter::Error),
+        "warn" => Ok(LevelFilter::Warn),
+        "info" => Ok(LevelFilter::Info),
+        "debug" => Ok(LevelFilter::Debug),
+        "trace" => Ok(LevelFilter::Trace),
+        other => Err(other.to_string()),
+    }
+}
+
 /// Install the logger once; subsequent calls are no-ops.
 pub fn init() {
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }
-    let level = match std::env::var("GRAPHEDGE_LOG")
-        .unwrap_or_default()
-        .to_lowercase()
-        .as_str()
-    {
-        "trace" => Level::Trace,
-        "debug" => Level::Debug,
-        "warn" => Level::Warn,
-        "error" => Level::Error,
-        _ => Level::Info,
+    let raw = std::env::var("GRAPHEDGE_LOG").unwrap_or_default();
+    let filter = match parse_level(&raw) {
+        Ok(f) => f,
+        Err(bad) => {
+            eprintln!(
+                "warning: unrecognized GRAPHEDGE_LOG={bad:?}; accepted values are \
+                 off, error, warn, info, debug, trace — falling back to info"
+            );
+            LevelFilter::Info
+        }
     };
-    let _ = log::set_boxed_logger(Box::new(Logger { level }));
-    log::set_max_level(match level {
-        Level::Trace => LevelFilter::Trace,
-        Level::Debug => LevelFilter::Debug,
-        Level::Info => LevelFilter::Info,
-        Level::Warn => LevelFilter::Warn,
-        Level::Error => LevelFilter::Error,
-    });
+    let _ = log::set_boxed_logger(Box::new(Logger { filter }));
+    log::set_max_level(filter);
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn parse_level_accepts_the_documented_set() {
+        assert_eq!(parse_level(""), Ok(LevelFilter::Info));
+        assert_eq!(parse_level("off"), Ok(LevelFilter::Off));
+        assert_eq!(parse_level("OFF"), Ok(LevelFilter::Off));
+        assert_eq!(parse_level("Error"), Ok(LevelFilter::Error));
+        assert_eq!(parse_level("warn"), Ok(LevelFilter::Warn));
+        assert_eq!(parse_level("info"), Ok(LevelFilter::Info));
+        assert_eq!(parse_level("debug"), Ok(LevelFilter::Debug));
+        assert_eq!(parse_level("TRACE"), Ok(LevelFilter::Trace));
+    }
+
+    #[test]
+    fn parse_level_rejects_garbage_with_the_offending_value() {
+        assert_eq!(parse_level("verbose"), Err("verbose".to_string()));
+        assert_eq!(parse_level("2"), Err("2".to_string()));
+    }
+
+    #[test]
+    fn levels_filter_as_expected() {
+        let quiet = Logger { filter: LevelFilter::Off };
+        let m = Metadata::builder().level(Level::Error).build();
+        assert!(!quiet.enabled(&m));
+        let warn = Logger { filter: LevelFilter::Warn };
+        assert!(warn.enabled(&Metadata::builder().level(Level::Warn).build()));
+        assert!(!warn.enabled(&Metadata::builder().level(Level::Info).build()));
     }
 }

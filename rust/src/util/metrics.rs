@@ -1,10 +1,49 @@
-//! Process-wide metrics registry: named counters, gauges and latency
-//! samples, rendered as a plain-text report (`graphedge serve` prints
-//! it on shutdown; examples print it after each run).
+//! Process-wide metrics registry: handle-based counters, gauges and
+//! log-linear histograms, plus the legacy string-keyed API, rendered
+//! as a plain-text report (`graphedge serve` prints it on shutdown;
+//! examples print it after each run).
+//!
+//! # Two APIs, one registry
+//!
+//! * **Handles** ([`Counter`], [`Gauge`], [`Histogram`]) are interned
+//!   once via [`Metrics::counter_handle`] /
+//!   [`Metrics::gauge_handle`] / [`Metrics::histogram_handle`]
+//!   (typically into a `Lazy` static) and record via atomics: **no
+//!   lock, no string hashing, no allocation per event**.  Every hot
+//!   path — per-request latency in the serve loop, per-execution
+//!   runtime timers — must use handles.
+//! * **String-keyed calls** ([`Metrics::inc`], [`Metrics::observe`],
+//!   …) take the registry mutex and intern the name per call.  They
+//!   are fine for cold paths (startup, once-per-run accounting) and
+//!   keep every pre-existing call site working.
+//!
+//! String-keyed `observe` timers still accumulate exact [`Sample`]s —
+//! appropriate for small bench populations.  Histogram handles are
+//! the bounded-memory replacement for high-volume series.
+//!
+//! # Log-linear histograms
+//!
+//! [`Histogram`] covers `[2^-20, 2^10)` seconds (≈1 µs … ≈17 min)
+//! with [`SUB`] linear sub-buckets per power of two: 240 fixed
+//! buckets, ≤ 12.5 % relative error per bucket, O(1) memory no matter
+//! how many events are recorded.  Values outside the range land in
+//! under/overflow counters (so `count` stays exact).  Snapshots are
+//! plain `u64` vectors and [`HistogramSnapshot::merge`] is exact
+//! bucket-wise addition, which makes per-thread histograms mergeable
+//! and percentile queries (`p50/p99/p999`) deterministic.
+//!
+//! # Naming conventions
+//!
+//! Metric names are `<subsystem>.<metric>` in snake_case
+//! (`serve.requests`, `partition.cut_edges`, `runtime.exec.<model>`);
+//! durations are recorded in **seconds**.
+//!
+//! See [`super::trace`] for the event-level (span) counterpart and
+//! for which knobs are environment variables vs. CLI flags.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use once_cell::sync::Lazy;
@@ -14,11 +53,303 @@ use super::stats::Sample;
 /// Global registry (examples and the launcher share one process).
 pub static GLOBAL: Lazy<Metrics> = Lazy::new(Metrics::new);
 
+/// Smallest representable histogram exponent: buckets start at
+/// `2^MIN_EXP` seconds (≈ 0.95 µs).
+pub const MIN_EXP: i32 = -20;
+/// One past the largest bucketed exponent: values ≥ `2^MAX_EXP`
+/// seconds (1024 s) count as overflow.
+pub const MAX_EXP: i32 = 10;
+/// Linear sub-buckets per power of two (relative width ≤ 1/SUB).
+pub const SUB: usize = 8;
+/// Total fixed bucket count of a [`Histogram`].
+pub const HIST_BUCKETS: usize = ((MAX_EXP - MIN_EXP) as usize) * SUB;
+
+/// Lower edge of bucket 0 (`2^MIN_EXP`).
+pub fn hist_min() -> f64 {
+    (MIN_EXP as f64).exp2()
+}
+
+/// Upper edge of the last bucket (`2^MAX_EXP`); also the overflow
+/// representative value.
+pub fn hist_max() -> f64 {
+    (MAX_EXP as f64).exp2()
+}
+
+/// Bucket index for a value, or `None` when it belongs to the
+/// under/overflow counters (non-finite, negative, or out of range).
+///
+/// Pure bit manipulation — the exponent comes straight from the f64
+/// representation and the sub-bucket from the top [`SUB`]-log2
+/// mantissa bits, so boundary values `2^e * (1 + k/SUB)` classify
+/// exactly into bucket `(e - MIN_EXP) * SUB + k`.
+pub fn bucket_index(v: f64) -> Option<usize> {
+    if !v.is_finite() || v < hist_min() || v >= hist_max() {
+        return None;
+    }
+    let bits = v.to_bits();
+    let e = ((bits >> 52) & 0x7ff) as i32 - 1023;
+    let sub = ((bits >> 49) & 0x7) as usize;
+    Some(((e - MIN_EXP) as usize) * SUB + sub)
+}
+
+/// `[lo, hi)` value range of bucket `i` (panics if `i` is out of
+/// range).
+pub fn bucket_bounds(i: usize) -> (f64, f64) {
+    assert!(i < HIST_BUCKETS, "bucket {i} out of range");
+    let base = ((MIN_EXP + (i / SUB) as i32) as f64).exp2();
+    let k = (i % SUB) as f64;
+    let w = SUB as f64;
+    (base * (1.0 + k / w), base * (1.0 + (k + 1.0) / w))
+}
+
+/// Monotonic event counter handle (clone-to-share, atomic adds).
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-value gauge handle (clone-to-share, atomic store).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+struct HistCore {
+    buckets: Vec<AtomicU64>,
+    underflow: AtomicU64,
+    overflow: AtomicU64,
+    /// Running sum of observed values, stored as f64 bits and updated
+    /// with a CAS loop so `observe` never locks.
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket log-linear duration histogram handle.
+///
+/// [`Histogram::observe`] is one relaxed `fetch_add` plus one CAS-add
+/// — no lock, no allocation — and is safe to hammer from every worker
+/// thread through clones of the same handle.
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistCore>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            core: Arc::new(HistCore {
+                buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+                underflow: AtomicU64::new(0),
+                overflow: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            }),
+        }
+    }
+
+    /// Record one value (seconds).  Lock- and allocation-free.
+    pub fn observe(&self, v: f64) {
+        match bucket_index(v) {
+            Some(i) => {
+                self.core.buckets[i].fetch_add(1, Ordering::Relaxed);
+            }
+            None if v.is_finite() && v >= hist_max() => {
+                self.core.overflow.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                self.core.underflow.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let add = if v.is_finite() { v } else { 0.0 };
+        let mut cur = self.core.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + add).to_bits();
+            match self.core.sum_bits.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Time a closure into this histogram.  The observation is made by
+    /// a drop guard, so it is recorded even when `f` panics.
+    pub fn time<R>(&self, f: impl FnOnce() -> R) -> R {
+        let _guard = HistTimer { h: self, t0: Instant::now() };
+        f()
+    }
+
+    /// Consistent point-in-time copy of the counts.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self
+                .core
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            underflow: self.core.underflow.load(Ordering::Relaxed),
+            overflow: self.core.overflow.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.core.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.snapshot().count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.snapshot().mean()
+    }
+
+    /// Percentile query (`p` in `[0, 100]`); see
+    /// [`HistogramSnapshot::percentile`].
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.snapshot().percentile(p)
+    }
+
+    fn reset(&self) {
+        for b in &self.core.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.core.underflow.store(0, Ordering::Relaxed);
+        self.core.overflow.store(0, Ordering::Relaxed);
+        self.core.sum_bits.store(0.0f64.to_bits(), Ordering::Relaxed);
+    }
+}
+
+struct HistTimer<'a> {
+    h: &'a Histogram,
+    t0: Instant,
+}
+
+impl Drop for HistTimer<'_> {
+    fn drop(&mut self) {
+        self.h.observe(self.t0.elapsed().as_secs_f64());
+    }
+}
+
+/// Plain-data copy of a [`Histogram`]'s counts: mergeable across
+/// threads/processes and queryable without touching the live atomics.
+#[derive(Clone, Debug, Default)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum / n as f64
+        }
+    }
+
+    /// Exact bucket-wise addition: merging per-thread snapshots yields
+    /// the same counts as a single shared histogram would have.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; other.buckets.len()];
+        }
+        assert_eq!(
+            self.buckets.len(),
+            other.buckets.len(),
+            "merging snapshots with different bucket layouts"
+        );
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.sum += other.sum;
+    }
+
+    /// Percentile query, `p` in `[0, 100]`.  Walks underflow (reported
+    /// as 0.0) → buckets (reported as the bucket midpoint, ≤ 12.5 %
+    /// relative error) → overflow (reported as the range maximum).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (((p / 100.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = self.underflow;
+        if rank <= seen {
+            return 0.0;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if rank <= seen {
+                let (lo, hi) = bucket_bounds(i);
+                return 0.5 * (lo + hi);
+            }
+        }
+        hist_max()
+    }
+}
+
 #[derive(Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
-    gauges: Mutex<BTreeMap<String, AtomicI64>>,
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
     timers: Mutex<BTreeMap<String, Sample>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
 }
 
 impl Metrics {
@@ -26,15 +357,41 @@ impl Metrics {
         Self::default()
     }
 
+    // -- handle interning (call once, store in a Lazy/static/field) --------
+
+    /// Intern (or fetch) the named counter and return a recording
+    /// handle.  The handle stays valid across [`Metrics::reset`].
+    pub fn counter_handle(&self, name: &str) -> Counter {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Intern (or fetch) the named gauge handle.
+    pub fn gauge_handle(&self, name: &str) -> Gauge {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Intern (or fetch) the named histogram handle.
+    pub fn histogram_handle(&self, name: &str) -> Histogram {
+        let mut m = self.histograms.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Snapshot of the named histogram, if it exists.
+    pub fn histogram_stats(&self, name: &str) -> Option<HistogramSnapshot> {
+        let m = self.histograms.lock().unwrap();
+        m.get(name).map(|h| h.snapshot())
+    }
+
+    // -- string-keyed compatibility API (cold paths) -----------------------
+
     pub fn inc(&self, name: &str) {
         self.add(name, 1);
     }
 
     pub fn add(&self, name: &str, n: u64) {
-        let mut m = self.counters.lock().unwrap();
-        m.entry(name.to_string())
-            .or_insert_with(|| AtomicU64::new(0))
-            .fetch_add(n, Ordering::Relaxed);
+        self.counter_handle(name).add(n);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -42,15 +399,12 @@ impl Metrics {
             .lock()
             .unwrap()
             .get(name)
-            .map(|c| c.load(Ordering::Relaxed))
+            .map(|c| c.get())
             .unwrap_or(0)
     }
 
     pub fn set_gauge(&self, name: &str, v: i64) {
-        let mut m = self.gauges.lock().unwrap();
-        m.entry(name.to_string())
-            .or_insert_with(|| AtomicI64::new(0))
-            .store(v, Ordering::Relaxed);
+        self.gauge_handle(name).set(v);
     }
 
     pub fn gauge(&self, name: &str) -> i64 {
@@ -58,22 +412,25 @@ impl Metrics {
             .lock()
             .unwrap()
             .get(name)
-            .map(|c| c.load(Ordering::Relaxed))
+            .map(|g| g.get())
             .unwrap_or(0)
     }
 
-    /// Record a duration sample in seconds.
+    /// Record a duration sample in seconds (exact [`Sample`] storage —
+    /// unbounded, for low-volume series; use a histogram handle on hot
+    /// paths).
     pub fn observe(&self, name: &str, seconds: f64) {
         let mut m = self.timers.lock().unwrap();
         m.entry(name.to_string()).or_default().push(seconds);
     }
 
-    /// Time a closure into the named sample.
+    /// Time a closure into the named sample.  The observation is made
+    /// by a drop guard, so a panicking closure (tolerated by
+    /// [`super::threadpool::ThreadPool`]'s catch_unwind) still records
+    /// its elapsed time instead of silently vanishing from the timer.
     pub fn time<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
-        let t0 = Instant::now();
-        let r = f();
-        self.observe(name, t0.elapsed().as_secs_f64());
-        r
+        let _guard = TimeGuard { m: self, name, t0: Instant::now() };
+        f()
     }
 
     pub fn timer_stats(&self, name: &str) -> Option<(usize, f64, f64, f64)> {
@@ -89,14 +446,14 @@ impl Metrics {
         if !counters.is_empty() {
             out.push_str("counters:\n");
             for (k, v) in counters.iter() {
-                out.push_str(&format!("  {k:<40} {}\n", v.load(Ordering::Relaxed)));
+                out.push_str(&format!("  {k:<40} {}\n", v.get()));
             }
         }
         let gauges = self.gauges.lock().unwrap();
         if !gauges.is_empty() {
             out.push_str("gauges:\n");
             for (k, v) in gauges.iter() {
-                out.push_str(&format!("  {k:<40} {}\n", v.load(Ordering::Relaxed)));
+                out.push_str(&format!("  {k:<40} {}\n", v.get()));
             }
         }
         let timers = self.timers.lock().unwrap();
@@ -112,13 +469,50 @@ impl Metrics {
                 ));
             }
         }
+        let histograms = self.histograms.lock().unwrap();
+        if !histograms.is_empty() {
+            out.push_str("histograms (n / mean / p50 / p99 / p999, seconds):\n");
+            for (k, h) in histograms.iter() {
+                let s = h.snapshot();
+                out.push_str(&format!(
+                    "  {k:<40} {} / {:.6} / {:.6} / {:.6} / {:.6}\n",
+                    s.count(),
+                    s.mean(),
+                    s.percentile(50.0),
+                    s.percentile(99.0),
+                    s.percentile(99.9)
+                ));
+            }
+        }
         out
     }
 
+    /// Zero every value.  Counters, gauges and histograms are zeroed
+    /// in place (not removed), so handles interned before the reset
+    /// keep recording into the registry afterwards.
     pub fn reset(&self) {
-        self.counters.lock().unwrap().clear();
-        self.gauges.lock().unwrap().clear();
+        for c in self.counters.lock().unwrap().values() {
+            c.reset();
+        }
+        for g in self.gauges.lock().unwrap().values() {
+            g.reset();
+        }
         self.timers.lock().unwrap().clear();
+        for h in self.histograms.lock().unwrap().values() {
+            h.reset();
+        }
+    }
+}
+
+struct TimeGuard<'a> {
+    m: &'a Metrics,
+    name: &'a str,
+    t0: Instant,
+}
+
+impl Drop for TimeGuard<'_> {
+    fn drop(&mut self) {
+        self.m.observe(self.name, self.t0.elapsed().as_secs_f64());
     }
 }
 
@@ -156,8 +550,136 @@ mod tests {
         let m = Metrics::new();
         m.inc("a.b");
         m.observe("lat", 0.1);
+        m.histogram_handle("hist.lat").observe(0.01);
         let rep = m.report();
         assert!(rep.contains("a.b"));
         assert!(rep.contains("lat"));
+        assert!(rep.contains("hist.lat"));
+    }
+
+    #[test]
+    fn handles_share_state_with_the_string_api() {
+        let m = Metrics::new();
+        let c = m.counter_handle("h.req");
+        c.inc();
+        c.add(2);
+        m.inc("h.req");
+        assert_eq!(m.counter("h.req"), 4);
+        assert_eq!(m.counter_handle("h.req").get(), 4);
+
+        let g = m.gauge_handle("h.depth");
+        g.set(-3);
+        assert_eq!(m.gauge("h.depth"), -3);
+        g.add(5);
+        assert_eq!(m.gauge("h.depth"), 2);
+    }
+
+    #[test]
+    fn reset_keeps_handles_alive() {
+        let m = Metrics::new();
+        let c = m.counter_handle("r.c");
+        let h = m.histogram_handle("r.h");
+        c.add(9);
+        h.observe(0.5);
+        m.reset();
+        assert_eq!(m.counter("r.c"), 0);
+        assert_eq!(m.histogram_stats("r.h").unwrap().count(), 0);
+        // Handles interned before the reset still feed the registry.
+        c.inc();
+        h.observe(0.25);
+        assert_eq!(m.counter("r.c"), 1);
+        assert_eq!(m.histogram_stats("r.h").unwrap().count(), 1);
+    }
+
+    #[test]
+    fn time_records_even_when_the_closure_panics() {
+        let m = Metrics::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            m.time("panicky", || panic!("job poisoned"))
+        }));
+        assert!(r.is_err());
+        let (n, ..) = m.timer_stats("panicky").expect("observation recorded");
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn histogram_time_records_even_when_the_closure_panics() {
+        let h = Histogram::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            h.time(|| panic!("job poisoned"))
+        }));
+        assert!(r.is_err());
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn bucket_index_classifies_boundaries_exactly() {
+        // 2^e * (1 + k/SUB) is the lower edge of bucket (e-MIN)*SUB+k.
+        for e in MIN_EXP..MAX_EXP {
+            for k in 0..SUB {
+                let v = (e as f64).exp2() * (1.0 + k as f64 / SUB as f64);
+                let want = ((e - MIN_EXP) as usize) * SUB + k;
+                assert_eq!(bucket_index(v), Some(want), "v={v}");
+                let (lo, hi) = bucket_bounds(want);
+                assert!(lo <= v && v < hi);
+            }
+        }
+        assert_eq!(bucket_index(0.0), None);
+        assert_eq!(bucket_index(-1.0), None);
+        assert_eq!(bucket_index(hist_max()), None);
+        assert_eq!(bucket_index(f64::NAN), None);
+        assert_eq!(bucket_index(f64::INFINITY), None);
+        assert_eq!(bucket_index(hist_min()), Some(0));
+    }
+
+    #[test]
+    fn histogram_counts_and_percentiles() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.observe(0.001); // ~1 ms
+        }
+        for _ in 0..10 {
+            h.observe(1.0); // 1 s
+        }
+        h.observe(1e-9); // underflow
+        h.observe(5000.0); // overflow
+        let s = h.snapshot();
+        assert_eq!(s.count(), 102);
+        assert_eq!(s.underflow, 1);
+        assert_eq!(s.overflow, 1);
+        let p50 = s.percentile(50.0);
+        assert!((0.0009..0.0012).contains(&p50), "p50={p50}");
+        let p99 = s.percentile(99.0);
+        assert!((0.9..1.2).contains(&p99), "p99={p99}");
+        assert_eq!(s.percentile(100.0), hist_max()); // overflow sample
+        let mean = s.mean();
+        assert!(mean > 0.0 && mean < 60.0, "mean={mean}");
+    }
+
+    #[test]
+    fn snapshot_merge_is_exact() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let whole = Histogram::new();
+        let mut rng = crate::util::rng::Rng::seed_from(11);
+        for i in 0..500 {
+            let v = 1e-6 * 10f64.powf(rng.f64() * 8.0); // 1 µs .. 100 s
+            if i % 2 == 0 {
+                a.observe(v);
+            } else {
+                b.observe(v);
+            }
+            whole.observe(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let reference = whole.snapshot();
+        assert_eq!(merged.buckets, reference.buckets);
+        assert_eq!(merged.underflow, reference.underflow);
+        assert_eq!(merged.overflow, reference.overflow);
+        assert!((merged.sum - reference.sum).abs() < 1e-9 * reference.sum.abs());
+        for p in [50.0, 90.0, 99.0, 99.9] {
+            assert_eq!(merged.percentile(p), reference.percentile(p));
+        }
     }
 }

@@ -12,7 +12,10 @@
 //! * [`cli`] — declarative command-line parsing for the launcher.
 //! * [`threadpool`] — a fixed-size worker pool for parallel benches.
 //! * [`stats`] — streaming means/percentiles for metrics + benches.
-//! * [`metrics`] — a process-wide metrics registry (counters/gauges).
+//! * [`metrics`] — a process-wide metrics registry with handle-based
+//!   counters/gauges/histograms for lock-free hot-path recording.
+//! * [`trace`] — scoped spans + a per-thread flight recorder drained
+//!   to JSONL (`GRAPHEDGE_TRACE`, `graphedge serve --trace`).
 //! * [`logging`] — an env-filtered `log::Log` backend.
 //! * [`proptest`] — a miniature property-testing harness used by the
 //!   `#[cfg(test)]` suites across the crate.
@@ -26,3 +29,4 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+pub mod trace;

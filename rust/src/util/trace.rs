@@ -1,0 +1,658 @@
+//! Structured tracing: scoped spans + a per-thread flight recorder,
+//! drained to JSONL or consumed programmatically.
+//!
+//! The metrics registry ([`super::metrics`]) answers *how much / how
+//! fast on aggregate*; this module answers *what happened, in what
+//! order, nested inside what*.  The serving loop uses it to record the
+//! per-batch lifecycle (`router.enqueue` → `router.batch_close` →
+//! `serve.infer` → `serve.batch_complete`), the incremental
+//! partitioner records repair-vs-full-recut spans and drift events,
+//! and the trainers emit one `train.episode` event per finished
+//! episode.
+//!
+//! # Model
+//!
+//! * A **span** ([`span`] / [`span_with`]) is a scoped guard: it
+//!   captures its start time on creation and records one
+//!   [`TraceEvent`] (with duration) when dropped.  Spans nest: each
+//!   thread keeps a stack of open span ids, and a new span's `parent`
+//!   is whatever span is open on that thread at creation time.  Guards
+//!   are `!Send`, so the stack discipline cannot be broken by moving a
+//!   guard across threads.
+//! * An **instant** ([`instant`]) is a point event with no duration;
+//!   its `parent` is the innermost open span of the emitting thread.
+//! * Events carry up to [`MAX_FIELDS`] numeric fields (static-str key,
+//!   `f64` value) — no per-event allocation.
+//!
+//! # Flight recorder
+//!
+//! Events land in a **per-thread ring buffer** (capacity
+//! `GRAPHEDGE_TRACE_BUF`, default 65536 events); when a buffer fills,
+//! the oldest events are overwritten and counted in [`dropped`].  A
+//! thread that exits migrates its remaining events into a shared
+//! bounded *retired* ring so short-lived pool/scoped threads are not
+//! lost.  [`snapshot`] merges every buffer into one ts-ordered event
+//! list without clearing; [`drain`] clears as it collects.
+//!
+//! # Overhead contract
+//!
+//! Tracing is **off by default**: [`span`]/[`instant`] check one
+//! relaxed atomic and return inert guards, so instrumented hot paths
+//! pay ~1 ns when disabled.  When enabled, recording one event takes
+//! one uncontended per-thread mutex lock and a ring push — no
+//! allocation (names and field keys are `&'static str`, fields are an
+//! inline array).  Aggregate statistics on hot paths should still use
+//! [`super::metrics`] handles; spans are for *phase*-grained work
+//! (batches, repairs, episodes), not per-vertex loops.
+//!
+//! # Knobs: env vars vs CLI flags
+//!
+//! * `GRAPHEDGE_TRACE=<path>` (env) — enable tracing at process start
+//!   ([`init_from_env`]) and write the full JSONL to `<path>` on exit
+//!   ([`flush_env_trace`]); works for every subcommand, example and
+//!   bench.
+//! * `graphedge serve --trace <path>` / `graphedge train --telemetry
+//!   <path>` (CLI) — per-run capture scoped to that command.
+//! * `GRAPHEDGE_TRACE_BUF=<events>` (env) — per-thread ring capacity.
+//!
+//! # Naming conventions
+//!
+//! Event names are `<subsystem>.<what>` in snake_case: `serve.step`,
+//! `serve.churn`, `serve.batch`, `serve.infer`, `router.enqueue`,
+//! `router.batch_close`, `partition.repair`, `partition.full_recut`,
+//! `partition.drift`, `vec_env.step`, `vec_env.slot_step`,
+//! `train.episode`, `runtime.exec`.  Field keys are snake_case;
+//! enumerated fields (e.g. `router.batch_close`'s `reason`) document
+//! their code → meaning map where they are emitted.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::marker::PhantomData;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+/// Maximum numeric fields per event (inline, no allocation).
+pub const MAX_FIELDS: usize = 8;
+
+/// Span (has a duration) or instant (point event, `dur_us == 0`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Span,
+    Instant,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Span => "span",
+            EventKind::Instant => "instant",
+        }
+    }
+}
+
+/// Inline key→value payload of an event.
+#[derive(Clone, Copy, Debug)]
+pub struct Fields {
+    keys: [&'static str; MAX_FIELDS],
+    vals: [f64; MAX_FIELDS],
+    len: u8,
+}
+
+impl Default for Fields {
+    fn default() -> Self {
+        Fields { keys: [""; MAX_FIELDS], vals: [0.0; MAX_FIELDS], len: 0 }
+    }
+}
+
+impl Fields {
+    pub fn from_slice(kv: &[(&'static str, f64)]) -> Self {
+        let mut f = Fields::default();
+        for &(k, v) in kv {
+            f.push(k, v);
+        }
+        f
+    }
+
+    /// Append a field; silently ignored past [`MAX_FIELDS`] (events are
+    /// diagnostics — overflowing must never panic a pipeline).
+    pub fn push(&mut self, key: &'static str, val: f64) {
+        let i = self.len as usize;
+        if i < MAX_FIELDS {
+            self.keys[i] = key;
+            self.vals[i] = val;
+            self.len += 1;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        (0..self.len as usize).map(|i| (self.keys[i], self.vals[i]))
+    }
+
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.iter().find(|&(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// One recorded event (span close or instant).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub kind: EventKind,
+    /// Microseconds since the tracer epoch (span *start* for spans).
+    pub ts_us: u64,
+    /// Span duration in microseconds; 0 for instants.
+    pub dur_us: u64,
+    /// Span id (unique per process run); 0 for instants.
+    pub span: u64,
+    /// Enclosing span id at creation time; 0 = root.
+    pub parent: u64,
+    /// Recorder thread slot (registration order, not OS tid).
+    pub thread: u32,
+    pub fields: Fields,
+}
+
+struct Ring {
+    events: VecDeque<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Ring { events: VecDeque::with_capacity(cap.min(1024)), cap, dropped: 0 }
+    }
+
+    fn push(&mut self, e: TraceEvent) {
+        if self.events.len() >= self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(e);
+    }
+}
+
+struct ThreadBuf {
+    thread: u32,
+    ring: Mutex<Ring>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+static NEXT_THREAD: AtomicU32 = AtomicU32::new(0);
+static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+static REGISTRY: Lazy<Mutex<Vec<std::sync::Arc<ThreadBuf>>>> =
+    Lazy::new(|| Mutex::new(Vec::new()));
+/// Events of exited threads (bounded; see module docs).
+static RETIRED: Lazy<Mutex<Ring>> = Lazy::new(|| Mutex::new(Ring::new(4 * ring_cap())));
+/// `GRAPHEDGE_TRACE` output path, when set ([`init_from_env`]).
+static ENV_PATH: Lazy<Mutex<Option<PathBuf>>> = Lazy::new(|| Mutex::new(None));
+
+fn ring_cap() -> usize {
+    static CAP: Lazy<usize> = Lazy::new(|| {
+        std::env::var("GRAPHEDGE_TRACE_BUF")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&c: &usize| c > 0)
+            .unwrap_or(65536)
+    });
+    *CAP
+}
+
+struct Tls {
+    buf: std::sync::Arc<ThreadBuf>,
+    stack: Vec<u64>,
+}
+
+impl Drop for Tls {
+    fn drop(&mut self) {
+        // Migrate this thread's events into the retired ring and
+        // unregister the buffer, so short-lived scoped/pool threads
+        // neither lose their events nor leak registry entries.  The
+        // ring+retired locks are released before taking the registry
+        // lock: `collect` acquires registry → ring, so holding either
+        // of the first two while waiting on the registry could form a
+        // three-thread cycle.
+        {
+            let mut ring = self.buf.ring.lock().unwrap();
+            let mut retired = RETIRED.lock().unwrap();
+            retired.dropped += ring.dropped;
+            for e in ring.events.drain(..) {
+                retired.push(e);
+            }
+        }
+        let mut reg = REGISTRY.lock().unwrap();
+        reg.retain(|b| b.thread != self.buf.thread);
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<Option<Tls>> = const { RefCell::new(None) };
+}
+
+fn with_tls<R>(f: impl FnOnce(&mut Tls) -> R) -> R {
+    TLS.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let tls = slot.get_or_insert_with(|| {
+            let buf = std::sync::Arc::new(ThreadBuf {
+                thread: NEXT_THREAD.fetch_add(1, Ordering::Relaxed),
+                ring: Mutex::new(Ring::new(ring_cap())),
+            });
+            REGISTRY.lock().unwrap().push(buf.clone());
+            Tls { buf, stack: Vec::new() }
+        });
+        f(tls)
+    })
+}
+
+/// Is tracing currently recording?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on/off (buffers are kept either way).
+pub fn set_enabled(on: bool) {
+    if on {
+        Lazy::force(&EPOCH); // pin the epoch before the first event
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Microseconds since the tracer epoch.
+pub fn now_us() -> u64 {
+    EPOCH.elapsed().as_micros() as u64
+}
+
+/// Scoped span guard: records one [`EventKind::Span`] event on drop.
+///
+/// `!Send` by construction — a guard must be dropped on the thread
+/// that opened it, which is what keeps the per-thread parent stack
+/// consistent.
+pub struct Span {
+    name: &'static str,
+    id: u64,
+    parent: u64,
+    ts_us: u64,
+    start: Instant,
+    fields: Fields,
+    armed: bool,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl Span {
+    /// Attach a numeric field (no-op on a disabled span).
+    pub fn field(&mut self, key: &'static str, val: f64) {
+        if self.armed {
+            self.fields.push(key, val);
+        }
+    }
+
+    /// The span id events of children will carry as `parent` (0 when
+    /// tracing was disabled at creation).
+    pub fn id(&self) -> u64 {
+        if self.armed {
+            self.id
+        } else {
+            0
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let dur_us = self.start.elapsed().as_micros() as u64;
+        let event = TraceEvent {
+            name: self.name,
+            kind: EventKind::Span,
+            ts_us: self.ts_us,
+            dur_us,
+            span: self.id,
+            parent: self.parent,
+            thread: 0, // patched below
+            fields: self.fields,
+        };
+        with_tls(|tls| {
+            // Pop this span (and, defensively, anything opened after
+            // it that leaked without dropping in LIFO order).
+            while let Some(top) = tls.stack.pop() {
+                if top == self.id {
+                    break;
+                }
+            }
+            let mut e = event;
+            e.thread = tls.buf.thread;
+            tls.buf.ring.lock().unwrap().push(e);
+        });
+    }
+}
+
+/// Open a span; it records itself when the guard drops.
+pub fn span(name: &'static str) -> Span {
+    span_with(name, &[])
+}
+
+/// Open a span with initial fields.
+pub fn span_with(name: &'static str, fields: &[(&'static str, f64)]) -> Span {
+    if !enabled() {
+        return Span {
+            name,
+            id: 0,
+            parent: 0,
+            ts_us: 0,
+            start: Instant::now(),
+            fields: Fields::default(),
+            armed: false,
+            _not_send: PhantomData,
+        };
+    }
+    let id = NEXT_SPAN.fetch_add(1, Ordering::Relaxed);
+    let parent = with_tls(|tls| {
+        let parent = tls.stack.last().copied().unwrap_or(0);
+        tls.stack.push(id);
+        parent
+    });
+    Span {
+        name,
+        id,
+        parent,
+        ts_us: now_us(),
+        start: Instant::now(),
+        fields: Fields::from_slice(fields),
+        armed: true,
+        _not_send: PhantomData,
+    }
+}
+
+/// Record a point event under the innermost open span of this thread.
+pub fn instant(name: &'static str, fields: &[(&'static str, f64)]) {
+    if !enabled() {
+        return;
+    }
+    let ts_us = now_us();
+    with_tls(|tls| {
+        let event = TraceEvent {
+            name,
+            kind: EventKind::Instant,
+            ts_us,
+            dur_us: 0,
+            span: 0,
+            parent: tls.stack.last().copied().unwrap_or(0),
+            thread: tls.buf.thread,
+            fields: Fields::from_slice(fields),
+        };
+        tls.buf.ring.lock().unwrap().push(event);
+    });
+}
+
+fn collect(clear: bool) -> Vec<TraceEvent> {
+    let mut out = Vec::new();
+    {
+        let reg = REGISTRY.lock().unwrap();
+        for buf in reg.iter() {
+            let mut ring = buf.ring.lock().unwrap();
+            out.extend(ring.events.iter().copied());
+            if clear {
+                ring.events.clear();
+            }
+        }
+    }
+    {
+        let mut retired = RETIRED.lock().unwrap();
+        out.extend(retired.events.iter().copied());
+        if clear {
+            retired.events.clear();
+        }
+    }
+    // One global timeline: ts order, span id as the tie-break so a
+    // parent (opened first, lower id) sorts before its children.
+    out.sort_by_key(|e| (e.ts_us, e.span));
+    out
+}
+
+/// Merge every thread's buffer into one ts-ordered list (no clearing).
+pub fn snapshot() -> Vec<TraceEvent> {
+    collect(false)
+}
+
+/// Like [`snapshot`], but clears the buffers as it collects.
+pub fn drain() -> Vec<TraceEvent> {
+    collect(true)
+}
+
+/// Drop every buffered event (does not change the enabled flag).
+pub fn clear() {
+    let _ = drain();
+}
+
+/// Events lost to ring overwrites since process start.
+pub fn dropped() -> u64 {
+    let reg = REGISTRY.lock().unwrap();
+    let live: u64 = reg.iter().map(|b| b.ring.lock().unwrap().dropped).sum();
+    live + RETIRED.lock().unwrap().dropped
+}
+
+fn write_json_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        // `{}` on f64 is the shortest round-trip form — valid JSON.
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// One event as a single JSONL line (no trailing newline).
+pub fn event_to_json(e: &TraceEvent) -> String {
+    let mut s = String::with_capacity(128);
+    s.push_str(&format!(
+        "{{\"ts_us\":{},\"dur_us\":{},\"kind\":\"{}\",\"name\":\"{}\",\"span\":{},\
+         \"parent\":{},\"thread\":{},\"fields\":{{",
+        e.ts_us,
+        e.dur_us,
+        e.kind.as_str(),
+        e.name,
+        e.span,
+        e.parent,
+        e.thread
+    ));
+    for (i, (k, v)) in e.fields.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("\"{k}\":"));
+        write_json_f64(&mut s, v);
+    }
+    s.push_str("}}");
+    s
+}
+
+/// Write events as JSONL (one event object per line).
+pub fn write_jsonl(path: &Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for e in events {
+        writeln!(f, "{}", event_to_json(e))?;
+    }
+    f.flush()
+}
+
+/// Process-start hook: `GRAPHEDGE_TRACE=<path>` enables recording and
+/// remembers the path for [`flush_env_trace`].  Idempotent.
+pub fn init_from_env() {
+    if let Ok(path) = std::env::var("GRAPHEDGE_TRACE") {
+        if !path.is_empty() {
+            *ENV_PATH.lock().unwrap() = Some(PathBuf::from(path));
+            set_enabled(true);
+        }
+    }
+}
+
+/// Drain and write to the `GRAPHEDGE_TRACE` path, if one was set.
+/// Returns the path written, or `None` when the env var is unset.
+pub fn flush_env_trace() -> Option<std::io::Result<PathBuf>> {
+    let path = ENV_PATH.lock().unwrap().clone()?;
+    let events = drain();
+    Some(write_jsonl(&path, &events).map(|()| path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Global-state tests must not interleave.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_tracing_records_nothing() {
+        let _g = guard();
+        set_enabled(false);
+        clear();
+        {
+            let mut s = span("t.disabled");
+            s.field("x", 1.0);
+            instant("t.disabled_instant", &[("y", 2.0)]);
+        }
+        assert!(snapshot().iter().all(|e| !e.name.starts_with("t.disabled")));
+    }
+
+    #[test]
+    fn spans_nest_and_instants_attach() {
+        let _g = guard();
+        set_enabled(true);
+        clear();
+        let outer_id;
+        {
+            let outer = span("t.outer");
+            outer_id = outer.id();
+            {
+                let mut inner = span_with("t.inner", &[("k", 3.0)]);
+                inner.field("k2", 4.0);
+                instant("t.mark", &[("v", 5.0)]);
+            }
+        }
+        set_enabled(false);
+        let events = drain();
+        let outer = events.iter().find(|e| e.name == "t.outer").unwrap();
+        let inner = events.iter().find(|e| e.name == "t.inner").unwrap();
+        let mark = events.iter().find(|e| e.name == "t.mark").unwrap();
+        assert_eq!(outer.span, outer_id);
+        assert_eq!(outer.parent, 0);
+        assert_eq!(inner.parent, outer.span);
+        assert_eq!(mark.parent, inner.span);
+        assert_eq!(mark.kind, EventKind::Instant);
+        assert_eq!(inner.fields.get("k"), Some(3.0));
+        assert_eq!(inner.fields.get("k2"), Some(4.0));
+        assert!(outer.ts_us <= inner.ts_us);
+        assert!(outer.dur_us >= inner.dur_us);
+    }
+
+    #[test]
+    fn scoped_threads_retire_into_the_shared_ring() {
+        let _g = guard();
+        set_enabled(true);
+        clear();
+        std::thread::scope(|s| {
+            for i in 0..3 {
+                s.spawn(move || {
+                    let mut sp = span("t.worker");
+                    sp.field("i", i as f64);
+                });
+            }
+        });
+        set_enabled(false);
+        let events = drain();
+        let workers: Vec<_> = events.iter().filter(|e| e.name == "t.worker").collect();
+        assert_eq!(workers.len(), 3, "exited threads must not lose events");
+        // Three distinct recorder threads.
+        let mut threads: Vec<u32> = workers.iter().map(|e| e.thread).collect();
+        threads.sort_unstable();
+        threads.dedup();
+        assert_eq!(threads.len(), 3);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let _g = guard();
+        let mut ring = Ring::new(4);
+        for i in 0..10u64 {
+            ring.push(TraceEvent {
+                name: "t.r",
+                kind: EventKind::Instant,
+                ts_us: i,
+                dur_us: 0,
+                span: 0,
+                parent: 0,
+                thread: 0,
+                fields: Fields::default(),
+            });
+        }
+        assert_eq!(ring.events.len(), 4);
+        assert_eq!(ring.dropped, 6);
+        assert_eq!(ring.events.front().unwrap().ts_us, 6);
+    }
+
+    #[test]
+    fn jsonl_lines_are_valid_json() {
+        let _g = guard();
+        let e = TraceEvent {
+            name: "t.json",
+            kind: EventKind::Span,
+            ts_us: 12,
+            dur_us: 34,
+            span: 7,
+            parent: 2,
+            thread: 1,
+            fields: Fields::from_slice(&[("a", 1.5), ("b", f64::NAN)]),
+        };
+        let line = event_to_json(&e);
+        let v = crate::util::json::Value::parse(&line).expect("valid JSON");
+        assert_eq!(v.path(&["name"]).unwrap().as_str(), Some("t.json"));
+        assert_eq!(v.path(&["ts_us"]).unwrap().as_usize(), Some(12));
+        assert_eq!(v.path(&["fields", "a"]).unwrap().as_f64(), Some(1.5));
+        // Non-finite values serialize as null, keeping the line valid.
+        assert!(matches!(
+            v.path(&["fields", "b"]),
+            Some(crate::util::json::Value::Null)
+        ));
+    }
+
+    #[test]
+    fn write_jsonl_roundtrips_through_a_file() {
+        let _g = guard();
+        set_enabled(true);
+        clear();
+        {
+            let _s = span_with("t.file", &[("n", 9.0)]);
+        }
+        set_enabled(false);
+        let events: Vec<TraceEvent> =
+            drain().into_iter().filter(|e| e.name == "t.file").collect();
+        assert_eq!(events.len(), 1);
+        let dir = std::env::temp_dir().join(format!("ge_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        write_jsonl(&path, &events).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        assert!(text.contains("\"name\":\"t.file\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -566,3 +566,154 @@ fn cached_observations_bit_identical_to_recompute_under_churn() {
         });
     }
 }
+
+// -- metrics histograms -----------------------------------------------------
+
+#[test]
+fn histogram_bucket_classification_matches_bounds() {
+    // Every finite positive value in range lands in exactly the bucket
+    // whose [lo, hi) bounds contain it — including values *on* a
+    // boundary, which the bit-arithmetic classifier must put in the
+    // bucket that starts there.
+    use graphedge::util::metrics::{bucket_bounds, bucket_index, hist_max, hist_min, HIST_BUCKETS};
+    for i in 0..HIST_BUCKETS {
+        let (lo, hi) = bucket_bounds(i);
+        assert!(lo < hi, "bucket {i} is empty: [{lo}, {hi})");
+        assert_eq!(bucket_index(lo), Some(i), "lower bound of bucket {i}");
+        let mid = lo + (hi - lo) / 2.0;
+        assert_eq!(bucket_index(mid), Some(i), "midpoint of bucket {i}");
+        if i + 1 < HIST_BUCKETS {
+            assert_eq!(bucket_index(hi), Some(i + 1), "upper bound of bucket {i}");
+        }
+    }
+    // Out-of-range and non-finite values never classify.
+    assert_eq!(bucket_index(0.0), None);
+    assert_eq!(bucket_index(-1.0), None);
+    assert_eq!(bucket_index(hist_min() / 2.0), None);
+    assert_eq!(bucket_index(hist_max()), None);
+    assert_eq!(bucket_index(f64::NAN), None);
+    assert_eq!(bucket_index(f64::INFINITY), None);
+    // Random in-range values always classify consistently with bounds.
+    check_seeds(50, |rng| {
+        let v = rng.range_f64(hist_min(), hist_max() * 0.999);
+        match bucket_index(v) {
+            Some(i) => {
+                let (lo, hi) = bucket_bounds(i);
+                lo <= v && v < hi
+            }
+            None => false,
+        }
+    });
+}
+
+#[test]
+fn histogram_merge_equals_single_stream() {
+    // Splitting an observation stream across K histograms and merging
+    // the snapshots is *exactly* the single-histogram result — bucket
+    // counts, under/overflow, sum, and therefore every percentile.
+    use graphedge::util::metrics::Histogram;
+    check_seeds(20, |rng| {
+        let whole = Histogram::new();
+        let parts: Vec<Histogram> = (0..4).map(|_| Histogram::new()).collect();
+        for k in 0..600 {
+            // Mix of in-range, underflow and overflow magnitudes.
+            let v = match k % 7 {
+                0 => rng.range_f64(1e-9, 1e-7),   // underflow
+                1 => rng.range_f64(1024.0, 4096.0), // overflow
+                _ => rng.range_f64(1e-5, 900.0),
+            };
+            whole.observe(v);
+            parts[k % 4].observe(v);
+        }
+        let mut merged = parts[0].snapshot();
+        for p in &parts[1..] {
+            merged.merge(&p.snapshot());
+        }
+        let lone = whole.snapshot();
+        if merged.buckets != lone.buckets
+            || merged.underflow != lone.underflow
+            || merged.overflow != lone.overflow
+            || merged.count() != lone.count()
+        {
+            return false;
+        }
+        for p in [0.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            if merged.percentile(p) != lone.percentile(p) {
+                return false;
+            }
+        }
+        (merged.sum - lone.sum).abs() < 1e-9 * lone.sum.abs().max(1.0)
+    });
+}
+
+#[test]
+fn histogram_percentiles_track_exact_sample_within_bucket_width() {
+    // The log-linear layout guarantees ≤ 1/SUB = 12.5 % relative error
+    // per bucket; histogram percentiles must stay within one bucket
+    // width of the exact (Sample-based) percentiles.
+    use graphedge::util::metrics::Histogram;
+    use graphedge::util::stats::Sample;
+    check_seeds(10, |rng| {
+        let hist = Histogram::new();
+        let mut exact = Sample::default();
+        for _ in 0..500 {
+            // Log-uniform over ~6 decades of latencies.
+            let v = 10f64.powf(rng.range_f64(-6.0, 0.5));
+            hist.observe(v);
+            exact.push(v);
+        }
+        for p in [10.0, 50.0, 90.0, 99.0] {
+            let (h, e) = (hist.percentile(p), exact.percentile(p));
+            // One sub-bucket is a factor of (1 + 1/8); the generous
+            // margin additionally covers the rank conventions (ceil
+            // vs linear interpolation) differing by one observation,
+            // which in a sparse log-uniform tail can be a sizable gap.
+            if h < e / 1.6 || h > e * 1.6 {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn histogram_recording_is_exact_under_thread_pool_contention() {
+    // The acceptance-criteria hammer: N pool jobs × K observations
+    // into *clones of one histogram handle* concurrently.  Atomic
+    // bucket counters must lose nothing — the final count, bucket sum
+    // and value sum are exact, as if recorded serially.
+    use graphedge::util::metrics::Histogram;
+    let hist = Histogram::new();
+    let pool = ThreadPool::new(8);
+    const JOBS: usize = 64;
+    const PER_JOB: usize = 2000;
+    for j in 0..JOBS {
+        let h = hist.clone();
+        pool.execute(move || {
+            // Deterministic per-job values spread across buckets.
+            for k in 0..PER_JOB {
+                let v = 1e-4 * ((j * PER_JOB + k) % 1000 + 1) as f64;
+                h.observe(v);
+            }
+        });
+    }
+    pool.wait_idle();
+    assert_eq!(pool.panicked(), 0);
+    let snap = hist.snapshot();
+    assert_eq!(snap.count(), (JOBS * PER_JOB) as u64);
+    assert_eq!(snap.underflow, 0);
+    assert_eq!(snap.overflow, 0);
+    // The value sum is order-independent up to f64 rounding in the
+    // CAS-loop accumulation.
+    let expect: f64 = (0..JOBS * PER_JOB)
+        .map(|i| 1e-4 * ((i % 1000) + 1) as f64)
+        .sum();
+    assert!(
+        (snap.sum - expect).abs() < 1e-6 * expect,
+        "sum drifted: {} vs {expect}",
+        snap.sum
+    );
+    // Percentile of the uniform 0.1ms..100ms sweep: p50 ≈ 50ms.
+    let p50 = snap.percentile(50.0);
+    assert!((0.035..0.07).contains(&p50), "p50 {p50} out of band");
+}

@@ -1,0 +1,171 @@
+//! Integration tests for the trace pipeline: span nesting through
+//! real call stacks, and end-to-end lifecycle reconstruction of a
+//! synthetic serve run from its JSONL export (the same artifact the
+//! CI trace-smoke gate validates with `scripts/check_trace_schema.py`).
+
+use std::sync::Mutex;
+
+use graphedge::net::SystemParams;
+use graphedge::serving::serve_synthetic_run;
+use graphedge::util::json::Value;
+use graphedge::util::trace;
+
+/// The recorder is process-global; these tests must not interleave.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A parsed JSONL trace line (the fields the assertions need).
+#[derive(Debug)]
+struct Line {
+    name: String,
+    kind: String,
+    ts_us: u64,
+    span: u64,
+    parent: u64,
+    server: Option<f64>,
+    size: Option<f64>,
+}
+
+fn parse_lines(text: &str) -> Vec<Line> {
+    text.lines()
+        .map(|l| {
+            let v = Value::parse(l).expect("every trace line is valid JSON");
+            let num = |key: &str| v.path(&[key]).and_then(Value::as_f64).unwrap() as u64;
+            Line {
+                name: v.path(&["name"]).unwrap().as_str().unwrap().to_string(),
+                kind: v.path(&["kind"]).unwrap().as_str().unwrap().to_string(),
+                ts_us: num("ts_us"),
+                span: num("span"),
+                parent: num("parent"),
+                server: v.path(&["fields", "server"]).and_then(Value::as_f64),
+                size: v.path(&["fields", "size"]).and_then(Value::as_f64),
+            }
+        })
+        .collect()
+}
+
+fn helper_with_inner_span() {
+    let _inner = trace::span("t.it_inner");
+    trace::instant("t.it_mark", &[("v", 1.0)]);
+}
+
+#[test]
+fn spans_nest_through_real_call_stacks() {
+    let _g = guard();
+    trace::set_enabled(true);
+    trace::clear();
+    {
+        let _outer = trace::span("t.it_outer");
+        helper_with_inner_span();
+    }
+    trace::set_enabled(false);
+    let events = trace::drain();
+    let outer = events.iter().find(|e| e.name == "t.it_outer").unwrap();
+    let inner = events.iter().find(|e| e.name == "t.it_inner").unwrap();
+    let mark = events.iter().find(|e| e.name == "t.it_mark").unwrap();
+    assert_eq!(outer.parent, 0, "outer span must be a root");
+    assert_eq!(inner.parent, outer.span, "callee span nests under caller");
+    assert_eq!(mark.parent, inner.span, "instant attaches to innermost span");
+    assert!(outer.ts_us <= inner.ts_us && outer.dur_us >= inner.dur_us);
+}
+
+#[test]
+fn synthetic_serve_jsonl_reconstructs_the_batch_lifecycle() {
+    let _g = guard();
+    trace::set_enabled(true);
+    trace::clear();
+    let stats = serve_synthetic_run(
+        &SystemParams::default(),
+        "uniform@80x240",
+        80,
+        240,
+        4,
+        30,
+        9,
+        true, // incremental: exercise partition.repair + drift events
+        1,
+    )
+    .expect("synthetic serve");
+    trace::set_enabled(false);
+    let events = trace::drain();
+    assert!(stats.requests > 0, "run routed no requests");
+
+    // Round-trip through the JSONL export — the reconstruction below
+    // works from the file format, not the in-memory events.
+    let dir = std::env::temp_dir().join(format!("ge_trace_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("serve.jsonl");
+    trace::write_jsonl(&path, &events).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let lines = parse_lines(&text);
+
+    let by_name = |n: &str| lines.iter().filter(move |l| l.name == n);
+    let steps: Vec<_> = by_name("serve.step").collect();
+    assert_eq!(steps.len(), 4, "one serve.step span per churn step");
+
+    // Nesting: churn and route under a step; repair under churn;
+    // drift instants under a repair span.
+    let step_ids: Vec<u64> = steps.iter().map(|l| l.span).collect();
+    let churns: Vec<_> = by_name("serve.churn").collect();
+    assert_eq!(churns.len(), 4);
+    for c in &churns {
+        assert!(step_ids.contains(&c.parent), "serve.churn outside serve.step");
+    }
+    let churn_ids: Vec<u64> = churns.iter().map(|l| l.span).collect();
+    let repairs: Vec<_> = by_name("partition.repair").collect();
+    assert!(!repairs.is_empty(), "incremental run recorded no repair spans");
+    for r in &repairs {
+        assert!(churn_ids.contains(&r.parent), "repair outside serve.churn");
+    }
+    let repair_ids: Vec<u64> = repairs.iter().map(|l| l.span).collect();
+    let drifts: Vec<_> = by_name("partition.drift").collect();
+    assert_eq!(drifts.len(), repairs.len(), "one drift instant per repair");
+    for d in &drifts {
+        assert_eq!(d.kind, "instant");
+        assert!(repair_ids.contains(&d.parent), "drift outside partition.repair");
+    }
+
+    // Lifecycle bookkeeping: every routed request is enqueued once and
+    // leaves in exactly one closed batch.
+    let enqueues: Vec<_> = by_name("router.enqueue").collect();
+    assert_eq!(enqueues.len(), stats.requests);
+    let closes: Vec<_> = by_name("router.batch_close").collect();
+    let closed_total: f64 = closes.iter().map(|l| l.size.unwrap()).sum();
+    assert_eq!(closed_total as usize, stats.requests);
+
+    // Every dispatched batch: a serve.batch span wrapping exactly one
+    // serve.infer child and one serve.batch_complete instant.
+    let batches: Vec<_> = by_name("serve.batch").collect();
+    assert_eq!(batches.len(), closes.len());
+    let infers: Vec<_> = by_name("serve.infer").collect();
+    let completes: Vec<_> = by_name("serve.batch_complete").collect();
+    assert_eq!(infers.len(), batches.len());
+    assert_eq!(completes.len(), batches.len());
+    for b in &batches {
+        assert_eq!(
+            infers.iter().filter(|i| i.parent == b.span).count(),
+            1,
+            "each batch span wraps one inference"
+        );
+        let done: Vec<_> = completes.iter().filter(|c| c.parent == b.span).collect();
+        assert_eq!(done.len(), 1, "each batch span ends in one completion");
+        assert_eq!(done[0].server, b.server, "completion names the batch's server");
+        assert_eq!(done[0].size, b.size);
+        // In-order within the batch: close happened before the batch
+        // span opened, inference before completion.
+        let close_before = closes
+            .iter()
+            .any(|c| c.server == b.server && c.ts_us <= b.ts_us);
+        assert!(close_before, "no batch_close precedes the serve.batch span");
+        assert!(done[0].ts_us >= b.ts_us);
+    }
+
+    // Enqueue precedes the first close on the global timeline.
+    let first_enqueue = enqueues.iter().map(|l| l.ts_us).min().unwrap();
+    let first_close = closes.iter().map(|l| l.ts_us).min().unwrap();
+    assert!(first_enqueue <= first_close, "a batch closed before any enqueue");
+}

@@ -1,0 +1,201 @@
+#!/usr/bin/env python3
+"""Schema check for trace/telemetry JSONL (the CI trace-smoke gate).
+
+Two line formats share this checker:
+
+* span/instant traces written by `graphedge serve --trace out.jsonl`
+  (or `GRAPHEDGE_TRACE=out.jsonl`) — one JSON object per event with
+  `ts_us`, `dur_us`, `kind`, `name`, `span`, `parent`, `fields`;
+* per-episode training telemetry written by
+  `graphedge train --telemetry out.jsonl`.
+
+Beyond per-line shape, `--serve` reconstructs the batch lifecycle
+(step -> churn -> repair/drift, enqueue -> batch_close -> batch span
+wrapping infer + batch_complete) and fails when any stage stopped
+emitting — the failure mode of silently dropped instrumentation.
+`--train` checks the episode series is complete and ordered.
+
+Usage: check_trace_schema.py FILE.jsonl [--serve | --train]
+"""
+
+import json
+import math
+import sys
+
+SERVE_REQUIRED = {
+    "serve.step": "span",
+    "serve.churn": "span",
+    "partition.repair": "span",
+    "partition.drift": "instant",
+    "router.enqueue": "instant",
+    "router.batch_close": "instant",
+    "serve.batch": "span",
+    "serve.infer": "span",
+    "serve.batch_complete": "instant",
+}
+
+TRAIN_KEYS = [
+    "episode",
+    "reward",
+    "system_cost",
+    "critic_loss",
+    "actor_loss",
+    "steps",
+    "drift",
+]
+
+
+def fail(msg: str) -> None:
+    print(f"TRACE schema check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def require_number(where: str, key: str, value: object) -> float:
+    if not isinstance(value, (int, float)) or isinstance(value, bool):
+        fail(f"{where}: {key} is {value!r}, expected a number")
+    if not math.isfinite(value):
+        fail(f"{where}: {key} is non-finite ({value!r})")
+    return float(value)
+
+
+def load_lines(path: str) -> list:
+    try:
+        with open(path, encoding="utf-8") as fh:
+            raw = fh.read()
+    except FileNotFoundError:
+        fail(f"{path} not found — did the traced run happen?")
+    lines = []
+    for i, line in enumerate(raw.splitlines(), 1):
+        if not line.strip():
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"{path}:{i} is not valid JSON: {e}")
+        if not isinstance(obj, dict):
+            fail(f"{path}:{i} is {type(obj).__name__}, expected an object")
+        lines.append((i, obj))
+    if not lines:
+        fail(f"{path} is empty — the run emitted no events")
+    return lines
+
+
+def check_event_lines(lines: list) -> list:
+    """Validate the span/instant event shape; return the parsed events."""
+    events = []
+    for i, obj in lines:
+        where = f"line {i}"
+        kind = obj.get("kind")
+        if kind not in ("span", "instant"):
+            fail(f"{where}: kind is {kind!r}, expected 'span' or 'instant'")
+        name = obj.get("name")
+        if not isinstance(name, str) or not name:
+            fail(f"{where}: name is {name!r}, expected a non-empty string")
+        ts = require_number(where, "ts_us", obj.get("ts_us"))
+        dur = require_number(where, "dur_us", obj.get("dur_us"))
+        span = require_number(where, "span", obj.get("span"))
+        require_number(where, "parent", obj.get("parent"))
+        if ts < 0 or dur < 0:
+            fail(f"{where}: negative timestamp or duration")
+        if kind == "span" and span <= 0:
+            fail(f"{where}: span event with non-positive id {span}")
+        if kind == "instant" and span != 0:
+            fail(f"{where}: instant carries span id {span}, expected 0")
+        fields = obj.get("fields", {})
+        if not isinstance(fields, dict):
+            fail(f"{where}: fields is {type(fields).__name__}, expected object")
+        for key, value in fields.items():
+            # null encodes a non-finite measurement; anything else is a bug.
+            if value is None:
+                continue
+            require_number(where, f"fields.{key}", value)
+        events.append({**obj, "line": i})
+    return events
+
+
+def check_serve(events: list) -> None:
+    by_name = {}
+    for e in events:
+        by_name.setdefault(e["name"], []).append(e)
+    for name, kind in SERVE_REQUIRED.items():
+        got = by_name.get(name, [])
+        if not got:
+            fail(f"no {name!r} events — that pipeline stage emitted nothing")
+        for e in got:
+            if e["kind"] != kind:
+                fail(f"line {e['line']}: {name} has kind {e['kind']!r}, expected {kind!r}")
+
+    # Every dispatched batch wraps exactly one inference and one completion.
+    infer_parents = [e["parent"] for e in by_name["serve.infer"]]
+    complete_parents = [e["parent"] for e in by_name["serve.batch_complete"]]
+    for batch in by_name["serve.batch"]:
+        sid = batch["span"]
+        if infer_parents.count(sid) != 1:
+            fail(f"serve.batch span {sid} has {infer_parents.count(sid)} serve.infer children, expected 1")
+        if complete_parents.count(sid) != 1:
+            fail(f"serve.batch span {sid} has {complete_parents.count(sid)} serve.batch_complete children, expected 1")
+
+    # Conservation: every enqueued request leaves in exactly one close.
+    enqueued = len(by_name["router.enqueue"])
+    closed = 0.0
+    for e in by_name["router.batch_close"]:
+        closed += require_number(f"line {e['line']}", "fields.size", e.get("fields", {}).get("size"))
+    if int(closed) != enqueued:
+        fail(f"{enqueued} router.enqueue events but batch_close sizes sum to {int(closed)}")
+
+    # Repair spans nest under churn spans; drift instants under repairs.
+    churn_ids = {e["span"] for e in by_name["serve.churn"]}
+    repair_ids = {e["span"] for e in by_name["partition.repair"]}
+    for e in by_name["partition.repair"]:
+        if e["parent"] not in churn_ids:
+            fail(f"line {e['line']}: partition.repair outside any serve.churn span")
+    for e in by_name["partition.drift"]:
+        if e["parent"] not in repair_ids:
+            fail(f"line {e['line']}: partition.drift outside any partition.repair span")
+
+    n_steps = len(by_name["serve.step"])
+    n_batches = len(by_name["serve.batch"])
+    print(
+        f"TRACE schema check OK (serve): {len(events)} events, "
+        f"{n_steps} steps, {enqueued} requests, {n_batches} batches, "
+        f"{len(repair_ids)} repairs"
+    )
+
+
+def check_train(lines: list) -> None:
+    last = -1
+    for i, obj in lines:
+        where = f"line {i}"
+        for key in TRAIN_KEYS:
+            if key not in obj:
+                fail(f"{where}: {key} missing")
+            # Losses may be null early in training (no gradient step yet).
+            if obj[key] is None and key in ("critic_loss", "actor_loss"):
+                continue
+            require_number(where, key, obj[key])
+        episode = int(obj["episode"])
+        if episode < last:
+            fail(f"{where}: episode {episode} after {last} — series out of order")
+        last = episode
+    print(f"TRACE schema check OK (train): {len(lines)} episodes, last index {last}")
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    flags = [a for a in sys.argv[1:] if a.startswith("--")]
+    if not args or len(args) > 1 or any(f not in ("--serve", "--train") for f in flags):
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    lines = load_lines(args[0])
+    if "--train" in flags:
+        check_train(lines)
+        return
+    events = check_event_lines(lines)
+    if "--serve" in flags:
+        check_serve(events)
+    else:
+        print(f"TRACE schema check OK: {len(events)} well-formed events")
+
+
+if __name__ == "__main__":
+    main()
