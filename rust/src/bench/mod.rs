@@ -19,6 +19,9 @@ pub fn time_reps<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Sample {
     }
     let mut s = Sample::default();
     for _ in 0..reps {
+        // lint:allow(wall-clock) — timing closures is the bench
+        // harness's entire purpose; the measurement is reported, never
+        // fed back into an algorithm.
         let t0 = Instant::now();
         f();
         s.push(t0.elapsed().as_secs_f64());

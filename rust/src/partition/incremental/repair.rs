@@ -20,7 +20,7 @@
 //! its bound.  Per batch the repair work is O(Δ·deg + dirty region)
 //! versus the full cut's O(N² + N·E) (§4.4).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use once_cell::sync::Lazy;
 
@@ -210,8 +210,10 @@ impl IncrementalPartitioner {
         // 2. Attach arrivals (their edges are live in `g` by now).
         // One scratch tally map serves every attach/refine call in the
         // batch — per-vertex map allocations would dominate the repair
-        // cost at scale.
-        let mut scratch: HashMap<usize, usize> = HashMap::new();
+        // cost at scale.  BTreeMap, not HashMap: the winner scan in
+        // `neighbor_slots` iterates this map, and layout bit-identity
+        // requires that walk to be order-deterministic.
+        let mut scratch: BTreeMap<usize, usize> = BTreeMap::new();
         for &u in &pending {
             if !users.is_active(u) || self.assignment[u] != NONE {
                 continue;
@@ -366,7 +368,7 @@ impl IncrementalPartitioner {
         g: &Graph,
         v: usize,
         home: usize,
-        scratch: &mut HashMap<usize, usize>,
+        scratch: &mut BTreeMap<usize, usize>,
     ) -> (usize, usize, usize) {
         scratch.clear();
         let mut here = 0usize;
@@ -394,7 +396,7 @@ impl IncrementalPartitioner {
 
     /// Attach an arrival to the majority subgraph among its assigned
     /// neighbors (locally minimizes new cut edges); singleton if none.
-    fn attach(&mut self, v: usize, g: &Graph, scratch: &mut HashMap<usize, usize>) {
+    fn attach(&mut self, v: usize, g: &Graph, scratch: &mut BTreeMap<usize, usize>) {
         let (_, best, _) = self.neighbor_slots(g, v, NONE, scratch);
         let s = if best == NONE {
             self.alloc_slot()
@@ -422,7 +424,7 @@ impl IncrementalPartitioner {
         &mut self,
         g: &Graph,
         touched: &[usize],
-        scratch: &mut HashMap<usize, usize>,
+        scratch: &mut BTreeMap<usize, usize>,
     ) -> usize {
         if self.cfg.refine_passes == 0 || touched.is_empty() {
             return 0;

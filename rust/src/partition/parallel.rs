@@ -138,6 +138,9 @@ pub fn parallel_hicut_pool(
 /// sequential cut.  Deterministic: ties break on component id, bins on
 /// shard id.
 fn pack_shards(g: &Graph, comps: &[Vec<usize>], k: usize) -> Vec<Vec<usize>> {
+    if k == 0 {
+        return Vec::new();
+    }
     let mut order: Vec<(usize, usize)> = comps
         .iter()
         .enumerate()
@@ -147,7 +150,8 @@ fn pack_shards(g: &Graph, comps: &[Vec<usize>], k: usize) -> Vec<Vec<usize>> {
     let mut shards: Vec<Vec<usize>> = vec![Vec::new(); k];
     let mut load = vec![0usize; k];
     for (i, w) in order {
-        let lightest = (0..k).min_by_key(|&s| (load[s], s)).expect("k >= 1");
+        // k >= 1 is guarded above, so the min always exists.
+        let lightest = (0..k).min_by_key(|&s| (load[s], s)).unwrap_or(0);
         load[lightest] += w.max(1);
         shards[lightest].extend_from_slice(&comps[i]);
     }

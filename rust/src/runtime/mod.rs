@@ -55,6 +55,8 @@ impl Executable {
             );
         }
         let _span = trace::span("runtime.exec");
+        // lint:allow(wall-clock) — real XLA execution latency feeds
+        // the exec histogram; nothing deterministic reads it.
         let t0 = std::time::Instant::now();
         let result = self.exe.execute::<xla::Literal>(inputs)?;
         let tuple = result[0][0].to_literal_sync()?;
@@ -74,6 +76,8 @@ impl Executable {
             );
         }
         let _span = trace::span("runtime.exec");
+        // lint:allow(wall-clock) — same exec-histogram timing as the
+        // owned-literal path above.
         let t0 = std::time::Instant::now();
         let result = self.exe.execute::<&xla::Literal>(inputs)?;
         let tuple = result[0][0].to_literal_sync()?;
@@ -127,6 +131,8 @@ impl Runtime {
             .with_context(|| format!("executable {name:?} not in manifest"))?
             .clone();
         let path = self.root.join(&spec.path);
+        // lint:allow(wall-clock) — one-off compile timing for the log
+        // line and the `runtime.compile` sample; cold path.
         let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .with_context(|| format!("parsing HLO text {}", path.display()))?;

@@ -124,6 +124,9 @@ impl<'a> Fleet<'a> {
                 self.svc.n_max,
                 self.svc.feat_pad,
             );
+            // lint:allow(wall-clock) — measures real inference latency
+            // for the report/metrics; scheduling decisions use the
+            // simulated cost model, not this timer.
             let t0 = std::time::Instant::now();
             let classes = self.svc.classify(&padded)?;
             report.execute_s += t0.elapsed().as_secs_f64();

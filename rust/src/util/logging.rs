@@ -12,6 +12,8 @@ use std::time::Instant;
 use log::{Level, LevelFilter, Log, Metadata, Record};
 use once_cell::sync::Lazy;
 
+// lint:allow(wall-clock) — log lines are stamped with elapsed wall
+// time for humans; nothing algorithmic reads this clock.
 static START: Lazy<Instant> = Lazy::new(Instant::now);
 static INSTALLED: AtomicBool = AtomicBool::new(false);
 
@@ -58,6 +60,9 @@ fn parse_level(raw: &str) -> Result<LevelFilter, String> {
 
 /// Install the logger once; subsequent calls are no-ops.
 pub fn init() {
+    // ordering: SeqCst — one-time install flag on a cold path; the
+    // single total order makes "exactly one caller proceeds" obvious,
+    // and the `log` facade does its own synchronization internally.
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }

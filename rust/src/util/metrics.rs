@@ -42,13 +42,14 @@
 //! for which knobs are environment variables vs. CLI flags.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::AtomicI64;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use once_cell::sync::Lazy;
 
 use super::stats::Sample;
+use super::sync::{Arc, AtomicU64, Ordering};
 
 /// Global registry (examples and the launcher share one process).
 pub static GLOBAL: Lazy<Metrics> = Lazy::new(Metrics::new);
@@ -103,8 +104,16 @@ pub fn bucket_bounds(i: usize) -> (f64, f64) {
 }
 
 /// Monotonic event counter handle (clone-to-share, atomic adds).
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct Counter(Arc<AtomicU64>);
+
+// Manual impl: loom's `Arc`/atomics (used under `--cfg loom`, see
+// [`super::sync`]) do not implement `Default`.
+impl Default for Counter {
+    fn default() -> Self {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+}
 
 impl Counter {
     pub fn new() -> Self {
@@ -116,21 +125,34 @@ impl Counter {
     }
 
     pub fn add(&self, n: u64) {
+        // ordering: Relaxed — a count is an independent event tally; an
+        // increment publishes no other memory, so no release is needed.
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
+        // ordering: Relaxed — monitoring read; staleness is acceptable
+        // and no memory is acquired through the value.
         self.0.load(Ordering::Relaxed)
     }
 
     fn reset(&self) {
+        // ordering: Relaxed — registry-wide zeroing is best-effort and
+        // racing increments may land on either side of it by design.
         self.0.store(0, Ordering::Relaxed);
     }
 }
 
 /// Last-value gauge handle (clone-to-share, atomic store).
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct Gauge(Arc<AtomicI64>);
+
+// Manual impl: loom's `Arc` (under `--cfg loom`) has no `Default`.
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(Arc::new(AtomicI64::new(0)))
+    }
+}
 
 impl Gauge {
     pub fn new() -> Self {
@@ -138,18 +160,24 @@ impl Gauge {
     }
 
     pub fn set(&self, v: i64) {
+        // ordering: Relaxed — last-writer-wins sample; readers only need
+        // *some* recent value, not an ordering with other state.
         self.0.store(v, Ordering::Relaxed);
     }
 
     pub fn add(&self, d: i64) {
+        // ordering: Relaxed — the RMW keeps concurrent deltas exact; no
+        // cross-variable ordering is promised.
         self.0.fetch_add(d, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> i64 {
+        // ordering: Relaxed — monitoring read; staleness is acceptable.
         self.0.load(Ordering::Relaxed)
     }
 
     fn reset(&self) {
+        // ordering: Relaxed — best-effort zeroing, same as Counter.
         self.0.store(0, Ordering::Relaxed);
     }
 }
@@ -193,6 +221,10 @@ impl Histogram {
 
     /// Record one value (seconds).  Lock- and allocation-free.
     pub fn observe(&self, v: f64) {
+        // ordering: Relaxed — each bucket is an independent tally (the
+        // RMW itself guarantees no lost increment); snapshot() makes no
+        // cross-bucket consistency promise, so no release/acquire pair
+        // is needed anywhere in this histogram.
         match bucket_index(v) {
             Some(i) => {
                 self.core.buckets[i].fetch_add(1, Ordering::Relaxed);
@@ -205,12 +237,17 @@ impl Histogram {
             }
         }
         let add = if v.is_finite() { v } else { 0.0 };
+        // ordering: Relaxed load + Relaxed CAS — only sum_bits itself
+        // must be lost-update-free (the CAS retry loop provides that);
+        // the sum orders nothing else.  A stale first load merely costs
+        // one extra CAS round.
         let mut cur = self.core.sum_bits.load(Ordering::Relaxed);
         loop {
             let new = (f64::from_bits(cur) + add).to_bits();
             match self.core.sum_bits.compare_exchange_weak(
                 cur,
                 new,
+                // ordering: Relaxed/Relaxed — see the loop header note.
                 Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
@@ -229,6 +266,9 @@ impl Histogram {
 
     /// Consistent point-in-time copy of the counts.
     pub fn snapshot(&self) -> HistogramSnapshot {
+        // ordering: Relaxed — reads race in-flight observes by design;
+        // an event straddling the snapshot lands wholly in this one or
+        // wholly in the next (each count is a single RMW).
         HistogramSnapshot {
             buckets: self
                 .core
@@ -257,6 +297,8 @@ impl Histogram {
     }
 
     fn reset(&self) {
+        // ordering: Relaxed — best-effort zeroing; concurrent observes
+        // may straddle the reset, same contract as Counter::reset.
         for b in &self.core.buckets {
             b.store(0, Ordering::Relaxed);
         }
@@ -681,5 +723,56 @@ mod tests {
         for p in [50.0, 90.0, 99.0, 99.9] {
             assert_eq!(merged.percentile(p), reference.percentile(p));
         }
+    }
+}
+
+// Model-checked interleavings of the lock-free histogram.  Compiled
+// and run only via the loom harness (see ANALYSIS.md):
+//   RUSTFLAGS="--cfg loom" cargo test --release --lib loom_
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+
+    #[test]
+    fn loom_histogram_concurrent_observes_lose_nothing() {
+        loom::model(|| {
+            let h = Histogram::new();
+            let h2 = h.clone();
+            let t = loom::thread::spawn(move || {
+                h2.observe(0.001);
+            });
+            h.observe(1.0);
+            t.join().unwrap();
+            // Across every interleaving: both the bucket RMWs and the
+            // sum CAS loop must be lost-update-free.
+            let s = h.snapshot();
+            assert_eq!(s.count(), 2);
+            assert!((s.sum - 1.001).abs() < 1e-12, "lost sum update: {}", s.sum);
+        });
+    }
+
+    #[test]
+    fn loom_histogram_snapshot_races_observe_safely() {
+        loom::model(|| {
+            let h = Histogram::new();
+            let h2 = h.clone();
+            let t = loom::thread::spawn(move || {
+                h2.observe(0.5);
+            });
+            // A snapshot taken mid-observe sees the event either not at
+            // all or exactly once — never torn across buckets.
+            let mid = h.snapshot();
+            assert!(mid.count() <= 1);
+            t.join().unwrap();
+            let done = h.snapshot();
+            assert_eq!(done.count(), 1);
+            assert!((done.sum - 0.5).abs() < 1e-12);
+            // Merge of the post-join snapshot into an empty one is
+            // exact (plain data, but keeps the model honest end to end).
+            let mut merged = HistogramSnapshot::default();
+            merged.merge(&done);
+            assert_eq!(merged.count(), 1);
+            assert_eq!(merged.percentile(50.0), done.percentile(50.0));
+        });
     }
 }

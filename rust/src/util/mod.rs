@@ -14,6 +14,8 @@
 //! * [`stats`] — streaming means/percentiles for metrics + benches.
 //! * [`metrics`] — a process-wide metrics registry with handle-based
 //!   counters/gauges/histograms for lock-free hot-path recording.
+//! * [`sync`] — `std::sync` re-exports that swap to loom's
+//!   model-checked doubles under `--cfg loom`.
 //! * [`trace`] — scoped spans + a per-thread flight recorder drained
 //!   to JSONL (`GRAPHEDGE_TRACE`, `graphedge serve --trace`).
 //! * [`logging`] — an env-filtered `log::Log` backend.
@@ -28,5 +30,6 @@ pub mod metrics;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;
 pub mod trace;

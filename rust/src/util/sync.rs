@@ -1,0 +1,40 @@
+//! Concurrency-primitive shim: `std::sync` in normal builds,
+//! [`loom`](https://docs.rs/loom)'s model-checked doubles under
+//! `--cfg loom`.
+//!
+//! The lock-free layers ([`super::metrics`], [`super::trace`],
+//! [`super::threadpool`]) import their atomics, `Arc` and `Mutex` from
+//! here instead of `std::sync`, so the same production code can be
+//! compiled into a loom model and have *every* interleaving of its
+//! atomic operations explored, not just the ones a stress test happens
+//! to hit.  See `ANALYSIS.md` ("loom") for how to run the models; in a
+//! normal build this module is a zero-cost re-export of `std`.
+//!
+//! Two deliberate gaps, both because loom types cannot live in
+//! `static`s (their constructors are not `const`):
+//!
+//! * Const-initialized statics (`trace::ENABLED`, `logging::INSTALLED`,
+//!   …) stay on `std::sync::atomic` via explicit paths.  The loom
+//!   models construct their subjects locally and never touch process
+//!   globals.
+//! * Only the types the checked layers actually use are re-exported.
+//!   Add to both arms when a new primitive is needed.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Mutex};
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Arc, Mutex};
+
+/// Thread helpers with loom doubles (only what the checked code uses).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::yield_now;
+
+    #[cfg(loom)]
+    pub use loom::thread::yield_now;
+}

@@ -15,10 +15,16 @@
 //! forever and silently kill the worker thread.
 
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+// Pool scaffolding (channel, receiver lock, join handles) stays on
+// `std`: loom has no mpsc or scoped threads, and the models never
+// construct a full pool.
 use std::sync::{Arc, Mutex};
 use std::thread;
+
+// The in-flight / panic accounting goes through the shim so the
+// drop-guard protocol can be model-checked under loom (`loom_tests`).
+use super::sync::{AtomicUsize, Ordering};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -34,7 +40,28 @@ struct InFlightGuard<'a>(&'a AtomicUsize);
 
 impl Drop for InFlightGuard<'_> {
     fn drop(&mut self) {
+        // ordering: SeqCst — completes the execute/finish/wait trio in
+        // one total order: the decrement sits after the job's effects,
+        // so `wait_idle` reading 0 implies every job ran to completion
+        // (or unwound).  One RMW per job, not per item — not hot.
         self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Run one job under the pool's panic protocol: the in-flight
+/// decrement rides a drop guard so it survives an unwind, and a
+/// panicking job bumps `panicked` instead of killing the worker.
+/// Factored out of the worker loop so the loom models drive the exact
+/// production code path.
+fn run_job(job: impl FnOnce(), queued: &AtomicUsize, panicked: &AtomicUsize) {
+    let _in_flight = InFlightGuard(queued);
+    // Catch the unwind so the worker thread survives a poisoned job
+    // instead of silently shrinking the pool.
+    if std::panic::catch_unwind(AssertUnwindSafe(job)).is_err() {
+        // ordering: SeqCst — panic counting is cold (once per failed
+        // job); keeping it in the same total order as the in-flight
+        // counter means `panicked()` read after `wait_idle` is exact.
+        panicked.fetch_add(1, Ordering::SeqCst);
     }
 }
 
@@ -64,17 +91,7 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let msg = { rx.lock().unwrap().recv() };
                         match msg {
-                            Ok(Msg::Run(job)) => {
-                                let _in_flight = InFlightGuard(&queued);
-                                // Catch the unwind so the worker thread
-                                // survives a poisoned job instead of
-                                // silently shrinking the pool.
-                                if std::panic::catch_unwind(AssertUnwindSafe(job))
-                                    .is_err()
-                                {
-                                    panicked.fetch_add(1, Ordering::SeqCst);
-                                }
-                            }
+                            Ok(Msg::Run(job)) => run_job(job, &queued, &panicked),
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
@@ -99,19 +116,28 @@ impl ThreadPool {
     /// Number of submitted jobs that panicked (caught on the worker;
     /// the pool keeps running and `wait_idle` still returns).
     pub fn panicked(&self) -> usize {
+        // ordering: SeqCst — same total order as the worker's
+        // increment, so a read after `wait_idle` sees every panic.
         self.panicked.load(Ordering::SeqCst)
     }
 
     /// Submit a job.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        // ordering: SeqCst — the increment must precede the channel
+        // send in the global order, so the count can never dip to 0
+        // while a submitted job is still in flight (`wait_idle` would
+        // return early).  One RMW per job submission — not hot.
         self.queued.fetch_add(1, Ordering::SeqCst);
         self.tx.send(Msg::Run(Box::new(job))).expect("pool alive");
     }
 
     /// Busy-wait (with yields) until all submitted jobs have finished.
     pub fn wait_idle(&self) {
+        // ordering: SeqCst — pairs with execute's increment and the
+        // guard's decrement; reading 0 here implies the effects of
+        // every submitted job are visible to this thread.
         while self.queued.load(Ordering::SeqCst) != 0 {
-            thread::yield_now();
+            super::sync::thread::yield_now();
         }
     }
 
@@ -179,6 +205,10 @@ impl ThreadPool {
         thread::scope(|s| {
             for _ in 0..workers.min(items.len().max(1)) {
                 s.spawn(|| loop {
+                    // ordering: SeqCst — only uniqueness of the claimed
+                    // index matters (any ordering gives that); results
+                    // are published through the per-slot mutexes, and
+                    // one RMW per item is noise next to `f`.
                     let i = next.fetch_add(1, Ordering::SeqCst);
                     if i >= items.len() {
                         break;
@@ -313,5 +343,56 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(pool.panicked(), 5);
+    }
+}
+
+// Loom models for the job accounting protocol (`run_job` + the drop
+// guard).  The subjects are bare counters driven through the exact
+// production `run_job` — loom has no mpsc/scoped threads, so the
+// channel plumbing itself stays covered by the stress tests above.
+// Run with:
+//   RUSTFLAGS="--cfg loom" cargo test --release --lib loom_
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use crate::util::sync::Arc;
+
+    // Unwind without invoking the panic hook: keeps thousands of loom
+    // iterations from spamming backtraces for an *expected* panic.
+    fn quiet_panic() {
+        std::panic::resume_unwind(Box::new("expected test panic"));
+    }
+
+    /// The in-flight decrement must survive a job that unwinds —
+    /// otherwise `wait_idle` spins forever after one poisoned job.
+    #[test]
+    fn loom_inflight_guard_survives_panic() {
+        loom::model(|| {
+            let queued = Arc::new(AtomicUsize::new(1));
+            let panicked = Arc::new(AtomicUsize::new(0));
+            let (q, p) = (queued.clone(), panicked.clone());
+            let t = loom::thread::spawn(move || run_job(quiet_panic, &q, &p));
+            t.join().unwrap();
+            assert_eq!(queued.load(Ordering::SeqCst), 0, "decrement lost in unwind");
+            assert_eq!(panicked.load(Ordering::SeqCst), 1);
+        });
+    }
+
+    /// Two racing jobs — one clean, one panicking — must leave the
+    /// counters exact in every interleaving.
+    #[test]
+    fn loom_queued_counter_exact_across_racing_jobs() {
+        loom::model(|| {
+            let queued = Arc::new(AtomicUsize::new(2));
+            let panicked = Arc::new(AtomicUsize::new(0));
+            let (q1, p1) = (queued.clone(), panicked.clone());
+            let t1 = loom::thread::spawn(move || run_job(|| {}, &q1, &p1));
+            let (q2, p2) = (queued.clone(), panicked.clone());
+            let t2 = loom::thread::spawn(move || run_job(quiet_panic, &q2, &p2));
+            t1.join().unwrap();
+            t2.join().unwrap();
+            assert_eq!(queued.load(Ordering::SeqCst), 0);
+            assert_eq!(panicked.load(Ordering::SeqCst), 1);
+        });
     }
 }

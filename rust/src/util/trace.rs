@@ -70,11 +70,17 @@ use std::collections::VecDeque;
 use std::io::Write as _;
 use std::marker::PhantomData;
 use std::path::{Path, PathBuf};
+// Const-initialized statics need const constructors, which loom's
+// atomics do not have — the flag/id statics therefore stay on std
+// atomics even under `--cfg loom` (the loom models never touch them).
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 use once_cell::sync::Lazy;
+
+// The ring mutexes go through the shim so the retired-ring handoff can
+// be model-checked under loom (see `loom_tests` at the bottom).
+use super::sync::Mutex;
 
 /// Maximum numeric fields per event (inline, no allocation).
 pub const MAX_FIELDS: usize = 8;
@@ -216,6 +222,23 @@ struct Tls {
     stack: Vec<u64>,
 }
 
+/// Move every buffered event — and the overwrite count — of `ring`
+/// into `retired`.  `ring` is left empty with `dropped == 0`, so a
+/// concurrent [`dropped`] sum cannot double-count the handoff.
+///
+/// Lock order: ring, then retired.  The only other multi-lock path is
+/// `collect`/`dropped` (registry → one ring at a time → retired after
+/// every ring lock is released), so the inverse pairing never occurs.
+fn migrate_into_retired(ring: &Mutex<Ring>, retired: &Mutex<Ring>) {
+    let mut ring = ring.lock().unwrap();
+    let mut retired = retired.lock().unwrap();
+    retired.dropped += ring.dropped;
+    ring.dropped = 0;
+    for e in ring.events.drain(..) {
+        retired.push(e);
+    }
+}
+
 impl Drop for Tls {
     fn drop(&mut self) {
         // Migrate this thread's events into the retired ring and
@@ -225,14 +248,7 @@ impl Drop for Tls {
         // lock: `collect` acquires registry → ring, so holding either
         // of the first two while waiting on the registry could form a
         // three-thread cycle.
-        {
-            let mut ring = self.buf.ring.lock().unwrap();
-            let mut retired = RETIRED.lock().unwrap();
-            retired.dropped += ring.dropped;
-            for e in ring.events.drain(..) {
-                retired.push(e);
-            }
-        }
+        migrate_into_retired(&self.buf.ring, &RETIRED);
         let mut reg = REGISTRY.lock().unwrap();
         reg.retain(|b| b.thread != self.buf.thread);
     }
@@ -247,6 +263,9 @@ fn with_tls<R>(f: impl FnOnce(&mut Tls) -> R) -> R {
         let mut slot = cell.borrow_mut();
         let tls = slot.get_or_insert_with(|| {
             let buf = std::sync::Arc::new(ThreadBuf {
+                // ordering: Relaxed — slot ids only need uniqueness
+                // (fetch_add is atomic at any ordering); readers learn
+                // of the new buffer via the REGISTRY lock below.
                 thread: NEXT_THREAD.fetch_add(1, Ordering::Relaxed),
                 ring: Mutex::new(Ring::new(ring_cap())),
             });
@@ -260,6 +279,9 @@ fn with_tls<R>(f: impl FnOnce(&mut Tls) -> R) -> R {
 /// Is tracing currently recording?
 #[inline]
 pub fn enabled() -> bool {
+    // ordering: Relaxed — a lone flag with no associated payload; a
+    // hot path observing a stale value records (or skips) one event,
+    // which the overhead contract explicitly permits.
     ENABLED.load(Ordering::Relaxed)
 }
 
@@ -268,6 +290,9 @@ pub fn set_enabled(on: bool) {
     if on {
         Lazy::force(&EPOCH); // pin the epoch before the first event
     }
+    // ordering: Relaxed — pairs with the Relaxed load in `enabled`;
+    // the EPOCH pin above is published by `Lazy`'s own internal
+    // synchronization, not by this store.
     ENABLED.store(on, Ordering::Relaxed);
 }
 
@@ -361,6 +386,9 @@ pub fn span_with(name: &'static str, fields: &[(&'static str, f64)]) -> Span {
             _not_send: PhantomData,
         };
     }
+    // ordering: Relaxed — span ids only need to be unique; parent
+    // links are established through the per-thread stack, never by
+    // comparing ids across threads.
     let id = NEXT_SPAN.fetch_add(1, Ordering::Relaxed);
     let parent = with_tls(|tls| {
         let parent = tls.stack.last().copied().unwrap_or(0);
@@ -513,8 +541,10 @@ pub fn flush_env_trace() -> Option<std::io::Result<PathBuf>> {
 mod tests {
     use super::*;
 
-    /// Global-state tests must not interleave.
-    static LOCK: Mutex<()> = Mutex::new(());
+    /// Global-state tests must not interleave.  Explicitly `std`: the
+    /// shim's loom double has no `const` constructor, and this static
+    /// is test plumbing, not a model subject.
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     fn guard() -> std::sync::MutexGuard<'static, ()> {
         LOCK.lock().unwrap_or_else(|e| e.into_inner())
@@ -654,5 +684,81 @@ mod tests {
         assert_eq!(text.lines().count(), 1);
         assert!(text.contains("\"name\":\"t.file\""));
         std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+// Loom models for the retirement handoff (`migrate_into_retired`): the
+// subjects are locally constructed rings, never the process statics —
+// loom primitives cannot live in consts and must be created inside
+// `loom::model`.  Run with:
+//   RUSTFLAGS="--cfg loom" cargo test --release --lib loom_
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use crate::util::sync::Arc;
+
+    fn ev(ts_us: u64) -> TraceEvent {
+        TraceEvent {
+            name: "loom.ev",
+            kind: EventKind::Instant,
+            ts_us,
+            dur_us: 0,
+            span: 0,
+            parent: 0,
+            thread: 0,
+            fields: Fields::default(),
+        }
+    }
+
+    /// An exiting thread handing its ring off while another thread is
+    /// still pushing must conserve every event: after a final sweep,
+    /// each push is in the retired ring exactly once.
+    #[test]
+    fn loom_ring_handoff_conserves_events() {
+        loom::model(|| {
+            let ring = Arc::new(Mutex::new(Ring::new(2)));
+            let retired = Arc::new(Mutex::new(Ring::new(16)));
+            let (r2, ret2) = (ring.clone(), retired.clone());
+            let t = loom::thread::spawn(move || {
+                r2.lock().unwrap().push(ev(1));
+                migrate_into_retired(&r2, &ret2);
+            });
+            ring.lock().unwrap().push(ev(2));
+            t.join().unwrap();
+            migrate_into_retired(&ring, &retired);
+            let retired = retired.lock().unwrap();
+            assert_eq!(retired.dropped, 0);
+            assert_eq!(retired.events.len(), 2, "handoff lost an event");
+        });
+    }
+
+    /// `collect`-style draining racing the retirement handoff must see
+    /// the surviving event exactly once, and the overflow count must
+    /// transfer without being lost or double-counted.
+    #[test]
+    fn loom_ring_handoff_races_drain_without_loss() {
+        loom::model(|| {
+            let ring = Arc::new(Mutex::new(Ring::new(1)));
+            let retired = Arc::new(Mutex::new(Ring::new(16)));
+            // Overflow the 1-slot ring: one event survives, one is
+            // counted in `dropped`.
+            ring.lock().unwrap().push(ev(1));
+            ring.lock().unwrap().push(ev(2));
+            let (r2, ret2) = (ring.clone(), retired.clone());
+            let t = loom::thread::spawn(move || migrate_into_retired(&r2, &ret2));
+            // Drain in `collect(clear)` lock order: the ring first,
+            // then retired only after the ring lock is released.
+            let mut got = {
+                let mut ring = ring.lock().unwrap();
+                ring.events.drain(..).collect::<Vec<_>>()
+            };
+            got.extend(retired.lock().unwrap().events.drain(..));
+            t.join().unwrap();
+            let ring = ring.lock().unwrap();
+            let retired = retired.lock().unwrap();
+            let seen = got.len() + ring.events.len() + retired.events.len();
+            assert_eq!(seen, 1, "surviving event must be seen exactly once");
+            assert_eq!(ring.dropped + retired.dropped, 1, "overflow count lost or doubled");
+        });
     }
 }

@@ -1,0 +1,7 @@
+//! Known-bad fixture: a `lint:allow` with no reason.  It must be
+//! reported as `allow-syntax` AND fail to suppress the underlying
+//! `wall-clock` finding.
+pub fn stamp() -> std::time::Instant {
+    // lint:allow(wall-clock)
+    std::time::Instant::now()
+}

@@ -1,0 +1,18 @@
+//! Escape-hatch fixture: the same iteration as `hash_iter_bad.rs`,
+//! annotated with a reasoned `lint:allow` — must not fire.
+use std::collections::HashMap;
+
+pub fn totals(xs: &[(usize, f64)]) -> f64 {
+    let mut acc = HashMap::new();
+    for &(k, v) in xs {
+        *acc.entry(k).or_insert(0.0) += v;
+    }
+    let mut sum = 0.0;
+    // lint:allow(hash-iter) — floating-point summation over f64 totals
+    // is order-sensitive in principle, but this fixture only documents
+    // the annotation grammar.
+    for (_, v) in &acc {
+        sum += v;
+    }
+    sum
+}

@@ -1,0 +1,19 @@
+//! Known-bad fixture: hash-order iteration in a deterministic layer.
+//! Not compiled — consumed as text by the linter self-tests.
+use std::collections::{HashMap, HashSet};
+
+pub fn totals(xs: &[(usize, f64)]) -> f64 {
+    let mut acc = HashMap::new();
+    for &(k, v) in xs {
+        *acc.entry(k).or_insert(0.0) += v;
+    }
+    let mut sum = 0.0;
+    for (_, v) in &acc {
+        sum += v;
+    }
+    sum
+}
+
+pub fn first_key(seen: &mut HashSet<usize>) -> Option<usize> {
+    seen.iter().next().copied()
+}

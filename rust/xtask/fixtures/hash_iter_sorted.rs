@@ -1,0 +1,9 @@
+//! Exoneration fixture: hash iteration immediately followed by a
+//! sort is order-deterministic — must not fire.
+use std::collections::HashMap;
+
+pub fn ordered_keys(m: &HashMap<usize, f64>) -> Vec<usize> {
+    let mut keys: Vec<usize> = m.keys().copied().collect();
+    keys.sort_unstable();
+    keys
+}

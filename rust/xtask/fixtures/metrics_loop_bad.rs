@@ -1,0 +1,8 @@
+//! Known-bad fixture: a string-keyed metrics-shim call inside a loop
+//! body.  The identical call outside the loop must NOT be reported.
+pub fn record(xs: &[f64]) {
+    for &x in xs {
+        METRICS.observe("fixture.x", x);
+    }
+    METRICS.observe("fixture.done", 1.0);
+}

@@ -1,0 +1,7 @@
+//! Known-bad fixture: an atomic access in a lock-free util file with
+//! no memory-order justification comment nearby.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Ordering::Relaxed)
+}

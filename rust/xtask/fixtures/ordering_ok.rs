@@ -1,0 +1,9 @@
+//! Justified fixture: the same atomic access with an adjacent
+//! `// ordering:` note — must not fire.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    // ordering: Relaxed — standalone counter; nothing is published
+    // through it, the RMW alone guarantees no lost increment.
+    c.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,7 @@
+//! Escape-hatch fixture: annotated unwrap — must not fire.
+pub fn head(xs: &[u32]) -> u32 {
+    // lint:allow(panic) — fixture: the caller guarantees non-empty
+    // input by construction.
+    let first = xs.first().unwrap();
+    *first
+}

@@ -1,0 +1,15 @@
+//! Known-bad fixture: unwrap in non-test code of a no-panic layer.
+//! The unwrap inside `#[cfg(test)]` must NOT be reported.
+pub fn head(xs: &[u32]) -> u32 {
+    let first = xs.first().unwrap();
+    *first
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::head(&[1, 2]), 1);
+        assert_eq!("7".parse::<u32>().unwrap(), 7);
+    }
+}

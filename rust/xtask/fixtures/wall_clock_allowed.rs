@@ -1,0 +1,6 @@
+//! Escape-hatch fixture: annotated wall-clock read — must not fire.
+pub fn stamp() -> std::time::Instant {
+    // lint:allow(wall-clock) — fixture: measurement-only timestamp,
+    // nothing downstream branches on it.
+    std::time::Instant::now()
+}

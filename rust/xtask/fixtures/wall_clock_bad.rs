@@ -1,0 +1,5 @@
+//! Known-bad fixture: a wall-clock read outside the measurement
+//! layers (`util/trace`, `util/metrics`, the serve loop).
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
