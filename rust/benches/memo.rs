@@ -1,0 +1,225 @@
+//! §Perf — the versioned memoization plane (`util::version`): what a
+//! version-checked read costs when the cell is current, what a rebuild
+//! costs when a producer bumped, and what fraction of reads hit under
+//! realistic churn cadences.
+//!
+//! Three views:
+//!
+//! * the rate-table cell — a memoized `Env::rate_tables` read (version
+//!   compare + borrow) against `RateTables::build` from scratch,
+//! * tabled `Env::evaluate` against an untabled fresh `CostModel`
+//!   (the end-to-end win the tables buy the reward path),
+//! * churn-cadence runs — episodes with a `mutate` every K episodes,
+//!   reporting per-cell hit rates from `Env::memo_counters` and the
+//!   cold (post-churn, both cells rebuilt) vs warm first-read cost.
+//!
+//! Emits `bench_results/memo.csv` and merges a `"memo"` section into
+//! `BENCH_partition.json` (repo root when present), next to the env
+//! and partition benches' sections.
+
+use std::collections::BTreeMap;
+
+use graphedge::bench::{fmt_secs, time_reps, write_bench_section, Table};
+use graphedge::drl::env::OBS;
+use graphedge::drl::{Env, EnvConfig};
+use graphedge::graph::Dataset;
+use graphedge::net::cost::{CostModel, RateTables};
+use graphedge::net::SystemParams;
+use graphedge::util::json::Value;
+use graphedge::util::rng::Rng;
+
+/// A fresh, table-free cost model over the env's live state — the
+/// recompute the memoized cells replace.
+fn fresh_model(env: &Env) -> CostModel<'_> {
+    CostModel::new(&env.params, &env.net, &env.links, &env.users, &env.layer_dims)
+        .with_profile(env.profile)
+}
+
+struct CadenceRun {
+    mutate_every: usize,
+    episodes: usize,
+    obs_hit_rate: f64,
+    rates_hit_rate: f64,
+    /// First state+evaluate after a churn (both cells stale).
+    cold_read_s: f64,
+    /// The same pair mid-episode with both cells current.
+    warm_read_s: f64,
+    rebuild_penalty: f64,
+}
+
+fn cadence(env: &mut Env, rng: &mut Rng, mutate_every: usize, episodes: usize) -> CadenceRun {
+    let before = env.memo_counters();
+    let (mut cold_s, mut colds) = (0.0f64, 0usize);
+    let (mut warm_s, mut warms) = (0.0f64, 0usize);
+    for ep in 0..episodes {
+        let churned = ep % mutate_every == 0;
+        if churned {
+            env.mutate(rng);
+        }
+        env.reset();
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(env.state());
+        std::hint::black_box(env.evaluate());
+        let dt = t0.elapsed().as_secs_f64();
+        if churned {
+            cold_s += dt;
+            colds += 1;
+        }
+        let agents = env.agents();
+        let mut i = 0;
+        while !env.finished() {
+            env.step(i % agents);
+            i += 1;
+        }
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(env.state());
+        std::hint::black_box(env.evaluate());
+        warm_s += t0.elapsed().as_secs_f64();
+        warms += 1;
+    }
+    let (obs_r, obs_b, rate_r, rate_b) = env.memo_counters();
+    let (obs_r, obs_b) = (obs_r - before.0, obs_b - before.1);
+    let (rate_r, rate_b) = (rate_r - before.2, rate_b - before.3);
+    let cold = cold_s / colds.max(1) as f64;
+    let warm = warm_s / warms.max(1) as f64;
+    CadenceRun {
+        mutate_every,
+        episodes,
+        obs_hit_rate: 1.0 - obs_b as f64 / obs_r.max(1) as f64,
+        rates_hit_rate: 1.0 - rate_b as f64 / rate_r.max(1) as f64,
+        cold_read_s: cold,
+        warm_read_s: warm,
+        rebuild_penalty: cold / warm.max(1e-12),
+    }
+}
+
+fn main() {
+    // GRAPHEDGE_BENCH_SMOKE=1: tiny sizes, minimal reps — CI executes
+    // the bench (and its JSON section write) without real timing.
+    let smoke = std::env::var("GRAPHEDGE_BENCH_SMOKE").is_ok();
+    let full_suite = std::env::var("GRAPHEDGE_BENCH_FULL").is_ok();
+    let (ds_n, n_users, n_assocs, reps, episodes) = if smoke {
+        (300, 60, 120, 1, 2)
+    } else if full_suite {
+        (4000, 600, 7200, 200, 32)
+    } else {
+        (2000, 300, 4800, 50, 12)
+    };
+
+    let mut rng = Rng::seed_from(0x3E30);
+    let ds = Dataset::synthetic(ds_n, &mut rng);
+    let cfg = EnvConfig { n_users, n_assocs, ..EnvConfig::default() };
+    let mut env = Env::new(&ds, SystemParams::default(), cfg, &mut rng);
+    let agents = env.agents();
+    println!(
+        "versioned memo plane: {n_users} users, {agents} agents, OBS={OBS} (|V|={ds_n})"
+    );
+
+    let mut t = Table::new(
+        "versioned memo cells: hit vs rebuild",
+        &["op", "memoized", "fresh", "speedup"],
+    );
+
+    // 1. The rate-table cell: a current-version read against a
+    // from-scratch table build.
+    let _ = env.rate_tables(); // warm the cell
+    let hit = time_reps(10, reps, || {
+        std::hint::black_box(env.rate_tables().server.len());
+    });
+    let build = time_reps(2, reps, || {
+        std::hint::black_box(RateTables::build(&fresh_model(&env)));
+    });
+    let rates_speedup = build.mean() / hit.mean().max(1e-12);
+    t.row(vec![
+        "rate_tables() hit".into(),
+        fmt_secs(hit.mean()),
+        fmt_secs(build.mean()),
+        format!("{rates_speedup:.1}x"),
+    ]);
+
+    // 2. End to end: tabled evaluate vs an untabled fresh model.
+    let tabled = time_reps(2, reps, || {
+        std::hint::black_box(env.evaluate());
+    });
+    let untabled = time_reps(2, reps, || {
+        std::hint::black_box(fresh_model(&env).evaluate(&env.offload));
+    });
+    let eval_speedup = untabled.mean() / tabled.mean().max(1e-12);
+    t.row(vec![
+        "evaluate() tabled".into(),
+        fmt_secs(tabled.mean()),
+        fmt_secs(untabled.mean()),
+        format!("{eval_speedup:.1}x"),
+    ]);
+
+    // 3. Hit rates and cold/warm read costs across churn cadences.
+    let mut runs = Vec::new();
+    let mut cadence_rng = Rng::seed_from(0x3E31);
+    for mutate_every in [1usize, 4, 16] {
+        let r = cadence(&mut env, &mut cadence_rng, mutate_every, episodes);
+        t.row(vec![
+            format!("churn every {} ep", r.mutate_every),
+            format!(
+                "hits {:.0}%/{:.0}%",
+                r.obs_hit_rate * 100.0,
+                r.rates_hit_rate * 100.0
+            ),
+            fmt_secs(r.cold_read_s),
+            format!("cold {:.1}x warm", r.rebuild_penalty),
+        ]);
+        runs.push(r);
+    }
+    t.emit("memo");
+
+    let obj = |pairs: Vec<(&str, Value)>| {
+        Value::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect::<BTreeMap<_, _>>(),
+        )
+    };
+    let section = obj(vec![
+        (
+            "_note",
+            Value::Str(
+                "Regenerate with `cargo bench --bench memo` (the bench \
+                 rewrites this section).  Bit-identity of memoized vs fresh \
+                 values is pinned by tests/properties.rs, not re-proved here."
+                    .into(),
+            ),
+        ),
+        ("n_users", Value::Num(n_users as f64)),
+        ("agents", Value::Num(agents as f64)),
+        ("obs_dim", Value::Num(OBS as f64)),
+        ("reps", Value::Num(reps as f64)),
+        ("rates_hit_s", Value::Num(hit.mean())),
+        ("rates_build_s", Value::Num(build.mean())),
+        ("rates_speedup", Value::Num(rates_speedup)),
+        ("evaluate_tabled_s", Value::Num(tabled.mean())),
+        ("evaluate_fresh_s", Value::Num(untabled.mean())),
+        ("evaluate_speedup", Value::Num(eval_speedup)),
+        (
+            "runs",
+            Value::Arr(
+                runs.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("mutate_every", Value::Num(r.mutate_every as f64)),
+                            ("episodes", Value::Num(r.episodes as f64)),
+                            ("obs_hit_rate", Value::Num(r.obs_hit_rate)),
+                            ("rates_hit_rate", Value::Num(r.rates_hit_rate)),
+                            ("cold_read_s", Value::Num(r.cold_read_s)),
+                            ("warm_read_s", Value::Num(r.warm_read_s)),
+                            ("rebuild_penalty", Value::Num(r.rebuild_penalty)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match write_bench_section("BENCH_partition.json", "memo", section) {
+        Ok(path) => println!("[wrote {path}]"),
+        Err(e) => eprintln!("could not write BENCH_partition.json: {e}"),
+    }
+}

@@ -140,6 +140,14 @@ pub fn dynamic_cost_figure(dataset: &str) -> crate::Result<()> {
             let plane = env.params.plane_m;
             env.users.scatter_users(plane, &mut rng);
             env.recut();
+            // The scatter bumped the graph's topology version; the
+            // recut must have caught the layout up before this row is
+            // measured, or the figure reports a stale layout's cost.
+            assert_eq!(
+                env.layout_lag(),
+                0,
+                "mobility panel would measure a stale layout"
+            );
             let report = ctrl.run_scenario(
                 method,
                 env,
@@ -301,6 +309,11 @@ pub fn ablation_figure() -> crate::Result<()> {
                     env.cfg.use_hicut = false;
                     env.cfg.use_rsp = false;
                     env.recut();
+                    assert_eq!(
+                        env.layout_lag(),
+                        0,
+                        "ablation row would measure a stale layout"
+                    );
                 }
                 let rep = ctrl.run_scenario(
                     method, &mut env, dataset, "gcn", Some(tr), None, false, &mut rng,

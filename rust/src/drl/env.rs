@@ -66,16 +66,23 @@
 //!
 //! With that split, `state()` is a straight O(M·OBS) copy.
 //!
-//! **Invalidation rules.**  Every layout-changing path (`recut`,
-//! `mutate`, `enable_incremental`) funnels through
-//! `install_partition`, which rebuilds the static table, recomputes
-//! the dynamic counters from scratch and refreshes the cached
-//! maintenance slots; `disable_incremental` zeroes the maintenance
-//! slots in place; `reset` re-derives the dynamic counters for the
-//! fresh episode.  Code that mutates `env.users` directly
-//! (e.g. `scatter_users` in the figure benches) must call
-//! [`Env::recut`] afterwards — exactly the call it already needs for
-//! the layout itself to be refreshed.
+//! **Invalidation rules.**  Staleness is *versioned*, not
+//! choke-pointed (see [`crate::util::version`]): the static table and
+//! the Eq. 3/6 rate tables live in [`Memoized`] cells keyed on the
+//! producers' version stamps — [`DynamicGraph`] bumps its topology
+//! version on every mutation, `install_partition` bumps the layout
+//! version (every layout-changing path — `recut`, `mutate`,
+//! `enable_incremental` — funnels through it), and the params/network
+//! version is pinned once at assembly.  A read whose key moved
+//! rebuilds lazily; nothing is rebuilt eagerly or by hand.  The
+//! *counters* stay eager: `install_partition` recomputes the dynamic
+//! counters from scratch and refreshes the cached maintenance slots;
+//! `disable_incremental` zeroes the maintenance slots in place;
+//! `reset` re-derives the dynamic counters for the fresh episode.
+//! Code that mutates `env.users` directly (e.g. `scatter_users` in
+//! the figure benches) still needs [`Env::recut`] for the *layout* to
+//! follow the graph — but the memoized tables now track even a
+//! missing recut, because the topology bump alone invalidates them.
 //!
 //! **Vectorized rollout.**  [`crate::drl::vec_env::VecEnv`] runs E
 //! independent episode slots — clones of one environment (replicate
@@ -96,12 +103,13 @@
 use crate::graph::dynamic::{ChurnConfig, DynamicGraph};
 use crate::graph::geb::Dataset;
 use crate::graph::sample::{sample_scenario, Scenario};
-use crate::net::cost::{CostModel, GnnProfile, Offload, UNASSIGNED};
+use crate::net::cost::{CostModel, GnnProfile, Offload, RateTables, UNASSIGNED};
 use crate::net::params::SystemParams;
 use crate::net::topology::{EdgeNetwork, UserLinks};
 use crate::partition::incremental::{IncrementalConfig, IncrementalPartitioner, RepairStats};
 use crate::partition::{hicut, parallel_hicut, Partition};
 use crate::util::rng::Rng;
+use crate::util::version::{Memoized, Version};
 
 /// Per-agent observation width (must equal drl.py::OBS).
 pub const OBS: usize = 21;
@@ -158,10 +166,12 @@ pub struct StepOutcome {
 
 /// Incrementally maintained observation state (see the module docs).
 ///
-/// `templates` holds one OBS-row per (user, server) with every static
-/// feature filled in and the dynamic slots zeroed; `obs` copies the
-/// row and patches the five dynamic slots.  The counters mirror what
-/// the pre-engine implementation recomputed per query:
+/// The static per-(user, server) feature templates live next door in
+/// `Env::obs_templates` — a version-keyed `Memoized` cell rebuilt
+/// lazily on (topology, layout, params) change; `obs` copies a cached
+/// row and patches the five dynamic slots from the counters here,
+/// which mirror what the pre-engine implementation recomputed per
+/// query:
 ///
 /// * `placed[u]` — active, already-placed neighbors of `u`,
 /// * `placed_here[u·M + m]` — the subset of those on server `m`,
@@ -171,8 +181,6 @@ pub struct StepOutcome {
 ///   from the last [`RepairStats`] on every layout install.
 #[derive(Clone, Debug, Default)]
 struct ObsState {
-    /// `capacity × M` static feature templates, row `u·M + m`.
-    templates: Vec<[f32; OBS]>,
     placed: Vec<u32>,
     placed_here: Vec<u32>,
     remaining: usize,
@@ -217,6 +225,23 @@ pub struct Env {
     pub workers: usize,
     /// Incremental observation engine (see the module docs).
     obs_state: ObsState,
+    // --- versioned compute plane (util::version) ---
+    /// Bumped by every `install_partition` (full recut, incremental
+    /// repair, ablation identity layout alike).
+    layout: Version,
+    /// Pinned once per `SystemParams`/`EdgeNetwork` setup in
+    /// `assemble`; nothing re-bumps it today, so params-keyed caches
+    /// are effectively immortal until a hot-reload path appears.
+    params_ver: Version,
+    /// Topology stamp the current layout was installed against — the
+    /// "is this layout current?" comparand behind [`Env::layout_lag`].
+    layout_at: Version,
+    /// Static OBS-row templates, keyed on (topology, layout, params).
+    obs_templates: Memoized<Vec<[f32; OBS]>>,
+    /// Eq. 3/6 rate tables for the cost hot loops, keyed on
+    /// (topology, params) — uplink rates move with user positions,
+    /// server compute rates only with the drawn network.
+    rates: Memoized<RateTables>,
 }
 
 impl Env {
@@ -271,7 +296,16 @@ impl Env {
             last_repair: None,
             workers: 1,
             obs_state: ObsState::default(),
+            layout: Version::ZERO,
+            params_ver: Version::ZERO,
+            layout_at: Version::ZERO,
+            obs_templates: Memoized::new(),
+            rates: Memoized::new(),
         };
+        // Pin the params/network draw: one bump distinguishes "this
+        // assembled system" from `Version::ZERO` defaults, so a cell
+        // cloned out of a different Env never reads as current here.
+        env.params_ver.bump();
         env.recut();
         env.reset();
         env
@@ -342,6 +376,7 @@ impl Env {
         // the freshly computed layout — a full recut is its reference.
         if let Some(inc) = self.incremental.as_mut() {
             inc.adopt(self.users.graph(), partition.subgraphs.clone());
+            inc.note_repaired(self.users.topology_version());
         }
         self.install_partition(&partition);
     }
@@ -412,9 +447,10 @@ impl Env {
     ///
     /// Every layout-changing path (`recut`, `mutate`,
     /// `enable_incremental`) funnels through here, which makes it the
-    /// observation engine's invalidation point: the static feature
-    /// table is rebuilt and the dynamic counters recomputed against
-    /// the (unchanged) live offload.
+    /// observation engine's invalidation point: the layout version is
+    /// bumped (so the memoized static feature table rebuilds on its
+    /// next read) and the dynamic counters are recomputed against the
+    /// (unchanged) live offload.
     fn install_partition(&mut self, partition: &Partition) {
         let n = self.users.capacity();
         self.subgraph_of = partition.assignment(n);
@@ -423,7 +459,8 @@ impl Env {
         self.order = partition.subgraphs.iter().flatten().copied().collect();
         self.sub_server_count = vec![vec![0; self.net.len()]; partition.subgraphs.len()];
         self.sub_offloaded = vec![0; partition.subgraphs.len()];
-        self.rebuild_obs_statics();
+        self.layout.bump();
+        self.layout_at = self.users.topology_version();
         self.recompute_obs_dynamics();
         self.obs_state.repair = self.repair_slots_now();
     }
@@ -451,23 +488,27 @@ impl Env {
         [(touched / n).min(1.0), drift, recut]
     }
 
-    /// (Re)build the static per-(user, server) observation table: one
+    /// Build the static per-(user, server) observation table: one
     /// OBS-row template per active user and server, dynamic slots
-    /// zeroed.  O(N·M) with one uplink-rate evaluation per entry —
-    /// paid once per topology change instead of once per `obs` query.
-    fn rebuild_obs_statics(&mut self) {
+    /// zeroed.  O(N·M) with one uplink-rate lookup per entry — called
+    /// only from the `obs_templates` memo cell's rebuild closure, so
+    /// the cost is paid once per (topology, layout, params) change
+    /// instead of once per `obs` query.
+    fn build_obs_templates(&self) -> Vec<[f32; OBS]> {
         let m_agents = self.net.len();
         let n_cap = self.users.capacity();
         let plane = self.params.plane_m;
         let n = self.cfg.n_users as f32;
         let mut templates = vec![[0.0f32; OBS]; n_cap * m_agents];
+        let tables = self.rate_tables();
         let cm = CostModel::new(
             &self.params,
             &self.net,
             &self.links,
             &self.users,
             &self.layer_dims,
-        );
+        )
+        .with_tables(&tables);
         for u in 0..n_cap {
             if !self.users.is_active(u) {
                 continue;
@@ -499,8 +540,7 @@ impl Env {
                 o[16] = (task * 1e6 / server.f_hz / 0.01) as f32;
             }
         }
-        drop(cm);
-        self.obs_state.templates = templates;
+        templates
     }
 
     /// Recompute the dynamic observation counters from scratch against
@@ -610,6 +650,12 @@ impl Env {
             .count()
     }
 
+    /// Untabled cost model: every rate evaluated from the Eq. 3/6
+    /// formulas.  The from-scratch reference paths
+    /// ([`Env::obs_recompute`], [`Env::state_recompute`]) and the memo
+    /// rebuild closures use this directly; the hot paths (`step`,
+    /// `evaluate`, the template builder) attach the memoized
+    /// [`RateTables`] on top via [`CostModel::with_tables`].
     fn cost_model(&self) -> CostModel<'_> {
         CostModel::new(
             &self.params,
@@ -621,13 +667,71 @@ impl Env {
         .with_profile(self.profile)
     }
 
+    /// The memoized Eq. 3/6 rate tables, rebuilt iff the (topology,
+    /// params) key moved since the last read.  The returned guard is a
+    /// `RefCell` borrow: drop it before any `&mut self` call.
+    pub fn rate_tables(&self) -> std::cell::Ref<'_, RateTables> {
+        let key = [self.users.topology_version(), self.params_ver];
+        self.rates
+            .get_or_rebuild(&key, || RateTables::build(&self.cost_model()))
+    }
+
+    /// The memoized static observation table (see
+    /// [`Env::build_obs_templates`]), keyed on (topology, layout,
+    /// params).
+    fn obs_templates(&self) -> std::cell::Ref<'_, Vec<[f32; OBS]>> {
+        let key = [
+            self.users.topology_version(),
+            self.layout,
+            self.params_ver,
+        ];
+        self.obs_templates
+            .get_or_rebuild(&key, || self.build_obs_templates())
+    }
+
+    /// Topology version of the live dynamic graph (bumped per
+    /// mutation by [`DynamicGraph`]).
+    pub fn topology_version(&self) -> Version {
+        self.users.topology_version()
+    }
+
+    /// Layout version: bumped once per installed partition.
+    pub fn layout_version(&self) -> Version {
+        self.layout
+    }
+
+    /// Params/network version: pinned at assembly, never re-bumped.
+    pub fn params_version(&self) -> Version {
+        self.params_ver
+    }
+
+    /// How many topology mutations the installed layout trails the
+    /// live graph by — 0 whenever a recut/repair ran after the latest
+    /// churn, which every `mutate` guarantees.  Exposed so the serving
+    /// loop can publish it as the `version.lag.layout` gauge.
+    pub fn layout_lag(&self) -> u64 {
+        self.layout_at.lag(self.users.topology_version())
+    }
+
+    /// Memo-cell telemetry: `(template_reads, template_rebuilds,
+    /// rate_reads, rate_rebuilds)` — the benches' hit-rate numerator
+    /// and denominator.
+    pub fn memo_counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.obs_templates.reads(),
+            self.obs_templates.rebuilds(),
+            self.rates.reads(),
+            self.rates.rebuilds(),
+        )
+    }
+
     /// Per-agent observation O_m (Eq. 20) for the current user: an
     /// O(OBS) copy of the cached static row plus the five dynamic
     /// features (see the module docs).
     pub fn obs(&self, m: usize) -> [f32; OBS] {
         let Some(u) = self.current_user() else { return [0.0f32; OBS] };
         let m_agents = self.net.len();
-        let mut o = self.obs_state.templates[u * m_agents + m];
+        let mut o = self.obs_templates()[u * m_agents + m];
         let n = self.cfg.n_users as f32;
         let server = &self.net.servers[m];
         let sg = self.subgraph_of[u];
@@ -793,7 +897,10 @@ impl Env {
             }
         }
         let marginal = {
-            let cm = self.cost_model();
+            // Table-backed rates; the `Ref` guard must die in this
+            // block — the mutations below take `&mut self`.
+            let tables = self.rate_tables();
+            let cm = self.cost_model().with_tables(&tables);
             cm.marginal_cost(&self.offload, u, server)
         };
         self.offload.server[u] = server;
@@ -841,7 +948,8 @@ impl Env {
     /// Evaluate the completed (or partial) offload with the full cost
     /// model (Eqs. 12–13).
     pub fn evaluate(&self) -> crate::net::cost::CostBreakdown {
-        self.cost_model().evaluate(&self.offload)
+        let tables = self.rate_tables();
+        self.cost_model().with_tables(&tables).evaluate(&self.offload)
     }
 
     /// Cut quality of the current layout (diagnostics).
@@ -1010,6 +1118,44 @@ mod tests {
             env.step(step % env.agents());
             step += 1;
         }
+    }
+
+    #[test]
+    fn version_stamps_and_memo_cells_track_churn() {
+        let mut env = small_env(31);
+        assert_eq!(env.params_version().value(), 1);
+        assert_eq!(env.layout_lag(), 0, "assemble ends with a fresh recut");
+
+        // Repeated reads on an unchanged env hit the same build.
+        let _ = env.state();
+        let (_, template_builds, _, rate_builds) = env.memo_counters();
+        let _ = env.state();
+        let _ = env.evaluate();
+        let after = env.memo_counters();
+        assert_eq!(after.1, template_builds, "re-read must not rebuild templates");
+        assert_eq!(after.3, rate_builds, "re-read must not rebuild rate tables");
+
+        // Churn bumps topology, mutate reinstalls → lag back to 0,
+        // both cells rebuild on their next read.
+        let (topo0, layout0) = (env.topology_version(), env.layout_version());
+        let mut rng = Rng::seed_from(7);
+        // A churn step can come up empty; mutate until one lands.
+        for _ in 0..16 {
+            env.mutate(&mut rng);
+            if env.topology_version() > topo0 {
+                break;
+            }
+        }
+        env.reset();
+        assert!(env.topology_version() > topo0, "churn must bump topology");
+        assert!(env.layout_version() > layout0, "install must bump layout");
+        assert_eq!(env.layout_lag(), 0, "mutate repairs to the live topology");
+        let _ = env.state();
+        let _ = env.evaluate();
+        let rebuilt = env.memo_counters();
+        assert_eq!(rebuilt.1, after.1 + 1, "stale templates rebuild exactly once");
+        assert_eq!(rebuilt.3, after.3 + 1, "stale rate tables rebuild exactly once");
+        assert_eq!(env.params_version().value(), 1, "params stay pinned");
     }
 
     #[test]

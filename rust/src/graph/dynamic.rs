@@ -24,6 +24,7 @@
 
 use super::Graph;
 use crate::util::rng::Rng;
+use crate::util::version::Version;
 
 /// 2-D position on the EC plane, meters.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -99,6 +100,11 @@ pub struct DynamicGraph {
     /// `recording`).
     journal: Vec<GraphDelta>,
     recording: bool,
+    /// Bumped on every mutation (edges, mask, positions, task sizes) —
+    /// whether or not delta recording is on.  Consumers key
+    /// `util::version::Memoized` caches on this stamp; see
+    /// [`DynamicGraph::topology_version`].
+    topology: Version,
 }
 
 impl DynamicGraph {
@@ -129,7 +135,16 @@ impl DynamicGraph {
             target_mean_deg,
             journal: Vec::new(),
             recording: false,
+            topology: Version::ZERO,
         }
+    }
+
+    /// The graph's change stamp: strictly increases on every mutation
+    /// (§3.2 dynamics, explicit association edits, task-size updates),
+    /// in or out of delta-recording mode.  Derived-data caches compare
+    /// this against the stamp they were built at (`util::version`).
+    pub fn topology_version(&self) -> Version {
+        self.topology
     }
 
     // -- delta journal ------------------------------------------------------
@@ -156,8 +171,11 @@ impl DynamicGraph {
     /// mutations funnel through here so the delta stream stays exact).
     fn add_assoc(&mut self, u: usize, v: usize) -> bool {
         let added = self.graph.add_edge(u, v);
-        if added && self.recording {
-            self.journal.push(GraphDelta::Rewired { a: u, b: v, added: true });
+        if added {
+            self.topology.bump();
+            if self.recording {
+                self.journal.push(GraphDelta::Rewired { a: u, b: v, added: true });
+            }
         }
         added
     }
@@ -165,8 +183,11 @@ impl DynamicGraph {
     /// Remove an association through the journal.
     fn remove_assoc(&mut self, u: usize, v: usize) -> bool {
         let removed = self.graph.remove_edge(u, v);
-        if removed && self.recording {
-            self.journal.push(GraphDelta::Rewired { a: u, b: v, added: false });
+        if removed {
+            self.topology.bump();
+            if self.recording {
+                self.journal.push(GraphDelta::Rewired { a: u, b: v, added: false });
+            }
         }
         removed
     }
@@ -216,6 +237,7 @@ impl DynamicGraph {
 
     pub fn set_task_mb(&mut self, v: usize, mb: f64) {
         self.task_mb[v] = mb;
+        self.topology.bump();
     }
 
     /// Active-neighbor count — |N_i(t)| of the cost model.
@@ -243,6 +265,7 @@ impl DynamicGraph {
         for &v in users {
             if self.mask[v] {
                 self.mask[v] = false;
+                self.topology.bump();
                 if self.recording {
                     let neighbors = self.graph.neighbors(v).to_vec();
                     self.journal.push(GraphDelta::Left { user: v, neighbors });
@@ -266,6 +289,7 @@ impl DynamicGraph {
         for (i, &slot) in chosen.iter().enumerate() {
             self.mask[slot] = true;
             self.pos[slot] = positions(i, rng);
+            self.topology.bump();
             if self.recording {
                 self.journal
                     .push(GraphDelta::Joined { user: slot, pos: self.pos[slot] });
@@ -286,6 +310,7 @@ impl DynamicGraph {
                 x: (self.pos[v].x + dx).clamp(0.0, plane_m),
                 y: (self.pos[v].y + dy).clamp(0.0, plane_m),
             };
+            self.topology.bump();
             if self.recording {
                 self.journal.push(GraphDelta::Moved { user: v, to: self.pos[v] });
             }
@@ -301,6 +326,7 @@ impl DynamicGraph {
                     x: rng.range_f64(0.0, plane_m),
                     y: rng.range_f64(0.0, plane_m),
                 };
+                self.topology.bump();
                 if self.recording {
                     self.journal.push(GraphDelta::Moved { user: v, to: self.pos[v] });
                 }
@@ -647,6 +673,39 @@ mod tests {
         assert!(!deltas
             .iter()
             .any(|x| matches!(x, GraphDelta::Left { .. } | GraphDelta::Joined { .. })));
+    }
+
+    #[test]
+    fn topology_version_tracks_every_mutation_kind() {
+        let mut rng = Rng::seed_from(41);
+        let mut d = make(20, &mut rng);
+        let v0 = d.topology_version();
+        // Reads leave the stamp alone.
+        let _ = (d.active_users(), d.active_edges(), d.pos(0), d.task_mb(0));
+        assert_eq!(d.topology_version(), v0);
+        d.remove_users(&[2]);
+        let v1 = d.topology_version();
+        assert!(v1 > v0, "user removal must bump");
+        d.remove_users(&[2]); // already inactive: no mutation
+        assert_eq!(d.topology_version(), v1);
+        d.move_users(50.0, 2000.0, &mut rng);
+        let v2 = d.topology_version();
+        assert!(v2 > v1, "mobility must bump");
+        let had = d.graph().has_edge(0, 1);
+        if had {
+            assert!(d.remove_association(0, 1));
+        } else {
+            assert!(d.add_association(0, 1));
+        }
+        let v3 = d.topology_version();
+        assert!(v3 > v2, "association change must bump");
+        d.set_task_mb(0, 2.5);
+        assert!(d.topology_version() > v3, "task-size change must bump");
+        // Churn steps bump regardless of delta recording.
+        assert!(!d.recording());
+        let before = d.topology_version();
+        d.step(&ChurnConfig::default(), &mut rng);
+        assert!(d.topology_version() > before);
     }
 
     #[test]

@@ -25,6 +25,21 @@
 //! falls back to full HiCut past a configurable bound, so repair never
 //! silently erodes layout quality.  `coordinator::Controller::run_dynamic`
 //! and `serving::serve_dynamic_run` ride this path online.
+//!
+//! Staleness across the stack is governed by one substrate,
+//! [`util::version`]: producers ([`graph::dynamic::DynamicGraph`]
+//! topology, the installed partition layout, the system parameters)
+//! stamp monotonic [`util::version::Version`]s, and every derived-state
+//! cache — the DRLGO observation templates, the cost model's rate
+//! tables, the incremental partitioner's repaired-to mark, the serving
+//! router's deadline window, [`util::stats::Sample`]'s percentile sort —
+//! is a [`util::version::Memoized`] cell that re-validates its version
+//! key on every read and rebuilds lazily on mismatch.  There is no
+//! "invalidate on mutation" choke point to forget: a stale read is
+//! impossible by construction, staleness *debt* is observable as
+//! `version.lag.*` gauges in the metrics pipeline, and the
+//! `tests/properties.rs` suite pins every memoized read bit-identical
+//! to a from-scratch recompute under interleaved churn.
 //! * **Layer 2 (JAX, build time)** — GCN/GAT/GraphSAGE/SGC forwards and
 //!   the MADDPG/PPO train steps, AOT-lowered to HLO text.
 //! * **Layer 1 (Pallas, build time)** — the dense aggregation kernels

@@ -290,11 +290,27 @@ fn print_curve(curve: &[graphedge::drl::maddpg::EpisodeStats]) {
     print!("{}", t.render());
 }
 
+/// CLI boundary check for `--model`: a typo should fail loudly here,
+/// not fall back to gcn deep inside the cost model
+/// ([`graphedge::net::GnnProfile::from_name`] stays lenient for
+/// library callers; the CLI is strict).
+fn validate_model(model: &str) -> graphedge::Result<()> {
+    use graphedge::net::GnnProfile;
+    if GnnProfile::try_from_name(model).is_none() {
+        anyhow::bail!(
+            "unknown GNN model {model:?}; known models: {}",
+            GnnProfile::KNOWN_NAMES.join(", ")
+        );
+    }
+    Ok(())
+}
+
 fn cmd_simulate(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
     let params = load_params(matches);
     let ctrl = Controller::new(params)?;
     let dataset = matches.str("dataset").to_string();
     let model = matches.str("model").to_string();
+    validate_model(&model)?;
     let users = matches.usize("users");
     let assocs = matches.usize("assocs");
     let episodes = matches.usize("episodes");
@@ -386,6 +402,7 @@ fn cmd_serve_inner(matches: &graphedge::util::cli::Matches) -> graphedge::Result
     let ctrl = Controller::new(params)?;
     let dataset = matches.str("dataset").to_string();
     let model = matches.str("model").to_string();
+    validate_model(&model)?;
     let requests = matches.usize("requests");
     if steps > 0 {
         // Dynamic mode: §3.2 churn every step; the layout is repaired

@@ -40,13 +40,45 @@ pub enum GnnProfile {
 }
 
 impl GnnProfile {
-    pub fn from_name(name: &str) -> Self {
+    /// The model names `try_from_name` accepts (the `--model` grammar).
+    pub const KNOWN_NAMES: [&'static str; 4] = ["gcn", "gat", "sage", "sgc"];
+
+    /// Strict parse: `None` for anything outside [`KNOWN_NAMES`].
+    ///
+    /// [`KNOWN_NAMES`]: GnnProfile::KNOWN_NAMES
+    pub fn try_from_name(name: &str) -> Option<Self> {
         match name {
-            "gat" => GnnProfile::Gat,
-            "sage" => GnnProfile::Sage,
-            "sgc" => GnnProfile::Sgc,
-            _ => GnnProfile::Gcn,
+            "gcn" => Some(GnnProfile::Gcn),
+            "gat" => Some(GnnProfile::Gat),
+            "sage" => Some(GnnProfile::Sage),
+            "sgc" => Some(GnnProfile::Sgc),
+            _ => None,
         }
+    }
+
+    /// Lenient parse: unknown names fall back to GCN (the paper's
+    /// default architecture) — but no longer silently.  The first
+    /// unrecognized name per process is reported on stderr; the CLI
+    /// boundary rejects unknown `--model` values outright via
+    /// [`try_from_name`], so this path only fires for programmatic
+    /// callers.
+    ///
+    /// [`try_from_name`]: GnnProfile::try_from_name
+    pub fn from_name(name: &str) -> Self {
+        Self::try_from_name(name).unwrap_or_else(|| {
+            use std::sync::atomic::{AtomicBool, Ordering};
+            static WARNED: AtomicBool = AtomicBool::new(false);
+            // ordering: SeqCst — one-time warn flag on a cold error
+            // path; strongest ordering keeps it trivially correct.
+            if !WARNED.swap(true, Ordering::SeqCst) {
+                eprintln!(
+                    "warning: unrecognized GNN model {name:?}; known models are \
+                     {} — falling back to gcn",
+                    GnnProfile::KNOWN_NAMES.join(", ")
+                );
+            }
+            GnnProfile::Gcn
+        })
     }
 
     pub fn update_mult(&self) -> f64 {
@@ -136,6 +168,42 @@ impl CostBreakdown {
     }
 }
 
+/// Precomputed Eq. 3 / Eq. 6 rate tables for one (topology, params)
+/// state — the memoizable core of [`CostModel`].
+///
+/// `uplink[user][server]` depends on user *positions* (gain = ϱ₀·d⁻²),
+/// so the table is stale after any mobility/churn step; `server[k]`
+/// depends only on the drawn network.  Owners (e.g. `drl::env::Env`)
+/// keep one inside a `util::version::Memoized` keyed on (topology,
+/// params) and rebuild it lazily; a `CostModel` handed a table via
+/// [`CostModel::with_tables`] answers its hot `evaluate` /
+/// `marginal_cost` rate lookups from the table instead of re-deriving
+/// log₂(1 + SNR) per call.  Entries are produced by the exact same
+/// arithmetic as the untabled path, so results are bit-identical.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RateTables {
+    /// R_{i,m} (Eq. 3), bit/s, indexed `[user][server]`.
+    pub uplink: Vec<Vec<f64>>,
+    /// R_{k,l} (Eq. 6), bit/s, indexed by source server `k` (the
+    /// backhaul is symmetric-bandwidth, so one row suffices).
+    pub server: Vec<f64>,
+}
+
+impl RateTables {
+    /// Tabulate every rate the given model can be asked for.  Uses the
+    /// from-scratch formulas regardless of any table `cm` already
+    /// carries, so a rebuild never reads its own stale output.
+    pub fn build(cm: &CostModel<'_>) -> Self {
+        let m = cm.net.len();
+        RateTables {
+            uplink: (0..cm.links.bw_hz.len())
+                .map(|u| (0..m).map(|s| cm.uplink_rate_fresh(u, s)).collect())
+                .collect(),
+            server: (0..m).map(|k| cm.server_rate_fresh(k)).collect(),
+        }
+    }
+}
+
 /// Cost evaluator bound to one scenario (users + network + links).
 pub struct CostModel<'a> {
     pub params: &'a SystemParams,
@@ -149,6 +217,9 @@ pub struct CostModel<'a> {
     pub layer_dims: &'a [usize],
     /// Which GNN architecture the servers run (Fig. 10).
     pub profile: GnnProfile,
+    /// Optional memoized rate tables (see [`RateTables`]).  `None`
+    /// falls back to computing every rate from the Eq. 3/6 formulas.
+    tables: Option<&'a RateTables>,
 }
 
 impl<'a> CostModel<'a> {
@@ -160,12 +231,20 @@ impl<'a> CostModel<'a> {
         layer_dims: &'a [usize],
     ) -> Self {
         assert_eq!(layer_dims.len(), params.gnn_layers + 1, "dims per layer boundary");
-        CostModel { params, net, links, users, layer_dims, profile: GnnProfile::Gcn }
+        CostModel { params, net, links, users, layer_dims, profile: GnnProfile::Gcn, tables: None }
     }
 
     /// Builder-style: switch the GNN architecture profile.
     pub fn with_profile(mut self, profile: GnnProfile) -> Self {
         self.profile = profile;
+        self
+    }
+
+    /// Builder-style: answer rate lookups from precomputed tables.
+    /// The caller owns table freshness (see `util::version`); a stale
+    /// table silently prices against an old topology.
+    pub fn with_tables(mut self, tables: &'a RateTables) -> Self {
+        self.tables = Some(tables);
         self
     }
 
@@ -177,6 +256,13 @@ impl<'a> CostModel<'a> {
 
     /// Uplink rate R_{i,m}(t), bit/s (Eq. 3).
     pub fn uplink_rate(&self, user: usize, server: usize) -> f64 {
+        match self.tables {
+            Some(t) => t.uplink[user][server],
+            None => self.uplink_rate_fresh(user, server),
+        }
+    }
+
+    fn uplink_rate_fresh(&self, user: usize, server: usize) -> f64 {
         let bw = self.links.bw_hz[user][server];
         let snr = self.links.p_w[user] * self.gain(user, server) / self.params.noise_w;
         bw * (1.0 + snr).log2()
@@ -184,6 +270,13 @@ impl<'a> CostModel<'a> {
 
     /// Inter-server rate R_{k,l}, bit/s (Eq. 6).
     pub fn server_rate(&self, k: usize) -> f64 {
+        match self.tables {
+            Some(t) => t.server[k],
+            None => self.server_rate_fresh(k),
+        }
+    }
+
+    fn server_rate_fresh(&self, k: usize) -> f64 {
         let snr = self.net.servers[k].p_w * self.params.h0 / self.params.noise_w;
         self.net.server_bw_hz * (1.0 + snr).log2()
     }
@@ -530,6 +623,48 @@ mod tests {
         assert_eq!(GnnProfile::from_name("sgc"), GnnProfile::Sgc);
         assert_eq!(GnnProfile::from_name("gcn"), GnnProfile::Gcn);
         assert_eq!(GnnProfile::from_name("???"), GnnProfile::Gcn);
+    }
+
+    #[test]
+    fn try_from_name_is_strict() {
+        for name in GnnProfile::KNOWN_NAMES {
+            assert_eq!(
+                GnnProfile::try_from_name(name),
+                Some(GnnProfile::from_name(name))
+            );
+        }
+        assert_eq!(GnnProfile::try_from_name("???"), None);
+        assert_eq!(GnnProfile::try_from_name("GCN"), None);
+        assert_eq!(GnnProfile::try_from_name(""), None);
+    }
+
+    #[test]
+    fn rate_tables_are_bit_identical_to_fresh_rates() {
+        let (p, net, links, users) = scenario(12, &[(0, 1), (2, 3), (5, 9)], 9);
+        let cm = CostModel::new(&p, &net, &links, &users, dims());
+        let tables = RateTables::build(&cm);
+        let tm = CostModel::new(&p, &net, &links, &users, dims()).with_tables(&tables);
+        for u in 0..12 {
+            for s in 0..net.len() {
+                assert_eq!(
+                    cm.uplink_rate(u, s).to_bits(),
+                    tm.uplink_rate(u, s).to_bits()
+                );
+            }
+        }
+        for k in 0..net.len() {
+            assert_eq!(cm.server_rate(k).to_bits(), tm.server_rate(k).to_bits());
+        }
+        // Whole-pipeline identity: evaluate and marginal_cost go
+        // through the same rate lookups.
+        let off = Offload { server: (0..12).map(|u| u % net.len()).collect() };
+        assert_eq!(cm.evaluate(&off), tm.evaluate(&off));
+        let mut partial = Offload::empty(12);
+        partial.server[0] = 0;
+        assert_eq!(
+            cm.marginal_cost(&partial, 1, 1).to_bits(),
+            tm.marginal_cost(&partial, 1, 1).to_bits()
+        );
     }
 
     #[test]

@@ -15,6 +15,6 @@ pub mod cost;
 pub mod params;
 pub mod topology;
 
-pub use cost::{CostBreakdown, CostModel, GnnProfile, Offload};
+pub use cost::{CostBreakdown, CostModel, GnnProfile, Offload, RateTables};
 pub use params::SystemParams;
 pub use topology::{EdgeNetwork, EdgeServer};

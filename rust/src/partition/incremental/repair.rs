@@ -34,6 +34,7 @@ use crate::partition::Partition;
 use crate::util::metrics::{Gauge, GLOBAL as METRICS};
 use crate::util::threadpool::ThreadPool;
 use crate::util::trace;
+use crate::util::version::Version;
 
 static CUT_EDGES_GAUGE: Lazy<Gauge> =
     Lazy::new(|| METRICS.gauge_handle("partition.cut_edges"));
@@ -99,6 +100,12 @@ pub struct IncrementalPartitioner {
     pub full_recuts: usize,
     /// Local region re-cuts performed.
     pub local_recuts: usize,
+    /// Graph topology version this layout was last repaired/recut to
+    /// (see [`crate::util::version`]): stamped by [`Self::apply`] and
+    /// [`Self::full_recut`], and by [`Self::note_repaired`] when a
+    /// caller adopts an externally computed layout.  `ZERO` until the
+    /// first stamp.
+    repaired_to: Version,
 }
 
 impl IncrementalPartitioner {
@@ -118,6 +125,7 @@ impl IncrementalPartitioner {
             steps: 0,
             full_recuts: 0,
             local_recuts: 0,
+            repaired_to: Version::ZERO,
         }
     }
 
@@ -140,6 +148,7 @@ impl IncrementalPartitioner {
             hicut(g, |v| users.is_active(v))
         };
         self.adopt(g, p.subgraphs);
+        self.repaired_to = users.topology_version();
         span.field("vertices", self.covered as f64);
         span.field("cut_edges", self.cut as f64);
     }
@@ -257,6 +266,7 @@ impl IncrementalPartitioner {
         );
         CUT_EDGES_GAUGE.set(self.cut as i64);
         DRIFT_PPM_GAUGE.set((drift * 1e6) as i64);
+        self.repaired_to = users.topology_version();
         stats
     }
 
@@ -294,6 +304,26 @@ impl IncrementalPartitioner {
 
     pub fn monitor(&self) -> &DriftMonitor {
         &self.monitor
+    }
+
+    /// Topology version the live layout corresponds to.
+    pub fn repaired_to(&self) -> Version {
+        self.repaired_to
+    }
+
+    /// Record that the live layout matches topology version `to` —
+    /// for callers that computed a layout themselves and installed it
+    /// via [`Self::adopt`] (which, taking only a [`Graph`], cannot
+    /// stamp the version on its own).
+    pub fn note_repaired(&mut self, to: Version) {
+        self.repaired_to = to;
+    }
+
+    /// Is the layout current for `users`, i.e. repaired to its exact
+    /// topology version?  The serve loop publishes the complementary
+    /// lag ([`Version::lag`]) as the `version.lag.layout` gauge.
+    pub fn is_current(&self, users: &DynamicGraph) -> bool {
+        self.repaired_to == users.topology_version()
     }
 
     /// Debug/test support: do the incremental counters match a from-
@@ -868,6 +898,33 @@ mod tests {
             par.local_recuts > 0,
             "churn never exercised the region re-cut path"
         );
+    }
+
+    #[test]
+    fn repaired_to_tracks_the_topology_version() {
+        let mut rng = Rng::seed_from(9);
+        let mut users = two_triangles(&mut rng);
+        users.record_deltas(true);
+        let mut inc = IncrementalPartitioner::from_users(&users, IncrementalConfig::default());
+        assert!(inc.is_current(&users), "from_users stamps the build version");
+
+        // Churn without repair → stale; apply → current again.
+        users.remove_users(&[5]);
+        assert!(!inc.is_current(&users));
+        assert!(inc.repaired_to() < users.topology_version());
+        let deltas = users.drain_deltas();
+        inc.apply(&users, &deltas);
+        assert!(inc.is_current(&users));
+        assert_eq!(inc.repaired_to().lag(users.topology_version()), 0);
+
+        // External adopt can't see the graph's version; the caller
+        // stamps it explicitly.
+        users.remove_users(&[4]);
+        let fresh = hicut(users.graph(), |v| users.is_active(v));
+        inc.adopt(users.graph(), fresh.subgraphs);
+        assert!(!inc.is_current(&users));
+        inc.note_repaired(users.topology_version());
+        assert!(inc.is_current(&users));
     }
 
     #[test]

@@ -11,6 +11,7 @@ use std::time::{Duration, Instant};
 
 use crate::net::cost::{Offload, UNASSIGNED};
 use crate::util::trace;
+use crate::util::version::Version;
 
 /// `reason` field values of the `router.batch_close` trace event.
 pub const CLOSE_FULL: f64 = 0.0;
@@ -55,6 +56,13 @@ pub struct Router {
     /// Per-server batch deadline anchor: when the oldest queued
     /// request arrived (`None` = empty queue, no window open).
     deadlines: Vec<Option<Instant>>,
+    /// Params version the queued placements and deadline anchors were
+    /// built under (see [`crate::util::version`]); `None` until the
+    /// first [`Router::revalidate`].  Queued requests embed offload
+    /// decisions priced by a [`crate::net::cost::CostModel`] — if the
+    /// system params they were priced under are superseded, holding
+    /// them to their old windows serves stale placements.
+    valid_for: Option<Version>,
     policy: BatchPolicy,
     pub dispatched_batches: usize,
     pub dispatched_requests: usize,
@@ -69,9 +77,33 @@ impl Router {
         Router {
             queues: vec![Vec::new(); servers],
             deadlines: vec![None; servers],
+            valid_for: None,
             policy,
             dispatched_batches: 0,
             dispatched_requests: 0,
+        }
+    }
+
+    /// Validate the cached deadlines (and the queued placements they
+    /// anchor) against the serving environment's params version.  A
+    /// mismatch force-flushes every queue — the drained batches are
+    /// returned so in-flight requests are served (under their old
+    /// placements) rather than dropped — and every deadline anchor is
+    /// cleared, so post-revalidate submits open fresh `max_wait`
+    /// windows.  The first call adopts `params` without flushing;
+    /// calling with an unchanged version is a no-op.  The serve loop
+    /// invokes this once per tick.
+    pub fn revalidate(&mut self, params: Version) -> Vec<(usize, Vec<usize>)> {
+        match self.valid_for {
+            Some(v) if v == params => Vec::new(),
+            Some(_) => {
+                self.valid_for = Some(params);
+                self.flush()
+            }
+            None => {
+                self.valid_for = Some(params);
+                Vec::new()
+            }
         }
     }
 
@@ -359,6 +391,38 @@ mod tests {
         let batches = r.ready_batches(t1);
         assert_eq!(batches, vec![(0, vec![0, 1, 2])]);
         assert!(r.ready_batches(t1 + max_wait / 2).is_empty());
+        assert_eq!(r.ready_batches(t1 + max_wait), vec![(0, vec![3])]);
+    }
+
+    #[test]
+    fn revalidate_flushes_only_on_params_version_change() {
+        let max_wait = Duration::from_millis(50);
+        let mut r = Router::new(1, BatchPolicy { max_batch: 100, max_wait });
+        let mut params = Version::ZERO;
+        params.bump();
+        assert!(r.revalidate(params).is_empty(), "first call only adopts");
+
+        let off = offload_all_to(0, 8);
+        let t0 = Instant::now();
+        r.submit(0, &off, t0);
+        r.submit(1, &off, t0);
+        // Same version: nothing flushes, the open window survives.
+        assert!(r.revalidate(params).is_empty());
+        assert_eq!(r.queue_len(0), 2);
+        assert_eq!(r.ready_batches(t0 + max_wait), vec![(0, vec![0, 1])]);
+
+        // Bumped version: queued placements drain immediately and the
+        // next batch opens a fresh window.
+        r.submit(2, &off, t0);
+        params.bump();
+        assert_eq!(r.revalidate(params), vec![(0, vec![2])]);
+        assert_eq!(r.queue_len(0), 0);
+        let t1 = t0 + Duration::from_secs(10);
+        r.submit(3, &off, t1);
+        assert!(
+            r.ready_batches(t1 + max_wait / 2).is_empty(),
+            "post-revalidate batch must wait out its own window"
+        );
         assert_eq!(r.ready_batches(t1 + max_wait), vec![(0, vec![3])]);
     }
 

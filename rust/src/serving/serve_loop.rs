@@ -29,7 +29,7 @@ use crate::drl::{baselines, Env, EnvConfig, Method};
 use crate::net::params::SystemParams;
 use crate::serving::router::{BatchPolicy, Router};
 use crate::serving::{GnnService, PaddedGraph};
-use crate::util::metrics::{Counter, Histogram, GLOBAL as METRICS};
+use crate::util::metrics::{Counter, Gauge, Histogram, GLOBAL as METRICS};
 use crate::util::rng::Rng;
 use crate::util::stats::Sample;
 use crate::util::trace;
@@ -40,6 +40,16 @@ static SERVE_DYN_BATCHES: Lazy<Counter> =
     Lazy::new(|| METRICS.counter_handle("serve.dynamic.batches"));
 static SERVE_LATENCY: Lazy<Histogram> =
     Lazy::new(|| METRICS.histogram_handle("serve.latency_s"));
+/// Mutations the installed layout trails the live graph by, sampled
+/// at two points of each dynamic step (see [`crate::util::version`]):
+/// pre-maintenance (after churn, before the layout catches up — the
+/// step's repair debt) and post-maintenance (0 unless maintenance
+/// was skipped, i.e. the gauge going non-zero flags a stale layout
+/// serving traffic).
+static VERSION_LAG_PRE: Lazy<Gauge> =
+    Lazy::new(|| METRICS.gauge_handle("version.lag.layout_pre_repair"));
+static VERSION_LAG_POST: Lazy<Gauge> =
+    Lazy::new(|| METRICS.gauge_handle("version.lag.layout"));
 
 /// Summary of one serving run.
 #[derive(Clone, Debug)]
@@ -265,9 +275,16 @@ fn serve_dynamic_core(
         let _step_span = trace::span_with("serve.step", &[("step", step as f64)]);
         {
             let _churn_span = trace::span("serve.churn");
+            let topo_before = env.topology_version();
+            let debt_before = env.layout_lag();
             let t0 = Instant::now();
             env.mutate(rng); // churn + delta-driven repair / full recut
             repair.push(t0.elapsed().as_secs_f64());
+            // Version telemetry: how many mutations this step's layout
+            // maintenance had to absorb, and whether it caught up.
+            let churned = topo_before.lag(env.topology_version());
+            VERSION_LAG_PRE.set((debt_before + churned) as i64);
+            VERSION_LAG_POST.set(env.layout_lag() as i64);
         }
         env.reset();
         baselines::run_greedy(env);
@@ -277,6 +294,11 @@ fn serve_dynamic_core(
         if active.is_empty() {
             continue;
         }
+        // Queued placements (none, in this loop's flush-per-step
+        // discipline) only survive under the params version they were
+        // priced with; anything drained by a version change is served
+        // with this step's burst rather than dropped.
+        let stale = router.revalidate(env.params_version());
         {
             let mut route_span = trace::span("serve.route");
             let now = Instant::now();
@@ -293,7 +315,8 @@ fn serve_dynamic_core(
         }
         // Close out the step: full batches first, then a force-flush —
         // the next churn step invalidates queued placements.
-        let mut batches = router.ready_batches(Instant::now());
+        let mut batches = stale;
+        batches.extend(router.ready_batches(Instant::now()));
         batches.extend(router.flush());
         let env_ref = &*env;
         time_batches(batches, &latency, |server, batch| {
@@ -489,6 +512,9 @@ pub fn serve_run_with(
         }
     }
     let mut router = Router::new(servers, policy);
+    // Pin the router's deadline cache to this env's params version
+    // (static topology: the version never moves mid-run).
+    let _ = router.revalidate(env.params_version());
     let latency = Histogram::new();
     let batch_sizes = Histogram::new();
     let mut correct = 0usize;

@@ -18,6 +18,9 @@
 //!   model-checked doubles under `--cfg loom`.
 //! * [`trace`] — scoped spans + a per-thread flight recorder drained
 //!   to JSONL (`GRAPHEDGE_TRACE`, `graphedge serve --trace`).
+//! * [`version`] — monotonic version counters + [`version::Memoized`]
+//!   cells: the shared staleness substrate for every derived-data
+//!   cache (obs templates, cost tables, router deadlines).
 //! * [`logging`] — an env-filtered `log::Log` backend.
 //! * [`proptest`] — a miniature property-testing harness used by the
 //!   `#[cfg(test)]` suites across the crate.
@@ -33,3 +36,4 @@ pub mod stats;
 pub mod sync;
 pub mod threadpool;
 pub mod trace;
+pub mod version;

@@ -1,5 +1,7 @@
 //! Streaming statistics and histogram helpers for metrics + benches.
 
+use crate::util::version::{Memoized, Version};
+
 /// Welford online mean/variance accumulator.
 #[derive(Clone, Debug, Default)]
 pub struct Welford {
@@ -55,24 +57,26 @@ impl Welford {
 
 /// Exact percentile over a stored sample (benches are small enough).
 ///
-/// Percentile queries sort lazily into a cached view that `push`
-/// invalidates, so report loops calling `median`/`percentile` per
-/// metric pay one sort per batch instead of one clone-and-sort per
-/// call (which was quadratic-ish across the bench report loop).
+/// Percentile queries sort lazily into a [`Memoized`] view keyed on a
+/// push-bumped [`Version`], so report loops calling
+/// `median`/`percentile` per metric pay one sort per batch instead of
+/// one clone-and-sort per call (which was quadratic-ish across the
+/// bench report loop).  The memo cell's interior mutability keeps the
+/// query API `&self` for every existing caller; `Sample` stays `Send`,
+/// which is all the metrics registry's `Mutex` needs.
 #[derive(Clone, Debug, Default)]
 pub struct Sample {
     xs: Vec<f64>,
-    /// Lazily built sorted copy of `xs` (`None` = stale).  Interior
-    /// mutability keeps the query API `&self` for every existing
-    /// caller; `Sample` stays `Send`, which is all the metrics
-    /// registry's `Mutex` needs.
-    sorted: std::cell::RefCell<Option<Vec<f64>>>,
+    /// Bumped on every `push`; the key for the sorted view below.
+    edits: Version,
+    /// Lazily built sorted copy of `xs`, current iff built at `edits`.
+    sorted: Memoized<Vec<f64>>,
 }
 
 impl Sample {
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
-        *self.sorted.get_mut() = None;
+        self.edits.bump();
     }
 
     pub fn len(&self) -> usize {
@@ -105,8 +109,7 @@ impl Sample {
         if self.xs.is_empty() {
             return 0.0;
         }
-        let mut cache = self.sorted.borrow_mut();
-        let s = cache.get_or_insert_with(|| {
+        let s = self.sorted.get_or_rebuild(&[self.edits], || {
             let mut s = self.xs.clone();
             s.sort_by(|a, b| a.partial_cmp(b).unwrap());
             s

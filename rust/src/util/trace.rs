@@ -255,6 +255,8 @@ impl Drop for Tls {
 }
 
 thread_local! {
+    // lint:allow(memo) — lazy per-thread buffer registration, not a
+    // cache of derived state; the slot fills once and is never stale.
     static TLS: RefCell<Option<Tls>> = const { RefCell::new(None) };
 }
 

@@ -1,0 +1,332 @@
+//! Versioned memoization: one substrate for every "repair instead of
+//! recompute" cache in the crate.
+//!
+//! GraphEdge's whole premise is incremental per-time-step work, and
+//! before this module three subsystems hand-rolled the same staleness
+//! pattern independently (`ObsState`'s static templates, the
+//! incremental partitioner's "which graph state did I repair to"
+//! bookkeeping, `Router`'s cached batch deadlines) while `CostModel`
+//! simply recomputed its rate tables on every call.  The shared idiom
+//! is tiny: producers own monotonically increasing [`Version`]
+//! counters, consumers hold [`Memoized`] cells stamped with the version
+//! vector their value was derived from, and a read either returns the
+//! cached value (stamps match) or rebuilds and re-stamps.
+//!
+//! # Who bumps what
+//!
+//! | version    | producer                            | bumped when |
+//! |------------|-------------------------------------|-------------|
+//! | `topology` | `graph::dynamic::DynamicGraph`      | any edge / user-set / position mutation (every `GraphDelta` source, recorded or not) |
+//! | `layout`   | `drl::env::Env::install_partition`  | a new partition (full recut or incremental repair) is adopted |
+//! | `params`   | `drl::env::Env::assemble`           | pinned once per `SystemParams`/`EdgeNetwork` setup; never re-bumped today, so consumers survive a future "hot-reload params" path unchanged |
+//!
+//! # Invalidation rules
+//!
+//! A [`Memoized`] value is current iff the version vector it was built
+//! under is *equal* to the producer versions observed at read time —
+//! not merely `<=`: equality keeps the contract symmetric if a
+//! producer is ever rebuilt/replaced wholesale.  Consumers therefore
+//! never need explicit invalidation hooks wired through choke points;
+//! they read through [`Memoized::get_or_rebuild`] with the current
+//! producer stamps and rebuilding happens lazily on first stale read.
+//! The derived-data consumers in this crate key as follows:
+//!
+//! * `ObsState` static templates — (topology, layout, params);
+//! * `Env` rate tables for `CostModel` — (topology, params): uplink
+//!   rates depend on user positions (topology), compute rates only on
+//!   the drawn network (params);
+//! * incremental repair — records the topology version it repaired the
+//!   layout to (`IncrementalPartitioner::repaired_to`), so "is this
+//!   layout current?" is one integer compare instead of a cut audit;
+//! * `Router` — stamps its deadline windows with the params version and
+//!   flushes them if the stamp ever disagrees (`revalidate`).
+//!
+//! # Ordering contract for `SharedVersion`
+//!
+//! [`SharedVersion`] is the cross-thread variant.  Its `bump` is a
+//! release increment and `load` is an acquire read: a reader that
+//! observes version `v` also observes every write the producer made
+//! before bumping to `v`.  That is the entire contract — readers must
+//! *not* assume two loads are ordered with anything else, and the
+//! counter value itself is the only synchronized datum.  Plain
+//! [`Version`] is `Copy` and single-threaded; it is what the `Env`
+//! pipeline uses (one mutator at a time), while `SharedVersion` exists
+//! for pipelined serving stages that publish layout progress across
+//! threads.
+
+use std::cell::{Cell, Ref, RefCell};
+
+use crate::util::sync::{AtomicU64, Ordering};
+
+/// A monotonically increasing change stamp (cheap `Copy` newtype).
+///
+/// Producers own one per invalidation domain and call [`bump`] on
+/// every mutation; consumers compare stamps for equality.  The counter
+/// is 64-bit: at one bump per nanosecond it takes ~584 years to wrap,
+/// so overflow is a non-concern (and `bump` would panic in debug
+/// builds long before silently wrapping in release).
+///
+/// [`bump`]: Version::bump
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Version(u64);
+
+impl Version {
+    /// The pre-first-mutation stamp.
+    pub const ZERO: Version = Version(0);
+
+    /// The raw counter value (gauges, lag arithmetic, debugging).
+    pub fn value(self) -> u64 {
+        self.0
+    }
+
+    /// Advance to the next version and return the new stamp.
+    ///
+    /// `Version` is `Copy`, so call this on the *owning* field — a
+    /// bump through a copy advances only the copy.
+    pub fn bump(&mut self) -> Version {
+        self.0 += 1;
+        *self
+    }
+
+    /// How far `self` trails `newer` (0 when current or ahead).
+    pub fn lag(self, newer: Version) -> u64 {
+        newer.0.saturating_sub(self.0)
+    }
+}
+
+/// Atomic [`Version`] counter for cross-thread producers/readers.
+///
+/// See the module docs for the release/acquire contract.  Not `Copy`
+/// (it is the shared counter itself, not a stamp); `load` returns a
+/// plain `Version` stamp that can be stored in version vectors.
+#[derive(Debug, Default)]
+pub struct SharedVersion(AtomicU64);
+
+impl SharedVersion {
+    pub fn new() -> Self {
+        SharedVersion(AtomicU64::new(0))
+    }
+
+    /// The current stamp.
+    pub fn load(&self) -> Version {
+        // ordering: Acquire — pairs with the Release bump so a reader
+        // that observes version v also observes the producer writes
+        // that preceded the bump to v.
+        Version(self.0.load(Ordering::Acquire))
+    }
+
+    /// Advance the counter and return the *new* stamp.
+    pub fn bump(&self) -> Version {
+        // ordering: AcqRel — the increment publishes (Release) the
+        // producer's preceding writes to any Acquire load, and the
+        // Acquire half keeps chained bump-then-read sequences on the
+        // bumping thread from floating above earlier bumps.
+        Version(self.0.fetch_add(1, Ordering::AcqRel) + 1)
+    }
+}
+
+impl Clone for SharedVersion {
+    /// Cloning snapshots the current count into an independent counter
+    /// (used when a version-carrying owner like `Env` is replicated
+    /// into `VecEnv` slots — each slot then versions independently).
+    fn clone(&self) -> Self {
+        SharedVersion(AtomicU64::new(self.load().value()))
+    }
+}
+
+/// A lazily (re)built value stamped with the version vector it was
+/// derived from.
+///
+/// `get_or_rebuild(&self, versions, rebuild)` returns the cached value
+/// when `versions` equals the stored stamp vector and otherwise runs
+/// `rebuild` and re-stamps — so the *consumer* decides which producer
+/// versions its derived data depends on, and no producer needs to know
+/// who caches what.  Interior mutability (`RefCell`) keeps the read
+/// API `&self` for query-shaped callers (`Sample::percentile`,
+/// `Env::state`); the cell is `Send` (not `Sync`) exactly like
+/// the `RefCell` caches it replaces.
+///
+/// The hit/miss counters exist for the memoization bench and the
+/// equivalence property tests ("a second read at the same versions
+/// must not rebuild"); they are plain `Cell`s, not metrics handles, so
+/// a `Memoized` in a hot struct costs nothing when nobody reads them.
+#[derive(Debug, Default)]
+pub struct Memoized<T> {
+    entry: RefCell<Option<MemoEntry<T>>>,
+    reads: Cell<u64>,
+    rebuilds: Cell<u64>,
+}
+
+#[derive(Debug)]
+struct MemoEntry<T> {
+    versions: Vec<Version>,
+    value: T,
+}
+
+impl<T> Memoized<T> {
+    pub fn new() -> Self {
+        Memoized { entry: RefCell::new(None), reads: Cell::new(0), rebuilds: Cell::new(0) }
+    }
+
+    /// Return the cached value if it was built at exactly `versions`,
+    /// rebuilding (and re-stamping) it via `rebuild` otherwise.
+    ///
+    /// The borrow of the returned [`Ref`] must end before the next
+    /// `get_or_rebuild`/`invalidate` on the same cell (standard
+    /// `RefCell` discipline); `rebuild` runs with no outstanding
+    /// borrow, so it may freely read other fields of the owner.
+    pub fn get_or_rebuild(
+        &self,
+        versions: &[Version],
+        rebuild: impl FnOnce() -> T,
+    ) -> Ref<'_, T> {
+        self.reads.set(self.reads.get() + 1);
+        let stale = {
+            let entry = self.entry.borrow();
+            match entry.as_ref() {
+                Some(e) => e.versions != versions,
+                None => true,
+            }
+        };
+        if stale {
+            self.rebuilds.set(self.rebuilds.get() + 1);
+            let value = rebuild();
+            *self.entry.borrow_mut() =
+                Some(MemoEntry { versions: versions.to_vec(), value });
+        }
+        Ref::map(self.entry.borrow(), |e| {
+            // The slot was just filled above when empty; `unwrap` here
+            // can only fire on a re-entrant invalidate inside `Ref`'s
+            // lifetime, which the borrow discipline already forbids.
+            &e.as_ref().unwrap().value
+        })
+    }
+
+    /// Is the cached value current for `versions`?
+    pub fn is_current(&self, versions: &[Version]) -> bool {
+        self.entry
+            .borrow()
+            .as_ref()
+            .is_some_and(|e| e.versions == versions)
+    }
+
+    /// Drop the cached value; the next read rebuilds unconditionally.
+    pub fn invalidate(&self) {
+        *self.entry.borrow_mut() = None;
+    }
+
+    /// Total `get_or_rebuild` calls.
+    pub fn reads(&self) -> u64 {
+        self.reads.get()
+    }
+
+    /// How many of those reads had to rebuild (misses).
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds.get()
+    }
+}
+
+impl<T: Clone> Clone for Memoized<T> {
+    fn clone(&self) -> Self {
+        Memoized {
+            entry: RefCell::new(self.entry.borrow().as_ref().map(|e| MemoEntry {
+                versions: e.versions.clone(),
+                value: e.value.clone(),
+            })),
+            reads: self.reads.clone(),
+            rebuilds: self.rebuilds.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_is_strictly_monotonic() {
+        let mut v = Version::ZERO;
+        let mut prev = v;
+        for i in 1..=1000u64 {
+            let now = v.bump();
+            assert!(now > prev);
+            assert_eq!(now.value(), i);
+            prev = now;
+        }
+    }
+
+    #[test]
+    fn lag_saturates_at_zero() {
+        let mut a = Version::ZERO;
+        let b = a.bump();
+        assert_eq!(Version::ZERO.lag(b), 1);
+        assert_eq!(b.lag(Version::ZERO), 0);
+        assert_eq!(b.lag(b), 0);
+    }
+
+    #[test]
+    fn shared_version_bumps_across_threads() {
+        let v = std::sync::Arc::new(SharedVersion::new());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let v = std::sync::Arc::clone(&v);
+                std::thread::spawn(move || {
+                    let mut last = Version::ZERO;
+                    for _ in 0..250 {
+                        let now = v.bump();
+                        assert!(now > last, "bumps must be monotone per thread");
+                        last = now;
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(v.load().value(), 1000);
+    }
+
+    #[test]
+    fn memoized_rebuilds_only_on_version_change() {
+        let mut topo = Version::ZERO;
+        let cell: Memoized<u64> = Memoized::new();
+        let built = Cell::new(0u64);
+        let read = |stamp: Version| {
+            *cell.get_or_rebuild(&[stamp], || {
+                built.set(built.get() + 1);
+                stamp.value() * 10
+            })
+        };
+        assert_eq!(read(topo), 0);
+        assert_eq!(read(topo), 0); // hit: no rebuild
+        assert_eq!(built.get(), 1);
+        let t1 = topo.bump();
+        assert_eq!(read(t1), 10);
+        assert_eq!(built.get(), 2);
+        assert_eq!(cell.reads(), 3);
+        assert_eq!(cell.rebuilds(), 2);
+    }
+
+    #[test]
+    fn invalidate_forces_rebuild() {
+        let cell: Memoized<u32> = Memoized::new();
+        let _ = cell.get_or_rebuild(&[Version::ZERO], || 7);
+        assert!(cell.is_current(&[Version::ZERO]));
+        cell.invalidate();
+        assert!(!cell.is_current(&[Version::ZERO]));
+        assert_eq!(*cell.get_or_rebuild(&[Version::ZERO], || 9), 9);
+        assert_eq!(cell.rebuilds(), 2);
+    }
+
+    #[test]
+    fn clone_carries_value_and_counters() {
+        let cell: Memoized<u32> = Memoized::new();
+        let _ = cell.get_or_rebuild(&[Version::ZERO], || 3);
+        let copy = cell.clone();
+        assert!(copy.is_current(&[Version::ZERO]));
+        assert_eq!(copy.rebuilds(), 1);
+        // Clones diverge after the copy.
+        copy.invalidate();
+        assert!(cell.is_current(&[Version::ZERO]));
+    }
+}

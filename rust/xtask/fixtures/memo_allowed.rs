@@ -1,0 +1,8 @@
+//! Escape-hatch fixture: annotated memo cell — must not fire.
+use std::cell::RefCell;
+
+pub struct Tls {
+    // lint:allow(memo) — fixture: thread-local reuse buffer, not a
+    // cache of derived state; there is nothing to invalidate.
+    slot: RefCell<Option<Vec<u8>>>,
+}

@@ -1,0 +1,16 @@
+//! Known-bad fixture: hand-rolled memo cells outside
+//! `util/version.rs` — an unversioned cache nothing ever proves fresh.
+use std::cell::{Cell, RefCell};
+
+pub struct Cache {
+    sorted: RefCell<Option<Vec<f64>>>,
+    total: Cell<Option<f64>>,
+}
+
+#[cfg(test)]
+mod tests {
+    // Test code is exempt: a scratch cache in a test fixture is fine.
+    struct Scratch {
+        memo: std::cell::RefCell<Option<u32>>,
+    }
+}

@@ -6,7 +6,7 @@
 //! cargo run -p xtask -- lint [SRC_DIR]    # default: rust/src
 //! ```
 //!
-//! It enforces five cross-cutting invariants that rustc/clippy cannot
+//! It enforces six cross-cutting invariants that rustc/clippy cannot
 //! express (scoping is by path, relative to `SRC_DIR`):
 //!
 //! * `hash-iter` — no iteration over `HashMap`/`HashSet` in the
@@ -26,6 +26,10 @@
 //!   exempt).
 //! * `metrics-shim` — no string-keyed `METRICS.*`/`GLOBAL.*` calls
 //!   inside loop bodies; hot paths use pre-registered handles.
+//! * `memo` — no hand-rolled `RefCell<Option<…>>` / `Cell<Option<…>>`
+//!   memo cells outside `util/version.rs`.  Ad-hoc caches carry no
+//!   version key, so nothing proves they are ever invalidated; caches
+//!   go through `util::version::Memoized`.
 //!
 //! Escape hatch: `// lint:allow(<rule>) — <reason>` on the same line
 //! or the contiguous comment block directly above.  The reason is
@@ -42,15 +46,15 @@ use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-const KNOWN_RULES: [&str; 5] =
-    ["hash-iter", "wall-clock", "atomic-ordering", "panic", "metrics-shim"];
+const KNOWN_RULES: [&str; 6] =
+    ["hash-iter", "wall-clock", "atomic-ordering", "panic", "metrics-shim", "memo"];
 
 /// Files where wall-clock reads are the point (latency measurement).
 const WALL_CLOCK_ALLOW: [&str; 3] = ["util/trace.rs", "util/metrics.rs", "serving/serve_loop.rs"];
 
 /// Lock-free layers whose atomics must justify their memory orderings.
-const ORDERING_FILES: [&str; 4] =
-    ["util/metrics.rs", "util/trace.rs", "util/threadpool.rs", "util/logging.rs"];
+const ORDERING_FILES: [&str; 5] =
+    ["util/metrics.rs", "util/trace.rs", "util/threadpool.rs", "util/logging.rs", "util/version.rs"];
 
 /// How far above an `Ordering::*` use a `// ordering:` note may sit
 /// (block-style notes cover a whole match/loop/struct literal).
@@ -521,6 +525,21 @@ fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
         }
     }
 
+    // -- memo ---------------------------------------------------------
+    // `util/version.rs` hosts the one sanctioned memo cell; everywhere
+    // else a `RefCell<Option<…>>` is an unversioned cache in disguise.
+    if rel != "util/version.rs" {
+        for (i, code) in s.code[..end].iter().enumerate() {
+            if code.contains("RefCell<Option<") || code.contains("Cell<Option<") {
+                raw.push((
+                    "memo",
+                    i,
+                    "hand-rolled memo cell; use util::version::Memoized".to_string(),
+                ));
+            }
+        }
+    }
+
     // -- metrics-shim -------------------------------------------------
     // Brace-depth scan; a `for`/`while`/`loop` keyword arms the next
     // `{` as a loop body (`;` disarms — `for` in a doc path or a
@@ -663,6 +682,8 @@ mod tests {
     const METRICS_LOOP_BAD: &str = include_str!("../fixtures/metrics_loop_bad.rs");
     const METRICS_LOOP_ALLOWED: &str = include_str!("../fixtures/metrics_loop_allowed.rs");
     const ALLOW_SYNTAX_BAD: &str = include_str!("../fixtures/allow_syntax_bad.rs");
+    const MEMO_BAD: &str = include_str!("../fixtures/memo_bad.rs");
+    const MEMO_ALLOWED: &str = include_str!("../fixtures/memo_allowed.rs");
 
     #[test]
     fn hash_iter_fires_in_deterministic_layers() {
@@ -723,6 +744,16 @@ mod tests {
     fn metrics_shim_only_fires_inside_loop_bodies() {
         assert_eq!(count("runtime/mod.rs", METRICS_LOOP_BAD, "metrics-shim"), 1);
         assert_eq!(count("runtime/mod.rs", METRICS_LOOP_ALLOWED, "metrics-shim"), 0);
+    }
+
+    #[test]
+    fn memo_fires_everywhere_except_the_substrate_file() {
+        // Both cell shapes, once each; the `#[cfg(test)]` module with a
+        // third cell is exempt.
+        assert_eq!(count("util/stats.rs", MEMO_BAD, "memo"), 2);
+        assert_eq!(count("drl/env.rs", MEMO_BAD, "memo"), 2);
+        assert_eq!(count("util/version.rs", MEMO_BAD, "memo"), 0);
+        assert_eq!(count("util/trace.rs", MEMO_ALLOWED, "memo"), 0);
     }
 
     #[test]

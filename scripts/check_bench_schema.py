@@ -2,8 +2,8 @@
 """Schema check for BENCH_partition.json (the CI bench-smoke gate).
 
 The perf benches (`env_step`, `partition_incremental`,
-`partition_parallel`, `vec_env`, `scenario_vec`) each merge one
-top-level section into the shared results file.  This script fails CI
+`partition_parallel`, `vec_env`, `scenario_vec`, `memo`) each merge
+one top-level section into the shared results file.  This script fails CI
 when a bench stopped writing its section, dropped a key, or produced
 non-finite numbers — the failure modes of silent bench bit-rot.
 
@@ -33,6 +33,18 @@ SECTION_KEYS = {
     "parallel": ["n_users", "communities", "mean_degree", "reps"],
     "vec_env": ["n_users", "agents", "obs_dim", "reps"],
     "scenario": ["n_users", "n_assocs", "obs_dim", "reps"],
+    "memo": [
+        "n_users",
+        "agents",
+        "obs_dim",
+        "reps",
+        "rates_hit_s",
+        "rates_build_s",
+        "rates_speedup",
+        "evaluate_tabled_s",
+        "evaluate_fresh_s",
+        "evaluate_speedup",
+    ],
 }
 
 # Sections carrying a "runs" array, with required per-run keys.
@@ -61,6 +73,15 @@ RUN_KEYS = {
         "state_assembly_s",
         "rollout_steps_per_s",
         "episodes",
+    ],
+    "memo": [
+        "mutate_every",
+        "episodes",
+        "obs_hit_rate",
+        "rates_hit_rate",
+        "cold_read_s",
+        "warm_read_s",
+        "rebuild_penalty",
     ],
 }
 
