@@ -9,6 +9,12 @@ This module is the correctness ground truth of the whole stack:
   * GNN pre-training (``train_gnn.py``) trains *through* these oracles
     (differentiable plain-jnp), and serving runs the Pallas version —
     the tests above are what make that substitution sound.
+  * The **Rust native kernels** (``rust/src/runtime/native/kernels.rs``,
+    the default serving backend) are a third consumer: they are pinned
+    to this math at **1e-4 absolute** by committed golden vectors
+    (``scripts/gen_kernel_fixtures.py`` — a numpy-float64 mirror of the
+    oracles below — replayed by ``rust/tests/kernel_parity.rs``).
+    Any semantic change here must regenerate those fixtures.
 
 No pallas imports allowed in this file.
 """

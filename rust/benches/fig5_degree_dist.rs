@@ -6,7 +6,6 @@
 
 use graphedge::bench::Table;
 use graphedge::graph::stats::{degree_distribution, degree_summary, tail_fraction};
-use graphedge::graph::Dataset;
 use graphedge::runtime::Runtime;
 
 fn main() -> graphedge::Result<()> {
@@ -16,8 +15,7 @@ fn main() -> graphedge::Result<()> {
         &["dataset", "|V|", "|E|", "min", "median", "mean", "max", "P(deg>4·mean)"],
     );
     for name in ["citeseer", "cora", "pubmed"] {
-        let spec = &rt.manifest.datasets[name];
-        let ds = Dataset::load(rt.artifacts_root().join(&spec.path), name)?;
+        let ds = rt.dataset(name)?;
         let s = degree_summary(&ds.graph);
         summary.row(vec![
             name.into(),

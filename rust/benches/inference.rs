@@ -1,0 +1,135 @@
+//! §Perf — serving-path inference latency through the runtime backend:
+//! one `GnnService::infer` call (padded subgraph → logits) per model,
+//! across real subgraph sizes, on the default backend (the native
+//! kernels unless `$GRAPHEDGE_ARTIFACTS` + `--features xla` routes
+//! through PJRT).
+//!
+//! This is the request-path cost the router's deadline accounting has
+//! to cover, so the table reports p99 next to the mean.  Merges an
+//! `"inference"` section into `BENCH_partition.json` (repo root when
+//! present), next to the partition and env benches' sections.
+
+use std::collections::BTreeMap;
+
+use graphedge::bench::{fmt_secs, time_reps, write_bench_section, Table};
+use graphedge::runtime::Runtime;
+use graphedge::serving::gnn::MODELS;
+use graphedge::serving::{GnnService, PaddedGraph};
+use graphedge::util::json::Value;
+use graphedge::util::rng::Rng;
+
+struct Run {
+    model: &'static str,
+    real_size: usize,
+    infer_s_mean: f64,
+    infer_s_p99: f64,
+    rows_per_s: f64,
+}
+
+fn main() {
+    // GRAPHEDGE_BENCH_SMOKE=1: tiny sizes, minimal reps — CI executes
+    // the bench (and its JSON section write) without real timing.
+    let smoke = std::env::var("GRAPHEDGE_BENCH_SMOKE").is_ok();
+    let full_suite = std::env::var("GRAPHEDGE_BENCH_FULL").is_ok();
+    let (sizes, warmup, reps): (&[usize], usize, usize) = if smoke {
+        (&[24], 1, 3)
+    } else if full_suite {
+        (&[32, 96, 160], 5, 100)
+    } else {
+        (&[32, 96, 160], 3, 30)
+    };
+
+    let rt = Runtime::open_default().expect("runtime");
+    let ds = rt.dataset("pubmed").expect("pubmed dataset");
+    let n_max = rt.manifest.constant("n_max").expect("n_max");
+    let c_pad = rt.manifest.constant("c_pad").expect("c_pad");
+    println!(
+        "inference latency: backend={}, pubmed, n_max={n_max}, c_pad={c_pad}, reps={reps}",
+        rt.backend_name()
+    );
+
+    let mut t = Table::new(
+        "GNN inference latency (one padded-subgraph forward)",
+        &["model", "real n", "mean", "p99", "rows/s"],
+    );
+    let mut runs: Vec<Run> = Vec::new();
+    for &model in MODELS {
+        let svc = GnnService::load(&rt, model, "pubmed")
+            .unwrap_or_else(|e| panic!("{model}_pubmed: {e:#}"));
+        for &n in sizes {
+            let mut rng = Rng::seed_from(0x1F0 + n as u64);
+            let scen = graphedge::graph::sample::sample_scenario(&ds, n, 3 * n, &mut rng);
+            let verts: Vec<usize> = (0..n).collect();
+            let p = PaddedGraph::build(
+                &scen.graph,
+                &scen.users,
+                &ds,
+                &verts,
+                svc.n_max,
+                svc.feat_pad,
+            );
+            let s = time_reps(warmup, reps, || {
+                std::hint::black_box(svc.infer(&p).expect("infer"));
+            });
+            let mean = s.mean();
+            let p99 = s.percentile(99.0);
+            // Throughput counts the whole padded matrix — that is what
+            // the kernels actually process per request.
+            let rows_per_s = svc.n_max as f64 / mean.max(1e-12);
+            t.row(vec![
+                model.into(),
+                format!("{n}"),
+                fmt_secs(mean),
+                fmt_secs(p99),
+                format!("{rows_per_s:.0}"),
+            ]);
+            runs.push(Run { model, real_size: n, infer_s_mean: mean, infer_s_p99: p99, rows_per_s });
+        }
+    }
+    t.emit("inference");
+
+    let obj = |pairs: Vec<(&str, Value)>| {
+        Value::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect::<BTreeMap<_, _>>(),
+        )
+    };
+    let section = obj(vec![
+        (
+            "_note",
+            Value::Str(
+                "Regenerate with `cargo bench --bench inference` (the bench \
+                 rewrites this section).  Numeric parity of the kernels \
+                 behind these timings is pinned by tests/kernel_parity.rs, \
+                 not re-proved here."
+                    .into(),
+            ),
+        ),
+        ("backend", Value::Str(rt.backend_name().into())),
+        ("n_max", Value::Num(n_max as f64)),
+        ("c_pad", Value::Num(c_pad as f64)),
+        ("reps", Value::Num(reps as f64)),
+        (
+            "runs",
+            Value::Arr(
+                runs.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("model", Value::Str(r.model.into())),
+                            ("real_size", Value::Num(r.real_size as f64)),
+                            ("infer_s_mean", Value::Num(r.infer_s_mean)),
+                            ("infer_s_p99", Value::Num(r.infer_s_p99)),
+                            ("rows_per_s", Value::Num(r.rows_per_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match write_bench_section("BENCH_partition.json", "inference", section) {
+        Ok(path) => println!("[wrote {path}]"),
+        Err(e) => eprintln!("could not write BENCH_partition.json: {e}"),
+    }
+}

@@ -16,7 +16,8 @@
 //!    distributed GNN inference (serving layer), accounting all costs
 //!    (Eqs. 12–13).
 //!
-//! [`Controller`] owns the PJRT runtime and loaded datasets;
+//! [`Controller`] owns the inference runtime (native kernels by
+//! default, PJRT under `--features xla`) and loaded datasets;
 //! [`Controller::run_scenario`] executes one full round and returns a
 //! [`ScenarioReport`] — the unit every bench and example builds on.
 
@@ -89,10 +90,8 @@ impl Controller {
     pub fn new(params: SystemParams) -> crate::Result<Self> {
         let rt = Runtime::open_default()?;
         let mut datasets = BTreeMap::new();
-        for (name, spec) in rt.manifest.datasets.clone() {
-            let path = rt.artifacts_root().join(&spec.path);
-            let ds = Dataset::load(&path, &name)
-                .with_context(|| format!("loading dataset {name}"))?;
+        for name in rt.manifest.datasets.keys().cloned().collect::<Vec<_>>() {
+            let ds = rt.dataset(&name).with_context(|| format!("loading dataset {name}"))?;
             datasets.insert(name, ds);
         }
         Ok(Controller { rt, params, datasets })

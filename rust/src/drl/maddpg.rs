@@ -1,9 +1,12 @@
 //! DRLGO — the MADDPG-based graph offloading trainer (Algorithm 2).
 //!
 //! The trainer owns host-side copies of every agent's parameters and
-//! Adam state; the actual math is two AOT executables:
+//! Adam state; the actual math is two runtime artifacts (native
+//! kernels by default, PJRT under `--features xla`):
 //!
-//! * `actor_fwd`  — π_m(O_m) for all M agents in one call (rollout),
+//! * `actor_fwd`  — π_m(O_m) for all M agents in one call (rollout);
+//!   on a dynamic-batch backend one call covers *all E slots* of a
+//!   [`VecEnv`] round,
 //! * `maddpg_train` — one full update (critic + actor + soft targets)
 //!   for all M agents on a replay mini-batch.
 //!
@@ -25,8 +28,8 @@ use std::sync::Arc;
 
 use anyhow::Context;
 
-use crate::runtime::{lit, Executable, Runtime};
-use crate::tensor::{Archive, Tensor};
+use crate::runtime::{mat, mat_scalar, Executable, Runtime};
+use crate::tensor::{Archive, Matrix, Tensor};
 use crate::util::rng::Rng;
 use crate::util::trace;
 
@@ -132,8 +135,8 @@ pub struct MaddpgTrainer<'rt> {
     m_c: Vec<f32>,
     v_c: Vec<f32>,
     step: f32,
-    /// Cached actor literal (rebuilt after each train step).
-    actor_lit: Option<xla::Literal>,
+    /// Cached actor parameter matrix (rebuilt after each train step).
+    actor_mat: Option<Matrix>,
     replay: Replay,
     pub losses: (f64, f64),
 }
@@ -174,17 +177,17 @@ impl<'rt> MaddpgTrainer<'rt> {
             m_c: take("m_c", m * pc)?,
             v_c: take("v_c", m * pc)?,
             step: init.get("step")?.f32_data[0],
-            actor_lit: None,
+            actor_mat: None,
             replay: Replay::new(replay_cap),
             losses: (0.0, 0.0),
         })
     }
 
-    fn actor_literal(&mut self) -> crate::Result<&xla::Literal> {
-        if self.actor_lit.is_none() {
-            self.actor_lit = Some(lit(&[self.m, self.pa], &self.actor)?);
+    fn actor_matrix(&mut self) -> crate::Result<&Matrix> {
+        if self.actor_mat.is_none() {
+            self.actor_mat = Some(mat(&[self.m, self.pa], self.actor.clone())?);
         }
-        Ok(self.actor_lit.as_ref().unwrap())
+        Ok(self.actor_mat.as_ref().unwrap())
     }
 
     /// π(O) for all agents; optional exploration noise.
@@ -196,11 +199,11 @@ impl<'rt> MaddpgTrainer<'rt> {
     ) -> crate::Result<Vec<[f32; 2]>> {
         anyhow::ensure!(obs_flat.len() == self.m * OBS);
         let m = self.m;
-        let obs_lit = lit(&[m, OBS], obs_flat)?;
+        let obs_mat = mat(&[m, OBS], obs_flat.to_vec())?;
         let exe = self.actor_fwd.clone();
-        let actor_lit = self.actor_literal()?;
-        let out = exe.run_borrowed(&[actor_lit, &obs_lit])?;
-        let acts = out[0].to_vec::<f32>()?;
+        let actor = self.actor_matrix()?;
+        let out = exe.run(&[actor, &obs_mat])?;
+        let acts = &out[0].data;
         let mut result = Vec::with_capacity(m);
         for i in 0..m {
             let mut a = [acts[2 * i], acts[2 * i + 1]];
@@ -216,8 +219,12 @@ impl<'rt> MaddpgTrainer<'rt> {
 
     /// π(O) for all agents of all E slots in one round: `states` is
     /// the `E × M × OBS` batch matrix a [`VecEnv`] assembles (each
-    /// slot's state *is* its concatenated observations, Eq. 19).  One
-    /// actor forward per slot against the cached parameter literal.
+    /// slot's state *is* its concatenated observations, Eq. 19).  On
+    /// a dynamic-batch backend (native) the whole round is **one**
+    /// `actor_fwd` call over an `[E·M, OBS]` matrix — row r runs
+    /// agent `r mod M`, exactly the slot-major layout `states` is
+    /// already in; fixed-shape backends fall back to one forward per
+    /// slot.
     pub fn select_actions_batch(
         &mut self,
         states: &[f32],
@@ -231,11 +238,36 @@ impl<'rt> MaddpgTrainer<'rt> {
             "batch states {} != {envs} slots x {per}",
             states.len()
         );
-        let mut out = Vec::with_capacity(envs);
-        for i in 0..envs {
-            out.push(self.select_actions(&states[i * per..(i + 1) * per], sigma, rng)?);
+        if !self.actor_fwd.dynamic_batch() {
+            let mut out = Vec::with_capacity(envs);
+            for i in 0..envs {
+                out.push(self.select_actions(&states[i * per..(i + 1) * per], sigma, rng)?);
+            }
+            return Ok(out);
         }
-        Ok(out)
+        let m = self.m;
+        let obs_mat = mat(&[envs * m, OBS], states.to_vec())?;
+        let exe = self.actor_fwd.clone();
+        let actor = self.actor_matrix()?;
+        let out = exe.run(&[actor, &obs_mat])?;
+        let acts = &out[0].data;
+        anyhow::ensure!(acts.len() == envs * m * 2, "actor_fwd batch output {}", acts.len());
+        let mut result = Vec::with_capacity(envs);
+        for i in 0..envs {
+            let mut slot = Vec::with_capacity(m);
+            for j in 0..m {
+                let base = 2 * (i * m + j);
+                let mut a = [acts[base], acts[base + 1]];
+                if sigma > 0.0 {
+                    for v in &mut a {
+                        *v = (*v + rng.normal_ms(0.0, sigma) as f32).clamp(0.0, 1.0);
+                    }
+                }
+                slot.push(a);
+            }
+            result.push(slot);
+        }
+        Ok(result)
     }
 
     /// One MADDPG update on a replay mini-batch (Algorithm 2 l.15–20).
@@ -243,37 +275,41 @@ impl<'rt> MaddpgTrainer<'rt> {
         let b = self.replay.sample(self.batch, rng);
         let m = self.m;
         let inputs = vec![
-            lit(&[m, self.pa], &self.actor)?,
-            lit(&[m, self.pc], &self.critic)?,
-            lit(&[m, self.pa], &self.t_actor)?,
-            lit(&[m, self.pc], &self.t_critic)?,
-            lit(&[m, self.pa], &self.m_a)?,
-            lit(&[m, self.pa], &self.v_a)?,
-            lit(&[m, self.pc], &self.m_c)?,
-            lit(&[m, self.pc], &self.v_c)?,
-            lit(&[], &[self.step])?,
-            lit(&[self.batch, self.state_dim], &b.s)?,
-            lit(&[self.batch, m, 2], &b.a)?,
-            lit(&[self.batch, m], &b.r)?,
-            lit(&[self.batch, self.state_dim], &b.s2)?,
-            lit(&[self.batch, m], &b.done)?,
-            lit(&[self.batch, m, OBS], &b.obs)?,
-            lit(&[self.batch, m, OBS], &b.obs2)?,
+            mat(&[m, self.pa], self.actor.clone())?,
+            mat(&[m, self.pc], self.critic.clone())?,
+            mat(&[m, self.pa], self.t_actor.clone())?,
+            mat(&[m, self.pc], self.t_critic.clone())?,
+            mat(&[m, self.pa], self.m_a.clone())?,
+            mat(&[m, self.pa], self.v_a.clone())?,
+            mat(&[m, self.pc], self.m_c.clone())?,
+            mat(&[m, self.pc], self.v_c.clone())?,
+            mat_scalar(self.step),
+            mat(&[self.batch, self.state_dim], b.s)?,
+            mat(&[self.batch, m, 2], b.a)?,
+            mat(&[self.batch, m], b.r)?,
+            mat(&[self.batch, self.state_dim], b.s2)?,
+            mat(&[self.batch, m], b.done)?,
+            mat(&[self.batch, m, OBS], b.obs)?,
+            mat(&[self.batch, m, OBS], b.obs2)?,
         ];
+        let refs: Vec<&Matrix> = inputs.iter().collect();
         let exe = self.train_exe.clone();
-        let out = exe.run(&inputs)?;
-        self.actor = out[0].to_vec::<f32>()?;
-        self.critic = out[1].to_vec::<f32>()?;
-        self.t_actor = out[2].to_vec::<f32>()?;
-        self.t_critic = out[3].to_vec::<f32>()?;
-        self.m_a = out[4].to_vec::<f32>()?;
-        self.v_a = out[5].to_vec::<f32>()?;
-        self.m_c = out[6].to_vec::<f32>()?;
-        self.v_c = out[7].to_vec::<f32>()?;
-        self.step = out[8].get_first_element::<f32>()?;
-        self.actor_lit = None; // parameters changed
-        let closs = out[9].to_vec::<f32>()?;
-        let aloss = out[10].to_vec::<f32>()?;
+        let out = exe.run(&refs)?;
+        anyhow::ensure!(out.len() == 11, "maddpg_train returned {} outputs", out.len());
+        let mut out = out.into_iter().map(|o| o.data);
+        let mut next = || out.next().context("maddpg_train output missing");
+        self.actor = next()?;
+        self.critic = next()?;
+        self.t_actor = next()?;
+        self.t_critic = next()?;
+        self.m_a = next()?;
+        self.v_a = next()?;
+        self.m_c = next()?;
+        self.v_c = next()?;
+        self.step = next()?[0];
+        self.actor_mat = None; // parameters changed
+        let closs = next()?;
+        let aloss = next()?;
         let c = closs.iter().map(|&x| x as f64).sum::<f64>() / m as f64;
         let a = aloss.iter().map(|&x| x as f64).sum::<f64>() / m as f64;
         self.losses = (c, a);
@@ -477,7 +513,7 @@ impl<'rt> MaddpgTrainer<'rt> {
         self.m_c = a.get_shaped("m_c", &[self.m, self.pc])?.f32_data.clone();
         self.v_c = a.get_shaped("v_c", &[self.m, self.pc])?.f32_data.clone();
         self.step = a.get("step")?.f32_data[0];
-        self.actor_lit = None;
+        self.actor_mat = None;
         Ok(())
     }
 

@@ -5,9 +5,12 @@
 //! objective.  No HiCut layout optimization, no R_sp shaping — exactly
 //! the paper's comparison configuration (same network sizes as DRLGO).
 //!
-//! The math lives in two AOT executables: `ppo_fwd` (logits + value)
+//! The math lives in two runtime artifacts (native kernels by
+//! default, PJRT under `--features xla`): `ppo_fwd` (logits + value)
 //! and `ppo_train` (one clipped-surrogate epoch on a fixed horizon of
-//! 256 steps).  GAE(γ = 0.99, λ = 0.95) is computed host-side.
+//! 256 steps).  GAE(γ = 0.99, λ = 0.95) is computed host-side.  On a
+//! dynamic-batch backend one `ppo_fwd` call covers all E slots of a
+//! [`VecEnv`] selection round.
 //!
 //! Training consumes **vectorized rollouts** ([`PpoTrainer::train`] /
 //! [`PpoTrainer::train_vec`]): E episode slots of a [`VecEnv`] step
@@ -18,7 +21,10 @@
 
 use std::sync::Arc;
 
-use crate::runtime::{lit, Executable, Runtime};
+use anyhow::Context;
+
+use crate::runtime::{mat, mat_scalar, Executable, Runtime};
+use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 
 use super::env::Env;
@@ -123,19 +129,8 @@ impl<'rt> PpoTrainer<'rt> {
         })
     }
 
-    /// Sample an action from the categorical policy; returns
-    /// (action, log-prob, value).
-    pub fn select(
-        &self,
-        state: &[f32],
-        rng: &mut Rng,
-        greedy: bool,
-    ) -> crate::Result<(usize, f32, f32)> {
-        let p = lit(&[self.params.len()], &self.params)?;
-        let s = lit(&[1, self.state_dim], state)?;
-        let out = self.fwd.run_borrowed(&[&p, &s])?;
-        let logits = out[0].to_vec::<f32>()?;
-        let value = out[1].to_vec::<f32>()?[0];
+    /// Softmax-sample (or argmax) one action from a logits row.
+    fn pick(&self, logits: &[f32], value: f32, rng: &mut Rng, greedy: bool) -> (usize, f32, f32) {
         // Softmax (stable).
         let mx = logits.iter().cloned().fold(f32::MIN, f32::max);
         let exps: Vec<f32> = logits.iter().map(|&l| (l - mx).exp()).collect();
@@ -162,11 +157,30 @@ impl<'rt> PpoTrainer<'rt> {
             }
             a
         };
-        Ok((action, probs[action].max(1e-12).ln(), value))
+        (action, probs[action].max(1e-12).ln(), value)
+    }
+
+    /// Sample an action from the categorical policy; returns
+    /// (action, log-prob, value).
+    pub fn select(
+        &self,
+        state: &[f32],
+        rng: &mut Rng,
+        greedy: bool,
+    ) -> crate::Result<(usize, f32, f32)> {
+        let p = mat(&[self.params.len()], self.params.clone())?;
+        let s = mat(&[1, self.state_dim], state.to_vec())?;
+        let out = self.fwd.run(&[&p, &s])?;
+        let logits = &out[0].data;
+        let value = out[1].data[0];
+        Ok(self.pick(logits, value, rng, greedy))
     }
 
     /// Sample actions for all E slots of a batch state matrix in one
-    /// round; returns per-slot `(action, log-prob, value)`.
+    /// round; returns per-slot `(action, log-prob, value)`.  On a
+    /// dynamic-batch backend (native) this is a single `ppo_fwd` call
+    /// over the `[E, STATE]` matrix; fixed-shape backends fall back
+    /// to one forward per slot.
     pub fn select_batch(
         &self,
         states: &[f32],
@@ -180,12 +194,31 @@ impl<'rt> PpoTrainer<'rt> {
             states.len(),
             self.state_dim
         );
-        let mut out = Vec::with_capacity(envs);
-        for i in 0..envs {
-            let s = &states[i * self.state_dim..(i + 1) * self.state_dim];
-            out.push(self.select(s, rng, greedy)?);
+        if !self.fwd.dynamic_batch() {
+            let mut out = Vec::with_capacity(envs);
+            for i in 0..envs {
+                let s = &states[i * self.state_dim..(i + 1) * self.state_dim];
+                out.push(self.select(s, rng, greedy)?);
+            }
+            return Ok(out);
         }
-        Ok(out)
+        let p = mat(&[self.params.len()], self.params.clone())?;
+        let s = mat(&[envs, self.state_dim], states.to_vec())?;
+        let out = self.fwd.run(&[&p, &s])?;
+        let (logits, values) = (&out[0], &out[1]);
+        anyhow::ensure!(
+            logits.rows == envs && values.data.len() == envs,
+            "ppo_fwd batch output {}x{} / {}",
+            logits.rows,
+            logits.cols,
+            values.data.len()
+        );
+        Ok((0..envs)
+            .map(|i| {
+                let row = &logits.data[i * logits.cols..(i + 1) * logits.cols];
+                self.pick(row, values.data[i], rng, greedy)
+            })
+            .collect())
     }
 
     /// Run one PPO update over a filled horizon buffer (consumed).
@@ -236,23 +269,27 @@ impl<'rt> PpoTrainer<'rt> {
         let (mut pl, mut vl) = (0.0, 0.0);
         for _ in 0..epochs {
             let inputs = vec![
-                lit(&[self.params.len()], &self.params)?,
-                lit(&[self.params.len()], &self.m_p)?,
-                lit(&[self.params.len()], &self.v_p)?,
-                lit(&[], &[self.step])?,
-                lit(&[t, self.state_dim], &roll.states)?,
-                lit(&[t, self.actions], &onehot)?,
-                lit(&[t], &roll.logps)?,
-                lit(&[t], &adv)?,
-                lit(&[t], &ret)?,
+                mat(&[self.params.len()], self.params.clone())?,
+                mat(&[self.params.len()], self.m_p.clone())?,
+                mat(&[self.params.len()], self.v_p.clone())?,
+                mat_scalar(self.step),
+                mat(&[t, self.state_dim], roll.states.clone())?,
+                mat(&[t, self.actions], onehot.clone())?,
+                mat(&[t], roll.logps.clone())?,
+                mat(&[t], adv.clone())?,
+                mat(&[t], ret.clone())?,
             ];
-            let out = self.train_exe.run(&inputs)?;
-            self.params = out[0].to_vec::<f32>()?;
-            self.m_p = out[1].to_vec::<f32>()?;
-            self.v_p = out[2].to_vec::<f32>()?;
-            self.step = out[3].get_first_element::<f32>()?;
-            pl = out[4].get_first_element::<f32>()? as f64;
-            vl = out[5].get_first_element::<f32>()? as f64;
+            let refs: Vec<&Matrix> = inputs.iter().collect();
+            let out = self.train_exe.run(&refs)?;
+            anyhow::ensure!(out.len() == 7, "ppo_train returned {} outputs", out.len());
+            let mut out = out.into_iter().map(|o| o.data);
+            let mut next = || out.next().context("ppo_train output missing");
+            self.params = next()?;
+            self.m_p = next()?;
+            self.v_p = next()?;
+            self.step = next()?[0];
+            pl = next()?[0] as f64;
+            vl = next()?[0] as f64;
         }
         roll.clear();
         Ok((pl, vl))

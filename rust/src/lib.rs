@@ -45,9 +45,17 @@
 //! * **Layer 1 (Pallas, build time)** — the dense aggregation kernels
 //!   behind every GNN layer.
 //!
-//! Python never runs on the request path: `make artifacts` lowers the
-//! compute once, and this crate loads + executes the artifacts through
-//! the PJRT C API ([`runtime`]).
+//! Python never runs on the request path.  Inference and the DRL
+//! train steps execute through a pluggable [`runtime::Backend`]: the
+//! **default is the pure-Rust native backend**
+//! ([`runtime::native`] — CSR SpMM + dense kernels ported from the
+//! `ref.py` oracles, row-parallel over [`util::threadpool`]), which
+//! needs no artifacts directory at all; with `--features xla` an
+//! on-disk `make artifacts` tree is compiled and executed through the
+//! PJRT C API instead.  Both backends are pinned to the same Python
+//! oracles — see `rust/ARCHITECTURE.md` for the end-to-end dataflow
+//! (scenario → HiCut/incremental repair → router → backend inference)
+//! and which layer bumps which [`util::version`] stamp.
 //!
 //! Start with [`coordinator::Controller`] for the end-to-end loop, or
 //! the `examples/` directory.

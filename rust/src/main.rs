@@ -135,6 +135,7 @@ fn cmd_info(matches: &graphedge::util::cli::Matches) -> graphedge::Result<()> {
     let params = load_params(matches);
     let ctrl = Controller::new(params.clone())?;
     println!("GraphEdge — manifest + parameters\n");
+    println!("backend: {}\n", ctrl.rt.backend_name());
     println!("datasets:");
     for (name, ds) in &ctrl.rt.manifest.datasets {
         println!(

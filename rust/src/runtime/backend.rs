@@ -1,0 +1,54 @@
+//! The [`Backend`] trait: how the runtime executes a named artifact.
+//!
+//! A backend is a pure function from `(artifact name, manifest spec,
+//! input matrices)` to output matrices.  Everything stateful —
+//! manifest lookup, input-shape validation, execution tracing and
+//! latency histograms — lives in [`crate::runtime::Executable`], so a
+//! backend only implements the math.  Two implementations exist:
+//!
+//! * [`crate::runtime::native::NativeBackend`] (default) — pure-Rust
+//!   CSR/dense kernels, row-parallel over the [`crate::util::threadpool`].
+//! * `PjrtBackend` (cargo feature `xla`) — compiles the AOT-lowered
+//!   HLO artifacts through the PJRT C API.
+//!
+//! Both consume the same artifact contract (see
+//! [`crate::runtime::manifest`]) and are pinned to the same oracle,
+//! `python/compile/kernels/ref.py` — the native backend via the
+//! committed golden vectors in `tests/kernel_parity.rs` (tolerance
+//! `1e-4` absolute), the PJRT path via the JAX tests in
+//! `python/compile/tests/`.
+
+use crate::runtime::manifest::ExeSpec;
+use crate::tensor::Matrix;
+
+/// Executes named artifacts against dense matrix inputs.
+///
+/// # Contract
+///
+/// * `execute` receives inputs in the exact order of
+///   `spec.inputs`; each matrix's `data` holds the row-major
+///   flattening of the tensor named there (see
+///   [`crate::runtime::mat`] for the shape → matrix convention).
+/// * Outputs are returned in the order of `spec.outputs`.
+/// * A backend must be deterministic: same inputs, same outputs, for
+///   any worker count (the xtask lint layer and
+///   `tests/kernel_parity.rs` hold the native backend to this
+///   bit-exactly).
+/// * Implementations must be `Send + Sync`; one backend instance is
+///   shared by every executable the runtime hands out.
+pub trait Backend: Send + Sync {
+    /// Short stable name for logs/metrics ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Run artifact `name` (whose manifest entry is `spec`) on
+    /// `inputs`, returning one matrix per `spec.outputs` entry.
+    fn execute(&self, name: &str, spec: &ExeSpec, inputs: &[&Matrix]) -> crate::Result<Vec<Matrix>>;
+
+    /// Whether leading-dimension (batch) sizes may differ from the
+    /// manifest shapes.  The native kernels derive batch sizes from
+    /// the inputs, so they accept any row count whose trailing
+    /// dimensions match; AOT-compiled PJRT artifacts are fixed-shape.
+    fn supports_dynamic_batch(&self) -> bool {
+        false
+    }
+}

@@ -1,51 +1,81 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Artifact runtime: bind the AOT manifest and execute artifacts
+//! through a pluggable [`Backend`].
 //!
-//! This is the only place the `xla` crate is touched.  The flow per
-//! executable (see /opt/xla-example/load_hlo for the reference):
+//! # Backend contract
 //!
-//! ```text
-//! HLO text --HloModuleProto::from_text_file--> proto
-//!          --XlaComputation::from_proto------> computation
-//!          --PjRtClient::compile-------------> PjRtLoadedExecutable
-//! ```
+//! A [`Backend`] maps `(artifact name, manifest [`ExeSpec`], input
+//! matrices)` to output matrices — nothing else.  [`Runtime`] owns
+//! manifest lookup and artifact caching; [`Executable::run`] owns
+//! input validation, `runtime.exec` tracing, and the per-artifact
+//! latency histogram, so every backend gets identical observability.
+//! Two backends exist:
 //!
-//! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids.
+//! * [`native::NativeBackend`] — the **default**: pure-Rust CSR/dense
+//!   kernels ported from the NumPy oracles in
+//!   `python/compile/kernels/ref.py` and the flat-vector DRL math in
+//!   `python/compile/drl.py`, row-parallel over the crate thread pool.
+//!   Runs with zero toolchain: if no `artifacts/` tree exists,
+//!   [`Runtime::open_default`] synthesizes one in memory
+//!   ([`native::Store`]) with the same manifest vocabulary `aot.py`
+//!   writes.
+//! * `PjrtBackend` (cargo feature `xla`) — compiles the lowered HLO
+//!   text through the PJRT C API; the accelerator path when a real
+//!   `xla` crate is linked.
 //!
-//! [`Runtime`] owns one CPU PJRT client, the parsed `manifest.json`,
-//! and a lazy cache of compiled executables keyed by artifact name.
-//! All executables are lowered with `return_tuple=True`, so results
-//! come back as one tuple literal that [`Executable::run`] decomposes.
+//! # Artifact/manifest binding
+//!
+//! `manifest.json` names every executable's inputs (positionally,
+//! with shapes), its outputs, and — for GNN models — which leading
+//! inputs are graph tensors vs which trailing inputs come from the
+//! weights archive.  [`Executable::run`] enforces arity and per-input
+//! element counts against those shapes; backends reporting
+//! [`Backend::supports_dynamic_batch`] (the native one) additionally
+//! accept any leading/batch dimension whose trailing dimensions
+//! match, which is what batches `actor_fwd` over the whole VecEnv.
+//!
+//! # Numeric parity
+//!
+//! Native kernels are pinned to `ref.py` by `tests/kernel_parity.rs`
+//! against committed golden vectors at **1e-4 absolute tolerance**
+//! (f32 kernels vs the oracle's f64), and are bit-identical across
+//! worker counts.  The PJRT path is pinned to the same oracles by the
+//! JAX-side tests under `python/compile/tests/`.
 
+pub mod backend;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 
+pub use backend::Backend;
 pub use manifest::{ExeSpec, Manifest, TensorSpec};
+pub use native::NativeBackend;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context};
 
-use crate::tensor::Matrix;
+use crate::graph::geb::Dataset;
+use crate::tensor::{Archive, Matrix};
 use crate::util::metrics::{Histogram, GLOBAL as METRICS};
 use crate::util::trace;
 
-/// A compiled artifact plus its manifest binding.
+/// A loaded artifact: manifest binding + the backend that executes it.
 pub struct Executable {
     pub name: String,
     pub spec: ExeSpec,
-    exe: xla::PjRtLoadedExecutable,
+    backend: Arc<dyn Backend>,
     /// `runtime.exec.<name>` latency handle, interned once at load so
     /// the execute paths never allocate a metric key.
     exec_hist: Histogram,
 }
 
 impl Executable {
-    /// Execute with positional literal inputs; returns the decomposed
-    /// output tuple.
-    pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+    /// Execute with positional matrix inputs; returns one matrix per
+    /// manifest output.
+    pub fn run(&self, inputs: &[&Matrix]) -> crate::Result<Vec<Matrix>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "{}: expected {} inputs, got {}",
@@ -54,73 +84,118 @@ impl Executable {
                 inputs.len()
             );
         }
+        let dynamic = self.backend.supports_dynamic_batch();
+        for (m, ts) in inputs.iter().zip(&self.spec.inputs) {
+            let numel: usize = ts.shape.iter().product::<usize>().max(1);
+            if m.data.len() == numel {
+                continue;
+            }
+            let trailing: usize =
+                ts.shape.get(1..).map(|s| s.iter().product()).unwrap_or(1).max(1);
+            if dynamic && !ts.shape.is_empty() && m.data.len() % trailing == 0 {
+                continue; // free batch dimension
+            }
+            bail!(
+                "{}: input {:?} has {} elements, manifest shape {:?} needs {numel}",
+                self.name,
+                ts.name,
+                m.data.len(),
+                ts.shape
+            );
+        }
         let _span = trace::span("runtime.exec");
-        // lint:allow(wall-clock) — real XLA execution latency feeds
+        // lint:allow(wall-clock) — real backend execution latency feeds
         // the exec histogram; nothing deterministic reads it.
         let t0 = std::time::Instant::now();
-        let result = self.exe.execute::<xla::Literal>(inputs)?;
-        let tuple = result[0][0].to_literal_sync()?;
+        let outs = self.backend.execute(&self.name, &self.spec, inputs)?;
         self.exec_hist.observe(t0.elapsed().as_secs_f64());
-        Ok(tuple.to_tuple()?)
+        Ok(outs)
     }
 
-    /// Like [`Self::run`] but with borrowed inputs — lets callers keep
-    /// long-lived literals (e.g. model weights) without re-uploading.
-    pub fn run_borrowed(&self, inputs: &[&xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        let _span = trace::span("runtime.exec");
-        // lint:allow(wall-clock) — same exec-histogram timing as the
-        // owned-literal path above.
-        let t0 = std::time::Instant::now();
-        let result = self.exe.execute::<&xla::Literal>(inputs)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        self.exec_hist.observe(t0.elapsed().as_secs_f64());
-        Ok(tuple.to_tuple()?)
+    /// Whether this executable accepts a free leading/batch dimension
+    /// (see [`Backend::supports_dynamic_batch`]).
+    pub fn dynamic_batch(&self) -> bool {
+        self.backend.supports_dynamic_batch()
     }
 }
 
-/// The process-wide artifact runtime.
+/// The process-wide artifact runtime: one backend, one manifest, a
+/// lazy per-artifact cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Arc<dyn Backend>,
     pub manifest: Manifest,
     root: PathBuf,
-    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    /// In-memory artifact set when running without a disk tree.
+    store: Option<native::Store>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
 }
 
 impl Runtime {
-    /// Open the artifacts directory (must contain `manifest.json`).
+    /// Fully self-contained native runtime: synthesized manifest,
+    /// weights, DRL init state and datasets from [`native::Store`] —
+    /// no filesystem, no Python toolchain.
+    pub fn native() -> Self {
+        let store = native::Store::build();
+        let manifest = store.manifest.clone();
+        log::info!(
+            "runtime: native backend with synthesized store ({} executables)",
+            manifest.executables.len()
+        );
+        Runtime {
+            backend: Arc::new(NativeBackend::auto()),
+            manifest,
+            root: PathBuf::from("<native-store>"),
+            store: Some(store),
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Open an on-disk artifacts directory (must contain
+    /// `manifest.json`).  Executes through PJRT when the `xla`
+    /// feature is enabled, through the native kernels otherwise (the
+    /// native backend reads the same weights archives and datasets —
+    /// only the HLO files go unused).
     pub fn open(artifacts_dir: impl AsRef<Path>) -> crate::Result<Self> {
         let root = artifacts_dir.as_ref().to_path_buf();
         let mpath = root.join("manifest.json");
         let text = std::fs::read_to_string(&mpath)
             .with_context(|| format!("reading {} (run `make artifacts`)", mpath.display()))?;
         let manifest = Manifest::parse(&text)?;
-        let client = xla::PjRtClient::cpu()?;
+        let backend = disk_backend(&root)?;
         log::info!(
-            "runtime: PJRT {} with {} device(s), {} executables in manifest",
-            client.platform_name(),
-            client.device_count(),
+            "runtime: {} backend over {} ({} executables in manifest)",
+            backend.name(),
+            root.display(),
             manifest.executables.len()
         );
-        Ok(Runtime { client, manifest, root, cache: Mutex::new(HashMap::new()) })
+        Ok(Runtime { backend, manifest, root, store: None, cache: Mutex::new(HashMap::new()) })
     }
 
-    /// Default artifacts location: `$GRAPHEDGE_ARTIFACTS` or `artifacts/`.
+    /// Default runtime resolution, in order:
+    /// 1. `GRAPHEDGE_BACKEND=native` forces the synthesized store;
+    /// 2. `$GRAPHEDGE_ARTIFACTS` names a disk tree (must exist);
+    /// 3. `artifacts/manifest.json` if present;
+    /// 4. otherwise the self-contained [`Runtime::native`].
     pub fn open_default() -> crate::Result<Self> {
-        let dir = std::env::var("GRAPHEDGE_ARTIFACTS")
-            .unwrap_or_else(|_| "artifacts".to_string());
-        Self::open(dir)
+        if std::env::var("GRAPHEDGE_BACKEND").as_deref() == Ok("native") {
+            return Ok(Self::native());
+        }
+        if let Ok(dir) = std::env::var("GRAPHEDGE_ARTIFACTS") {
+            return Self::open(dir);
+        }
+        if Path::new("artifacts/manifest.json").exists() {
+            return Self::open("artifacts");
+        }
+        Ok(Self::native())
     }
 
-    /// Fetch (compiling + caching on first use) an executable by name.
-    pub fn load(&self, name: &str) -> crate::Result<std::sync::Arc<Executable>> {
+    /// Name of the executing backend ("native", "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Fetch (caching on first use) an executable by name.
+    pub fn load(&self, name: &str) -> crate::Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
@@ -130,29 +205,45 @@ impl Runtime {
             .get(name)
             .with_context(|| format!("executable {name:?} not in manifest"))?
             .clone();
-        let path = self.root.join(&spec.path);
-        // lint:allow(wall-clock) — one-off compile timing for the log
-        // line and the `runtime.compile` sample; cold path.
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        log::info!("runtime: compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
-        METRICS.observe("runtime.compile", t0.elapsed().as_secs_f64());
         let exec_hist = METRICS.histogram_handle(&format!("runtime.exec.{name}"));
-        let executable =
-            std::sync::Arc::new(Executable { name: name.to_string(), spec, exe, exec_hist });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), executable.clone());
+        let executable = Arc::new(Executable {
+            name: name.to_string(),
+            spec,
+            backend: self.backend.clone(),
+            exec_hist,
+        });
+        self.cache.lock().unwrap().insert(name.to_string(), executable.clone());
         Ok(executable)
     }
 
-    /// Load a `.gta` archive relative to the artifacts root.
-    pub fn load_archive(&self, rel: &str) -> crate::Result<crate::tensor::Archive> {
-        Ok(crate::tensor::Archive::load(self.root.join(rel))?)
+    /// Load a `.gta` archive by manifest-relative path — from the
+    /// synthesized store, or from disk under the artifacts root.
+    pub fn load_archive(&self, rel: &str) -> crate::Result<Archive> {
+        if let Some(store) = &self.store {
+            return store
+                .archive(rel)
+                .cloned()
+                .with_context(|| format!("archive {rel:?} not in native store"));
+        }
+        Ok(Archive::load(self.root.join(rel))?)
+    }
+
+    /// Load a dataset by manifest name (`citeseer` / `cora` /
+    /// `pubmed`) — from the synthesized store, or from its `.geb`
+    /// file under the artifacts root.
+    pub fn dataset(&self, name: &str) -> crate::Result<Dataset> {
+        if let Some(store) = &self.store {
+            return store
+                .dataset(name)
+                .cloned()
+                .with_context(|| format!("dataset {name:?} not in native store"));
+        }
+        let spec = self
+            .manifest
+            .datasets
+            .get(name)
+            .with_context(|| format!("dataset {name:?} not in manifest"))?;
+        Ok(Dataset::load(self.root.join(&spec.path), name)?)
     }
 
     pub fn artifacts_root(&self) -> &Path {
@@ -160,44 +251,98 @@ impl Runtime {
     }
 }
 
-// ---------------------------------------------------------------------------
-// Literal construction helpers
-// ---------------------------------------------------------------------------
+/// Backend for an on-disk artifact tree, by compiled feature set.
+#[cfg(feature = "xla")]
+fn disk_backend(root: &Path) -> crate::Result<Arc<dyn Backend>> {
+    Ok(Arc::new(pjrt::PjrtBackend::new(root.to_path_buf())?))
+}
 
-/// f32 literal of arbitrary shape from a flat slice.
-pub fn lit(shape: &[usize], data: &[f32]) -> crate::Result<xla::Literal> {
+#[cfg(not(feature = "xla"))]
+fn disk_backend(_root: &Path) -> crate::Result<Arc<dyn Backend>> {
+    Ok(Arc::new(NativeBackend::auto()))
+}
+
+/// Build a [`Matrix`] carrying the row-major flattening of an
+/// n-dimensional tensor: shape `[]` → 1×1, `[n]` → n×1, and
+/// `[d0, d1, ...]` → `d0 × (d1·d2·…)`.  This is the shape convention
+/// every [`Backend`] input/output uses.
+///
+/// ```
+/// use graphedge::runtime::mat;
+/// let m = mat(&[2, 3, 2], (0..12).map(|v| v as f32).collect()).unwrap();
+/// assert_eq!((m.rows, m.cols), (2, 6));
+/// assert!(mat(&[2, 2], vec![0.0; 3]).is_err());
+/// ```
+pub fn mat(shape: &[usize], data: Vec<f32>) -> crate::Result<Matrix> {
     let numel: usize = shape.iter().product::<usize>().max(1);
     if data.len() != numel {
-        bail!("literal shape {shape:?} needs {numel} values, got {}", data.len());
+        bail!("shape {shape:?} needs {numel} values, got {}", data.len());
     }
-    if shape.is_empty() {
-        return Ok(xla::Literal::scalar(data[0]));
+    let (rows, cols) = match shape.len() {
+        0 => (1, 1),
+        1 => (shape[0], 1),
+        _ => (shape[0], shape[1..].iter().product()),
+    };
+    Ok(Matrix { rows, cols, data })
+}
+
+/// Scalar (`[]`-shaped) backend input.
+pub fn mat_scalar(v: f32) -> Matrix {
+    Matrix { rows: 1, cols: 1, data: vec![v] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_flattening_convention() {
+        assert_eq!(mat(&[], vec![7.0]).unwrap().rows, 1);
+        let v = mat(&[5], vec![0.0; 5]).unwrap();
+        assert_eq!((v.rows, v.cols), (5, 1));
+        let t = mat(&[4, 3, 2], vec![0.0; 24]).unwrap();
+        assert_eq!((t.rows, t.cols), (4, 6));
+        assert!(mat(&[2], vec![0.0; 3]).is_err());
     }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims)?)
-}
 
-/// Matrix → 2-D literal.
-pub fn lit_matrix(m: &Matrix) -> crate::Result<xla::Literal> {
-    lit(&[m.rows, m.cols], &m.data)
-}
-
-/// Scalar f32 literal.
-pub fn lit_scalar(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-
-/// Literal → flat f32 vector.
-pub fn to_vec_f32(l: &xla::Literal) -> crate::Result<Vec<f32>> {
-    Ok(l.to_vec::<f32>()?)
-}
-
-/// Literal → Matrix (must be 2-D).
-pub fn to_matrix(l: &xla::Literal) -> crate::Result<Matrix> {
-    let shape = l.array_shape()?;
-    let dims = shape.dims();
-    if dims.len() != 2 {
-        bail!("expected rank-2 literal, got {:?}", dims);
+    #[test]
+    fn native_runtime_loads_and_validates_arity() {
+        let rt = Runtime::native();
+        assert_eq!(rt.backend_name(), "native");
+        let exe = rt.load("sgc_pubmed").unwrap();
+        assert_eq!(exe.spec.graph_inputs, vec!["x", "a_norm"]);
+        let x = Matrix::zeros(4, 4);
+        let err = exe.run(&[&x]).unwrap_err();
+        assert!(format!("{err}").contains("expected 4 inputs"), "{err}");
     }
-    Ok(Matrix { rows: dims[0] as usize, cols: dims[1] as usize, data: l.to_vec::<f32>()? })
+
+    #[test]
+    fn shape_validation_allows_dynamic_batch_only() {
+        let rt = Runtime::native();
+        let exe = rt.load("actor_fwd").unwrap();
+        assert!(exe.dynamic_batch());
+        let m = rt.manifest.constant("m_agents").unwrap();
+        let obs = rt.manifest.constant("obs_dim").unwrap();
+        let p_actor = rt.manifest.constant("p_actor").unwrap();
+        let actor = rt.load_archive("drl/drl_init.gta").unwrap();
+        let actor = mat(&[m, p_actor], actor.get("actor").unwrap().f32_data.clone()).unwrap();
+        // 3 env slots worth of observations: batch dim scales freely.
+        let obs_in = Matrix::zeros(3 * m, obs);
+        let out = exe.run(&[&actor, &obs_in]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].rows, out[0].cols), (3 * m, 2));
+        // A non-multiple of the trailing dims still fails.
+        let ragged = Matrix { rows: 1, cols: obs - 1, data: vec![0.0; obs - 1] };
+        assert!(exe.run(&[&actor, &ragged]).is_err());
+    }
+
+    #[test]
+    fn runtime_dataset_and_archive_come_from_store() {
+        let rt = Runtime::native();
+        let ds = rt.dataset("citeseer").unwrap();
+        assert_eq!(ds.n, 1200);
+        assert!(rt.dataset("nope").is_err());
+        assert!(rt.load_archive("models/gat_cora.weights.gta").is_ok());
+        assert!(rt.load_archive("models/zzz.weights.gta").is_err());
+    }
 }

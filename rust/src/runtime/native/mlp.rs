@@ -1,0 +1,336 @@
+//! Flat-parameter MLP forward/backward + Adam, ported from
+//! `python/compile/drl.py`.
+//!
+//! The DRL artifacts (`actor_fwd`, `maddpg_train`, `ppo_fwd`,
+//! `ppo_train`) all operate on MLPs stored as one flat `f32` vector
+//! per network: for each layer, `din*dout` row-major weights followed
+//! by `dout` biases.  Architecture is fixed at
+//! `in → 64 → 64 → 64 → out` (ReLU hidden activations, output
+//! activation per call site) and the Adam hyper-parameters are
+//! `drl.py`'s: `lr 3e-4, β₁ 0.9, β₂ 0.999, ε 1e-8` with bias
+//! correction `m̂ = m / (1 - β₁^step)`.
+//!
+//! `forward` keeps the post-activation output of every layer in a
+//! [`Cache`] so `backward` can run the exact reverse pass the JAX
+//! autodiff produces for this architecture: `dW = aᵀ @ δ`,
+//! `db = colsum(δ)`, `δ_prev = (δ @ Wᵀ) ⊙ relu'(a_prev)`.
+
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+pub use super::kernels::Act;
+
+/// Hidden width of every DRL MLP (`drl.py HID`).
+pub const HID: usize = 64;
+/// Adam learning rate (`drl.py LR`).
+pub const LR: f32 = 3e-4;
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Layer widths for a DRL MLP: `in → 64 → 64 → 64 → out`.
+pub fn dims(in_dim: usize, out_dim: usize) -> Vec<usize> {
+    vec![in_dim, HID, HID, HID, out_dim]
+}
+
+/// Flat parameter-vector length for the given layer widths.
+pub fn flat_len(dims: &[usize]) -> usize {
+    dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+}
+
+/// `(weight, bias)` offsets of each layer inside the flat vector.
+fn layer_offsets(dims: &[usize]) -> Vec<(usize, usize)> {
+    let mut offs = Vec::with_capacity(dims.len() - 1);
+    let mut at = 0;
+    for w in dims.windows(2) {
+        offs.push((at, at + w[0] * w[1]));
+        at += w[0] * w[1] + w[1];
+    }
+    offs
+}
+
+/// Post-activation outputs of every layer; `acts[0]` is the input,
+/// `acts[dims.len() - 1]` the network output.
+pub struct Cache {
+    pub acts: Vec<Matrix>,
+}
+
+impl Cache {
+    /// The forward output (last activation).
+    pub fn output(&self) -> &Matrix {
+        self.acts.last().expect("cache holds at least the input")
+    }
+}
+
+/// Forward pass over a batch `x` (`[B, dims[0]]`), returning the
+/// `[B, dims.last()]` output and the activation cache.  Hidden layers
+/// use ReLU; the output layer uses `out_act`.
+pub fn forward(flat: &[f32], dims: &[usize], x: &Matrix, out_act: Act, workers: usize) -> Cache {
+    assert_eq!(flat.len(), flat_len(dims), "flat param length mismatch");
+    assert_eq!(x.cols, dims[0], "input width mismatch");
+    let n_layers = dims.len() - 1;
+    let mut acts = Vec::with_capacity(dims.len());
+    acts.push(x.clone());
+    for (l, (w_off, b_off)) in layer_offsets(dims).into_iter().enumerate() {
+        let (din, dout) = (dims[l], dims[l + 1]);
+        let w = &flat[w_off..w_off + din * dout];
+        let b = &flat[b_off..b_off + dout];
+        let act = if l + 1 < n_layers { Act::Relu } else { out_act };
+        let h = linear(&acts[l], w, b, dout, act, workers);
+        acts.push(h);
+    }
+    Cache { acts }
+}
+
+/// One layer `act(x @ W + b)` with `W` given as a `din*dout` row-major
+/// flat slice.  Row-parallel over the batch.
+fn linear(x: &Matrix, w: &[f32], b: &[f32], dout: usize, act: Act, workers: usize) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, dout);
+    if x.rows == 0 || dout == 0 {
+        return out;
+    }
+    let mut rows: Vec<&mut [f32]> = out.data.chunks_mut(dout).collect();
+    ThreadPool::map_scoped_mut(&mut rows, workers.max(1), |i, out_row| {
+        out_row.copy_from_slice(b);
+        for (k, &xv) in x.row(i).iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[k * dout..(k + 1) * dout];
+            for (o, &wv) in out_row.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+        if act != Act::None {
+            for o in out_row.iter_mut() {
+                *o = act.apply(*o);
+            }
+        }
+    });
+    out
+}
+
+/// Reverse pass.  `dout` is the gradient at the *pre-activation*
+/// output of the final layer (the caller folds the output activation's
+/// derivative in, since it also owns the loss).  Returns the flat
+/// parameter gradient and, when `want_dx`, the gradient w.r.t. the
+/// network input.
+pub fn backward(
+    flat: &[f32],
+    dims: &[usize],
+    cache: &Cache,
+    dout: &Matrix,
+    want_dx: bool,
+    workers: usize,
+) -> (Vec<f32>, Option<Matrix>) {
+    assert_eq!(flat.len(), flat_len(dims), "flat param length mismatch");
+    let n_layers = dims.len() - 1;
+    assert_eq!(cache.acts.len(), dims.len(), "cache depth mismatch");
+    assert_eq!(dout.cols, dims[n_layers], "dout width mismatch");
+    let batch = dout.rows;
+    let offs = layer_offsets(dims);
+    let mut grad = vec![0.0f32; flat.len()];
+    let mut delta = dout.clone();
+    let mut dx_out = None;
+    for l in (0..n_layers).rev() {
+        let (din, dl) = (dims[l], dims[l + 1]);
+        let (w_off, b_off) = offs[l];
+        let a_prev = &cache.acts[l];
+        // dW = a_prevᵀ @ δ, parallel over the din weight rows.
+        {
+            let gw = &mut grad[w_off..w_off + din * dl];
+            let mut wrows: Vec<&mut [f32]> = gw.chunks_mut(dl).collect();
+            let delta_ref = &delta;
+            ThreadPool::map_scoped_mut(&mut wrows, workers.max(1), |i, grow| {
+                for t in 0..batch {
+                    let av = a_prev.at(t, i);
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for (g, &dv) in grow.iter_mut().zip(delta_ref.row(t)) {
+                        *g += av * dv;
+                    }
+                }
+            });
+        }
+        // db = column sums of δ.
+        {
+            let gb = &mut grad[b_off..b_off + dl];
+            for t in 0..batch {
+                for (g, &dv) in gb.iter_mut().zip(delta.row(t)) {
+                    *g += dv;
+                }
+            }
+        }
+        if l == 0 && !want_dx {
+            break;
+        }
+        // δ_prev = δ @ Wᵀ, then fold relu' for hidden layers.
+        let w = &flat[w_off..w_off + din * dl];
+        let mut dx = Matrix::zeros(batch, din);
+        {
+            let mut rows: Vec<&mut [f32]> = dx.data.chunks_mut(din.max(1)).collect();
+            let delta_ref = &delta;
+            ThreadPool::map_scoped_mut(&mut rows, workers.max(1), |t, dx_row| {
+                let drow = delta_ref.row(t);
+                for (i, o) in dx_row.iter_mut().enumerate() {
+                    let wrow = &w[i * dl..(i + 1) * dl];
+                    let mut s = 0.0f32;
+                    for (&wv, &dv) in wrow.iter().zip(drow) {
+                        s += wv * dv;
+                    }
+                    *o = s;
+                }
+                if l > 0 {
+                    // acts[l] is the post-ReLU output of layer l-1.
+                    for (o, &av) in dx_row.iter_mut().zip(a_prev.row(t)) {
+                        if av <= 0.0 {
+                            *o = 0.0;
+                        }
+                    }
+                }
+            });
+        }
+        if l == 0 {
+            dx_out = Some(dx);
+        } else {
+            delta = dx;
+        }
+    }
+    (grad, dx_out)
+}
+
+/// One Adam update in place, `step` already incremented (1-based).
+pub fn adam(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], step: f32) {
+    assert!(p.len() == g.len() && p.len() == m.len() && p.len() == v.len());
+    let bc1 = 1.0 - ADAM_B1.powf(step);
+    let bc2 = 1.0 - ADAM_B2.powf(step);
+    for i in 0..p.len() {
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] -= LR * mhat / (vhat.sqrt() + ADAM_EPS);
+    }
+}
+
+/// He-uniform initialisation (`drl.py init_mlp`): weights uniform in
+/// `±√(6 / fan_in)`, biases zero.
+pub fn init_flat(dims: &[usize], rng: &mut Rng) -> Vec<f32> {
+    let mut flat = Vec::with_capacity(flat_len(dims));
+    for w in dims.windows(2) {
+        let bound = (6.0 / w[0] as f64).sqrt();
+        for _ in 0..w[0] * w[1] {
+            flat.push(rng.range_f64(-bound, bound) as f32);
+        }
+        flat.resize(flat.len() + w[1], 0.0);
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed_from(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        for v in &mut m.data {
+            *v = rng.range_f64(-1.0, 1.0) as f32;
+        }
+        m
+    }
+
+    #[test]
+    fn flat_len_counts_weights_and_biases() {
+        // 3 → 64 → 64 → 64 → 2
+        let d = dims(3, 2);
+        assert_eq!(flat_len(&d), 3 * 64 + 64 + 2 * (64 * 64 + 64) + 64 * 2 + 2);
+    }
+
+    #[test]
+    fn forward_is_worker_count_invariant() {
+        let d = dims(5, 3);
+        let mut rng = Rng::seed_from(17);
+        let flat = init_flat(&d, &mut rng);
+        let x = randm(9, 5, 4);
+        let base = forward(&flat, &d, &x, Act::Sigmoid, 1);
+        for workers in [2usize, 3, 8] {
+            let got = forward(&flat, &d, &x, Act::Sigmoid, workers);
+            assert_eq!(got.output(), base.output(), "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_output_in_unit_interval() {
+        let d = dims(4, 2);
+        let mut rng = Rng::seed_from(3);
+        let flat = init_flat(&d, &mut rng);
+        let x = randm(6, 4, 8);
+        let out = forward(&flat, &d, &x, Act::Sigmoid, 2);
+        assert!(out.output().data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    /// Central-difference check of the full backward pass: perturb a
+    /// handful of parameters and compare analytic vs numeric gradient
+    /// of the scalar loss `sum(out)`.
+    #[test]
+    fn backward_matches_finite_differences() {
+        let d = vec![4, 8, 8, 8, 2];
+        let mut rng = Rng::seed_from(21);
+        let flat = init_flat(&d, &mut rng);
+        let x = randm(5, 4, 30);
+        let cache = forward(&flat, &d, &x, Act::None, 1);
+        let ones = Matrix { rows: 5, cols: 2, data: vec![1.0; 10] };
+        let (grad, dx) = backward(&flat, &d, &cache, &ones, true, 1);
+        let loss = |f: &[f32]| -> f64 {
+            forward(f, &d, &x, Act::None, 1).output().data.iter().map(|&v| v as f64).sum()
+        };
+        let eps = 1e-3f32;
+        let mut probe = Rng::seed_from(77);
+        for _ in 0..24 {
+            let i = probe.below(flat.len());
+            let mut lo = flat.clone();
+            let mut hi = flat.clone();
+            lo[i] -= eps;
+            hi[i] += eps;
+            let num = (loss(&hi) - loss(&lo)) / (2.0 * eps as f64);
+            let ana = grad[i] as f64;
+            assert!(
+                (num - ana).abs() < 5e-2 * (1.0 + num.abs().max(ana.abs())),
+                "param {i}: numeric {num} vs analytic {ana}"
+            );
+        }
+        // Input gradient via the same probe.
+        let dx = dx.expect("asked for dx");
+        let loss_x = |xs: &Matrix| -> f64 {
+            forward(&flat, &d, xs, Act::None, 1).output().data.iter().map(|&v| v as f64).sum()
+        };
+        for _ in 0..8 {
+            let i = probe.below(x.data.len());
+            let mut lo = x.clone();
+            let mut hi = x.clone();
+            lo.data[i] -= eps;
+            hi.data[i] += eps;
+            let num = (loss_x(&hi) - loss_x(&lo)) / (2.0 * eps as f64);
+            let ana = dx.data[i] as f64;
+            assert!(
+                (num - ana).abs() < 5e-2 * (1.0 + num.abs().max(ana.abs())),
+                "input {i}: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn adam_moves_params_against_gradient() {
+        let mut p = vec![1.0f32; 4];
+        let g = vec![1.0f32, -1.0, 1.0, -1.0];
+        let mut m = vec![0.0f32; 4];
+        let mut v = vec![0.0f32; 4];
+        adam(&mut p, &g, &mut m, &mut v, 1.0);
+        assert!(p[0] < 1.0 && p[1] > 1.0);
+        // First-step magnitude is ~lr regardless of gradient scale.
+        assert!((p[0] - (1.0 - LR)).abs() < 1e-5);
+    }
+}

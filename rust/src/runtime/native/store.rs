@@ -1,0 +1,438 @@
+//! Synthesized in-memory artifact set for the native backend.
+//!
+//! When no on-disk `artifacts/` directory exists (the normal case —
+//! building the Python artifact tree needs a JAX toolchain), the
+//! native runtime serves manifest, weights, DRL initial state and
+//! datasets from this store instead of the filesystem.  The layout
+//! mirrors `python/compile/aot.py` exactly: same executable names,
+//! same input/output orders, same constants vocabulary, same
+//! `drl_init.gta` tensor names — so every caller binds identically
+//! whether artifacts came from disk or from here.
+//!
+//! Differences from the AOT tree, chosen to keep debug-build test
+//! runs fast: `n_max` 192 (vs 320), `batch` 128 (vs 256), smaller
+//! synthetic citation graphs, and *random* (He-uniform) GNN weights —
+//! the store publishes an empty `accuracy` table, which is how tests
+//! know not to assert pre-trained classification quality.
+//! Everything is deterministic from fixed per-key seeds.
+
+use std::collections::BTreeMap;
+
+use crate::graph::geb::Dataset;
+use crate::graph::generate;
+use crate::runtime::manifest::{DatasetSpec, ExeSpec, Manifest, TensorSpec};
+use crate::tensor::gta::{Archive, Tensor};
+use crate::util::rng::Rng;
+
+use super::mlp;
+
+/// Padded vertex capacity of every synthesized GNN executable.
+pub const N_MAX: usize = 192;
+/// Padded class width (`model.py C_PAD`).
+pub const C_PAD: usize = 8;
+/// GNN hidden width (`model.py HIDDEN`).
+pub const HIDDEN: usize = 64;
+/// Agent count (`drl.py M`).
+pub const M_AGENTS: usize = 4;
+/// Replay mini-batch (reduced from `drl.py BATCH` for test speed).
+pub const BATCH: usize = 128;
+/// Per-agent action width (`drl.py ACT`, paper Eq. 22).
+pub const ACT_DIM: usize = 2;
+
+const MODELS: [&str; 4] = ["gcn", "gat", "sage", "sgc"];
+/// `(name, vertices, real feat dim, padded feat dim, classes)`.
+const DATASETS: [(&str, usize, usize, usize, usize); 3] = [
+    ("citeseer", 1200, 120, 128, 6),
+    ("cora", 1400, 90, 96, 7),
+    ("pubmed", 1000, 64, 64, 3),
+];
+
+/// In-memory equivalent of the `artifacts/` tree.
+pub struct Store {
+    pub manifest: Manifest,
+    /// Archives keyed by manifest-relative path
+    /// (`models/<key>.weights.gta`, `drl/drl_init.gta`).
+    archives: BTreeMap<String, Archive>,
+    datasets: BTreeMap<String, Dataset>,
+}
+
+impl Store {
+    pub fn archive(&self, path: &str) -> Option<&Archive> {
+        self.archives.get(path)
+    }
+
+    pub fn dataset(&self, name: &str) -> Option<&Dataset> {
+        self.datasets.get(name)
+    }
+
+    /// Build the full synthesized artifact set (deterministic).
+    pub fn build() -> Store {
+        let obs = crate::drl::env::OBS;
+        let state = M_AGENTS * obs;
+        let p_actor = mlp::flat_len(&mlp::dims(obs, ACT_DIM));
+        let p_critic = mlp::flat_len(&mlp::dims(state + M_AGENTS * ACT_DIM, 1));
+        let p_ppo = mlp::flat_len(&mlp::dims(state, M_AGENTS + 1));
+
+        let mut manifest = Manifest::default();
+        for (k, v) in [
+            ("n_max", N_MAX),
+            ("hidden", HIDDEN),
+            ("c_pad", C_PAD),
+            ("m_agents", M_AGENTS),
+            ("obs_dim", obs),
+            ("act_dim", ACT_DIM),
+            ("state_dim", state),
+            ("batch", BATCH),
+            ("p_actor", p_actor),
+            ("p_critic", p_critic),
+            ("p_ppo", p_ppo),
+        ] {
+            manifest.constants.insert(k.into(), v as f64);
+        }
+
+        let mut archives = BTreeMap::new();
+        let mut datasets = BTreeMap::new();
+        for (name, n, feat, feat_pad, classes) in DATASETS {
+            let ds = synth_dataset(name, n, feat, classes);
+            manifest.datasets.insert(
+                name.into(),
+                DatasetSpec {
+                    path: format!("data/{name}.geb"),
+                    n,
+                    e: ds.e,
+                    feat,
+                    feat_pad,
+                    classes,
+                },
+            );
+            datasets.insert(name.to_string(), ds);
+            for model in MODELS {
+                let key = format!("{model}_{name}");
+                let wpath = format!("models/{key}.weights.gta");
+                let pspecs = param_specs(model, feat_pad);
+                let mut inputs: Vec<TensorSpec> = model_inputs(model)
+                    .iter()
+                    .map(|&gi| TensorSpec {
+                        name: gi.into(),
+                        shape: match gi {
+                            "x" => vec![N_MAX, feat_pad],
+                            "inv_deg" => vec![N_MAX, 1],
+                            _ => vec![N_MAX, N_MAX], // a_norm / adj
+                        },
+                    })
+                    .collect();
+                let mut rng = Rng::seed_from(seed_of(&key));
+                let mut tensors = Vec::with_capacity(pspecs.len());
+                for (pname, shape) in &pspecs {
+                    inputs.push(TensorSpec { name: (*pname).into(), shape: shape.to_vec() });
+                    tensors.push(init_tensor(pname, shape, &mut rng));
+                }
+                manifest.executables.insert(
+                    key.clone(),
+                    ExeSpec {
+                        path: format!("models/{key}.hlo.txt"),
+                        weights: Some(wpath.clone()),
+                        graph_inputs: model_inputs(model).iter().map(|&s| s.into()).collect(),
+                        inputs,
+                        outputs: vec!["logits".into()],
+                    },
+                );
+                archives.insert(wpath, Archive { tensors });
+            }
+        }
+
+        drl_entries(&mut manifest, &mut archives, obs, state, p_actor, p_critic, p_ppo);
+        Store { manifest, archives, datasets }
+    }
+}
+
+/// `model.py MODEL_INPUTS`.
+fn model_inputs(model: &str) -> &'static [&'static str] {
+    match model {
+        "sage" => &["x", "adj", "inv_deg"],
+        "gat" => &["x", "adj"],
+        // gcn / sgc propagate over the normalized adjacency.
+        _ => &["x", "a_norm"],
+    }
+}
+
+/// `model.py param_specs`.
+fn param_specs(model: &str, feat_pad: usize) -> Vec<(&'static str, [usize; 2])> {
+    let (h, c, f) = (HIDDEN, C_PAD, feat_pad);
+    match model {
+        "gcn" => vec![("w0", [f, h]), ("b0", [1, h]), ("w1", [h, c]), ("b1", [1, c])],
+        "sgc" => vec![("w", [f, c]), ("b", [1, c])],
+        "sage" => vec![
+            ("ws0", [f, h]),
+            ("wn0", [f, h]),
+            ("b0", [1, h]),
+            ("ws1", [h, c]),
+            ("wn1", [h, c]),
+            ("b1", [1, c]),
+        ],
+        "gat" => vec![
+            ("w0", [f, h]),
+            ("al0", [h, 1]),
+            ("ar0", [h, 1]),
+            ("b0", [1, h]),
+            ("w1", [h, c]),
+            ("al1", [c, 1]),
+            ("ar1", [c, 1]),
+            ("b1", [1, c]),
+        ],
+        other => unreachable!("unknown model {other}"),
+    }
+}
+
+/// He-uniform weights, zero biases (names starting with `b`).
+fn init_tensor(name: &str, shape: &[usize; 2], rng: &mut Rng) -> Tensor {
+    let numel = shape[0] * shape[1];
+    let data = if name.starts_with('b') {
+        vec![0.0; numel]
+    } else {
+        let bound = (6.0 / shape[0] as f64).sqrt();
+        (0..numel).map(|_| rng.range_f64(-bound, bound) as f32).collect()
+    };
+    Tensor { name: name.into(), shape: shape.to_vec(), f32_data: data, is_int: false }
+}
+
+/// Synthetic citation dataset: preferential-attachment topology,
+/// cyclic labels, three sparse features per vertex of which one is
+/// label-correlated (so even untrained models see class structure).
+fn synth_dataset(name: &str, n: usize, feat: usize, classes: usize) -> Dataset {
+    let mut rng = Rng::seed_from(seed_of(name));
+    let graph = generate::preferential_attachment(n, 6, &mut rng);
+    let block = (feat / classes).max(1);
+    let mut feat_idx = Vec::with_capacity(3 * n);
+    for i in 0..n {
+        let lbl = i % classes;
+        feat_idx.push(((lbl * block + (i / classes) % block) % feat) as u16);
+        feat_idx.push(((i * 7 + 3) % feat) as u16);
+        feat_idx.push(((i * 13 + lbl) % feat) as u16);
+    }
+    Dataset {
+        name: name.into(),
+        n,
+        e: graph.num_edges(),
+        feat_dim: feat,
+        classes,
+        labels: (0..n).map(|i| (i % classes) as u8).collect(),
+        feat_ptr: (0..=n as u32).map(|i| 3 * i).collect(),
+        feat_idx,
+        graph,
+    }
+}
+
+/// The four DRL executables + `drl/drl_init.gta`, mirroring
+/// `aot.py drl_entries`.
+fn drl_entries(
+    manifest: &mut Manifest,
+    archives: &mut BTreeMap<String, Archive>,
+    obs: usize,
+    state: usize,
+    p_actor: usize,
+    p_critic: usize,
+    p_ppo: usize,
+) {
+    let (m, act, b) = (M_AGENTS, ACT_DIM, BATCH);
+    let entry = |name: &str, ins: Vec<(&str, Vec<usize>)>, outs: &[&str]| ExeSpec {
+        path: format!("drl/{name}.hlo.txt"),
+        weights: None,
+        graph_inputs: Vec::new(),
+        inputs: ins
+            .into_iter()
+            .map(|(n, shape)| TensorSpec { name: n.into(), shape })
+            .collect(),
+        outputs: outs.iter().map(|&s| s.into()).collect(),
+    };
+
+    manifest.executables.insert(
+        "actor_fwd".into(),
+        entry(
+            "actor_fwd",
+            vec![("actor", vec![m, p_actor]), ("obs", vec![m, obs])],
+            &["actions"],
+        ),
+    );
+    manifest.executables.insert(
+        "maddpg_train".into(),
+        entry(
+            "maddpg_train",
+            vec![
+                ("actor", vec![m, p_actor]),
+                ("critic", vec![m, p_critic]),
+                ("t_actor", vec![m, p_actor]),
+                ("t_critic", vec![m, p_critic]),
+                ("m_a", vec![m, p_actor]),
+                ("v_a", vec![m, p_actor]),
+                ("m_c", vec![m, p_critic]),
+                ("v_c", vec![m, p_critic]),
+                ("step", vec![]),
+                ("s", vec![b, state]),
+                ("a", vec![b, m, act]),
+                ("r", vec![b, m]),
+                ("s2", vec![b, state]),
+                ("done", vec![b, m]),
+                ("obs", vec![b, m, obs]),
+                ("obs2", vec![b, m, obs]),
+            ],
+            &[
+                "actor",
+                "critic",
+                "t_actor",
+                "t_critic",
+                "m_a",
+                "v_a",
+                "m_c",
+                "v_c",
+                "step",
+                "critic_loss",
+                "actor_loss",
+            ],
+        ),
+    );
+    manifest.executables.insert(
+        "ppo_fwd".into(),
+        entry("ppo_fwd", vec![("ppo", vec![p_ppo]), ("s", vec![1, state])], &["logits", "value"]),
+    );
+    manifest.executables.insert(
+        "ppo_train".into(),
+        entry(
+            "ppo_train",
+            vec![
+                ("ppo", vec![p_ppo]),
+                ("m_p", vec![p_ppo]),
+                ("v_p", vec![p_ppo]),
+                ("step", vec![]),
+                ("s", vec![b, state]),
+                ("act_onehot", vec![b, m]),
+                ("old_logp", vec![b]),
+                ("adv", vec![b]),
+                ("ret", vec![b]),
+            ],
+            &["ppo", "m_p", "v_p", "step", "policy_loss", "value_loss", "entropy"],
+        ),
+    );
+
+    // Initial parameters + optimizer state (drl_init.gta).
+    let mut rng = Rng::seed_from(seed_of("drl_init"));
+    let stacked = |rows: usize, in_dim: usize, out_dim: usize, rng: &mut Rng| -> Vec<f32> {
+        let d = mlp::dims(in_dim, out_dim);
+        let mut flat = Vec::with_capacity(rows * mlp::flat_len(&d));
+        for _ in 0..rows {
+            flat.extend(mlp::init_flat(&d, rng));
+        }
+        flat
+    };
+    let actor = stacked(m, obs, act, &mut rng);
+    let critic = stacked(m, state + m * act, 1, &mut rng);
+    let ppo = stacked(1, state, m + 1, &mut rng);
+    let t = |name: &str, shape: Vec<usize>, data: Vec<f32>| Tensor {
+        name: name.into(),
+        shape,
+        f32_data: data,
+        is_int: false,
+    };
+    let tensors = vec![
+        t("actor", vec![m, p_actor], actor.clone()),
+        t("critic", vec![m, p_critic], critic.clone()),
+        t("t_actor", vec![m, p_actor], actor.clone()),
+        t("t_critic", vec![m, p_critic], critic.clone()),
+        t("m_a", vec![m, p_actor], vec![0.0; m * p_actor]),
+        t("v_a", vec![m, p_actor], vec![0.0; m * p_actor]),
+        t("m_c", vec![m, p_critic], vec![0.0; m * p_critic]),
+        t("v_c", vec![m, p_critic], vec![0.0; m * p_critic]),
+        t("step", vec![], vec![0.0]),
+        t("ppo", vec![p_ppo], ppo.clone()),
+        t("ppo_m", vec![p_ppo], vec![0.0; p_ppo]),
+        t("ppo_v", vec![p_ppo], vec![0.0; p_ppo]),
+        t("ppo_step", vec![], vec![0.0]),
+    ];
+    archives.insert("drl/drl_init.gta".into(), Archive { tensors });
+}
+
+/// FNV-1a of a key string — stable per-artifact seeds.
+fn seed_of(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_is_deterministic() {
+        let a = Store::build();
+        let b = Store::build();
+        assert_eq!(a.manifest.executables.len(), b.manifest.executables.len());
+        let wa = a.archive("models/gcn_cora.weights.gta").unwrap();
+        let wb = b.archive("models/gcn_cora.weights.gta").unwrap();
+        assert_eq!(wa.get("w0").unwrap().f32_data, wb.get("w0").unwrap().f32_data);
+        assert_eq!(
+            a.dataset("pubmed").unwrap().graph.num_edges(),
+            b.dataset("pubmed").unwrap().graph.num_edges()
+        );
+    }
+
+    #[test]
+    fn manifest_mirrors_aot_layout() {
+        let s = Store::build();
+        assert_eq!(s.manifest.executables.len(), 12 + 4);
+        assert_eq!(s.manifest.datasets.len(), 3);
+        assert!(s.manifest.accuracy.is_empty(), "random weights must not claim accuracy");
+        let gcn = &s.manifest.executables["gcn_cora"];
+        assert_eq!(gcn.graph_inputs, vec!["x", "a_norm"]);
+        assert_eq!(gcn.inputs.len(), 2 + 4);
+        assert_eq!(gcn.inputs[0].shape, vec![N_MAX, 96]);
+        let train = &s.manifest.executables["maddpg_train"];
+        assert_eq!(train.inputs.len(), 16);
+        assert_eq!(train.outputs.len(), 11);
+        assert_eq!(train.inputs[8].shape, Vec::<usize>::new()); // step scalar
+    }
+
+    #[test]
+    fn weights_match_their_manifest_specs() {
+        let s = Store::build();
+        for (key, exe) in &s.manifest.executables {
+            let Some(wpath) = &exe.weights else { continue };
+            let arch = s.archive(wpath).unwrap_or_else(|| panic!("{key}: missing {wpath}"));
+            for ts in exe.inputs.iter().skip(exe.graph_inputs.len()) {
+                let t = arch.get_shaped(&ts.name, &ts.shape);
+                assert!(t.is_ok(), "{key}: weight {} mismatch: {t:?}", ts.name);
+            }
+        }
+    }
+
+    #[test]
+    fn drl_init_matches_param_sizes() {
+        let s = Store::build();
+        let init = s.archive("drl/drl_init.gta").unwrap();
+        let p_actor = s.manifest.constant("p_actor").unwrap();
+        let p_critic = s.manifest.constant("p_critic").unwrap();
+        assert_eq!(init.get("actor").unwrap().shape, vec![M_AGENTS, p_actor]);
+        assert_eq!(init.get("t_critic").unwrap().shape, vec![M_AGENTS, p_critic]);
+        assert_eq!(init.get("step").unwrap().numel(), 1);
+        // Targets start as exact copies.
+        assert_eq!(init.get("actor").unwrap().f32_data, init.get("t_actor").unwrap().f32_data);
+    }
+
+    #[test]
+    fn datasets_have_connected_topology_and_valid_features() {
+        let s = Store::build();
+        for (name, n, feat, _pad, classes) in DATASETS {
+            let d = s.dataset(name).unwrap();
+            assert_eq!(d.n, n);
+            assert_eq!(d.classes, classes);
+            assert!(d.e >= n - 1, "{name}: too few edges");
+            for v in 0..n {
+                assert_eq!(d.features_of(v).len(), 3);
+                assert!(d.features_of(v).iter().all(|&f| (f as usize) < feat));
+            }
+        }
+    }
+}

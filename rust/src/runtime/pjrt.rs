@@ -1,0 +1,103 @@
+//! PJRT [`Backend`] (cargo feature `xla`): compiles the AOT-lowered
+//! HLO text through the PJRT C API and executes on whatever device
+//! the linked `xla` crate provides.
+//!
+//! With the vendored `vendor/xla-stub` crate this compiles but every
+//! compile/execute call returns a descriptive error; point the `xla`
+//! dependency at a real `xla-rs` checkout (see the stub's crate docs)
+//! to run artifacts through XLA.  Input/output matrices follow the
+//! same flattening convention as [`super::mat`]; literals are
+//! reshaped to the manifest shapes on the way in and flattened back
+//! on the way out.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Context;
+
+use super::backend::Backend;
+use super::manifest::ExeSpec;
+use crate::tensor::Matrix;
+use crate::util::metrics::GLOBAL as METRICS;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    root: PathBuf,
+    /// name → compiled executable, compiled lazily on first use.
+    compiled: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtBackend {
+    pub fn new(root: PathBuf) -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "pjrt backend: platform {} ({} devices)",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(PjrtBackend { client, root, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    fn compile(&self, name: &str, spec: &ExeSpec) -> crate::Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let hlo_path = self.root.join(&spec.path);
+        // lint:allow(wall-clock) — compile latency is a reported metric,
+        // nothing deterministic branches on it.
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .with_context(|| format!("parsing HLO {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name} through PJRT"))?;
+        METRICS.observe("runtime.compile", t0.elapsed().as_secs_f64());
+        log::info!("pjrt backend: compiled {name} in {:.3}s", t0.elapsed().as_secs_f64());
+        let exe = Arc::new(exe);
+        self.compiled.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(&self, name: &str, spec: &ExeSpec, inputs: &[&Matrix]) -> crate::Result<Vec<Matrix>> {
+        let exe = self.compile(name, spec)?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (m, ts) in inputs.iter().zip(&spec.inputs) {
+            lits.push(to_literal(m, &ts.shape).with_context(|| {
+                format!("{name}: binding input {:?} to shape {:?}", ts.name, ts.shape)
+            })?);
+        }
+        let bufs = exe.execute(&lits).with_context(|| format!("executing {name}"))?;
+        let device0 = bufs.into_iter().next().with_context(|| format!("{name}: no device output"))?;
+        let mut lits_out = Vec::with_capacity(device0.len());
+        for b in &device0 {
+            lits_out.push(b.to_literal_sync().with_context(|| format!("{name}: readback"))?);
+        }
+        // Multi-output artifacts come back as a single tuple literal.
+        if lits_out.len() == 1 && spec.outputs.len() > 1 {
+            lits_out = lits_out[0].to_tuple().with_context(|| format!("{name}: untuple"))?;
+        }
+        lits_out.iter().map(to_matrix).collect()
+    }
+}
+
+/// Matrix → device literal with the manifest's n-d shape.
+fn to_literal(m: &Matrix, shape: &[usize]) -> crate::Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&m.data).reshape(&dims)?)
+}
+
+/// Literal → Matrix with [`super::mat`]'s flattening convention.
+fn to_matrix(lit: &xla::Literal) -> crate::Result<Matrix> {
+    let dims: Vec<usize> =
+        lit.array_shape().context("output shape")?.dims().iter().map(|&d| d as usize).collect();
+    super::mat(&dims, lit.to_vec::<f32>().context("output readback")?)
+}

@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use anyhow::Context;
 
-use crate::runtime::{lit_matrix, to_matrix, Executable, Runtime};
+use crate::runtime::{mat, Executable, Runtime};
 use crate::tensor::Matrix;
 
 use super::padded::PaddedGraph;
@@ -22,8 +22,8 @@ pub struct GnnService {
     pub feat_pad: usize,
     pub classes: usize,
     exe: Arc<Executable>,
-    /// Parameter literals in executable order (after the graph inputs).
-    weights: Vec<xla::Literal>,
+    /// Parameter matrices in executable order (after the graph inputs).
+    weights: Vec<Matrix>,
     graph_inputs: Vec<String>,
 }
 
@@ -42,7 +42,7 @@ impl GnnService {
         let mut weights = Vec::new();
         for ts in spec.inputs.iter().skip(graph_inputs.len()) {
             let t = archive.get_shaped(&ts.name, &ts.shape)?;
-            weights.push(crate::runtime::lit(&t.shape, &t.f32_data)?);
+            weights.push(mat(&t.shape, t.f32_data.clone())?);
         }
         let n_max = rt.manifest.constant("n_max")?;
         let ds = rt
@@ -64,23 +64,19 @@ impl GnnService {
 
     /// Run inference; returns logits [n_max, c_pad].
     pub fn infer(&self, p: &PaddedGraph) -> crate::Result<Matrix> {
-        let mut inputs = Vec::with_capacity(self.graph_inputs.len() + self.weights.len());
+        let mut all: Vec<&Matrix> = Vec::with_capacity(self.graph_inputs.len() + self.weights.len());
         for gi in &self.graph_inputs {
-            let m = match gi.as_str() {
+            all.push(match gi.as_str() {
                 "x" => &p.x,
                 "a_norm" => &p.a_norm,
                 "adj" => &p.adj,
                 "inv_deg" => &p.inv_deg,
                 other => anyhow::bail!("unknown graph input {other:?}"),
-            };
-            inputs.push(lit_matrix(m)?);
+            });
         }
-        // Weights are cheap to clone? Literals aren't Clone — re-borrow
-        // via Borrow<Literal> in execute.
-        let mut all: Vec<&xla::Literal> = inputs.iter().collect();
         all.extend(self.weights.iter());
-        let outs = self.exe.run_borrowed(&all)?;
-        to_matrix(&outs[0])
+        let mut outs = self.exe.run(&all)?;
+        outs.pop().with_context(|| format!("{}_{}: no output", self.model, self.dataset))
     }
 
     /// Classify the real vertices of a padded graph: class per vertex.

@@ -1,0 +1,145 @@
+//! Compressed-sparse-row matrices for the native inference backend.
+//!
+//! The padded adjacencies the serving layer builds ([`crate::serving`])
+//! are `[n_max, n_max]` dense matrices whose occupancy is the subgraph
+//! edge set — a few percent.  The native GNN kernels
+//! ([`crate::runtime::native::kernels`]) convert them to CSR once per
+//! forward and run every aggregation as SpMM over the nonzeros, which
+//! is where the paper's SAGE/GAT serving math actually spends its
+//! time.
+//!
+//! Numerics: `spmm` accumulates each output row over the stored
+//! nonzeros in column order — exactly the order a dense row-major
+//! matmul that skips zero entries visits them — so CSR and dense
+//! paths produce bit-identical results on the same input.
+
+use super::Matrix;
+use crate::util::threadpool::ThreadPool;
+
+/// A CSR matrix (f32 values, u32 column indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// `row_ptr[r]..row_ptr[r+1]` indexes row r's nonzeros.
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from a dense matrix, keeping only nonzero entries.
+    ///
+    /// ```
+    /// use graphedge::tensor::{Csr, Matrix};
+    /// let d = Matrix::from_rows(vec![vec![0.0, 2.0], vec![1.0, 0.0]]);
+    /// let s = Csr::from_dense(&d);
+    /// assert_eq!(s.nnz(), 2);
+    /// assert_eq!(s.row_ptr, vec![0, 1, 2]);
+    /// ```
+    pub fn from_dense(m: &Matrix) -> Csr {
+        let mut row_ptr = Vec::with_capacity(m.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Csr { rows: m.rows, cols: m.cols, row_ptr, col_idx, vals }
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Sparse × dense product `self @ x`, row-parallel over `workers`
+    /// threads.  Each output row is owned by exactly one worker and
+    /// accumulated in stored-column order, so the result is identical
+    /// for every worker count.
+    ///
+    /// ```
+    /// use graphedge::tensor::{Csr, Matrix};
+    /// let adj = Csr::from_dense(&Matrix::from_rows(vec![
+    ///     vec![1.0, 1.0],
+    ///     vec![0.0, 1.0],
+    /// ]));
+    /// let x = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    /// let y = adj.spmm(&x, 2);
+    /// assert_eq!(y.data, vec![4.0, 6.0, 3.0, 4.0]);
+    /// ```
+    pub fn spmm(&self, x: &Matrix, workers: usize) -> Matrix {
+        assert_eq!(self.cols, x.rows, "spmm shape mismatch");
+        let mut out = Matrix::zeros(self.rows, x.cols);
+        if self.rows == 0 || x.cols == 0 {
+            return out;
+        }
+        let cols = x.cols;
+        let mut rows: Vec<&mut [f32]> = out.data.chunks_mut(cols).collect();
+        ThreadPool::map_scoped_mut(&mut rows, workers.max(1), |r, out_row| {
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            for nz in lo..hi {
+                let v = self.vals[nz];
+                let xrow = x.row(self.col_idx[nz] as usize);
+                for (o, &xv) in out_row.iter_mut().zip(xrow) {
+                    *o += v * xv;
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_dense_round_trips_structure() {
+        let d = Matrix::from_rows(vec![
+            vec![0.0, 1.5, 0.0],
+            vec![0.0, 0.0, 0.0],
+            vec![2.0, 0.0, 3.0],
+        ]);
+        let s = Csr::from_dense(&d);
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.row_ptr, vec![0, 1, 1, 3]);
+        assert_eq!(s.col_idx, vec![1, 0, 2]);
+        assert_eq!(s.vals, vec![1.5, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul_bitwise() {
+        let mut rng = crate::util::rng::Rng::seed_from(7);
+        let mut a = Matrix::zeros(13, 9);
+        for v in &mut a.data {
+            if rng.chance(0.3) {
+                *v = rng.range_f64(-1.0, 1.0) as f32;
+            }
+        }
+        let mut x = Matrix::zeros(9, 5);
+        for v in &mut x.data {
+            *v = rng.range_f64(-1.0, 1.0) as f32;
+        }
+        let want = a.matmul(&x);
+        for workers in [1usize, 2, 4] {
+            let got = Csr::from_dense(&a).spmm(&x, workers);
+            assert_eq!(got, want, "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn empty_rows_stay_zero() {
+        let a = Csr::from_dense(&Matrix::zeros(4, 4));
+        let x = Matrix::from_rows(vec![vec![1.0]; 4]);
+        let y = a.spmm(&x, 2);
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+}

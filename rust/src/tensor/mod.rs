@@ -1,13 +1,16 @@
-//! Dense tensors + the GTA tensor-archive reader.
+//! Dense + sparse tensors and the GTA tensor-archive reader.
 //!
 //! The serving layer builds padded `[N_MAX, N_MAX]` adjacencies and
 //! `[N_MAX, F]` feature matrices as [`Matrix`] values, then hands them
-//! to the PJRT runtime as flat `f32` slices.  [`gta`] reads the
-//! pre-trained weights / DRL initial state written by
-//! `python/compile/gta.py`.
+//! to a [`crate::runtime::Backend`] as flat `f32` slices.  The native
+//! backend sparsifies adjacencies into [`Csr`] for its SpMM
+//! aggregation kernels; [`gta`] reads the pre-trained weights / DRL
+//! initial state written by `python/compile/gta.py`.
 
+pub mod csr;
 pub mod gta;
 
+pub use csr::Csr;
 pub use gta::{Archive, Tensor};
 
 /// Row-major dense f32 matrix.
@@ -56,7 +59,9 @@ impl Matrix {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// Naive matmul — used only by tests to cross-check PJRT results.
+    /// Naive sequential matmul — the single-threaded oracle the
+    /// parallel kernels in [`crate::runtime::native`] are checked
+    /// against (same k-order accumulation, same zero-skip).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);

@@ -1,20 +1,20 @@
 //! Integration: DRL executables (actor_fwd / maddpg_train / ppo_*)
-//! against real artifacts, plus a short end-to-end training smoke.
+//! through the default runtime backend (native kernels unless a real
+//! artifacts tree + `--features xla` routes through PJRT), plus a
+//! short end-to-end training smoke.
 
 use graphedge::drl::env::{Env, EnvConfig, OBS};
 use graphedge::drl::{MaddpgConfig, MaddpgTrainer, PpoConfig, PpoTrainer};
-use graphedge::graph::Dataset;
 use graphedge::net::SystemParams;
 use graphedge::runtime::Runtime;
 use graphedge::util::rng::Rng;
 
 fn runtime() -> Runtime {
-    Runtime::open_default().expect("artifacts missing — run `make artifacts`")
+    Runtime::open_default().expect("runtime")
 }
 
 fn tiny_env(rt: &Runtime, seed: u64) -> Env {
-    let spec = &rt.manifest.datasets["pubmed"];
-    let ds = Dataset::load(rt.artifacts_root().join(&spec.path), "pubmed").unwrap();
+    let ds = rt.dataset("pubmed").unwrap();
     let cfg = EnvConfig { n_users: 32, n_assocs: 64, ..EnvConfig::default() };
     let mut rng = Rng::seed_from(seed);
     Env::new(&ds, SystemParams::default(), cfg, &mut rng)
@@ -106,8 +106,7 @@ fn maddpg_checkpoint_round_trip() {
 #[test]
 fn ppo_training_smoke_and_greedy_rollout() {
     let rt = runtime();
-    let spec = &rt.manifest.datasets["pubmed"];
-    let ds = Dataset::load(rt.artifacts_root().join(&spec.path), "pubmed").unwrap();
+    let ds = rt.dataset("pubmed").unwrap();
     let cfg = EnvConfig {
         n_users: 32,
         n_assocs: 64,

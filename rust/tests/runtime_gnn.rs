@@ -1,10 +1,14 @@
-//! Integration: AOT GNN executables vs a pure-Rust reference.
+//! Integration: runtime GNN executables vs a pure-Rust reference.
 //!
-//! Loads the real artifacts (`make artifacts` first), runs GCN/SGC
-//! inference through PJRT on a padded subgraph of the Cora dataset,
-//! and checks the logits against a naive Matrix-based reimplementation
-//! of the same math — the Rust-side counterpart of the Python
-//! kernel-vs-ref tests.
+//! Runs GCN/SGC/SAGE/GAT inference through the default backend (the
+//! native kernels, or PJRT over a `make artifacts` tree when
+//! `$GRAPHEDGE_ARTIFACTS` points at one under `--features xla`) on a
+//! padded subgraph, and checks the logits against a naive
+//! Matrix-based reimplementation of the same math — the Rust-side
+//! counterpart of the Python kernel-vs-ref tests.  Pretrained-accuracy
+//! asserts are gated on the manifest publishing an accuracy entry
+//! (the synthesized native store ships random weights and publishes
+//! none).
 
 use graphedge::graph::Dataset;
 use graphedge::runtime::Runtime;
@@ -13,12 +17,11 @@ use graphedge::tensor::{Archive, Matrix};
 use graphedge::util::rng::Rng;
 
 fn runtime() -> Runtime {
-    Runtime::open_default().expect("artifacts missing — run `make artifacts`")
+    Runtime::open_default().expect("runtime")
 }
 
 fn load_dataset(rt: &Runtime, name: &str) -> Dataset {
-    let spec = &rt.manifest.datasets[name];
-    Dataset::load(rt.artifacts_root().join(&spec.path), name).unwrap()
+    rt.dataset(name).unwrap()
 }
 
 fn sample_padded(
@@ -90,20 +93,31 @@ fn all_models_all_datasets_run_and_classify() {
             let classes = svc.classify(&p).unwrap();
             assert_eq!(classes.len(), 150);
             assert!(classes.iter().all(|&c| c < svc.classes));
-            // Pre-trained model should beat chance comfortably.
-            let hit = classes
-                .iter()
-                .enumerate()
-                .filter(|&(i, &c)| {
-                    ds.labels[scen.users[p.vertices[i]] as usize] as usize == c
-                })
-                .count();
-            let acc = hit as f64 / 150.0;
-            assert!(
-                acc > 1.5 / svc.classes as f64,
-                "{model}_{dataset} accuracy {acc:.3} vs chance {:.3}",
-                1.0 / svc.classes as f64
-            );
+            // Pre-trained models should beat chance comfortably — but
+            // only artifacts that publish an accuracy entry carry
+            // pretrained weights (the native store's are random).
+            let pretrained = rt
+                .manifest
+                .accuracy
+                .get(&format!("{model}_{dataset}"))
+                .copied()
+                .unwrap_or(0.0)
+                > 0.25;
+            if pretrained {
+                let hit = classes
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, &c)| {
+                        ds.labels[scen.users[p.vertices[i]] as usize] as usize == c
+                    })
+                    .count();
+                let acc = hit as f64 / 150.0;
+                assert!(
+                    acc > 1.5 / svc.classes as f64,
+                    "{model}_{dataset} accuracy {acc:.3} vs chance {:.3}",
+                    1.0 / svc.classes as f64
+                );
+            }
         }
     }
 }

@@ -2,8 +2,8 @@
 """Schema check for BENCH_partition.json (the CI bench-smoke gate).
 
 The perf benches (`env_step`, `partition_incremental`,
-`partition_parallel`, `vec_env`, `scenario_vec`, `memo`) each merge
-one top-level section into the shared results file.  This script fails CI
+`partition_parallel`, `vec_env`, `scenario_vec`, `memo`, `inference`)
+each merge one top-level section into the shared results file.  This script fails CI
 when a bench stopped writing its section, dropped a key, or produced
 non-finite numbers — the failure modes of silent bench bit-rot.
 
@@ -45,6 +45,7 @@ SECTION_KEYS = {
         "evaluate_fresh_s",
         "evaluate_speedup",
     ],
+    "inference": ["n_max", "c_pad", "reps"],
 }
 
 # Sections carrying a "runs" array, with required per-run keys.
@@ -83,6 +84,7 @@ RUN_KEYS = {
         "warm_read_s",
         "rebuild_penalty",
     ],
+    "inference": ["real_size", "infer_s_mean", "infer_s_p99", "rows_per_s"],
 }
 
 

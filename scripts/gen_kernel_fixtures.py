@@ -1,0 +1,232 @@
+#!/usr/bin/env python3
+"""Generate golden vectors for the Rust native-kernel parity tests.
+
+Mirrors ``python/compile/kernels/ref.py`` in plain numpy float64 (no
+JAX dependency, so the fixtures regenerate anywhere python3+numpy
+exists) and writes ``rust/tests/fixtures/kernel_golden.json``, which
+``rust/tests/kernel_parity.rs`` replays against the f32 kernels in
+``rust/src/runtime/native/kernels.rs`` at 1e-4 absolute tolerance.
+
+Inputs are drawn from an explicit 64-bit LCG — not numpy's RNG — so
+the vectors are bit-stable across numpy versions.  The committed JSON
+is the contract; rerun this script only when ref.py's math changes.
+"""
+
+import json
+import math
+import pathlib
+
+import numpy as np
+
+NEG_SLOPE = 0.2
+
+N = 12       # vertices (last PAD rows are padding: zero features, no edges)
+PAD = 3
+F = 10       # input features
+H = 8        # hidden width
+C = 4        # classes
+
+
+class Lcg:
+    """splitmix-free 64-bit LCG; top 53 bits -> [0, 1)."""
+
+    MUL = 6364136223846793005
+    INC = 1442695040888963407
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed):
+        self.s = seed & self.MASK
+
+    def f64(self):
+        self.s = (self.s * self.MUL + self.INC) & self.MASK
+        return (self.s >> 11) / float(1 << 53)
+
+    def uniform(self, lo, hi):
+        return lo + (hi - lo) * self.f64()
+
+    def matrix(self, rows, cols, lo=-1.0, hi=1.0):
+        return np.array(
+            [[self.uniform(lo, hi) for _ in range(cols)] for _ in range(rows)],
+            dtype=np.float64,
+        )
+
+
+# --- ref.py oracles, numpy float64 -----------------------------------------
+
+def matmul_bias_act(x, y, b, act="none"):
+    v = x @ y + b
+    if act == "relu":
+        v = np.maximum(v, 0.0)
+    elif act == "sigmoid":
+        v = 1.0 / (1.0 + np.exp(-v))
+    elif act != "none":
+        raise ValueError(act)
+    return v
+
+
+def mean_agg(adj, x, inv_deg):
+    return (adj @ x) * inv_deg
+
+
+def attn_scores(sl, sr):
+    e = sl + sr.reshape(1, -1)
+    return np.where(e >= 0.0, e, NEG_SLOPE * e)
+
+
+def masked_softmax(scores, adj):
+    mask = adj > 0.0
+    s = np.where(mask, scores, -1e30)
+    s = s - np.max(s, axis=-1, keepdims=True)
+    e = np.exp(s) * mask.astype(np.float64)
+    return e / (np.sum(e, axis=-1, keepdims=True) + 1e-9)
+
+
+def gcn_forward(a_norm, x, w0, b0, w1, b1):
+    h = matmul_bias_act(a_norm, x @ w0, b0, "relu")
+    return matmul_bias_act(a_norm, h @ w1, b1, "none")
+
+
+def sgc_forward(a_norm, x, w, b):
+    return (a_norm @ (a_norm @ x)) @ w + b
+
+
+def sage_layer(adj, inv_deg, x, w_self, w_neigh, b, act):
+    v = x @ w_self + mean_agg(adj, x, inv_deg) @ w_neigh + b
+    return np.maximum(v, 0.0) if act == "relu" else v
+
+
+def sage_forward(adj, inv_deg, x, ws0, wn0, b0, ws1, wn1, b1):
+    h = sage_layer(adj, inv_deg, x, ws0, wn0, b0, "relu")
+    return sage_layer(adj, inv_deg, h, ws1, wn1, b1, "none")
+
+
+def gat_layer(adj, x, w, a_l, a_r, b, act):
+    h = x @ w
+    sl = (h @ a_l).reshape(-1, 1)
+    sr = (h @ a_r).reshape(-1, 1)
+    att = masked_softmax(attn_scores(sl, sr), adj)
+    v = att @ h + b
+    return np.maximum(v, 0.0) if act == "relu" else v
+
+
+def gat_forward(adj, x, w0, al0, ar0, b0, w1, al1, ar1, b1):
+    h = gat_layer(adj, x, w0, al0, ar0, b0, "relu")
+    return gat_layer(adj, h, w1, al1, ar1, b1, "none")
+
+
+def sym_norm_adj(adj):
+    deg = adj.sum(axis=1)
+    inv_sqrt = np.where(deg > 0, 1.0 / np.sqrt(np.maximum(deg, 1e-12)), 0.0)
+    return adj * inv_sqrt[:, None] * inv_sqrt[None, :]
+
+
+def inv_degree(adj):
+    deg = adj.sum(axis=1, keepdims=True)
+    return np.where(deg > 0, 1.0 / np.maximum(deg, 1e-12), 0.0)
+
+
+# --- fixture assembly -------------------------------------------------------
+
+def tensor(a):
+    a = np.asarray(a, dtype=np.float64)
+    if a.ndim == 1:
+        a = a.reshape(1, -1)
+    return {"shape": list(a.shape), "data": [float(np.float32(v)) for v in a.ravel()]}
+
+
+def main():
+    rng = Lcg(0x5EED_60_1D)
+    real = N - PAD
+
+    # Symmetric 0/1 adjacency with self-loops on the real block; the
+    # padding rows/cols stay all-zero (the serving-path layout).
+    adj = np.zeros((N, N), dtype=np.float64)
+    for i in range(real):
+        adj[i, i] = 1.0
+        for j in range(i + 1, real):
+            if rng.f64() < 0.35:
+                adj[i, j] = adj[j, i] = 1.0
+    a_norm = sym_norm_adj(adj)
+    inv_deg = inv_degree(adj)
+
+    x = rng.matrix(N, F)
+    x[real:, :] = 0.0
+
+    cases = {}
+
+    a = rng.matrix(5, 7)
+    bm = rng.matrix(7, 6)
+    cases["matmul"] = {"a": tensor(a), "b": tensor(bm), "out": tensor(a @ bm)}
+
+    bias = rng.matrix(1, 6)
+    for act in ("none", "relu", "sigmoid"):
+        cases[f"matmul_bias_{act}"] = {
+            "a": tensor(a),
+            "b": tensor(bm),
+            "bias": tensor(bias),
+            "out": tensor(matmul_bias_act(a, bm, bias, act)),
+        }
+
+    cases["mean_agg"] = {
+        "adj": tensor(adj),
+        "x": tensor(x),
+        "inv_deg": tensor(inv_deg),
+        "out": tensor(mean_agg(adj, x, inv_deg)),
+    }
+
+    sl = rng.matrix(N, 1, -2.0, 2.0)
+    sr = rng.matrix(N, 1, -2.0, 2.0)
+    scores = attn_scores(sl, sr)
+    cases["attn_scores"] = {"sl": tensor(sl), "sr": tensor(sr), "out": tensor(scores)}
+    cases["masked_softmax"] = {
+        "scores": tensor(scores),
+        "adj": tensor(adj),
+        "out": tensor(masked_softmax(scores, adj)),
+    }
+
+    w0, b0 = rng.matrix(F, H), rng.matrix(1, H)
+    w1, b1 = rng.matrix(H, C), rng.matrix(1, C)
+    cases["gcn"] = {
+        "x": tensor(x), "a_norm": tensor(a_norm),
+        "w0": tensor(w0), "b0": tensor(b0), "w1": tensor(w1), "b1": tensor(b1),
+        "out": tensor(gcn_forward(a_norm, x, w0, b0, w1, b1)),
+    }
+
+    w, b = rng.matrix(F, C), rng.matrix(1, C)
+    cases["sgc"] = {
+        "x": tensor(x), "a_norm": tensor(a_norm), "w": tensor(w), "b": tensor(b),
+        "out": tensor(sgc_forward(a_norm, x, w, b)),
+    }
+
+    ws0, wn0, sb0 = rng.matrix(F, H), rng.matrix(F, H), rng.matrix(1, H)
+    ws1, wn1, sb1 = rng.matrix(H, C), rng.matrix(H, C), rng.matrix(1, C)
+    cases["sage"] = {
+        "x": tensor(x), "adj": tensor(adj), "inv_deg": tensor(inv_deg),
+        "ws0": tensor(ws0), "wn0": tensor(wn0), "b0": tensor(sb0),
+        "ws1": tensor(ws1), "wn1": tensor(wn1), "b1": tensor(sb1),
+        "out": tensor(sage_forward(adj, inv_deg, x, ws0, wn0, sb0, ws1, wn1, sb1)),
+    }
+
+    gw0, gal0, gar0, gb0 = rng.matrix(F, H), rng.matrix(H, 1), rng.matrix(H, 1), rng.matrix(1, H)
+    gw1, gal1, gar1, gb1 = rng.matrix(H, C), rng.matrix(C, 1), rng.matrix(C, 1), rng.matrix(1, C)
+    cases["gat"] = {
+        "x": tensor(x), "adj": tensor(adj),
+        "w0": tensor(gw0), "al0": tensor(gal0), "ar0": tensor(gar0), "b0": tensor(gb0),
+        "w1": tensor(gw1), "al1": tensor(gal1), "ar1": tensor(gar1), "b1": tensor(gb1),
+        "out": tensor(gat_forward(adj, x, gw0, gal0, gar0, gb0, gw1, gal1, gar1, gb1)),
+    }
+
+    out = {"tolerance": 1e-4, "pad_rows": PAD, "cases": cases}
+    path = pathlib.Path(__file__).resolve().parent.parent / "rust/tests/fixtures/kernel_golden.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=None, separators=(",", ":")) + "\n")
+    size = path.stat().st_size
+    print(f"wrote {path} ({size} bytes, {len(cases)} cases)")
+    for k, v in cases.items():
+        flat = v["out"]["data"]
+        print(f"  {k:<20} out {v['out']['shape']}  max|v|={max(abs(f) for f in flat):.4f}"
+              f"  finite={all(math.isfinite(f) for f in flat)}")
+
+
+if __name__ == "__main__":
+    main()
