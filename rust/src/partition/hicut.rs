@@ -26,6 +26,7 @@ use crate::graph::Graph;
 /// `alive` is a generic bound (not `&dyn Fn`) so the per-neighbor mask
 /// check on the traversal hot path is statically dispatched; `&closure`
 /// arguments keep working through the blanket `Fn` impl for references.
+// analyze:allow(panic) — `assigned` is sized g.len() and every index is a graph vertex id < g.len().
 pub fn hicut(g: &Graph, alive: impl Fn(usize) -> bool) -> Partition {
     let n = g.len();
     // assigned[v] flips to true once v belongs to a finished subgraph
@@ -60,6 +61,7 @@ pub fn hicut(g: &Graph, alive: impl Fn(usize) -> bool) -> Partition {
 /// into the layout.  It also mirrors full [`hicut`], whose outer loop
 /// scans seeds in ascending vertex order — the shard-merge equivalence
 /// proof leans on exactly this property.
+// analyze:allow(panic) — `assigned` is sized g.len() and region entries are graph vertex ids < g.len().
 pub fn hicut_region(g: &Graph, region: &[usize], alive: impl Fn(usize) -> bool) -> Vec<Vec<usize>> {
     let mut assigned = vec![true; g.len()];
     let mut starts: Vec<usize> = Vec::with_capacity(region.len());
@@ -84,6 +86,7 @@ pub fn hicut_region(g: &Graph, region: &[usize], alive: impl Fn(usize) -> bool) 
 /// One graph-cut operation (Algorithm 1's `LayerCut`): BFS from
 /// `start`, returning the vertices of the new subgraph (marked in
 /// `assigned`).
+// analyze:allow(panic) — `assigned` and `layer` are sized g.len(); the BFS only ever visits graph vertex ids < g.len().
 fn layer_cut<F: Fn(usize) -> bool>(
     g: &Graph,
     start: usize,

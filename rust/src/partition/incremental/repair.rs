@@ -180,6 +180,7 @@ impl IncrementalPartitioner {
 
     /// Repair the layout after one churn step described by `deltas`
     /// (the drained journal; `users` is the post-step graph).
+    // analyze:allow(panic) — the capacity assert_eq is the documented API contract (the layout must match the scenario it was built for), and delta vertex ids are < n by that same contract.
     pub fn apply(&mut self, users: &DynamicGraph, deltas: &[GraphDelta]) -> RepairStats {
         let mut span = trace::span("partition.repair");
         let g = users.graph();
@@ -335,6 +336,7 @@ impl IncrementalPartitioner {
 
     /// Debug/test support: is this a disjoint cover of exactly the
     /// active vertices, with coherent internal indices?
+    // analyze:allow(panic) — assignment/slots/pos_in_slot are kept index-consistent by assign/remove_from_slot.
     pub fn is_valid_cover(&self, users: &DynamicGraph) -> bool {
         let n = users.capacity();
         if self.assignment.len() != n {
@@ -356,6 +358,7 @@ impl IncrementalPartitioner {
 
     /// Remove a departed vertex; `neighbors` is its adjacency at
     /// departure (from the `Left` event).
+    // analyze:allow(panic) — vertex and neighbor ids are < n per apply's capacity contract; slot bookkeeping is index-consistent.
     fn unassign(&mut self, v: usize, neighbors: &[u32]) {
         let s = self.assignment[v];
         if s == NONE {
@@ -373,6 +376,7 @@ impl IncrementalPartitioner {
     }
 
     /// One association change between (possibly unassigned) endpoints.
+    // analyze:allow(panic) — edge endpoints are < n per apply's capacity contract; boundary/baseline are sized with the slots.
     fn on_edge(&mut self, a: usize, b: usize, added: bool) {
         let (sa, sb) = (self.assignment[a], self.assignment[b]);
         if sa == NONE || sb == NONE || sa == sb {
@@ -393,6 +397,7 @@ impl IncrementalPartitioner {
     /// (cleared first).  Returns `(neighbors in home, best other slot,
     /// its count)`; the winner is deterministic (max count, smallest
     /// slot id on ties).  `home = NONE` tallies everything as "other".
+    // analyze:allow(panic) — neighbor ids are < n and `assignment` is sized n.
     fn neighbor_slots(
         &self,
         g: &Graph,
@@ -426,6 +431,7 @@ impl IncrementalPartitioner {
 
     /// Attach an arrival to the majority subgraph among its assigned
     /// neighbors (locally minimizes new cut edges); singleton if none.
+    // analyze:allow(panic) — slot ids come from alloc_slot and vertex ids are < n per the capacity contract.
     fn attach(&mut self, v: usize, g: &Graph, scratch: &mut BTreeMap<usize, usize>) {
         let (_, best, _) = self.neighbor_slots(g, v, NONE, scratch);
         let s = if best == NONE {
@@ -450,6 +456,7 @@ impl IncrementalPartitioner {
     /// neighboring subgraph holding strictly more of its neighbors
     /// (classic LDG-style local search on the cut objective; strict
     /// improvement guarantees termination).
+    // analyze:allow(panic) — candidate vertices come from live slots and boundary/baseline are sized with the slots.
     fn refine(
         &mut self,
         g: &Graph,
@@ -482,6 +489,7 @@ impl IncrementalPartitioner {
         moves
     }
 
+    // analyze:allow(panic) — slot ids s/t are live (callers check) and vertex/neighbor ids are < n.
     fn migrate(&mut self, v: usize, s: usize, t: usize, g: &Graph) {
         for &nb in g.neighbors(v) {
             let u = self.assignment[nb as usize];
@@ -523,6 +531,7 @@ impl IncrementalPartitioner {
     /// (regions are extracted, re-cut and re-slotted in one
     /// deterministic order; `hicut_region` itself is input-order
     /// independent).
+    // analyze:allow(panic) — region vertices come from live slots; DisjointSets and Touched are sized g.len().
     fn local_repair(&mut self, users: &DynamicGraph, stats: &mut RepairStats) {
         let g = users.graph();
         let mut dirty: Vec<usize> = Vec::new();
@@ -647,6 +656,7 @@ impl IncrementalPartitioner {
 
     // -- plumbing -----------------------------------------------------------
 
+    // analyze:allow(panic) — free-list entries are valid slot indices by construction.
     fn alloc_slot(&mut self) -> usize {
         if let Some(s) = self.free.pop() {
             debug_assert!(self.slots[s].is_empty());
@@ -659,6 +669,7 @@ impl IncrementalPartitioner {
         }
     }
 
+    // analyze:allow(panic) — slot ids come from alloc_slot and v < n per the capacity contract.
     fn assign(&mut self, v: usize, s: usize) {
         self.assignment[v] = s;
         self.pos_in_slot[v] = self.slots[s].len();
@@ -666,6 +677,7 @@ impl IncrementalPartitioner {
         self.covered += 1;
     }
 
+    // analyze:allow(panic) — pos_in_slot[v] is maintained as v's exact position in slots[s] by assign and swap-removal.
     fn remove_from_slot(&mut self, v: usize, s: usize) {
         let idx = self.pos_in_slot[v];
         self.slots[s].swap_remove(idx);
@@ -682,6 +694,7 @@ impl IncrementalPartitioner {
         }
     }
 
+    // analyze:allow(panic) — `assignment` is sized g.len() and edge endpoints are < g.len().
     fn count_from_scratch(&self, g: &Graph) -> (usize, Vec<usize>) {
         let mut cut = 0usize;
         let mut boundary = vec![0usize; self.slots.len()];
@@ -723,6 +736,7 @@ impl DisjointSets {
         DisjointSets((0..n).collect())
     }
 
+    // analyze:allow(panic) — `parent` is sized n and only ever stores indices < n.
     fn find(&mut self, mut i: usize) -> usize {
         while self.0[i] != i {
             self.0[i] = self.0[self.0[i]]; // path halving
@@ -731,6 +745,7 @@ impl DisjointSets {
         i
     }
 
+    // analyze:allow(panic) — roots returned by find are < n, within `rank`/`parent`.
     fn union(&mut self, a: usize, b: usize) {
         let (ra, rb) = (self.find(a), self.find(b));
         if ra != rb {
@@ -751,6 +766,7 @@ impl Touched {
         Touched { mark: vec![false; n], list: Vec::new() }
     }
 
+    // analyze:allow(panic) — `seen` is sized n and marks are vertex ids < n per the repair capacity contract.
     fn mark(&mut self, v: usize) {
         if !self.mark[v] {
             self.mark[v] = true;

@@ -43,6 +43,7 @@ impl Dinic {
     }
 
     /// Add a directed arc u→v with capacity c (plus its 0-cap reverse).
+    // analyze:allow(panic) — `head` is sized n at construction and callers add arcs only between vertices of that fixed set.
     pub fn add_arc(&mut self, u: usize, v: usize, c: u64) {
         let a = self.to.len() as u32;
         self.to.push(v as u32);
@@ -57,6 +58,7 @@ impl Dinic {
     }
 
     /// Undirected edge = two opposing arcs with the same capacity.
+    // analyze:allow(panic) — `head` is sized n at construction and callers add arcs only between vertices of that fixed set.
     pub fn add_edge(&mut self, u: usize, v: usize, c: u64) {
         let a = self.to.len() as u32;
         self.to.push(v as u32);
@@ -70,6 +72,7 @@ impl Dinic {
         self.head[v] = b;
     }
 
+    // analyze:allow(panic) — arc ids walked from `head`/`next` chains only ever name arcs pushed by add_arc/add_edge, and `level` is sized n like `head`.
     fn bfs(&mut self, s: usize, t: usize) -> bool {
         self.level.fill(-1);
         let mut q = std::collections::VecDeque::from([s]);
@@ -88,6 +91,7 @@ impl Dinic {
         self.level[t] >= 0
     }
 
+    // analyze:allow(panic) — `iter` holds arc ids from `head`/`next` chains; `a ^ 1` is the paired reverse arc because add_arc/add_edge push the two directions adjacently.
     fn dfs(&mut self, u: usize, t: usize, f: u64) -> u64 {
         if u == t {
             return f;
@@ -109,9 +113,12 @@ impl Dinic {
     }
 
     /// Max flow from s to t; residual capacities afterwards define the
-    /// min cut (vertices reachable from s).
+    /// min cut (vertices reachable from s).  `s == t` has no cut and
+    /// reads as zero flow.
     pub fn max_flow(&mut self, s: usize, t: usize) -> u64 {
-        assert_ne!(s, t);
+        if s == t {
+            return 0;
+        }
         let mut flow = 0u64;
         while self.bfs(s, t) {
             self.iter.copy_from_slice(&self.head);
@@ -127,6 +134,7 @@ impl Dinic {
     }
 
     /// Source side of the min cut (call after `max_flow`).
+    // analyze:allow(panic) — `seen` is sized like `head` and arc ids walked from `head`/`next` chains only ever name arcs pushed by add_arc/add_edge.
     pub fn source_side(&self, s: usize) -> Vec<bool> {
         let mut seen = vec![false; self.head.len()];
         let mut q = std::collections::VecDeque::from([s]);
@@ -151,6 +159,7 @@ impl Dinic {
 ///
 /// Source/sink anchors are the two highest-degree vertices of the
 /// fragment (the vertices "between" the chosen server pair in [36]).
+// analyze:allow(panic) — `index` maps exactly the fragment's vertices, `by_deg[0..2]` exist because fragments are filtered to len ≥ 2, and `side` is sized to the fragment by source_side.
 pub fn mincut_partition(
     g: &Graph,
     weights: &HashMap<(u32, u32), u32>,

@@ -33,11 +33,15 @@ pub struct Partition {
 
 impl Partition {
     /// Subgraph index of each vertex (usize::MAX for uncovered).
+    /// Vertices outside `0..n` (a partition built for a larger graph)
+    /// are ignored.
     pub fn assignment(&self, n: usize) -> Vec<usize> {
         let mut a = vec![usize::MAX; n];
         for (s, verts) in self.subgraphs.iter().enumerate() {
             for &v in verts {
-                a[v] = s;
+                if let Some(slot) = a.get_mut(v) {
+                    *slot = s;
+                }
             }
         }
         a
@@ -57,6 +61,7 @@ impl Partition {
 
     /// Number of edges crossing subgraph boundaries (the inference-time
     /// message-passing cost proxy minimized by P1).
+    // analyze:allow(panic) — `a` is sized g.len() by assignment() and edge endpoints are < g.len().
     pub fn cut_edges(&self, g: &Graph) -> usize {
         let a = self.assignment(g.len());
         g.edge_list()
@@ -69,6 +74,7 @@ impl Partition {
     }
 
     /// Weighted cut (Fig. 6's comparison uses integer edge weights).
+    // analyze:allow(panic) — `a` is sized g.len() by assignment() and edge endpoints are < g.len().
     pub fn cut_weight(&self, g: &Graph, w: &std::collections::HashMap<(u32, u32), u32>) -> u64 {
         let a = self.assignment(g.len());
         g.edge_list()
@@ -82,6 +88,7 @@ impl Partition {
     }
 
     /// Fraction of all (covered) edges that stay inside subgraphs.
+    // analyze:allow(panic) — `a` is sized g.len() by assignment() and edge endpoints are < g.len().
     pub fn locality(&self, g: &Graph) -> f64 {
         let a = self.assignment(g.len());
         let mut inside = 0usize;

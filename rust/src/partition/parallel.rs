@@ -66,6 +66,7 @@ use crate::util::threadpool::ThreadPool;
 /// Equivalent to `hicut(g, alive)` for every `workers` value (see the
 /// module docs for the argument); `workers <= 1` — or a layout with a
 /// single alive component — runs the sequential cut directly.
+// analyze:allow(panic) — `mask` is sized g.len() and is only indexed by graph vertex ids < g.len().
 pub fn parallel_hicut(
     g: &Graph,
     alive: impl Fn(usize) -> bool + Sync,
@@ -88,6 +89,7 @@ pub fn parallel_hicut(
 /// snapshotted behind `Arc`s — an O(N + E) copy, noise next to the
 /// O(N² + N·E) cut itself.  Prefer [`parallel_hicut`] on hot churn
 /// paths where even that copy matters.
+// analyze:allow(panic) — `mask` indexes are vertex ids < g.len(), `per_shard[i]` comes from enumerate over n_shards, and the lost-shard assert deliberately re-raises a pool-job panic instead of returning a silently truncated layout.
 pub fn parallel_hicut_pool(
     g: &Graph,
     alive: impl Fn(usize) -> bool,
@@ -137,6 +139,7 @@ pub fn parallel_hicut_pool(
 /// exactly the region shape for which [`hicut_region`] matches the
 /// sequential cut.  Deterministic: ties break on component id, bins on
 /// shard id.
+// analyze:allow(panic) — `load`/`shards` are sized k (guarded ≥ 1) and `comps[i]` indexes come from enumerate over comps.
 fn pack_shards(g: &Graph, comps: &[Vec<usize>], k: usize) -> Vec<Vec<usize>> {
     if k == 0 {
         return Vec::new();
@@ -167,6 +170,7 @@ fn pack_shards(g: &Graph, comps: &[Vec<usize>], k: usize) -> Vec<Vec<usize>> {
 /// emits subgraphs in ascending seed order, so one sort restores the
 /// exact sequential ordering.  Seeds are distinct, so the order is
 /// total.
+// analyze:allow(panic) — `sub[0]` exists because layer_cut never emits an empty subgraph.
 fn merge(per_shard: Vec<Vec<Vec<usize>>>) -> Partition {
     let mut subgraphs: Vec<Vec<usize>> = per_shard.into_iter().flatten().collect();
     subgraphs.sort_unstable_by_key(|sub| sub[0]);

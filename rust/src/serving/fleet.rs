@@ -87,7 +87,7 @@ impl<'a> Fleet<'a> {
         };
         for server in 0..servers {
             let owned: Vec<usize> = (0..n)
-                .filter(|&u| alive(u) && offload.server[u] == server)
+                .filter(|&u| alive(u) && offload.server.get(u) == Some(&server))
                 .collect();
             if owned.is_empty() {
                 report.batch_sizes.push(0);
@@ -108,7 +108,7 @@ impl<'a> Fleet<'a> {
             }
             // Halo accounting: vertices provided by other servers.
             for &v in &verts {
-                let owner = offload.server[v];
+                let owner = offload.server.get(v).copied().unwrap_or(UNASSIGNED);
                 if owner != server && owner != UNASSIGNED {
                     report.halo_fetches += 1;
                     report.halo_mb += cost
@@ -123,7 +123,7 @@ impl<'a> Fleet<'a> {
                 &verts,
                 self.svc.n_max,
                 self.svc.feat_pad,
-            );
+            )?;
             // lint:allow(wall-clock) — measures real inference latency
             // for the report/metrics; scheduling decisions use the
             // simulated cost model, not this timer.
@@ -135,8 +135,13 @@ impl<'a> Fleet<'a> {
             // another server's responsibility).
             let owned_set: std::collections::HashSet<usize> = owned.iter().copied().collect();
             for (row, &v) in padded.vertices.iter().enumerate() {
-                if owned_set.contains(&v) {
-                    report.predictions[v] = classes[row];
+                if !owned_set.contains(&v) {
+                    continue;
+                }
+                if let (Some(slot), Some(&class)) =
+                    (report.predictions.get_mut(v), classes.get(row))
+                {
+                    *slot = class;
                 }
             }
         }
@@ -154,8 +159,12 @@ impl<'a> Fleet<'a> {
                 continue;
             }
             total += 1;
-            let label = self.dataset.labels[self.scenario.users[u] as usize] as usize;
-            if pred == label {
+            let label = self
+                .scenario
+                .users
+                .get(u)
+                .and_then(|&backing| self.dataset.labels.get(backing as usize));
+            if label.map(|&l| l as usize) == Some(pred) {
                 hit += 1;
             }
         }

@@ -82,6 +82,8 @@ impl GnnService {
     /// Classify the real vertices of a padded graph: class per vertex.
     pub fn classify(&self, p: &PaddedGraph) -> crate::Result<Vec<usize>> {
         let logits = self.infer(p)?;
-        Ok(logits.row_argmax(self.classes)[..p.real_size()].to_vec())
+        let mut classes = logits.row_argmax(self.classes);
+        classes.truncate(p.real_size());
+        Ok(classes)
     }
 }

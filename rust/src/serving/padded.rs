@@ -23,7 +23,9 @@ impl PaddedGraph {
     /// Build from the scenario graph restricted to `vertices` (scenario
     /// user ids, at most `n_max`); features come from the dataset
     /// vertices backing each user (`users_backing[i]` = dataset vertex
-    /// of scenario user i).
+    /// of scenario user i).  Errs when `vertices` exceeds `n_max` or
+    /// names a user outside `users_backing`.
+    // analyze:allow(panic) — `deg` is a local Vec of len n_max and every index into it is r/c < k ≤ n_max, checked at entry.
     pub fn build(
         scenario_graph: &Graph,
         users_backing: &[u32],
@@ -31,15 +33,20 @@ impl PaddedGraph {
         vertices: &[usize],
         n_max: usize,
         feat_pad: usize,
-    ) -> Self {
-        assert!(vertices.len() <= n_max, "{} vertices > n_max {}", vertices.len(), n_max);
+    ) -> crate::Result<Self> {
+        if vertices.len() > n_max {
+            anyhow::bail!("{} vertices > n_max {}", vertices.len(), n_max);
+        }
         let k = vertices.len();
         let index: std::collections::HashMap<usize, usize> =
             vertices.iter().enumerate().map(|(i, &v)| (v, i)).collect();
 
         let mut x = Matrix::zeros(n_max, feat_pad);
         for (row, &v) in vertices.iter().enumerate() {
-            dataset.write_dense_row(users_backing[v] as usize, x.row_mut(row));
+            let backing = *users_backing.get(v).ok_or_else(|| {
+                anyhow::anyhow!("vertex {v} outside users_backing (len {})", users_backing.len())
+            })?;
+            dataset.write_dense_row(backing as usize, x.row_mut(row));
         }
 
         let mut adj = Matrix::zeros(n_max, n_max);
@@ -77,7 +84,7 @@ impl PaddedGraph {
                 inv_deg.set(r, 0, 1.0 / deg[r]);
             }
         }
-        PaddedGraph { vertices: vertices.to_vec(), x, adj, a_norm, inv_deg }
+        Ok(PaddedGraph { vertices: vertices.to_vec(), x, adj, a_norm, inv_deg })
     }
 
     pub fn real_size(&self) -> usize {
@@ -110,7 +117,7 @@ mod tests {
         let ds = tiny_dataset();
         let g = Graph::from_edges(4, &[(0, 1), (1, 2)]);
         let backing: Vec<u32> = vec![0, 1, 2, 3];
-        let p = PaddedGraph::build(&g, &backing, &ds, &[0, 1, 2], 8, 16);
+        let p = PaddedGraph::build(&g, &backing, &ds, &[0, 1, 2], 8, 16).expect("build");
         assert_eq!(p.real_size(), 3);
         assert_eq!(p.x.rows, 8);
         assert_eq!(p.x.cols, 16);
@@ -126,7 +133,7 @@ mod tests {
     fn adjacency_has_self_loops_and_symmetry() {
         let ds = tiny_dataset();
         let g = Graph::from_edges(4, &[(0, 2), (2, 3)]);
-        let p = PaddedGraph::build(&g, &[0, 1, 2, 3], &ds, &[0, 2, 3], 8, 16);
+        let p = PaddedGraph::build(&g, &[0, 1, 2, 3], &ds, &[0, 2, 3], 8, 16).expect("build");
         // rows: 0->u0, 1->u2, 2->u3
         assert_eq!(p.adj.at(0, 0), 1.0);
         assert_eq!(p.adj.at(0, 1), 1.0); // u0-u2
@@ -139,7 +146,7 @@ mod tests {
     fn a_norm_rows_match_manual() {
         let ds = tiny_dataset();
         let g = Graph::from_edges(2, &[(0, 1)]);
-        let p = PaddedGraph::build(&g, &[0, 1], &ds, &[0, 1], 4, 16);
+        let p = PaddedGraph::build(&g, &[0, 1], &ds, &[0, 1], 4, 16).expect("build");
         // Both vertices: degree 2 (self + edge): a_norm = 1/2 everywhere.
         for r in 0..2 {
             for c in 0..2 {
@@ -150,10 +157,20 @@ mod tests {
     }
 
     #[test]
+    fn oversized_or_unbacked_vertex_sets_err() {
+        let ds = tiny_dataset();
+        let g = Graph::from_edges(4, &[(0, 1)]);
+        // More vertices than n_max.
+        assert!(PaddedGraph::build(&g, &[0, 1, 2, 3], &ds, &[0, 1, 2], 2, 16).is_err());
+        // Vertex id with no backing entry.
+        assert!(PaddedGraph::build(&g, &[0, 1], &ds, &[0, 3], 4, 16).is_err());
+    }
+
+    #[test]
     fn excluded_neighbors_do_not_appear() {
         let ds = tiny_dataset();
         let g = Graph::from_edges(4, &[(0, 1), (0, 3)]);
-        let p = PaddedGraph::build(&g, &[0, 1, 2, 3], &ds, &[0, 1], 4, 16);
+        let p = PaddedGraph::build(&g, &[0, 1, 2, 3], &ds, &[0, 1], 4, 16).expect("build");
         // User 3 not in subgraph: its edge to 0 must not appear anywhere.
         assert_eq!(p.adj.row(0).iter().filter(|&&v| v > 0.0).count(), 2);
     }

@@ -109,29 +109,39 @@ impl Router {
 
     /// Route a request according to the offloading decision; returns
     /// the chosen server.  The first request into an empty queue opens
-    /// that server's `max_wait` window.
+    /// that server's `max_wait` window.  Users the policy does not
+    /// cover, or placements onto servers this router was not sized
+    /// for (an offload built for a different fleet), are declined
+    /// rather than routed.
     pub fn submit(&mut self, user: usize, offload: &Offload, now: Instant) -> Option<usize> {
-        let server = offload.server[user];
-        if server == UNASSIGNED {
+        let server = match offload.server.get(user) {
+            Some(&s) if s != UNASSIGNED => s,
+            _ => return None,
+        };
+        let (Some(queue), Some(deadline)) =
+            (self.queues.get_mut(server), self.deadlines.get_mut(server))
+        else {
             return None;
+        };
+        if deadline.is_none() {
+            *deadline = Some(now);
         }
-        if self.deadlines[server].is_none() {
-            self.deadlines[server] = Some(now);
-        }
-        self.queues[server].push(Request { user, enqueued: now });
+        queue.push(Request { user, enqueued: now });
         trace::instant(
             "router.enqueue",
             &[
                 ("user", user as f64),
                 ("server", server as f64),
-                ("depth", self.queues[server].len() as f64),
+                ("depth", queue.len() as f64),
             ],
         );
         Some(server)
     }
 
+    /// Queue depth of `server` (0 for servers this router has no
+    /// queue for).
     pub fn queue_len(&self, server: usize) -> usize {
-        self.queues[server].len()
+        self.queues.get(server).map_or(0, Vec::len)
     }
 
     /// Collect every batch that is ready at `now` (full or timed out).
@@ -145,7 +155,8 @@ impl Router {
     /// residue re-anchors its window to its own oldest request.
     pub fn ready_batches(&mut self, now: Instant) -> Vec<(usize, Vec<usize>)> {
         let mut out = Vec::new();
-        for (server, q) in self.queues.iter_mut().enumerate() {
+        let lanes = self.queues.iter_mut().zip(self.deadlines.iter_mut());
+        for (server, (q, deadline)) in lanes.enumerate() {
             let mut drained_full = false;
             while q.len() >= self.policy.max_batch {
                 let batch: Vec<usize> = q.drain(..self.policy.max_batch).map(|r| r.user).collect();
@@ -164,9 +175,9 @@ impl Router {
             }
             if drained_full {
                 // The residue's window starts at its own oldest request.
-                self.deadlines[server] = q.first().map(|r| r.enqueued);
+                *deadline = q.first().map(|r| r.enqueued);
             }
-            if let Some(opened) = self.deadlines[server] {
+            if let Some(opened) = *deadline {
                 if now.duration_since(opened) >= self.policy.max_wait {
                     let batch: Vec<usize> = q.drain(..).map(|r| r.user).collect();
                     self.dispatched_batches += 1;
@@ -180,7 +191,7 @@ impl Router {
                         ],
                     );
                     out.push((server, batch));
-                    self.deadlines[server] = None;
+                    *deadline = None;
                 }
             }
         }
@@ -201,7 +212,8 @@ impl Router {
     /// that contract.)
     pub fn flush(&mut self) -> Vec<(usize, Vec<usize>)> {
         let mut out = Vec::new();
-        for (server, q) in self.queues.iter_mut().enumerate() {
+        let lanes = self.queues.iter_mut().zip(self.deadlines.iter_mut());
+        for (server, (q, deadline)) in lanes.enumerate() {
             while !q.is_empty() {
                 let take = q.len().min(self.policy.max_batch);
                 let batch: Vec<usize> = q.drain(..take).map(|r| r.user).collect();
@@ -217,7 +229,7 @@ impl Router {
                 );
                 out.push((server, batch));
             }
-            self.deadlines[server] = None;
+            *deadline = None;
         }
         out
     }
@@ -229,6 +241,20 @@ mod tests {
 
     fn offload_all_to(server: usize, n: usize) -> Offload {
         Offload { server: vec![server; n] }
+    }
+
+    #[test]
+    fn submit_declines_out_of_range_placements() {
+        let mut r = Router::new(1, BatchPolicy::default());
+        let off = Offload { server: vec![0, 5] };
+        let now = Instant::now();
+        assert_eq!(r.submit(0, &off, now), Some(0));
+        // Placement onto a server this router was not sized for.
+        assert_eq!(r.submit(1, &off, now), None);
+        // User outside the offload policy entirely.
+        assert_eq!(r.submit(9, &off, now), None);
+        assert_eq!(r.queue_len(0), 1);
+        assert_eq!(r.queue_len(5), 0);
     }
 
     #[test]

@@ -251,6 +251,7 @@ struct InferCtx<'a> {
 /// `infer = None` the model stage is a no-op (synthetic mode: every
 /// request still flows enqueue → close → batch → complete, but
 /// nothing is classified against a dataset, so accuracy reads 0).
+// analyze:allow(panic) — indexes are `rng.below(len)` draws into non-empty `active` and rows of `padded.vertices`, whose backing arrays are sized by the same environment; all in-bounds by construction.
 fn serve_dynamic_core(
     env: &mut Env,
     rng: &mut Rng,
@@ -339,7 +340,7 @@ fn serve_dynamic_core(
                             &verts,
                             ctx.svc.n_max,
                             ctx.svc.feat_pad,
-                        );
+                        )?;
                         let classes = ctx.svc.classify(&padded)?;
                         let in_batch: std::collections::HashSet<usize> =
                             batch.iter().copied().collect();
@@ -450,7 +451,10 @@ pub fn serve_synthetic_run(
     anyhow::ensure!(steps >= 1, "synthetic serving needs at least one churn step");
     let specs = crate::scenario::parse_spec_list(spec, n_users, n_assocs)?;
     let mut rng = Rng::seed_from(seed);
-    let scenario = specs[0].generate(params, &mut rng);
+    let Some(first) = specs.first() else {
+        anyhow::bail!("spec {spec:?} resolved to no scenarios");
+    };
+    let scenario = first.generate(params, &mut rng);
     let mut env = Env::from_scenario(&scenario, EnvConfig::default());
     env.set_workers(workers.max(1));
     if incremental {
@@ -475,6 +479,7 @@ pub fn serve_run(
 
 /// The loop with an explicit placement policy.
 #[allow(clippy::too_many_arguments)]
+// analyze:allow(panic) — `submit_times[req]` is pushed before every pending entry, user draws are `rng.below(len)` on a non-empty slice, and label/class rows come from the same padded batch; all in-bounds by construction.
 pub fn serve_run_with(
     ctrl: &Controller,
     dataset: &str,
@@ -567,7 +572,7 @@ pub fn serve_run_with(
                     &verts,
                     ctx.svc.n_max,
                     ctx.svc.feat_pad,
-                );
+                )?;
                 classes = ctx.svc.classify(&padded)?;
             }
             let done = Instant::now();

@@ -1,0 +1,22 @@
+//! Analyzed as `serving/fixture.rs`: a private helper two calls deep
+//! asserts and indexes; both must be reported against the pub entry
+//! `serve` with the chain `serve -> dispatch -> lookup`.
+
+const TABLE: [usize; 4] = [1, 2, 3, 4];
+
+pub fn serve(reqs: &[usize]) -> usize {
+    let mut total = 0;
+    for &r in reqs {
+        total += dispatch(r);
+    }
+    total
+}
+
+fn dispatch(r: usize) -> usize {
+    lookup(r)
+}
+
+fn lookup(r: usize) -> usize {
+    assert!(r < TABLE.len(), "fixture bound");
+    TABLE[r]
+}

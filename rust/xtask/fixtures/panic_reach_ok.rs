@@ -1,0 +1,35 @@
+//! Analyzed as `serving/fixture.rs`: the passing counterpart of
+//! `panic_reach_bad.rs` — the deep helper is guarded, one fn carries
+//! a fn-level allow, and one call edge is explicitly trusted.
+
+const TABLE: [usize; 4] = [1, 2, 3, 4];
+const RAW: [usize; 2] = [7, 9];
+
+pub fn serve(reqs: &[usize]) -> usize {
+    let mut total = 0;
+    for &r in reqs {
+        total += dispatch(r);
+    }
+    total
+}
+
+fn dispatch(r: usize) -> usize {
+    lookup(r)
+}
+
+fn lookup(r: usize) -> usize {
+    TABLE.get(r).copied().unwrap_or(0)
+}
+
+// analyze:allow(panic) — fixture: bounds pre-validated by the caller.
+pub fn checked(xs: &[usize], i: usize) -> usize {
+    xs[i]
+}
+
+pub fn trusting(r: usize) -> usize {
+    risky(r) // analyze:allow(panic: risky) — fixture: r validated upstream.
+}
+
+fn risky(r: usize) -> usize {
+    RAW[r]
+}

@@ -1,0 +1,32 @@
+//! Splitter torture fixture (firing twin): the same constructs as the
+//! clean twin, but with the banned tokens just *outside* the opaque
+//! regions — each must fire exactly once.
+
+/* x.unwrap() safely inside a comment */
+pub fn after_comment(v: &[usize]) -> usize {
+    *v.first().unwrap()
+}
+
+pub fn after_raw_string() -> usize {
+    let raw = r#"x.unwrap() not code"#;
+    raw.len().checked_add(1).unwrap()
+}
+
+pub fn after_lifetime_tick<'a>(xs: &'a [usize]) -> usize {
+    *xs.first().unwrap()
+}
+
+pub fn before_test_boundary() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nothing_after_the_boundary_counts() {
+        assert_eq!(after_comment(&[7]), 7);
+        let _t = std::time::Instant::now();
+    }
+}

@@ -1,0 +1,32 @@
+//! Splitter torture fixture (clean twin): every banned token below
+//! sits inside a literal, a comment, or a `#[cfg(test)]` module, and
+//! must never reach the code half of the split.
+
+/* Instant::now() in a block comment,
+   /* nested: x.unwrap() still inside the comment */
+   and still inside the outer comment here */
+pub fn opaque_regions() -> &'static str {
+    let raw = r##"Instant::now() "# x.unwrap() // not a comment"##;
+    let _bracket = '[';
+    let _quote = '\'';
+    raw
+}
+
+pub fn generic<'a>(x: &'a str) -> &'a str {
+    // The lifetime ticks above must read as code (not open a char
+    // literal that would swallow the rest of the signature).
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_and_clocks_are_fine_in_tests() {
+        let v = vec![1usize];
+        assert_eq!(v.first().copied().unwrap(), 1);
+        let _t = std::time::Instant::now();
+        assert_eq!(opaque_regions().len(), 45);
+    }
+}

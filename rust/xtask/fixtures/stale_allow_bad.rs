@@ -1,0 +1,22 @@
+//! Analyzed as `util/metrics.rs`: four escape hatches whose rules no
+//! longer fire — a lint:allow in an already-exempt file, an orphaned
+//! `// ordering:` note, and two dead analyze:allow annotations.
+
+// lint:allow(wall-clock) — this file is on the wall-clock exempt list already.
+pub fn snapshot_age_ms() -> u64 {
+    7
+}
+
+// ordering: Relaxed — there is no atomic operation below anymore.
+pub fn hits() -> u64 {
+    1
+}
+
+// analyze:allow(version) — nothing stamped or memoized here.
+pub fn stamp() -> u64 {
+    2
+}
+
+pub fn first(xs: &[u64]) -> u64 {
+    xs.first().copied().unwrap_or(0) // analyze:allow(panic) — no source on this line.
+}

@@ -1,0 +1,23 @@
+//! Analyzed as `graph/dynamic.rs`: a `&mut self` mutator writes a
+//! stamped field (`mask`) and never reaches `topology.bump()` — the
+//! version pass must fire on `remove_users` and stay quiet on
+//! `add_assoc`.
+
+pub struct DynamicGraph {
+    graph: Graph,
+    mask: Vec<bool>,
+    topology: Version,
+}
+
+impl DynamicGraph {
+    pub fn remove_users(&mut self, users: &[usize]) {
+        for &v in users {
+            self.mask[v] = false;
+        }
+    }
+
+    pub fn add_assoc(&mut self, u: usize, v: usize) {
+        self.graph.add_edge(u, v);
+        self.topology.bump();
+    }
+}

@@ -1,0 +1,30 @@
+//! Analyzed as `graph/dynamic.rs`: the passing counterpart of
+//! `version_bump_bad.rs` — one mutator bumps through a same-file
+//! helper (transitive reach), one is reason-annotated.
+
+pub struct DynamicGraph {
+    graph: Graph,
+    mask: Vec<bool>,
+    pos: Vec<Pos>,
+    topology: Version,
+}
+
+impl DynamicGraph {
+    /// The write and the bump live in different fns: the pass must
+    /// follow the intra-file call edge.
+    pub fn remove_users(&mut self, users: &[usize]) {
+        for &v in users {
+            self.mask[v] = false;
+        }
+        self.mark_changed();
+    }
+
+    fn mark_changed(&mut self) {
+        self.topology.bump();
+    }
+
+    // analyze:allow(version) — fixture: shadow buffer, stamped on flush.
+    pub fn stage_pos(&mut self, v: usize, p: Pos) {
+        self.pos[v] = p;
+    }
+}

@@ -1,0 +1,22 @@
+//! Analyzed as `drl/env.rs`: `install_partition` forgets
+//! `layout.bump()` and the memoized template key omits the layout
+//! version its rebuild closure depends on — two version findings.
+
+impl Env {
+    fn install_partition(&mut self, partition: &Partition) {
+        let n = self.users.capacity();
+        self.subgraph_of = partition.assignment(n);
+        self.recompute_obs_dynamics();
+    }
+
+    fn assemble(cfg: EnvConfig, users: DynamicGraph) -> Self {
+        let mut env = Env::seed(cfg, users);
+        env.params_ver.bump();
+        env
+    }
+
+    fn obs_templates(&self) -> Row {
+        let key = [self.users.topology_version(), self.params_ver];
+        self.obs_templates.get_or_rebuild(&key, || self.build_obs_templates())
+    }
+}

@@ -1,0 +1,38 @@
+//! Analyzed as `drl/env.rs`: sound producers and memo keys — both
+//! named producers stamp their versions, both registered rebuild
+//! closures carry full keys (one resolved through a multi-line
+//! `let key = […]`), and an unregistered scratch cache is
+//! reason-annotated.
+
+impl Env {
+    fn install_partition(&mut self, partition: &Partition) {
+        self.subgraph_of = partition.assignment(self.users.capacity());
+        self.layout.bump();
+        self.layout_at = self.users.topology_version();
+    }
+
+    fn assemble(cfg: EnvConfig, users: DynamicGraph) -> Self {
+        let mut env = Env::seed(cfg, users);
+        env.params_ver.bump();
+        env
+    }
+
+    fn obs_templates(&self) -> Row {
+        let key = [
+            self.users.topology_version(),
+            self.layout,
+            self.params_ver,
+        ];
+        self.obs_templates.get_or_rebuild(&key, || self.build_obs_templates())
+    }
+
+    fn rate_tables(&self) -> Rates {
+        let key = [self.users.topology_version(), self.params_ver];
+        self.rates.get_or_rebuild(&key, || RateTables::build(&self.cost_model()))
+    }
+
+    // analyze:allow(version) — fixture: scratch cache keyed on an ad-hoc tick.
+    fn scratch(&self) -> u64 {
+        self.scratch.get_or_rebuild(&[self.tick], || self.compute_scratch())
+    }
+}

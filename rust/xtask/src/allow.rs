@@ -1,0 +1,176 @@
+//! The reasoned escape hatches: `lint:allow(<rule>) — <reason>` (PR 7)
+//! and `analyze:allow(<rule>[: <callee>]) — <reason>` (the analysis
+//! passes).  A reason is mandatory in both grammars; the accepted dash
+//! separators are `—`, `--` and `-`.
+//!
+//! Coverage is positional and identical for both: an annotation on a
+//! code line covers that line; an annotation in a contiguous
+//! comment-only block covers the first code line below the block.  The
+//! panic pass additionally treats an `analyze:allow(panic)` directly
+//! above a `fn` header as covering every panic source in that fn's
+//! body, and `analyze:allow(panic: <callee>)` as covering call edges
+//! to `<callee>` on the covered line.
+
+use crate::splitter::Split;
+
+/// Parse `lint:allow(<rule>)` out of one comment line.  The `bool` is
+/// whether a dash-separated reason follows (`—`, `--` or `-`).
+pub fn parse_allow(comment: &str) -> Option<(String, bool)> {
+    parse_tagged_allow(comment, "lint:allow(").map(|(rule, _, reason)| (rule, reason))
+}
+
+/// Parse `analyze:allow(<rule>[: <callee>])` out of one comment line:
+/// `(rule, callee, has_reason)`.
+pub fn parse_analyze_allow(comment: &str) -> Option<(String, Option<String>, bool)> {
+    parse_tagged_allow(comment, "analyze:allow(")
+}
+
+fn parse_tagged_allow(comment: &str, tag: &str) -> Option<(String, Option<String>, bool)> {
+    let pos = comment.find(tag)?;
+    let rest = &comment[pos + tag.len()..];
+    let close = rest.find(')')?;
+    let inner = &rest[..close];
+    let (rule, callee) = match inner.split_once(':') {
+        Some((r, c)) => (r.trim(), Some(c.trim().to_string())),
+        None => (inner.trim(), None),
+    };
+    let rule_ok = !rule.is_empty() && rule.chars().all(|c| c.is_ascii_lowercase() || c == '-');
+    let callee_ok = callee.as_deref().is_none_or(|c| {
+        !c.is_empty() && c.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '_')
+    });
+    if !rule_ok || !callee_ok {
+        return None;
+    }
+    let mut tail = rest[close + 1..].trim_start();
+    let mut dashed = false;
+    for dash in ["—", "--", "-"] {
+        if let Some(t) = tail.strip_prefix(dash) {
+            tail = t;
+            dashed = true;
+            break;
+        }
+    }
+    Some((rule.to_string(), callee, dashed && !tail.trim().is_empty()))
+}
+
+/// Is the finding at line `idx` covered by a well-formed
+/// `lint:allow(rule)` on the same line or the contiguous comment block
+/// directly above?
+pub fn allowed(rule: &str, idx: usize, s: &Split) -> bool {
+    covered_by(idx, s, |line| {
+        parse_allow(line).is_some_and(|(r, reason)| r == rule && reason)
+    })
+}
+
+/// As [`allowed`], for `analyze:allow(rule)` without a callee.
+pub fn analyze_allowed(rule: &str, idx: usize, s: &Split) -> bool {
+    covered_by(idx, s, |line| {
+        parse_analyze_allow(line)
+            .is_some_and(|(r, callee, reason)| r == rule && callee.is_none() && reason)
+    })
+}
+
+/// Is the call on line `idx` covered by `analyze:allow(rule: callee)`?
+pub fn analyze_edge_allowed(rule: &str, callee: &str, idx: usize, s: &Split) -> bool {
+    covered_by(idx, s, |line| {
+        parse_analyze_allow(line)
+            .is_some_and(|(r, c, reason)| r == rule && c.as_deref() == Some(callee) && reason)
+    })
+}
+
+fn covered_by(idx: usize, s: &Split, hit: impl Fn(&str) -> bool) -> bool {
+    if hit(&s.comment[idx]) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let comment_only = s.code[j].trim().is_empty() && !s.comment[j].trim().is_empty();
+        if !comment_only {
+            return false;
+        }
+        if hit(&s.comment[j]) {
+            return true;
+        }
+    }
+    false
+}
+
+/// The set of lines an annotation sitting on line `j` covers: `j`
+/// itself when the line carries code (inline annotation), otherwise
+/// the first code-bearing line below the comment block.  The stale
+/// pass asks the inverse question of [`allowed`] — "which finding
+/// would this annotation suppress?" — so the two must stay mirror
+/// images.
+pub fn coverage_of(j: usize, s: &Split) -> Vec<usize> {
+    if !s.code[j].trim().is_empty() {
+        return vec![j];
+    }
+    let mut k = j + 1;
+    while k < s.code.len() {
+        let comment_only = s.code[k].trim().is_empty() && !s.comment[k].trim().is_empty();
+        if !comment_only {
+            break;
+        }
+        k += 1;
+    }
+    // Skip blank separator-free attachment: `allowed` walks up through
+    // comment-only lines exclusively, so a blank line breaks coverage.
+    if k < s.code.len() && !s.code[k].trim().is_empty() {
+        vec![j, k]
+    } else {
+        vec![j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::splitter::split_code_comment;
+
+    #[test]
+    fn analyze_allow_parses_rule_and_callee() {
+        let (r, c, ok) = parse_analyze_allow("// analyze:allow(panic) — indices in range").unwrap();
+        assert_eq!((r.as_str(), c, ok), ("panic", None, true));
+        let (r, c, ok) =
+            parse_analyze_allow("// analyze:allow(panic: helper) -- caller pre-validates").unwrap();
+        assert_eq!((r.as_str(), c.as_deref(), ok), ("panic", Some("helper"), true));
+    }
+
+    #[test]
+    fn analyze_allow_requires_a_reason() {
+        let (_, _, ok) = parse_analyze_allow("// analyze:allow(version)").unwrap();
+        assert!(!ok);
+        let (_, _, ok) = parse_analyze_allow("// analyze:allow(version) — ").unwrap();
+        assert!(!ok);
+    }
+
+    #[test]
+    fn bad_callee_ident_is_malformed() {
+        assert!(parse_analyze_allow("// analyze:allow(panic: a b) — x").is_none());
+        assert!(parse_analyze_allow("// analyze:allow(panic:) — x").is_none());
+    }
+
+    #[test]
+    fn coverage_mirrors_allowed() {
+        let src = "\
+fn f() {
+    // analyze:allow(version) — reason one.
+    // second comment line.
+    mutate();
+    other();
+}
+";
+        let s = split_code_comment(src);
+        // The block annotation on line 1 covers the attach line 3.
+        assert_eq!(coverage_of(1, &s), vec![1, 3]);
+        assert!(analyze_allowed("version", 3, &s));
+        assert!(!analyze_allowed("version", 4, &s));
+        // An inline annotation covers its own line only.
+        let src = "x(); // analyze:allow(panic) — inline.\ny();\n";
+        let s = split_code_comment(src);
+        assert_eq!(coverage_of(0, &s), vec![0]);
+        assert!(analyze_allowed("panic", 0, &s));
+        assert!(!analyze_allowed("panic", 1, &s));
+    }
+}

@@ -1,0 +1,954 @@
+//! `xtask analyze` — semantic passes over the item model and call
+//! graph (see `rust/ANALYSIS.md` for the full design):
+//!
+//! * **version** — version-stamp soundness.  `&mut self` methods on
+//!   stamped producers that write stamped state must bump/record the
+//!   corresponding `Version` on some path (directly or through a
+//!   same-file helper); named producer fns must contain their stamp
+//!   markers; every `Memoized::get_or_rebuild` key slice must mention
+//!   a version for each registered producer the rebuild closure reads.
+//! * **panic** — transitive panic-freedom for `serving/` +
+//!   `partition/`.  Direct sources (`panic!`-family macros,
+//!   `.unwrap()`, `.expect(`, indexing `[…]`) propagate backward over
+//!   the intra-layer call graph; a finding names the call chain from
+//!   the nearest pub entry point.
+//! * **stale-allow** — a `lint:allow`/`analyze:allow` annotation (or
+//!   an `// ordering:` note) whose rule no longer fires on its scope
+//!   is itself a finding, so escape hatches cannot rot.
+//!
+//! Escape hatch grammar: `// analyze:allow(<rule>[: <callee>]) —
+//! <reason>` on the offending line, in the contiguous comment block
+//! directly above it, or directly above a `fn` header (covering the
+//! whole body; `version` also accepts fn-level coverage).  The
+//! `: <callee>` form suppresses panic propagation along call edges to
+//! `<callee>` on the covered line only.  Stale-allow findings cannot
+//! themselves be allowed.
+
+use std::collections::BTreeMap;
+
+use crate::allow::{
+    analyze_allowed, analyze_edge_allowed, coverage_of, parse_allow, parse_analyze_allow,
+};
+use crate::items::{extract_calls, extract_items, CallKind, FnItem};
+use crate::lint::{lint_scan, Raw, KNOWN_RULES, ORDERING_FILES, ORDERING_WINDOW};
+use crate::report::Finding;
+use crate::splitter::{find_word, is_word, leading_ident, Split};
+
+pub const ANALYZE_RULES: [&str; 2] = ["version", "panic"];
+
+// ------------------------------------------------------------------
+// Producer/consumer tables.  These encode the version-stamp contract
+// of `rust/ARCHITECTURE.md`; growing a new producer or memo consumer
+// means extending them (the pass fails closed on unregistered
+// `get_or_rebuild` sites, so forgetting is itself a finding).
+
+/// The stamped-field producer: every `&mut self` method of this impl
+/// that writes one of the stamped fields must reach the bump marker.
+const STAMPED_FILE: &str = "graph/dynamic.rs";
+const STAMPED_IMPL: &str = "DynamicGraph";
+const STAMPED_FIELDS: [&str; 4] = ["graph", "mask", "pos", "task_mb"];
+const STAMPED_BUMP: &str = "topology.bump(";
+
+/// (file, fn name, any-of stamp markers) — producers whose stamp
+/// discipline is per-fn rather than per-field.
+const NAMED_PRODUCERS: [(&str, &str, &[&str]); 4] = [
+    ("drl/env.rs", "install_partition", &["layout.bump("]),
+    ("drl/env.rs", "assemble", &["params_ver.bump("]),
+    ("partition/incremental/repair.rs", "apply", &["repaired_to =", "note_repaired("]),
+    ("partition/incremental/repair.rs", "full_recut", &["repaired_to =", "note_repaired("]),
+];
+
+/// (file, closure marker, required version tokens in the key slice):
+/// if a `get_or_rebuild` rebuild closure mentions the marker, its key
+/// must word-mention every required token.
+const MEMO_DEPS: [(&str, &str, &[&str]); 3] = [
+    ("drl/env.rs", "cost_model", &["topology_version", "params_ver"]),
+    ("drl/env.rs", "build_obs_templates", &["topology_version", "layout", "params_ver"]),
+    ("util/stats.rs", "self.xs", &["edits"]),
+];
+
+/// Receiver methods that mutate the receiver (write detection for
+/// `self.<field>.<method>(…)`).
+const MUT_METHODS: [&str; 26] = [
+    "push", "pop", "insert", "remove", "clear", "truncate", "extend", "retain", "resize",
+    "fill", "swap", "sort", "sort_unstable", "sort_by", "sort_unstable_by", "drain", "take",
+    "set", "add_edge", "remove_edge", "isolate", "bump", "get_mut", "iter_mut", "first_mut",
+    "last_mut",
+];
+
+const COMPOUND_ASSIGN: [&str; 10] =
+    ["+=", "-=", "*=", "/=", "%=", "&=", "|=", "^=", "<<=", ">>="];
+
+/// `panic!`-family macro names (word-matched, so `debug_assert*` never
+/// matches — debug assertions are compiled out of release serving).
+const PANIC_MACROS: [&str; 7] =
+    ["panic", "assert", "assert_eq", "assert_ne", "unreachable", "todo", "unimplemented"];
+
+/// Layers under the no-panic contract.
+pub fn panic_scope(rel: &str) -> bool {
+    rel.starts_with("serving/") || rel.starts_with("partition/")
+}
+
+// ------------------------------------------------------------------
+
+struct Ctx {
+    rel: String,
+    split: Split,
+    end: usize,
+    items: Vec<FnItem>,
+    raw_lint: Vec<Raw>,
+}
+
+fn qual(f: &FnItem) -> String {
+    match &f.impl_type {
+        Some(t) => format!("{t}::{}", f.name),
+        None => f.name.clone(),
+    }
+}
+
+/// Analyze a set of files (rel path with `/` separators, source).
+/// Returns *reported* findings (suppressions applied); sort with
+/// [`crate::report::sort_findings`] before rendering.
+pub fn analyze_tree(files: &[(String, String)]) -> Vec<Finding> {
+    let ctxs: Vec<Ctx> = files
+        .iter()
+        .map(|(rel, src)| {
+            let scan = lint_scan(rel, src);
+            let items = extract_items(&scan.split, scan.end);
+            Ctx { rel: rel.clone(), split: scan.split, end: scan.end, items, raw_lint: scan.raw }
+        })
+        .collect();
+
+    let raw_version: Vec<Vec<(usize, String)>> = ctxs.iter().map(version_raw).collect();
+    let panic = PanicModel::build(&ctxs);
+
+    let mut findings = Vec::new();
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        for (line, msg) in &raw_version[ci] {
+            if !version_suppressed(ctx, *line) {
+                findings.push(Finding {
+                    rule: "version",
+                    file: ctx.rel.clone(),
+                    line: line + 1,
+                    msg: msg.clone(),
+                });
+            }
+        }
+    }
+    findings.extend(panic.report(&ctxs));
+    findings.extend(stale_pass(&ctxs, &raw_version, &panic));
+    findings
+}
+
+// ---------------------------------------------------------- version
+
+fn body_range(ctx: &Ctx, f: &FnItem) -> std::ops::RangeInclusive<usize> {
+    f.body_start..=f.body_end.min(ctx.split.code.len().saturating_sub(1))
+}
+
+fn body_text(ctx: &Ctx, f: &FnItem) -> String {
+    ctx.split.code[body_range(ctx, f)].join("\n")
+}
+
+/// Same-file call resolution (by impl-qualified name, then unique
+/// name).  Used for the marker-reach fixpoint.
+fn resolve_in_file(ctx: &Ctx, caller: &FnItem, name: &str, kind: &CallKind) -> Option<usize> {
+    let by_name: Vec<usize> =
+        ctx.items.iter().enumerate().filter(|(_, f)| f.name == name).map(|(i, _)| i).collect();
+    let in_impl = |ty: &Option<String>| -> Vec<usize> {
+        ctx.items
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.name == name && f.impl_type == *ty)
+            .map(|(i, _)| i)
+            .collect()
+    };
+    match kind {
+        CallKind::Qualified(q) => {
+            let c = in_impl(&Some(q.clone()));
+            if c.len() == 1 {
+                return Some(c[0]);
+            }
+            None
+        }
+        CallKind::Method { on_self: true } => {
+            let c = in_impl(&caller.impl_type);
+            if c.len() == 1 {
+                return Some(c[0]);
+            }
+            if by_name.len() == 1 {
+                return Some(by_name[0]);
+            }
+            None
+        }
+        _ => {
+            if by_name.len() == 1 {
+                return Some(by_name[0]);
+            }
+            None
+        }
+    }
+}
+
+/// For each fn in the file: does some path through same-file calls
+/// reach a body containing one of `markers`?
+fn marker_reach(ctx: &Ctx, markers: &[&str]) -> Vec<bool> {
+    let n = ctx.items.len();
+    let mut reach: Vec<bool> = ctx
+        .items
+        .iter()
+        .map(|f| {
+            let body = body_text(ctx, f);
+            markers.iter().any(|m| body.contains(m))
+        })
+        .collect();
+    let callees: Vec<Vec<usize>> = ctx
+        .items
+        .iter()
+        .map(|f| {
+            extract_calls(&ctx.split, f)
+                .iter()
+                .filter_map(|c| resolve_in_file(ctx, f, &c.name, &c.kind))
+                .collect()
+        })
+        .collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for i in 0..n {
+            if !reach[i] && callees[i].iter().any(|&c| reach[c]) {
+                reach[i] = true;
+                changed = true;
+            }
+        }
+    }
+    reach
+}
+
+/// Which stamped fields does `f` write?  A write is `self.F… = `
+/// (plain or compound assignment, after any `[…]` index groups), a
+/// mutating method call `self.F.push(…)`, or a `&mut self.F` borrow.
+fn stamped_writes(ctx: &Ctx, f: &FnItem) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    for field in STAMPED_FIELDS {
+        'lines: for i in body_range(ctx, f) {
+            let code = &ctx.split.code[i];
+            let mut from = 0;
+            while let Some(at) = find_word(code, field, from) {
+                from = at + field.len();
+                let before = &code[..at];
+                if !before.ends_with("self.") {
+                    continue;
+                }
+                let pre = before[..before.len() - 5].trim_end();
+                let mut_borrow = pre.ends_with("mut")
+                    && !pre[..pre.len() - 3].chars().next_back().is_some_and(is_word);
+                let mut rest = &code[at + field.len()..];
+                // Skip `[…]` index groups (conservatively bail on a
+                // group left open by a line break).
+                loop {
+                    let t = rest.trim_start();
+                    let Some(tail) = t.strip_prefix('[') else {
+                        rest = t;
+                        break;
+                    };
+                    let mut depth = 1usize;
+                    let mut close = None;
+                    for (k, c) in tail.char_indices() {
+                        match c {
+                            '[' => depth += 1,
+                            ']' => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    close = Some(k);
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                    match close {
+                        Some(k) => rest = &tail[k + 1..],
+                        None => {
+                            rest = "";
+                            break;
+                        }
+                    }
+                }
+                let written = mut_borrow
+                    || (!rest.starts_with("==") && rest.starts_with('='))
+                    || COMPOUND_ASSIGN.iter().any(|op| rest.starts_with(op))
+                    || rest
+                        .strip_prefix('.')
+                        .is_some_and(|m| MUT_METHODS.contains(&leading_ident(m.trim_start())));
+                if written {
+                    out.push(field);
+                    break 'lines;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Raw (pre-suppression) version findings for one file, 0-based lines.
+fn version_raw(ctx: &Ctx) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    if ctx.rel == STAMPED_FILE {
+        let reach = marker_reach(ctx, &[STAMPED_BUMP]);
+        for (fi, f) in ctx.items.iter().enumerate() {
+            if f.impl_type.as_deref() != Some(STAMPED_IMPL) || !f.has_mut_self {
+                continue;
+            }
+            let fields = stamped_writes(ctx, f);
+            if !fields.is_empty() && !reach[fi] {
+                out.push((
+                    f.sig_line,
+                    format!(
+                        "`{}` writes stamped state ({}) with no `{STAMPED_BUMP}…)` on any path",
+                        qual(f),
+                        fields.join(", ")
+                    ),
+                ));
+            }
+        }
+    }
+    for (file, name, markers) in NAMED_PRODUCERS {
+        if ctx.rel != file {
+            continue;
+        }
+        let hits: Vec<usize> = ctx
+            .items
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.name == name)
+            .map(|(i, _)| i)
+            .collect();
+        if hits.is_empty() {
+            out.push((
+                0,
+                format!(
+                    "producer fn `{name}` not found — update NAMED_PRODUCERS in \
+                     xtask/src/analyze.rs"
+                ),
+            ));
+            continue;
+        }
+        let reach = marker_reach(ctx, markers);
+        for fi in hits {
+            if !reach[fi] {
+                out.push((
+                    ctx.items[fi].sig_line,
+                    format!(
+                        "`{}` must record its version (expected one of: {}) on some path",
+                        qual(&ctx.items[fi]),
+                        markers.join(", ")
+                    ),
+                ));
+            }
+        }
+    }
+    out.extend(memo_sites(ctx));
+    out.sort();
+    out
+}
+
+/// Check every `Memoized::get_or_rebuild` call site in the file
+/// against [`MEMO_DEPS`].
+fn memo_sites(ctx: &Ctx) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let end = ctx.end.min(ctx.split.code.len());
+    let mut offsets = Vec::with_capacity(end);
+    let mut text = String::new();
+    for i in 0..end {
+        offsets.push(text.len());
+        text.push_str(&ctx.split.code[i]);
+        text.push('\n');
+    }
+    let deps: Vec<_> = MEMO_DEPS.iter().filter(|(f, _, _)| *f == ctx.rel).collect();
+    let mut from = 0;
+    while let Some(at) = find_word(&text, "get_or_rebuild", from) {
+        from = at + "get_or_rebuild".len();
+        let rest = &text[at + "get_or_rebuild".len()..];
+        if !rest.starts_with('(') {
+            continue;
+        }
+        // Skip the definition itself (`fn get_or_rebuild(`).
+        if text[..at].trim_end().ends_with("fn") {
+            continue;
+        }
+        let line = offsets.partition_point(|&o| o <= at).saturating_sub(1);
+        let Some(args) = paren_group(rest) else { continue };
+        let (key_expr, closure) = split_first_arg(args);
+        let key_text = resolve_key(ctx, line, key_expr.trim());
+        let mut matched = false;
+        for (_, marker, required) in &deps {
+            if !closure.contains(marker) {
+                continue;
+            }
+            matched = true;
+            for req in *required {
+                if find_word(&key_text, req, 0).is_none() {
+                    out.push((
+                        line,
+                        format!(
+                            "memoized key omits `{req}` but the rebuild closure reads \
+                             `{marker}`-derived state"
+                        ),
+                    ));
+                }
+            }
+        }
+        if !matched {
+            out.push((
+                line,
+                "get_or_rebuild closure reads no registered producer — extend MEMO_DEPS in \
+                 xtask/src/analyze.rs or annotate with `analyze:allow(version)`"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// The text inside the parenthesis group `s` starts with.
+fn paren_group(s: &str) -> Option<&str> {
+    let mut depth = 0usize;
+    for (k, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&s[1..k]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Split an argument list at its first top-level comma.
+fn split_first_arg(args: &str) -> (&str, &str) {
+    let mut depth = 0i32;
+    for (k, c) in args.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            ',' if depth == 0 => return (&args[..k], &args[k + 1..]),
+            _ => {}
+        }
+    }
+    (args, "")
+}
+
+/// Resolve the key expression of a `get_or_rebuild` site to text we
+/// can word-search: inline slices verbatim, `&name` via a backward
+/// scan for `let name = … ;`.
+fn resolve_key(ctx: &Ctx, site_line: usize, expr: &str) -> String {
+    let e = expr.trim_start_matches('&').trim_start();
+    if e.starts_with('[') {
+        return e.to_string();
+    }
+    let name = leading_ident(e);
+    if name.is_empty() {
+        return String::new();
+    }
+    let lo = site_line.saturating_sub(40);
+    for k in (lo..=site_line.min(ctx.split.code.len().saturating_sub(1))).rev() {
+        let code = &ctx.split.code[k];
+        let Some(lat) = find_word(code, "let", 0) else { continue };
+        let Some(nat) = find_word(code, name, lat + 3) else { continue };
+        let Some(eq) = code[nat..].find('=') else { continue };
+        let mut acc = String::new();
+        acc.push_str(&code[nat + eq + 1..]);
+        let mut k2 = k + 1;
+        while !acc.contains(';') && k2 < ctx.split.code.len() {
+            acc.push(' ');
+            acc.push_str(&ctx.split.code[k2]);
+            k2 += 1;
+        }
+        return acc;
+    }
+    String::new()
+}
+
+fn version_suppressed(ctx: &Ctx, line: usize) -> bool {
+    analyze_allowed("version", line, &ctx.split)
+        || ctx.items.iter().any(|f| {
+            line >= f.sig_line
+                && line <= f.body_end
+                && analyze_allowed("version", f.sig_line, &ctx.split)
+        })
+}
+
+// ------------------------------------------------------------ panic
+
+struct PanicModel {
+    /// (ctx index, item index) per global fn id, panic-scope files only.
+    fns: Vec<(usize, usize)>,
+    /// Direct sources per global fn: (0-based line, description).
+    sources: Vec<Vec<(usize, String)>>,
+    /// Sources not covered by a line- or fn-level `analyze:allow(panic)`.
+    uncovered: Vec<Vec<(usize, String)>>,
+    /// Resolved call edges per global fn: (callee id, 0-based line, name).
+    edges: Vec<Vec<(usize, usize, String)>>,
+    /// Reaches a fn with ≥1 direct source, ignoring every allow
+    /// (the stale pass's notion of "this edge allow still matters").
+    raw_uncertified: Vec<bool>,
+}
+
+impl PanicModel {
+    fn build(ctxs: &[Ctx]) -> PanicModel {
+        let mut fns = Vec::new();
+        for (ci, ctx) in ctxs.iter().enumerate() {
+            if !panic_scope(&ctx.rel) {
+                continue;
+            }
+            for ii in 0..ctx.items.len() {
+                fns.push((ci, ii));
+            }
+        }
+        let item = |gid: usize| -> &FnItem {
+            let (ci, ii) = fns[gid];
+            &ctxs[ci].items[ii]
+        };
+        let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut by_qual: BTreeMap<(String, String), Vec<usize>> = BTreeMap::new();
+        for gid in 0..fns.len() {
+            let f = item(gid);
+            by_name.entry(f.name.clone()).or_default().push(gid);
+            if let Some(t) = &f.impl_type {
+                by_qual.entry((t.clone(), f.name.clone())).or_default().push(gid);
+            }
+        }
+        let unique = |v: Option<&Vec<usize>>| -> Option<usize> {
+            match v {
+                Some(v) if v.len() == 1 => Some(v[0]),
+                _ => None,
+            }
+        };
+        let mut edges = Vec::with_capacity(fns.len());
+        let mut sources = Vec::with_capacity(fns.len());
+        let mut uncovered = Vec::with_capacity(fns.len());
+        for gid in 0..fns.len() {
+            let (ci, _) = fns[gid];
+            let ctx = &ctxs[ci];
+            let f = item(gid);
+            let mut es = Vec::new();
+            for c in extract_calls(&ctx.split, f) {
+                let target = match &c.kind {
+                    CallKind::Qualified(q) => {
+                        unique(by_qual.get(&(q.clone(), c.name.clone())))
+                    }
+                    CallKind::Method { on_self: true } => f
+                        .impl_type
+                        .as_ref()
+                        .and_then(|t| unique(by_qual.get(&(t.clone(), c.name.clone()))))
+                        .or_else(|| unique(by_name.get(&c.name))),
+                    _ => unique(by_name.get(&c.name)),
+                };
+                if let Some(t) = target {
+                    if t != gid {
+                        es.push((t, c.line, c.name.clone()));
+                    }
+                }
+            }
+            edges.push(es);
+            let srcs = direct_sources(ctx, f);
+            let fn_allowed = analyze_allowed("panic", f.sig_line, &ctx.split);
+            let unc: Vec<(usize, String)> = if fn_allowed {
+                Vec::new()
+            } else {
+                srcs.iter()
+                    .filter(|(l, _)| !analyze_allowed("panic", *l, &ctx.split))
+                    .cloned()
+                    .collect()
+            };
+            sources.push(srcs);
+            uncovered.push(unc);
+        }
+        // Raw uncertified: reaches any direct source over all edges.
+        let mut raw_uncertified: Vec<bool> =
+            sources.iter().map(|s| !s.is_empty()).collect();
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for gid in 0..fns.len() {
+                if !raw_uncertified[gid]
+                    && edges[gid].iter().any(|&(t, _, _)| raw_uncertified[t])
+                {
+                    raw_uncertified[gid] = true;
+                    changed = true;
+                }
+            }
+        }
+        PanicModel { fns, sources, uncovered, edges, raw_uncertified }
+    }
+
+    /// Reported findings: each uncovered source in a fn that is pub or
+    /// reachable from a pub entry over unsuppressed edges, with the
+    /// offending call chain in the message.
+    fn report(&self, ctxs: &[Ctx]) -> Vec<Finding> {
+        let n = self.fns.len();
+        let active = |gid: usize, edge: &(usize, usize, String)| -> bool {
+            let (ci, _) = self.fns[gid];
+            !analyze_edge_allowed("panic", &edge.2, edge.1, &ctxs[ci].split)
+        };
+        // Multi-source BFS from pub fns over unsuppressed edges.
+        let mut reached = vec![false; n];
+        let mut parent: Vec<Option<usize>> = vec![None; n];
+        let mut queue: Vec<usize> = Vec::new();
+        for gid in 0..n {
+            let (ci, ii) = self.fns[gid];
+            if ctxs[ci].items[ii].is_pub {
+                reached[gid] = true;
+                queue.push(gid);
+            }
+        }
+        let mut head = 0;
+        while head < queue.len() {
+            let g = queue[head];
+            head += 1;
+            for e in &self.edges[g] {
+                if active(g, e) && !reached[e.0] {
+                    reached[e.0] = true;
+                    parent[e.0] = Some(g);
+                    queue.push(e.0);
+                }
+            }
+        }
+        let mut out = Vec::new();
+        for gid in 0..n {
+            if self.uncovered[gid].is_empty() {
+                continue;
+            }
+            let (ci, ii) = self.fns[gid];
+            let f = &ctxs[ci].items[ii];
+            if !f.is_pub && !reached[gid] {
+                continue;
+            }
+            let chain = if f.is_pub {
+                String::new()
+            } else {
+                let mut names = vec![qual(f)];
+                let mut cur = gid;
+                while let Some(p) = parent[cur] {
+                    let (pci, pii) = self.fns[p];
+                    names.push(qual(&ctxs[pci].items[pii]));
+                    cur = p;
+                }
+                names.reverse();
+                format!(" (reached via `{}`)", names.join(" -> "))
+            };
+            for (line, desc) in &self.uncovered[gid] {
+                out.push(Finding {
+                    rule: "panic",
+                    file: ctxs[ci].rel.clone(),
+                    line: line + 1,
+                    msg: format!("possible panic: {desc} in `{}`{chain}", qual(f)),
+                });
+            }
+        }
+        out
+    }
+
+    /// Does any fn in `ci` whose sig sits at `line` have a direct source?
+    fn fn_has_source_at(&self, ctxs: &[Ctx], ci: usize, line: usize) -> bool {
+        self.fns.iter().enumerate().any(|(gid, &(fci, fii))| {
+            fci == ci && ctxs[fci].items[fii].sig_line == line && !self.sources[gid].is_empty()
+        })
+    }
+
+    /// Is there a direct source on `line` of file `ci`?
+    fn line_has_source(&self, ci: usize, line: usize) -> bool {
+        self.fns.iter().enumerate().any(|(gid, &(fci, _))| {
+            fci == ci && self.sources[gid].iter().any(|(l, _)| *l == line)
+        })
+    }
+
+    /// Does a call edge from file `ci` at one of `lines` target a
+    /// raw-uncertified fn named `callee`?
+    fn edge_live(&self, ci: usize, lines: &[usize], callee: &str) -> bool {
+        self.fns.iter().enumerate().any(|(gid, &(fci, _))| {
+            fci == ci
+                && self.edges[gid].iter().any(|(t, l, name)| {
+                    lines.contains(l) && name == callee && self.raw_uncertified[*t]
+                })
+        })
+    }
+}
+
+/// Direct panic sources in `f`'s body, deduped per (line, kind).
+fn direct_sources(ctx: &Ctx, f: &FnItem) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for i in body_range(ctx, f) {
+        let code = &ctx.split.code[i];
+        let mut descs: Vec<String> = Vec::new();
+        for m in PANIC_MACROS {
+            let mut from = 0;
+            while let Some(at) = find_word(code, m, from) {
+                from = at + m.len();
+                if code[at + m.len()..].starts_with('!') {
+                    descs.push(format!("{m}!"));
+                }
+            }
+        }
+        if code.contains(".unwrap()") {
+            descs.push(".unwrap()".to_string());
+        }
+        if code.contains(".expect(") {
+            descs.push(".expect(…)".to_string());
+        }
+        let cv: Vec<char> = code.chars().collect();
+        for k in 1..cv.len() {
+            if cv[k] == '[' {
+                let p = cv[k - 1];
+                if is_word(p) || p == ']' || p == ')' {
+                    descs.push("indexing `[…]`".to_string());
+                    break;
+                }
+            }
+        }
+        descs.sort();
+        descs.dedup();
+        for d in descs {
+            out.push((i, d));
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------ stale-allow
+
+fn is_ordering_note(comment: &str) -> bool {
+    comment.trim_start().trim_start_matches('/').trim_start_matches('!').trim_start()
+        .starts_with("ordering:")
+}
+
+fn stale_pass(
+    ctxs: &[Ctx],
+    raw_version: &[Vec<(usize, String)>],
+    panic: &PanicModel,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        let s = &ctx.split;
+        let end = ctx.end.min(s.comment.len());
+        for j in 0..end {
+            let comment = &s.comment[j];
+            // Both gates require the opening paren: prose mentions of
+            // `lint:allow` / `analyze:allow` in doc comments are not
+            // annotations.
+            if comment.contains("lint:allow(") {
+                if let Some((rule, true)) = parse_allow(comment) {
+                    if KNOWN_RULES.contains(&rule.as_str()) {
+                        let cov = coverage_of(j, s);
+                        let live = ctx
+                            .raw_lint
+                            .iter()
+                            .any(|r| r.rule == rule && cov.contains(&r.line));
+                        if !live {
+                            out.push(stale(ctx, j, format!(
+                                "lint:allow({rule}) no longer suppresses anything here — \
+                                 delete it"
+                            )));
+                        }
+                    }
+                }
+                // Malformed/unknown lint allows are the linter's findings.
+            }
+            if comment.contains("analyze:allow(") {
+                match parse_analyze_allow(comment) {
+                    None => out.push(syntax(ctx, j,
+                        "malformed allow: need `analyze:allow(<rule>[: <callee>]) — <reason>`"
+                            .to_string())),
+                    Some((rule, _, _)) if !ANALYZE_RULES.contains(&rule.as_str()) => {
+                        out.push(syntax(ctx, j,
+                            format!("analyze:allow names unknown rule `{rule}`")));
+                    }
+                    Some((_, _, false)) => out.push(syntax(ctx, j,
+                        "analyze:allow is missing its mandatory `— <reason>`".to_string())),
+                    Some((rule, Some(_), true)) if rule == "version" => {
+                        out.push(syntax(ctx, j,
+                            "analyze:allow(version) takes no `: <callee>`".to_string()));
+                    }
+                    Some((rule, callee, true)) => {
+                        let cov = coverage_of(j, s);
+                        let live = match (rule.as_str(), &callee) {
+                            ("version", _) => {
+                                let rv = &raw_version[ci];
+                                rv.iter().any(|(l, _)| cov.contains(l))
+                                    || ctx.items.iter().any(|f| {
+                                        cov.contains(&f.sig_line)
+                                            && rv.iter().any(|(l, _)| {
+                                                *l >= f.sig_line && *l <= f.body_end
+                                            })
+                                    })
+                            }
+                            ("panic", None) => cov.iter().any(|&k| {
+                                panic.fn_has_source_at(ctxs, ci, k)
+                                    || panic.line_has_source(ci, k)
+                            }),
+                            ("panic", Some(c)) => panic.edge_live(ci, &cov, c),
+                            _ => unreachable!("rule set checked above"),
+                        };
+                        if !live {
+                            let what = match &callee {
+                                Some(c) => format!("analyze:allow({rule}: {c})"),
+                                None => format!("analyze:allow({rule})"),
+                            };
+                            out.push(stale(ctx, j, format!(
+                                "{what} no longer suppresses anything here — delete it"
+                            )));
+                        }
+                    }
+                }
+            }
+            if ORDERING_FILES.contains(&ctx.rel.as_str()) && is_ordering_note(comment) {
+                let hi = (j + ORDERING_WINDOW + 1).min(end);
+                let live = (j..hi).any(|i| s.code[i].contains("Ordering::"));
+                if !live {
+                    out.push(stale(ctx, j, format!(
+                        "`// ordering:` note with no `Ordering::` use within \
+                         {ORDERING_WINDOW} lines below — delete or move it"
+                    )));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn stale(ctx: &Ctx, line: usize, msg: String) -> Finding {
+    Finding { rule: "stale-allow", file: ctx.rel.clone(), line: line + 1, msg }
+}
+
+fn syntax(ctx: &Ctx, line: usize, msg: String) -> Finding {
+    Finding { rule: "allow-syntax", file: ctx.rel.clone(), line: line + 1, msg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const VERSION_BUMP_BAD: &str = include_str!("../fixtures/version_bump_bad.rs");
+    const VERSION_BUMP_OK: &str = include_str!("../fixtures/version_bump_ok.rs");
+    const VERSION_KEY_BAD: &str = include_str!("../fixtures/version_key_bad.rs");
+    const VERSION_KEY_OK: &str = include_str!("../fixtures/version_key_ok.rs");
+    const PANIC_REACH_BAD: &str = include_str!("../fixtures/panic_reach_bad.rs");
+    const PANIC_REACH_OK: &str = include_str!("../fixtures/panic_reach_ok.rs");
+    const STALE_ALLOW_BAD: &str = include_str!("../fixtures/stale_allow_bad.rs");
+    const STALE_ALLOW_OK: &str = include_str!("../fixtures/stale_allow_ok.rs");
+
+    fn run(rel: &str, src: &str) -> Vec<Finding> {
+        analyze_tree(&[(rel.to_string(), src.to_string())])
+    }
+
+    fn count(findings: &[Finding], rule: &str) -> usize {
+        findings.iter().filter(|f| f.rule == rule).count()
+    }
+
+    #[test]
+    fn missing_bump_on_a_stamped_mutator_fires() {
+        let fs = run("graph/dynamic.rs", VERSION_BUMP_BAD);
+        assert_eq!(count(&fs, "version"), 1, "{fs:?}");
+        assert!(fs.iter().any(|f| f.rule == "version" && f.msg.contains("remove_users")));
+    }
+
+    #[test]
+    fn transitive_bump_and_version_allow_certify() {
+        let fs = run("graph/dynamic.rs", VERSION_BUMP_OK);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn named_producer_and_memo_key_violations_fire() {
+        let fs = run("drl/env.rs", VERSION_KEY_BAD);
+        assert_eq!(count(&fs, "version"), 2, "{fs:?}");
+        assert!(fs.iter().any(|f| f.msg.contains("install_partition")));
+        assert!(fs.iter().any(|f| f.msg.contains("omits `layout`")));
+    }
+
+    #[test]
+    fn sound_producers_and_keys_pass() {
+        let fs = run("drl/env.rs", VERSION_KEY_OK);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn panics_propagate_through_helpers_with_a_chain() {
+        let fs = run("serving/fixture.rs", PANIC_REACH_BAD);
+        assert!(count(&fs, "panic") >= 2, "{fs:?}");
+        let chained = fs
+            .iter()
+            .find(|f| f.rule == "panic" && f.msg.contains("indexing"))
+            .expect("indexing finding");
+        for name in ["serve", "dispatch", "lookup"] {
+            assert!(chained.msg.contains(name), "chain missing {name}: {}", chained.msg);
+        }
+    }
+
+    #[test]
+    fn guards_fn_allows_and_edge_allows_certify() {
+        let fs = run("serving/fixture.rs", PANIC_REACH_OK);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn dead_allows_and_notes_are_findings() {
+        let fs = run("util/metrics.rs", STALE_ALLOW_BAD);
+        assert_eq!(count(&fs, "stale-allow"), 4, "{fs:?}");
+    }
+
+    #[test]
+    fn live_allows_and_notes_pass() {
+        let fs = run("util/metrics.rs", STALE_ALLOW_OK);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn malformed_analyze_allow_is_reported() {
+        let src = "// analyze:allow(panic: a b) — bad callee.\npub fn f() {}\n";
+        let fs = run("serving/x.rs", src);
+        assert_eq!(count(&fs, "allow-syntax"), 1, "{fs:?}");
+        let src = "// analyze:allow(version: helper) — version has no edges.\npub fn f() {}\n";
+        let fs = run("serving/x.rs", src);
+        assert_eq!(count(&fs, "allow-syntax"), 1, "{fs:?}");
+    }
+
+    /// The analyzer's reason to exist: the shipped tree must be clean.
+    #[test]
+    fn the_real_tree_is_analyze_clean() {
+        let files = crate::tree_sources();
+        let fs = analyze_tree(&files);
+        assert!(fs.is_empty(), "analyze findings in rust/src: {fs:#?}");
+    }
+
+    /// The acceptance property from the issue: deleting any single
+    /// `topology.bump()` from `graph/dynamic.rs` must make the
+    /// version-soundness pass fail.
+    #[test]
+    fn deleting_any_topology_bump_fires() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+        let src = std::fs::read_to_string(root.join("graph/dynamic.rs"))
+            .expect("read graph/dynamic.rs");
+        let needle = "self.topology.bump();";
+        let count_bumps = src.matches(needle).count();
+        assert!(count_bumps >= 5, "expected several bump sites, found {count_bumps}");
+        for k in 0..count_bumps {
+            let mut pos = 0;
+            for _ in 0..k {
+                pos = src[pos..].find(needle).unwrap() + pos + needle.len();
+            }
+            let at = src[pos..].find(needle).unwrap() + pos;
+            let mutated = format!("{}{}", &src[..at], &src[at + needle.len()..]);
+            let fs = analyze_tree(&[("graph/dynamic.rs".to_string(), mutated)]);
+            assert!(
+                fs.iter().any(|f| f.rule == "version"),
+                "deleting bump #{k} produced no version finding"
+            );
+        }
+    }
+}

@@ -1,0 +1,429 @@
+//! Lightweight item model: fns, impl blocks and methods with
+//! brace-matched bodies, extracted from the code half of the
+//! [`Split`](crate::splitter::Split) (so braces inside strings, chars
+//! and comments are already gone), plus per-fn call extraction for the
+//! intra-crate call graph.
+//!
+//! Deliberate scope limits (documented in `rust/ANALYSIS.md`): fns
+//! nested inside other fns, and fns inside inline `mod`/`trait` blocks,
+//! are not extracted as items — their bodies are attributed to the
+//! enclosing fn (nested fns) or skipped (inline mods, which in this
+//! tree are `#[cfg(test)]` modules and excluded anyway).
+
+use crate::splitter::{find_word, is_word, leading_ident, trailing_ident, Split};
+
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// `Some(type)` when the fn is a method in `impl Type` /
+    /// `impl Trait for Type`.
+    pub impl_type: Option<String>,
+    pub is_pub: bool,
+    pub has_mut_self: bool,
+    /// 0-based line of the `fn` keyword.
+    pub sig_line: usize,
+    /// 0-based line of the body's opening `{`.
+    pub body_start: usize,
+    /// Char column of that `{` on `body_start` (call extraction starts
+    /// after it, so the signature itself never reads as a call).
+    pub body_open_col: usize,
+    /// 0-based line of the matching `}`.
+    pub body_end: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CallKind {
+    /// `name(…)`.
+    Bare,
+    /// `recv.name(…)`; `on_self` when the receiver chain starts at a
+    /// bare `self`.
+    Method { on_self: bool },
+    /// `Qualifier::name(…)` — the qualifier is the last path segment.
+    Qualified(String),
+}
+
+#[derive(Debug, Clone)]
+pub struct Call {
+    /// 0-based source line.
+    pub line: usize,
+    pub name: String,
+    pub kind: CallKind,
+}
+
+enum Mode {
+    Scan,
+    /// Accumulating an `impl` header until its opening `{`.
+    ImplHeader(String),
+    /// Accumulating a fn signature until the body `{` (or a `;` for
+    /// body-less declarations).
+    FnSig { item: FnItem, paren: i32, bracket: i32, sig: String },
+    /// Inside a fn body until brace depth returns to `open_depth`.
+    FnBody { item: FnItem, open_depth: usize },
+}
+
+/// Extract every top-level fn and impl method from lines `0..end` of
+/// the split (callers pass the `#[cfg(test)]` cutoff as `end`).
+pub fn extract_items(s: &Split, end: usize) -> Vec<FnItem> {
+    let mut items = Vec::new();
+    let mut depth: usize = 0;
+    // (type name, brace depth of the impl body).
+    let mut impls: Vec<(String, usize)> = Vec::new();
+    let mut mode = Mode::Scan;
+
+    for i in 0..end.min(s.code.len()) {
+        let cv: Vec<char> = s.code[i].chars().collect();
+        let mut j = 0;
+        while j < cv.len() {
+            let c = cv[j];
+            match &mut mode {
+                Mode::Scan => {
+                    if is_word(c) {
+                        let k0 = j;
+                        while j < cv.len() && is_word(cv[j]) {
+                            j += 1;
+                        }
+                        let word: String = cv[k0..j].iter().collect();
+                        if word == "impl" && depth == 0 {
+                            mode = Mode::ImplHeader(String::new());
+                        } else if word == "fn"
+                            && (depth == 0 || impls.last().is_some_and(|f| f.1 == depth))
+                        {
+                            let prefix: String = cv[..k0].iter().collect();
+                            mode = Mode::FnSig {
+                                item: FnItem {
+                                    name: String::new(),
+                                    impl_type: impls.last().map(|f| f.0.clone()),
+                                    is_pub: find_word(&prefix, "pub", 0).is_some(),
+                                    has_mut_self: false,
+                                    sig_line: i,
+                                    body_start: i,
+                                    body_open_col: 0,
+                                    body_end: i,
+                                },
+                                paren: 0,
+                                bracket: 0,
+                                sig: String::new(),
+                            };
+                        }
+                        continue;
+                    }
+                    match c {
+                        '{' => depth += 1,
+                        '}' => {
+                            depth = depth.saturating_sub(1);
+                            if impls.last().is_some_and(|f| depth < f.1) {
+                                impls.pop();
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                Mode::ImplHeader(header) => {
+                    if c == '{' {
+                        let ty = impl_header_type(header);
+                        depth += 1;
+                        impls.push((ty, depth));
+                        mode = Mode::Scan;
+                    } else {
+                        header.push(c);
+                    }
+                    j += 1;
+                }
+                Mode::FnSig { item, paren, bracket, sig } => {
+                    match c {
+                        '(' => *paren += 1,
+                        ')' => *paren -= 1,
+                        '[' => *bracket += 1,
+                        ']' => *bracket -= 1,
+                        '{' if *paren == 0 && *bracket == 0 => {
+                            let old = std::mem::replace(&mut mode, Mode::Scan);
+                            if let Mode::FnSig { mut item, sig, .. } = old {
+                                item.name = leading_ident(sig.trim_start()).to_string();
+                                item.has_mut_self = sig_has_mut_self(&sig);
+                                item.body_start = i;
+                                item.body_open_col = j;
+                                mode = Mode::FnBody { item, open_depth: depth };
+                            }
+                            depth += 1;
+                            j += 1;
+                            continue;
+                        }
+                        ';' if *paren == 0 && *bracket == 0 => {
+                            // Body-less declaration (trait method, extern).
+                            mode = Mode::Scan;
+                            j += 1;
+                            continue;
+                        }
+                        _ => {}
+                    }
+                    sig.push(c);
+                    j += 1;
+                }
+                Mode::FnBody { item, open_depth } => {
+                    if c == '{' {
+                        depth += 1;
+                    } else if c == '}' {
+                        depth = depth.saturating_sub(1);
+                        if depth == *open_depth {
+                            item.body_end = i;
+                            let old = std::mem::replace(&mut mode, Mode::Scan);
+                            if let Mode::FnBody { item, .. } = old {
+                                items.push(item);
+                            }
+                        }
+                    }
+                    j += 1;
+                }
+            }
+        }
+        // Line break acts as whitespace for multi-line headers/sigs.
+        match &mut mode {
+            Mode::ImplHeader(h) => h.push(' '),
+            Mode::FnSig { sig, .. } => sig.push(' '),
+            _ => {}
+        }
+    }
+    // A body still open at the cutoff is kept, truncated — better a
+    // conservative partial scan than silently dropping the fn.
+    if let Mode::FnBody { mut item, .. } = mode {
+        item.body_end = end.min(s.code.len()).saturating_sub(1);
+        items.push(item);
+    }
+    items
+}
+
+/// The concrete type an `impl` header names: skip leading generics,
+/// prefer the segment after `for` (trait impls), take the final path
+/// segment.
+fn impl_header_type(header: &str) -> String {
+    let h = header.trim();
+    let mut rest = h;
+    if let Some(stripped) = h.strip_prefix('<') {
+        let mut d = 1i32;
+        let mut prev = '<';
+        let mut cut = stripped.len();
+        for (k, c) in stripped.char_indices() {
+            match c {
+                '<' => d += 1,
+                // `->` inside `Fn(..) -> T` bounds is not a close.
+                '>' if prev != '-' => {
+                    d -= 1;
+                    if d == 0 {
+                        cut = k + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            prev = c;
+        }
+        rest = &stripped[cut.min(stripped.len())..];
+    }
+    if let Some(fat) = find_word(rest, "for", 0) {
+        rest = &rest[fat + 3..];
+    }
+    let mut t = rest.trim_start().trim_start_matches('&').trim_start();
+    loop {
+        let id = leading_ident(t);
+        if id.is_empty() {
+            return String::new();
+        }
+        match t[id.len()..].strip_prefix("::") {
+            Some(next) => t = next,
+            None => return id.to_string(),
+        }
+    }
+}
+
+/// Does the signature take `&mut self` (any `mut self` word pair)?
+fn sig_has_mut_self(sig: &str) -> bool {
+    let mut from = 0;
+    while let Some(at) = find_word(sig, "mut", from) {
+        from = at + 3;
+        let rest = sig[at + 3..].trim_start();
+        if rest.starts_with("self") && !rest[4..].starts_with(is_word) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Words that look like calls but aren't (`match (a, b)` etc.).
+const KEYWORDS: [&str; 24] = [
+    "if", "else", "match", "while", "for", "loop", "return", "break", "continue", "in", "as",
+    "let", "fn", "pub", "impl", "use", "mod", "where", "move", "ref", "mut", "unsafe", "dyn",
+    "self",
+];
+
+/// Every call site inside `f`'s body.  `ident!(…)` macro invocations
+/// are skipped (the `(` is not adjacent to the ident), and so are
+/// keywords; enum/tuple-struct constructors survive as bare calls but
+/// resolve to nothing downstream.
+pub fn extract_calls(s: &Split, f: &FnItem) -> Vec<Call> {
+    let mut out = Vec::new();
+    let last = f.body_end.min(s.code.len().saturating_sub(1));
+    for i in f.body_start..=last {
+        let cv: Vec<char> = s.code[i].chars().collect();
+        let mut j = if i == f.body_start { (f.body_open_col + 1).min(cv.len()) } else { 0 };
+        while j < cv.len() {
+            if !is_word(cv[j]) {
+                j += 1;
+                continue;
+            }
+            let k0 = j;
+            while j < cv.len() && is_word(cv[j]) {
+                j += 1;
+            }
+            if cv.get(j) != Some(&'(') {
+                continue;
+            }
+            let name: String = cv[k0..j].iter().collect();
+            if KEYWORDS.contains(&name.as_str()) || name.starts_with(|c: char| c.is_ascii_digit())
+            {
+                continue;
+            }
+            let before: String = cv[..k0].iter().collect();
+            let kind = if let Some(b) = before.strip_suffix('.') {
+                let recv = trailing_ident(b.trim_end());
+                CallKind::Method { on_self: recv == "self" && b.trim_end().ends_with("self") }
+            } else if let Some(b) = before.strip_suffix("::") {
+                CallKind::Qualified(trailing_ident(b.trim_end()).to_string())
+            } else {
+                CallKind::Bare
+            };
+            out.push(Call { line: i, name, kind });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::test_cutoff;
+    use crate::splitter::split_code_comment;
+
+    const SRC: &str = r#"
+pub struct DynamicGraph {
+    g: usize,
+}
+
+impl DynamicGraph {
+    pub fn add_assoc(&mut self, v: usize) {
+        self.g += v;
+        self.bump_topology();
+    }
+
+    fn bump_topology(&self) {
+        let _s = "fn fake(){}"; // fn in a string is not an item
+    }
+}
+
+impl std::fmt::Display for DynamicGraph {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        helper(self.g);
+        write!(f, "{}", self.g)
+    }
+}
+
+impl<T: Fn(usize) -> bool> Wrap<T> {
+    fn run(&self) -> bool {
+        (self.0)(1)
+    }
+}
+
+pub fn helper(x: usize) -> usize {
+    Other::make(x).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    fn hidden() {}
+}
+"#;
+
+    fn items() -> Vec<FnItem> {
+        let s = split_code_comment(SRC);
+        let end = test_cutoff(&s);
+        extract_items(&s, end)
+    }
+
+    #[test]
+    fn fns_and_methods_are_extracted_with_impl_types() {
+        let its = items();
+        let names: Vec<(&str, Option<&str>)> =
+            its.iter().map(|f| (f.name.as_str(), f.impl_type.as_deref())).collect();
+        assert_eq!(
+            names,
+            vec![
+                ("add_assoc", Some("DynamicGraph")),
+                ("bump_topology", Some("DynamicGraph")),
+                ("fmt", Some("DynamicGraph")),
+                ("run", Some("Wrap")),
+                ("helper", None),
+            ]
+        );
+    }
+
+    #[test]
+    fn pub_and_mut_self_flags() {
+        let its = items();
+        let add = its.iter().find(|f| f.name == "add_assoc").unwrap();
+        assert!(add.is_pub && add.has_mut_self);
+        let bump = its.iter().find(|f| f.name == "bump_topology").unwrap();
+        assert!(!bump.is_pub && !bump.has_mut_self);
+        let helper = its.iter().find(|f| f.name == "helper").unwrap();
+        assert!(helper.is_pub && !helper.has_mut_self);
+    }
+
+    #[test]
+    fn bodies_are_brace_matched() {
+        let s = split_code_comment(SRC);
+        let its = items();
+        let add = its.iter().find(|f| f.name == "add_assoc").unwrap();
+        let body: String = s.code[add.body_start..=add.body_end].join("\n");
+        assert!(body.contains("self.g += v"));
+        assert!(!body.contains("bump_topology(&self)"), "body must stop at its own brace");
+    }
+
+    #[test]
+    fn test_modules_are_cut_off() {
+        assert!(items().iter().all(|f| f.name != "hidden"));
+    }
+
+    #[test]
+    fn calls_are_classified_and_macros_skipped() {
+        let s = split_code_comment(SRC);
+        let its = items();
+        let add = its.iter().find(|f| f.name == "add_assoc").unwrap();
+        let calls = extract_calls(&s, add);
+        assert_eq!(calls.len(), 1);
+        assert_eq!(calls[0].name, "bump_topology");
+        assert_eq!(calls[0].kind, CallKind::Method { on_self: true });
+
+        let fmt = its.iter().find(|f| f.name == "fmt").unwrap();
+        let calls = extract_calls(&s, fmt);
+        // `helper(…)` is a bare call; `write!` is a macro and skipped.
+        assert_eq!(calls.len(), 1);
+        assert_eq!(calls[0].name, "helper");
+        assert_eq!(calls[0].kind, CallKind::Bare);
+
+        let helper = its.iter().find(|f| f.name == "helper").unwrap();
+        let calls = extract_calls(&s, helper);
+        let kinds: Vec<(&str, &CallKind)> =
+            calls.iter().map(|c| (c.name.as_str(), &c.kind)).collect();
+        assert_eq!(kinds[0], ("make", &CallKind::Qualified("Other".to_string())));
+        assert_eq!(kinds[1], ("unwrap_or", &CallKind::Method { on_self: false }));
+    }
+
+    #[test]
+    fn chained_receiver_is_not_self() {
+        let src = "fn f(&self) {\n    self.queues[s].push(1);\n}\n";
+        let s = split_code_comment(src);
+        let its = extract_items(&s, s.code.len());
+        let calls = extract_calls(&s, &its[0]);
+        assert_eq!(calls[0].name, "push");
+        assert_eq!(calls[0].kind, CallKind::Method { on_self: false });
+    }
+}

@@ -1,0 +1,556 @@
+//! The PR 7 invariant linter: six line-lexical rules over the
+//! code/comment split (see the crate docs in `main.rs` and
+//! `rust/ANALYSIS.md` for rules and rationale).
+//!
+//! The raw (pre-suppression) findings are public: the stale-allow
+//! analysis pass re-derives them to decide whether each
+//! `lint:allow` annotation still suppresses anything.
+
+use std::collections::BTreeSet;
+
+use crate::allow::{allowed, parse_allow};
+use crate::report::Finding;
+use crate::splitter::{find_word, is_word, leading_ident, split_code_comment, trailing_ident, Split};
+
+pub const KNOWN_RULES: [&str; 6] =
+    ["hash-iter", "wall-clock", "atomic-ordering", "panic", "metrics-shim", "memo"];
+
+/// Files where wall-clock reads are the point (latency measurement).
+pub const WALL_CLOCK_ALLOW: [&str; 3] =
+    ["util/trace.rs", "util/metrics.rs", "serving/serve_loop.rs"];
+
+/// Lock-free layers whose atomics must justify their memory orderings.
+pub const ORDERING_FILES: [&str; 5] =
+    ["util/metrics.rs", "util/trace.rs", "util/threadpool.rs", "util/logging.rs", "util/version.rs"];
+
+/// How far above an `Ordering::*` use a `// ordering:` note may sit
+/// (block-style notes cover a whole match/loop/struct literal).
+pub const ORDERING_WINDOW: usize = 12;
+
+/// Deterministic layers: hash-order iteration is banned here.
+pub const HASH_DET_DIRS: [&str; 3] = ["partition/", "scenario/", "graph/"];
+pub const HASH_DET_FILES: [&str; 2] = ["drl/env.rs", "drl/vec_env.rs"];
+
+const ITER_METHODS: [&str; 7] =
+    ["iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter"];
+
+/// One rule hit before suppression filtering.  `line` is 0-based.
+pub struct Raw {
+    pub rule: &'static str,
+    pub line: usize,
+    pub msg: String,
+}
+
+/// The split, the `#[cfg(test)]` cutoff and every raw rule hit for one
+/// source file.
+pub struct LintScan {
+    pub split: Split,
+    pub end: usize,
+    pub raw: Vec<Raw>,
+}
+
+/// First `#[cfg(test)]` line: everything below is test code and out of
+/// scope for every rule and pass.
+pub fn test_cutoff(s: &Split) -> usize {
+    s.code
+        .iter()
+        .position(|c| c.contains("#[cfg(test)]"))
+        .unwrap_or(s.code.len())
+}
+
+/// Collect names bound to hash containers on this line, from either
+/// `let [mut] NAME = [std::collections::]Hash{Map,Set}::…` or the type
+/// position `NAME: &mut Hash{Map,Set}<…>`.
+fn hash_decl_names(code: &str, out: &mut BTreeSet<String>) {
+    let mut from = 0;
+    while let Some(at) = find_word(code, "let", from) {
+        from = at + 3;
+        let rest = &code[at + 3..];
+        if !rest.starts_with(char::is_whitespace) {
+            continue;
+        }
+        let rest = rest.trim_start();
+        let rest = match rest.strip_prefix("mut") {
+            Some(r) if r.starts_with(char::is_whitespace) => r.trim_start(),
+            _ => rest,
+        };
+        let name = leading_ident(rest);
+        if name.is_empty() {
+            continue;
+        }
+        let after = rest[name.len()..].trim_start();
+        let Some(after) = after.strip_prefix('=') else {
+            continue;
+        };
+        let after = after.trim_start();
+        let after = after.strip_prefix("std::collections::").unwrap_or(after);
+        if after.starts_with("HashMap::") || after.starts_with("HashSet::") {
+            out.insert(name.to_string());
+        }
+    }
+    for ty in ["HashMap", "HashSet"] {
+        let mut from = 0;
+        while let Some(at) = find_word(code, ty, from) {
+            from = at + ty.len();
+            if !code[at + ty.len()..].trim_start().starts_with('<') {
+                continue;
+            }
+            if let Some(name) = annotated_name_before(&code[..at]) {
+                out.insert(name);
+            }
+        }
+    }
+}
+
+/// For `NAME: &mut [std::collections::]Hash…<`, walk left from the
+/// type token to recover `NAME`.
+fn annotated_name_before(before: &str) -> Option<String> {
+    let b = before.strip_suffix("std::collections::").unwrap_or(before);
+    let b = b.trim_end();
+    let b = match b.strip_suffix("mut") {
+        Some(r) if !r.chars().next_back().is_some_and(is_word) => r.trim_end(),
+        _ => b,
+    };
+    let b = b.strip_suffix('&').unwrap_or(b);
+    let b = b.trim_end();
+    let b = b.strip_suffix(':')?;
+    let name = trailing_ident(b.trim_end());
+    if name.is_empty() {
+        None
+    } else {
+        Some(name.to_string())
+    }
+}
+
+/// `NAME.iter()` / `.keys()` / … on a tracked hash container.
+fn hash_iter_use(code: &str, tracked: &BTreeSet<String>) -> Option<String> {
+    for name in tracked {
+        let mut from = 0;
+        while let Some(at) = find_word(code, name, from) {
+            from = at + name.len();
+            let rest = code[at + name.len()..].trim_start();
+            let Some(rest) = rest.strip_prefix('.') else {
+                continue;
+            };
+            let rest = rest.trim_start();
+            let method = leading_ident(rest);
+            if ITER_METHODS.contains(&method)
+                && rest[method.len()..].trim_start().starts_with('(')
+            {
+                return Some(name.clone());
+            }
+        }
+    }
+    None
+}
+
+/// `for … in [&][mut ][self.]NAME` over a tracked hash container.
+/// Returns `None` when the loop target continues into a method chain —
+/// that case is [`hash_iter_use`]'s to judge.
+fn hash_for_loop(code: &str, tracked: &BTreeSet<String>) -> Option<String> {
+    let mut from = 0;
+    while let Some(fat) = find_word(code, "for", from) {
+        from = fat + 3;
+        let Some(iat) = find_word(code, "in", fat + 3) else {
+            continue;
+        };
+        let between = &code[fat + 3..iat];
+        if between.contains(';') || between.contains('{') {
+            continue;
+        }
+        let rest = &code[iat + 2..];
+        if !rest.starts_with(char::is_whitespace) {
+            continue;
+        }
+        let rest = rest.trim_start();
+        let rest = rest.strip_prefix('&').unwrap_or(rest);
+        let rest = match rest.strip_prefix("mut") {
+            Some(r) if r.starts_with(char::is_whitespace) => r.trim_start(),
+            _ => rest,
+        };
+        let rest = match rest.strip_prefix("self") {
+            Some(r) if !r.starts_with(is_word) => match r.trim_start().strip_prefix('.') {
+                Some(r2) => r2.trim_start(),
+                None => rest,
+            },
+            _ => rest,
+        };
+        let name = leading_ident(rest);
+        if !tracked.contains(name) {
+            continue;
+        }
+        if rest[name.len()..].trim_start().starts_with('.') {
+            continue;
+        }
+        return Some(name.to_string());
+    }
+    None
+}
+
+/// A string-keyed call on the metrics shim (`METRICS.observe(…)` etc.).
+fn metrics_shim_call(code: &str) -> bool {
+    for recv in ["METRICS", "GLOBAL"] {
+        let mut from = 0;
+        while let Some(at) = find_word(code, recv, from) {
+            from = at + recv.len();
+            let rest = code[at + recv.len()..].trim_start();
+            let Some(rest) = rest.strip_prefix('.') else {
+                continue;
+            };
+            let rest = rest.trim_start();
+            let method = leading_ident(rest);
+            if ["observe", "inc", "add", "set_gauge", "time"].contains(&method)
+                && rest[method.len()..].trim_start().starts_with('(')
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Run every rule over one file and keep the hits *unfiltered* — the
+/// caller decides whether `lint:allow` suppression applies.
+pub fn lint_scan(rel: &str, src: &str) -> LintScan {
+    let s = split_code_comment(src);
+    let end = test_cutoff(&s);
+    let mut raw: Vec<Raw> = Vec::new();
+    let mut push = |rule: &'static str, line: usize, msg: String| {
+        raw.push(Raw { rule, line, msg });
+    };
+
+    // -- allow-syntax: a malformed escape hatch is itself a finding --
+    // (Gated on the opening paren so prose mentions of `lint:allow`
+    // in doc comments are not treated as annotations.)
+    for (i, comment) in s.comment[..end].iter().enumerate() {
+        if !comment.contains("lint:allow(") {
+            continue;
+        }
+        match parse_allow(comment) {
+            Some((rule, true)) if KNOWN_RULES.contains(&rule.as_str()) => {}
+            Some((rule, true)) => {
+                push("allow-syntax", i, format!("lint:allow names unknown rule `{rule}`"));
+            }
+            _ => push(
+                "allow-syntax",
+                i,
+                "malformed allow: need `lint:allow(<rule>) — <reason>`".to_string(),
+            ),
+        }
+    }
+
+    // -- hash-iter ----------------------------------------------------
+    let det_scope =
+        HASH_DET_FILES.contains(&rel) || HASH_DET_DIRS.iter().any(|d| rel.starts_with(d));
+    if det_scope {
+        let mut tracked = BTreeSet::new();
+        for code in &s.code[..end] {
+            hash_decl_names(code, &mut tracked);
+        }
+        if !tracked.is_empty() {
+            for i in 0..end {
+                let code = &s.code[i];
+                let sorted_near = code.contains("BTree")
+                    || code.contains(".sort")
+                    || (i + 1 < end && s.code[i + 1].contains(".sort"));
+                if let Some(name) = hash_iter_use(code, &tracked) {
+                    if !sorted_near {
+                        let msg = format!(
+                            "iteration over hash container `{name}` in a deterministic layer"
+                        );
+                        push("hash-iter", i, msg);
+                    }
+                    continue;
+                }
+                if let Some(name) = hash_for_loop(code, &tracked) {
+                    if !sorted_near {
+                        let msg = format!(
+                            "for-loop over hash container `{name}` in a deterministic layer"
+                        );
+                        push("hash-iter", i, msg);
+                    }
+                }
+            }
+        }
+    }
+
+    // -- wall-clock ---------------------------------------------------
+    if !WALL_CLOCK_ALLOW.contains(&rel) {
+        for (i, code) in s.code[..end].iter().enumerate() {
+            if code.contains("Instant::now") || find_word(code, "SystemTime", 0).is_some() {
+                push(
+                    "wall-clock",
+                    i,
+                    "wall-clock read outside trace/metrics/serve loop".to_string(),
+                );
+            }
+        }
+    }
+
+    // -- atomic-ordering ----------------------------------------------
+    if ORDERING_FILES.contains(&rel) {
+        for i in 0..end {
+            if !s.code[i].contains("Ordering::") {
+                continue;
+            }
+            let lo = i.saturating_sub(ORDERING_WINDOW);
+            if !s.comment[lo..=i].iter().any(|c| c.contains("ordering:")) {
+                push(
+                    "atomic-ordering",
+                    i,
+                    "atomic ordering without an adjacent `// ordering:` note".to_string(),
+                );
+            }
+        }
+    }
+
+    // -- panic --------------------------------------------------------
+    if rel.starts_with("serving/") || rel.starts_with("partition/") {
+        for (i, code) in s.code[..end].iter().enumerate() {
+            if code.contains(".unwrap()") || code.contains(".expect(") {
+                push(
+                    "panic",
+                    i,
+                    "unwrap/expect in serving/partition non-test code".to_string(),
+                );
+            }
+        }
+    }
+
+    // -- memo ---------------------------------------------------------
+    // `util/version.rs` hosts the one sanctioned memo cell; everywhere
+    // else a `RefCell<Option<…>>` is an unversioned cache in disguise.
+    if rel != "util/version.rs" {
+        for (i, code) in s.code[..end].iter().enumerate() {
+            if code.contains("RefCell<Option<") || code.contains("Cell<Option<") {
+                push(
+                    "memo",
+                    i,
+                    "hand-rolled memo cell; use util::version::Memoized".to_string(),
+                );
+            }
+        }
+    }
+
+    // -- metrics-shim -------------------------------------------------
+    // Brace-depth scan; a `for`/`while`/`loop` keyword arms the next
+    // `{` as a loop body (`;` disarms — `for` in a doc path or a
+    // statement boundary in between means it was not a loop header).
+    let mut depth: i64 = 0;
+    let mut loop_depths: Vec<i64> = Vec::new();
+    let mut pending = false;
+    for i in 0..end {
+        let code = &s.code[i];
+        if !loop_depths.is_empty() && metrics_shim_call(code) {
+            push(
+                "metrics-shim",
+                i,
+                "string-keyed metrics call inside a loop body".to_string(),
+            );
+        }
+        let cv: Vec<char> = code.chars().collect();
+        let mut j = 0;
+        while j < cv.len() {
+            let c = cv[j];
+            if is_word(c) {
+                let k0 = j;
+                while j < cv.len() && is_word(cv[j]) {
+                    j += 1;
+                }
+                let word: String = cv[k0..j].iter().collect();
+                if matches!(word.as_str(), "for" | "while" | "loop") {
+                    pending = true;
+                }
+                continue;
+            }
+            match c {
+                ';' => pending = false,
+                '{' => {
+                    if pending {
+                        loop_depths.push(depth);
+                        pending = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if loop_depths.last() == Some(&depth) {
+                        loop_depths.pop();
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+
+    LintScan { split: s, end, raw }
+}
+
+/// The linter proper: raw hits minus the `lint:allow`-suppressed ones.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let scan = lint_scan(rel, src);
+    scan.raw
+        .into_iter()
+        .filter(|r| r.rule == "allow-syntax" || !allowed(r.rule, r.line, &scan.split))
+        .map(|r| Finding { rule: r.rule, file: rel.to_string(), line: r.line + 1, msg: r.msg })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count(rel: &str, src: &str, rule: &str) -> usize {
+        lint_source(rel, src).iter().filter(|f| f.rule == rule).count()
+    }
+
+    fn rules(rel: &str, src: &str) -> Vec<&'static str> {
+        let mut rs: Vec<&'static str> = lint_source(rel, src).iter().map(|f| f.rule).collect();
+        rs.sort_unstable();
+        rs.dedup();
+        rs
+    }
+
+    const HASH_ITER_BAD: &str = include_str!("../fixtures/hash_iter_bad.rs");
+    const HASH_ITER_ALLOWED: &str = include_str!("../fixtures/hash_iter_allowed.rs");
+    const HASH_ITER_SORTED: &str = include_str!("../fixtures/hash_iter_sorted.rs");
+    const WALL_CLOCK_BAD: &str = include_str!("../fixtures/wall_clock_bad.rs");
+    const WALL_CLOCK_ALLOWED: &str = include_str!("../fixtures/wall_clock_allowed.rs");
+    const ORDERING_BAD: &str = include_str!("../fixtures/ordering_bad.rs");
+    const ORDERING_OK: &str = include_str!("../fixtures/ordering_ok.rs");
+    const PANIC_BAD: &str = include_str!("../fixtures/panic_bad.rs");
+    const PANIC_ALLOWED: &str = include_str!("../fixtures/panic_allowed.rs");
+    const METRICS_LOOP_BAD: &str = include_str!("../fixtures/metrics_loop_bad.rs");
+    const METRICS_LOOP_ALLOWED: &str = include_str!("../fixtures/metrics_loop_allowed.rs");
+    const ALLOW_SYNTAX_BAD: &str = include_str!("../fixtures/allow_syntax_bad.rs");
+    const MEMO_BAD: &str = include_str!("../fixtures/memo_bad.rs");
+    const MEMO_ALLOWED: &str = include_str!("../fixtures/memo_allowed.rs");
+    const SPLITTER_EDGES_OK: &str = include_str!("../fixtures/splitter_edges_ok.rs");
+    const SPLITTER_EDGES_BAD: &str = include_str!("../fixtures/splitter_edges_bad.rs");
+
+    #[test]
+    fn hash_iter_fires_in_deterministic_layers() {
+        assert_eq!(count("partition/fixture.rs", HASH_ITER_BAD, "hash-iter"), 2);
+        assert_eq!(count("drl/env.rs", HASH_ITER_BAD, "hash-iter"), 2);
+        assert_eq!(count("graph/fixture.rs", HASH_ITER_BAD, "hash-iter"), 2);
+    }
+
+    #[test]
+    fn hash_iter_is_scoped_to_deterministic_layers() {
+        assert_eq!(count("serving/fixture.rs", HASH_ITER_BAD, "hash-iter"), 0);
+        assert_eq!(count("util/fixture.rs", HASH_ITER_BAD, "hash-iter"), 0);
+        assert_eq!(count("drl/maddpg.rs", HASH_ITER_BAD, "hash-iter"), 0);
+    }
+
+    #[test]
+    fn hash_iter_allow_annotation_suppresses() {
+        assert_eq!(count("partition/fixture.rs", HASH_ITER_ALLOWED, "hash-iter"), 0);
+    }
+
+    #[test]
+    fn hash_iter_sorted_use_is_exonerated() {
+        assert_eq!(count("partition/fixture.rs", HASH_ITER_SORTED, "hash-iter"), 0);
+    }
+
+    #[test]
+    fn wall_clock_fires_outside_the_allowed_files() {
+        assert_eq!(count("drl/fixture.rs", WALL_CLOCK_BAD, "wall-clock"), 1);
+        assert_eq!(count("partition/hicut.rs", WALL_CLOCK_BAD, "wall-clock"), 1);
+    }
+
+    #[test]
+    fn wall_clock_allowed_files_and_annotations() {
+        assert_eq!(count("util/trace.rs", WALL_CLOCK_BAD, "wall-clock"), 0);
+        assert_eq!(count("util/metrics.rs", WALL_CLOCK_BAD, "wall-clock"), 0);
+        assert_eq!(count("serving/serve_loop.rs", WALL_CLOCK_BAD, "wall-clock"), 0);
+        assert_eq!(count("drl/fixture.rs", WALL_CLOCK_ALLOWED, "wall-clock"), 0);
+    }
+
+    #[test]
+    fn ordering_note_required_and_sufficient() {
+        assert_eq!(count("util/metrics.rs", ORDERING_BAD, "atomic-ordering"), 1);
+        assert_eq!(count("util/threadpool.rs", ORDERING_BAD, "atomic-ordering"), 1);
+        assert_eq!(count("util/metrics.rs", ORDERING_OK, "atomic-ordering"), 0);
+        // The audit only covers the lock-free util files.
+        assert_eq!(count("drl/fixture.rs", ORDERING_BAD, "atomic-ordering"), 0);
+    }
+
+    #[test]
+    fn panic_rule_skips_test_modules_and_honors_allow() {
+        assert_eq!(count("serving/fixture.rs", PANIC_BAD, "panic"), 1);
+        assert_eq!(count("partition/fixture.rs", PANIC_BAD, "panic"), 1);
+        assert_eq!(count("util/fixture.rs", PANIC_BAD, "panic"), 0);
+        assert_eq!(count("serving/fixture.rs", PANIC_ALLOWED, "panic"), 0);
+    }
+
+    #[test]
+    fn metrics_shim_only_fires_inside_loop_bodies() {
+        assert_eq!(count("runtime/mod.rs", METRICS_LOOP_BAD, "metrics-shim"), 1);
+        assert_eq!(count("runtime/mod.rs", METRICS_LOOP_ALLOWED, "metrics-shim"), 0);
+    }
+
+    #[test]
+    fn memo_fires_everywhere_except_the_substrate_file() {
+        // Both cell shapes, once each; the `#[cfg(test)]` module with a
+        // third cell is exempt.
+        assert_eq!(count("util/stats.rs", MEMO_BAD, "memo"), 2);
+        assert_eq!(count("drl/env.rs", MEMO_BAD, "memo"), 2);
+        assert_eq!(count("util/version.rs", MEMO_BAD, "memo"), 0);
+        assert_eq!(count("util/trace.rs", MEMO_ALLOWED, "memo"), 0);
+    }
+
+    #[test]
+    fn malformed_allow_is_reported_and_does_not_suppress() {
+        assert_eq!(count("drl/fixture.rs", ALLOW_SYNTAX_BAD, "allow-syntax"), 1);
+        assert_eq!(count("drl/fixture.rs", ALLOW_SYNTAX_BAD, "wall-clock"), 1);
+    }
+
+    #[test]
+    fn splitter_edge_cases_never_leak_into_code() {
+        // Nested block comments, a raw string with hashes, lifetime
+        // ticks vs char literals, and a `#[cfg(test)]` module — every
+        // banned token sits in an opaque region and nothing may fire.
+        assert!(rules("partition/fixture.rs", SPLITTER_EDGES_OK).is_empty());
+    }
+
+    #[test]
+    fn splitter_edge_cases_fire_outside_the_opaque_regions() {
+        // The firing twin: the same constructs with the tokens just
+        // outside the literals/comments/test module.
+        assert_eq!(count("partition/fixture.rs", SPLITTER_EDGES_BAD, "panic"), 3);
+        assert_eq!(count("partition/fixture.rs", SPLITTER_EDGES_BAD, "wall-clock"), 1);
+        assert_eq!(
+            rules("partition/fixture.rs", SPLITTER_EDGES_BAD),
+            vec!["panic", "wall-clock"]
+        );
+    }
+
+    #[test]
+    fn strings_and_comments_are_not_code() {
+        let src = concat!(
+            "pub fn f() -> &'static str {\n",
+            "    \"Instant::now()\"\n",
+            "}\n",
+            "// SystemTime in prose only\n",
+        );
+        assert!(rules("drl/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_grammar_accepts_the_three_dash_forms() {
+        for dash in ["—", "--", "-"] {
+            let src = format!(
+                "pub fn f() {{\n    // lint:allow(wall-clock) {dash} reason.\n    \
+                 let _t = std::time::Instant::now();\n}}\n"
+            );
+            assert_eq!(count("drl/fixture.rs", &src, "wall-clock"), 0, "dash {dash:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_reported() {
+        let src = "// lint:allow(no-such-rule) — typo.\npub fn f() {}\n";
+        assert_eq!(count("drl/fixture.rs", src, "allow-syntax"), 1);
+    }
+}

@@ -1,602 +1,50 @@
 //! `xtask` — repo-local developer tooling for the GraphEdge crate.
 //!
-//! The one subcommand is the invariant linter:
+//! Two subcommands, one output contract:
 //!
 //! ```text
-//! cargo run -p xtask -- lint [SRC_DIR]    # default: rust/src
+//! cargo run -p xtask -- lint    [SRC_DIR] [--format text|json]
+//! cargo run -p xtask -- analyze [SRC_DIR] [--format text|json]
 //! ```
 //!
-//! It enforces six cross-cutting invariants that rustc/clippy cannot
-//! express (scoping is by path, relative to `SRC_DIR`):
+//! `SRC_DIR` defaults to `rust/src`.  Both emit findings sorted by
+//! (file, line, rule) with the stable machine-readable prefix
+//! `file:line:rule: message`, and `--format json` produces a single
+//! JSON object for CI artifact upload/diffing.  Exit codes: 0 clean,
+//! 1 findings, 2 usage/IO errors.
 //!
-//! * `hash-iter` — no iteration over `HashMap`/`HashSet` in the
-//!   deterministic layers (`partition/`, `scenario/`, `graph/`,
-//!   `drl/env.rs`, `drl/vec_env.rs`) unless the use is sorted on the
-//!   spot (`BTree*` / `.sort*` on the same or next line).  Hash-order
-//!   iteration is how bit-identical layouts silently stop being
-//!   bit-identical.
-//! * `wall-clock` — no `Instant::now` / `SystemTime` outside
-//!   `util/trace.rs`, `util/metrics.rs` and the serve loop.  Simulated
-//!   time is the contract everywhere else.
-//! * `atomic-ordering` — every `Ordering::*` in the lock-free util
-//!   files must carry a `// ordering:` justification within the
-//!   preceding dozen lines.
-//! * `panic` — no `unwrap()`/`expect()` in `serving/` and `partition/`
-//!   non-test code (everything from the first `#[cfg(test)]` down is
-//!   exempt).
-//! * `metrics-shim` — no string-keyed `METRICS.*`/`GLOBAL.*` calls
-//!   inside loop bodies; hot paths use pre-registered handles.
-//! * `memo` — no hand-rolled `RefCell<Option<…>>` / `Cell<Option<…>>`
-//!   memo cells outside `util/version.rs`.  Ad-hoc caches carry no
-//!   version key, so nothing proves they are ever invalidated; caches
-//!   go through `util::version::Memoized`.
+//! **`lint`** is the line-lexical invariant pass (PR 7): six rules —
+//! `hash-iter`, `wall-clock`, `atomic-ordering`, `panic` (unwrap/
+//! expect), `metrics-shim`, `memo` — scoped by path, with the
+//! `// lint:allow(<rule>) — <reason>` escape hatch.  See `lint.rs`.
 //!
-//! Escape hatch: `// lint:allow(<rule>) — <reason>` on the same line
-//! or the contiguous comment block directly above.  The reason is
-//! mandatory; a bare `lint:allow` is itself reported (`allow-syntax`)
-//! and suppresses nothing.
+//! **`analyze`** is the semantic pass built on a lightweight item
+//! model (fns/impl methods with brace-matched bodies plus a
+//! name-based intra-crate call graph): `version` (version-stamp
+//! soundness for the producers and `Memoized` consumers of
+//! `util::version`), `panic` (transitive panic-freedom for `serving/`
+//! + `partition/`, with call chains in the report) and `stale-allow`
+//! (escape hatches whose rule no longer fires).  Escape hatch:
+//! `// analyze:allow(<rule>[: <callee>]) — <reason>`.  See
+//! `analyze.rs`.
 //!
-//! The pass is deliberately dependency-free: the offline build
-//! environment cannot fetch `syn`, so analysis is a lexical walk over
-//! a per-line code/comment split (a small state machine tracks string
-//! literals, raw strings, char literals and block comments).  See
-//! `rust/ANALYSIS.md` for rules, rationale and known limitations.
+//! Both passes are deliberately dependency-free: the offline build
+//! environment cannot fetch `syn`, so everything stands on a per-line
+//! code/comment split (`splitter.rs`) that tracks strings, raw
+//! strings, char literals and nested block comments.  Design, grammar
+//! and known lexical limitations live in `rust/ANALYSIS.md`.
 
-use std::collections::BTreeSet;
+mod allow;
+mod analyze;
+mod items;
+mod lint;
+mod report;
+mod splitter;
+
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-const KNOWN_RULES: [&str; 6] =
-    ["hash-iter", "wall-clock", "atomic-ordering", "panic", "metrics-shim", "memo"];
-
-/// Files where wall-clock reads are the point (latency measurement).
-const WALL_CLOCK_ALLOW: [&str; 3] = ["util/trace.rs", "util/metrics.rs", "serving/serve_loop.rs"];
-
-/// Lock-free layers whose atomics must justify their memory orderings.
-const ORDERING_FILES: [&str; 5] =
-    ["util/metrics.rs", "util/trace.rs", "util/threadpool.rs", "util/logging.rs", "util/version.rs"];
-
-/// How far above an `Ordering::*` use a `// ordering:` note may sit
-/// (block-style notes cover a whole match/loop/struct literal).
-const ORDERING_WINDOW: usize = 12;
-
-/// Deterministic layers: hash-order iteration is banned here.
-const HASH_DET_DIRS: [&str; 3] = ["partition/", "scenario/", "graph/"];
-const HASH_DET_FILES: [&str; 2] = ["drl/env.rs", "drl/vec_env.rs"];
-
-const ITER_METHODS: [&str; 7] =
-    ["iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter"];
-
-#[derive(Debug)]
-struct Finding {
-    rule: &'static str,
-    file: String,
-    /// 1-based.
-    line: usize,
-    msg: String,
-}
-
-/// Per-line split of a source file into code-only and comment-only
-/// text, so a banned token inside a string never counts as code and an
-/// annotation inside a string never counts as a comment.
-struct Split {
-    code: Vec<String>,
-    comment: Vec<String>,
-}
-
-fn split_code_comment(src: &str) -> Split {
-    enum State {
-        Code,
-        Str,
-        RawStr(usize),
-        Char,
-        Block,
-    }
-    let ch: Vec<char> = src.chars().collect();
-    let n = ch.len();
-    let mut code = Vec::new();
-    let mut comment = Vec::new();
-    let mut cl = String::new();
-    let mut ml = String::new();
-    let mut state = State::Code;
-    let mut i = 0;
-    while i < n {
-        let c = ch[i];
-        if c == '\n' {
-            code.push(std::mem::take(&mut cl));
-            comment.push(std::mem::take(&mut ml));
-            i += 1;
-            continue;
-        }
-        match state {
-            State::Code => {
-                if c == '"' {
-                    state = State::Str;
-                    cl.push(c);
-                } else if c == 'r' && matches!(ch.get(i + 1), Some('"') | Some('#')) {
-                    let mut j = i + 1;
-                    let mut hashes = 0;
-                    while ch.get(j) == Some(&'#') {
-                        hashes += 1;
-                        j += 1;
-                    }
-                    if ch.get(j) == Some(&'"') {
-                        state = State::RawStr(hashes);
-                        for &rc in &ch[i..=j] {
-                            cl.push(rc);
-                        }
-                        i = j;
-                    } else {
-                        cl.push(c);
-                    }
-                } else if c == '\'' {
-                    // char literal ('x', '\n') vs lifetime ('a>)
-                    if ch.get(i + 2) == Some(&'\'') || ch.get(i + 1) == Some(&'\\') {
-                        state = State::Char;
-                    }
-                    cl.push(c);
-                } else if c == '/' && ch.get(i + 1) == Some(&'/') {
-                    while i < n && ch[i] != '\n' {
-                        ml.push(ch[i]);
-                        i += 1;
-                    }
-                    continue;
-                } else if c == '/' && ch.get(i + 1) == Some(&'*') {
-                    state = State::Block;
-                    i += 2;
-                    continue;
-                } else {
-                    cl.push(c);
-                }
-            }
-            State::Str | State::Char => {
-                let terminator = if matches!(state, State::Str) { '"' } else { '\'' };
-                cl.push(c);
-                if c == '\\' {
-                    i += 1;
-                    if i < n && ch[i] != '\n' {
-                        cl.push(ch[i]);
-                    }
-                } else if c == terminator {
-                    state = State::Code;
-                }
-            }
-            State::RawStr(hashes) => {
-                cl.push(c);
-                let tail_ok = i + hashes < n && ch[i + 1..=i + hashes].iter().all(|&h| h == '#');
-                if c == '"' && tail_ok {
-                    for _ in 0..hashes {
-                        cl.push('#');
-                    }
-                    i += hashes;
-                    state = State::Code;
-                }
-            }
-            State::Block => {
-                if c == '*' && ch.get(i + 1) == Some(&'/') {
-                    state = State::Code;
-                    i += 1;
-                } else {
-                    ml.push(c);
-                }
-            }
-        }
-        i += 1;
-    }
-    code.push(cl);
-    comment.push(ml);
-    Split { code, comment }
-}
-
-/// Parse `lint:allow(<rule>)` out of one comment line.  The `bool` is
-/// whether a dash-separated reason follows (`—`, `--` or `-`).
-fn parse_allow(comment: &str) -> Option<(String, bool)> {
-    let pos = comment.find("lint:allow(")?;
-    let rest = &comment[pos + "lint:allow(".len()..];
-    let close = rest.find(')')?;
-    let rule = &rest[..close];
-    if rule.is_empty() || !rule.chars().all(|c| c.is_ascii_lowercase() || c == '-') {
-        return None;
-    }
-    let mut tail = rest[close + 1..].trim_start();
-    let mut dashed = false;
-    for dash in ["—", "--", "-"] {
-        if let Some(t) = tail.strip_prefix(dash) {
-            tail = t;
-            dashed = true;
-            break;
-        }
-    }
-    Some((rule.to_string(), dashed && !tail.trim().is_empty()))
-}
-
-/// Is the finding at line `idx` covered by a well-formed
-/// `lint:allow(rule)` on the same line or the contiguous comment block
-/// directly above?
-fn allowed(rule: &str, idx: usize, s: &Split) -> bool {
-    let hit = |line: &str| parse_allow(line).is_some_and(|(r, reason)| r == rule && reason);
-    if hit(&s.comment[idx]) {
-        return true;
-    }
-    let mut j = idx;
-    while j > 0 {
-        j -= 1;
-        let comment_only = s.code[j].trim().is_empty() && !s.comment[j].trim().is_empty();
-        if !comment_only {
-            return false;
-        }
-        if hit(&s.comment[j]) {
-            return true;
-        }
-    }
-    false
-}
-
-fn is_word(c: char) -> bool {
-    c.is_alphanumeric() || c == '_'
-}
-
-/// Byte offset of the next whole-word occurrence of (ASCII) `word` at
-/// or after byte `from`.
-fn find_word(s: &str, word: &str, from: usize) -> Option<usize> {
-    let mut start = from;
-    loop {
-        let at = start + s[start..].find(word)?;
-        let end = at + word.len();
-        if !s[..at].chars().next_back().is_some_and(is_word)
-            && !s[end..].chars().next().is_some_and(is_word)
-        {
-            return Some(at);
-        }
-        start = end;
-    }
-}
-
-fn leading_ident(s: &str) -> &str {
-    let end = s.find(|c: char| !is_word(c)).unwrap_or(s.len());
-    &s[..end]
-}
-
-fn trailing_ident(s: &str) -> &str {
-    let start = s
-        .char_indices()
-        .rev()
-        .take_while(|&(_, c)| is_word(c))
-        .last()
-        .map_or(s.len(), |(i, _)| i);
-    &s[start..]
-}
-
-/// Collect names bound to hash containers on this line, from either
-/// `let [mut] NAME = [std::collections::]Hash{Map,Set}::…` or the type
-/// position `NAME: &mut Hash{Map,Set}<…>`.
-fn hash_decl_names(code: &str, out: &mut BTreeSet<String>) {
-    let mut from = 0;
-    while let Some(at) = find_word(code, "let", from) {
-        from = at + 3;
-        let rest = &code[at + 3..];
-        if !rest.starts_with(char::is_whitespace) {
-            continue;
-        }
-        let rest = rest.trim_start();
-        let rest = match rest.strip_prefix("mut") {
-            Some(r) if r.starts_with(char::is_whitespace) => r.trim_start(),
-            _ => rest,
-        };
-        let name = leading_ident(rest);
-        if name.is_empty() {
-            continue;
-        }
-        let after = rest[name.len()..].trim_start();
-        let Some(after) = after.strip_prefix('=') else {
-            continue;
-        };
-        let after = after.trim_start();
-        let after = after.strip_prefix("std::collections::").unwrap_or(after);
-        if after.starts_with("HashMap::") || after.starts_with("HashSet::") {
-            out.insert(name.to_string());
-        }
-    }
-    for ty in ["HashMap", "HashSet"] {
-        let mut from = 0;
-        while let Some(at) = find_word(code, ty, from) {
-            from = at + ty.len();
-            if !code[at + ty.len()..].trim_start().starts_with('<') {
-                continue;
-            }
-            if let Some(name) = annotated_name_before(&code[..at]) {
-                out.insert(name);
-            }
-        }
-    }
-}
-
-/// For `NAME: &mut [std::collections::]Hash…<`, walk left from the
-/// type token to recover `NAME`.
-fn annotated_name_before(before: &str) -> Option<String> {
-    let b = before.strip_suffix("std::collections::").unwrap_or(before);
-    let b = b.trim_end();
-    let b = match b.strip_suffix("mut") {
-        Some(r) if !r.chars().next_back().is_some_and(is_word) => r.trim_end(),
-        _ => b,
-    };
-    let b = b.strip_suffix('&').unwrap_or(b);
-    let b = b.trim_end();
-    let b = b.strip_suffix(':')?;
-    let name = trailing_ident(b.trim_end());
-    if name.is_empty() {
-        None
-    } else {
-        Some(name.to_string())
-    }
-}
-
-/// `NAME.iter()` / `.keys()` / … on a tracked hash container.
-fn hash_iter_use(code: &str, tracked: &BTreeSet<String>) -> Option<String> {
-    for name in tracked {
-        let mut from = 0;
-        while let Some(at) = find_word(code, name, from) {
-            from = at + name.len();
-            let rest = code[at + name.len()..].trim_start();
-            let Some(rest) = rest.strip_prefix('.') else {
-                continue;
-            };
-            let rest = rest.trim_start();
-            let method = leading_ident(rest);
-            if ITER_METHODS.contains(&method)
-                && rest[method.len()..].trim_start().starts_with('(')
-            {
-                return Some(name.clone());
-            }
-        }
-    }
-    None
-}
-
-/// `for … in [&][mut ][self.]NAME` over a tracked hash container.
-/// Returns `None` when the loop target continues into a method chain —
-/// that case is [`hash_iter_use`]'s to judge.
-fn hash_for_loop(code: &str, tracked: &BTreeSet<String>) -> Option<String> {
-    let mut from = 0;
-    while let Some(fat) = find_word(code, "for", from) {
-        from = fat + 3;
-        let Some(iat) = find_word(code, "in", fat + 3) else {
-            continue;
-        };
-        let between = &code[fat + 3..iat];
-        if between.contains(';') || between.contains('{') {
-            continue;
-        }
-        let rest = &code[iat + 2..];
-        if !rest.starts_with(char::is_whitespace) {
-            continue;
-        }
-        let rest = rest.trim_start();
-        let rest = rest.strip_prefix('&').unwrap_or(rest);
-        let rest = match rest.strip_prefix("mut") {
-            Some(r) if r.starts_with(char::is_whitespace) => r.trim_start(),
-            _ => rest,
-        };
-        let rest = match rest.strip_prefix("self") {
-            Some(r) if !r.starts_with(is_word) => match r.trim_start().strip_prefix('.') {
-                Some(r2) => r2.trim_start(),
-                None => rest,
-            },
-            _ => rest,
-        };
-        let name = leading_ident(rest);
-        if !tracked.contains(name) {
-            continue;
-        }
-        if rest[name.len()..].trim_start().starts_with('.') {
-            continue;
-        }
-        return Some(name.to_string());
-    }
-    None
-}
-
-/// A string-keyed call on the metrics shim (`METRICS.observe(…)` etc.).
-fn metrics_shim_call(code: &str) -> bool {
-    for recv in ["METRICS", "GLOBAL"] {
-        let mut from = 0;
-        while let Some(at) = find_word(code, recv, from) {
-            from = at + recv.len();
-            let rest = code[at + recv.len()..].trim_start();
-            let Some(rest) = rest.strip_prefix('.') else {
-                continue;
-            };
-            let rest = rest.trim_start();
-            let method = leading_ident(rest);
-            if ["observe", "inc", "add", "set_gauge", "time"].contains(&method)
-                && rest[method.len()..].trim_start().starts_with('(')
-            {
-                return true;
-            }
-        }
-    }
-    false
-}
-
-fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
-    let s = split_code_comment(src);
-    // Everything from the first `#[cfg(test)]` down is test code and
-    // out of scope for every rule.
-    let end = s
-        .code
-        .iter()
-        .position(|c| c.contains("#[cfg(test)]"))
-        .unwrap_or(s.code.len());
-    let mut raw: Vec<(&'static str, usize, String)> = Vec::new();
-
-    // -- allow-syntax: a malformed escape hatch is itself a finding --
-    for (i, comment) in s.comment[..end].iter().enumerate() {
-        if !comment.contains("lint:allow") {
-            continue;
-        }
-        match parse_allow(comment) {
-            Some((rule, true)) if KNOWN_RULES.contains(&rule.as_str()) => {}
-            Some((rule, true)) => {
-                raw.push(("allow-syntax", i, format!("lint:allow names unknown rule `{rule}`")));
-            }
-            _ => raw.push((
-                "allow-syntax",
-                i,
-                "malformed allow: need `lint:allow(<rule>) — <reason>`".to_string(),
-            )),
-        }
-    }
-
-    // -- hash-iter ----------------------------------------------------
-    let det_scope =
-        HASH_DET_FILES.contains(&rel) || HASH_DET_DIRS.iter().any(|d| rel.starts_with(d));
-    if det_scope {
-        let mut tracked = BTreeSet::new();
-        for code in &s.code[..end] {
-            hash_decl_names(code, &mut tracked);
-        }
-        if !tracked.is_empty() {
-            for i in 0..end {
-                let code = &s.code[i];
-                let sorted_near = code.contains("BTree")
-                    || code.contains(".sort")
-                    || (i + 1 < end && s.code[i + 1].contains(".sort"));
-                if let Some(name) = hash_iter_use(code, &tracked) {
-                    if !sorted_near {
-                        let msg = format!(
-                            "iteration over hash container `{name}` in a deterministic layer"
-                        );
-                        raw.push(("hash-iter", i, msg));
-                    }
-                    continue;
-                }
-                if let Some(name) = hash_for_loop(code, &tracked) {
-                    if !sorted_near {
-                        let msg = format!(
-                            "for-loop over hash container `{name}` in a deterministic layer"
-                        );
-                        raw.push(("hash-iter", i, msg));
-                    }
-                }
-            }
-        }
-    }
-
-    // -- wall-clock ---------------------------------------------------
-    if !WALL_CLOCK_ALLOW.contains(&rel) {
-        for (i, code) in s.code[..end].iter().enumerate() {
-            if code.contains("Instant::now") || find_word(code, "SystemTime", 0).is_some() {
-                raw.push((
-                    "wall-clock",
-                    i,
-                    "wall-clock read outside trace/metrics/serve loop".to_string(),
-                ));
-            }
-        }
-    }
-
-    // -- atomic-ordering ----------------------------------------------
-    if ORDERING_FILES.contains(&rel) {
-        for i in 0..end {
-            if !s.code[i].contains("Ordering::") {
-                continue;
-            }
-            let lo = i.saturating_sub(ORDERING_WINDOW);
-            if !s.comment[lo..=i].iter().any(|c| c.contains("ordering:")) {
-                raw.push((
-                    "atomic-ordering",
-                    i,
-                    "atomic ordering without an adjacent `// ordering:` note".to_string(),
-                ));
-            }
-        }
-    }
-
-    // -- panic --------------------------------------------------------
-    if rel.starts_with("serving/") || rel.starts_with("partition/") {
-        for (i, code) in s.code[..end].iter().enumerate() {
-            if code.contains(".unwrap()") || code.contains(".expect(") {
-                raw.push((
-                    "panic",
-                    i,
-                    "unwrap/expect in serving/partition non-test code".to_string(),
-                ));
-            }
-        }
-    }
-
-    // -- memo ---------------------------------------------------------
-    // `util/version.rs` hosts the one sanctioned memo cell; everywhere
-    // else a `RefCell<Option<…>>` is an unversioned cache in disguise.
-    if rel != "util/version.rs" {
-        for (i, code) in s.code[..end].iter().enumerate() {
-            if code.contains("RefCell<Option<") || code.contains("Cell<Option<") {
-                raw.push((
-                    "memo",
-                    i,
-                    "hand-rolled memo cell; use util::version::Memoized".to_string(),
-                ));
-            }
-        }
-    }
-
-    // -- metrics-shim -------------------------------------------------
-    // Brace-depth scan; a `for`/`while`/`loop` keyword arms the next
-    // `{` as a loop body (`;` disarms — `for` in a doc path or a
-    // statement boundary in between means it was not a loop header).
-    let mut depth: i64 = 0;
-    let mut loop_depths: Vec<i64> = Vec::new();
-    let mut pending = false;
-    for i in 0..end {
-        let code = &s.code[i];
-        if !loop_depths.is_empty() && metrics_shim_call(code) {
-            raw.push((
-                "metrics-shim",
-                i,
-                "string-keyed metrics call inside a loop body".to_string(),
-            ));
-        }
-        let cv: Vec<char> = code.chars().collect();
-        let mut j = 0;
-        while j < cv.len() {
-            let c = cv[j];
-            if is_word(c) {
-                let k0 = j;
-                while j < cv.len() && is_word(cv[j]) {
-                    j += 1;
-                }
-                let word: String = cv[k0..j].iter().collect();
-                if matches!(word.as_str(), "for" | "while" | "loop") {
-                    pending = true;
-                }
-                continue;
-            }
-            match c {
-                ';' => pending = false,
-                '{' => {
-                    if pending {
-                        loop_depths.push(depth);
-                        pending = false;
-                    }
-                    depth += 1;
-                }
-                '}' => {
-                    depth -= 1;
-                    if loop_depths.last() == Some(&depth) {
-                        loop_depths.pop();
-                    }
-                }
-                _ => {}
-            }
-            j += 1;
-        }
-    }
-
-    raw.into_iter()
-        .filter(|(rule, i, _)| *rule == "allow-syntax" || !allowed(rule, *i, &s))
-        .map(|(rule, i, msg)| Finding { rule, file: rel.to_string(), line: i + 1, msg })
-        .collect()
-}
+use report::{render_json, render_text, sort_findings, Finding, Format};
 
 fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     for entry in std::fs::read_dir(dir)? {
@@ -611,201 +59,130 @@ fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
     Ok(())
 }
 
-fn run_lint(root: Option<PathBuf>) -> ExitCode {
-    let root =
-        root.unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src"));
+/// Read every `.rs` under `root` as (rel path with `/` separators,
+/// source), sorted by path.
+fn read_tree(root: &Path) -> std::io::Result<Vec<(String, String)>> {
     let mut files = Vec::new();
-    if let Err(e) = collect_rs_files(&root, &mut files) {
-        eprintln!("xtask lint: cannot walk {}: {e}", root.display());
-        return ExitCode::from(2);
-    }
+    collect_rs_files(root, &mut files)?;
     files.sort();
-    let mut findings = Vec::new();
-    for path in &files {
+    let mut out = Vec::with_capacity(files.len());
+    for path in files {
         let rel =
-            path.strip_prefix(&root).unwrap_or(path).to_string_lossy().replace('\\', "/");
-        match std::fs::read_to_string(path) {
-            Ok(src) => findings.extend(lint_source(&rel, &src)),
-            Err(e) => {
-                eprintln!("xtask lint: cannot read {}: {e}", path.display());
-                return ExitCode::from(2);
+            path.strip_prefix(root).unwrap_or(&path).to_string_lossy().replace('\\', "/");
+        out.push((rel, std::fs::read_to_string(&path)?));
+    }
+    Ok(out)
+}
+
+/// The shipped crate sources (`rust/src`), for the self-tests that
+/// re-analyze the real tree on every `cargo test -p xtask`.
+#[cfg(test)]
+fn tree_sources() -> Vec<(String, String)> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
+    read_tree(&root).expect("walk rust/src")
+}
+
+fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
+}
+
+fn emit(tool: &str, files: usize, mut findings: Vec<Finding>, format: Format) -> ExitCode {
+    sort_findings(&mut findings);
+    match format {
+        Format::Text => {
+            print!("{}", render_text(&findings));
+            if findings.is_empty() {
+                println!("{tool}: clean ({files} files)");
+            } else {
+                println!("{tool}: {} finding(s)", findings.len());
             }
         }
-    }
-    for f in &findings {
-        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+        Format::Json => print!("{}", render_json(tool, files, &findings)),
     }
     if findings.is_empty() {
-        println!("xtask lint: clean ({} files)", files.len());
         ExitCode::SUCCESS
     } else {
-        println!("xtask lint: {} finding(s)", findings.len());
         ExitCode::FAILURE
     }
 }
 
+fn run(cmd: &str, root: Option<PathBuf>, format: Format) -> ExitCode {
+    let root = root.unwrap_or_else(default_root);
+    let files = match read_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("xtask {cmd}: cannot walk {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let findings = match cmd {
+        "lint" => {
+            files.iter().flat_map(|(rel, src)| lint::lint_source(rel, src)).collect()
+        }
+        _ => analyze::analyze_tree(&files),
+    };
+    emit(&format!("xtask-{cmd}"), files.len(), findings, format)
+}
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo run -p xtask -- <lint|analyze> [SRC_DIR] [--format text|json]");
+    ExitCode::from(2)
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    match args.first().map(String::as_str) {
-        Some("lint") => run_lint(args.get(1).map(PathBuf::from)),
-        _ => {
-            eprintln!("usage: cargo run -p xtask -- lint [SRC_DIR]");
-            ExitCode::from(2)
+    let Some(cmd) = args.first().map(String::as_str) else {
+        return usage();
+    };
+    if cmd != "lint" && cmd != "analyze" {
+        return usage();
+    }
+    let mut root: Option<PathBuf> = None;
+    let mut format = Format::Text;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--format" => {
+                match args.get(i + 1).map(String::as_str) {
+                    Some("text") => format = Format::Text,
+                    Some("json") => format = Format::Json,
+                    _ => return usage(),
+                }
+                i += 2;
+            }
+            "--format=text" => {
+                format = Format::Text;
+                i += 1;
+            }
+            "--format=json" => {
+                format = Format::Json;
+                i += 1;
+            }
+            flag if flag.starts_with('-') => return usage(),
+            dir => {
+                if root.replace(PathBuf::from(dir)).is_some() {
+                    return usage();
+                }
+                i += 1;
+            }
         }
     }
+    run(cmd, root, format)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn count(rel: &str, src: &str, rule: &str) -> usize {
-        lint_source(rel, src).iter().filter(|f| f.rule == rule).count()
-    }
-
-    fn rules(rel: &str, src: &str) -> Vec<&'static str> {
-        let mut rs: Vec<&'static str> = lint_source(rel, src).iter().map(|f| f.rule).collect();
-        rs.sort_unstable();
-        rs.dedup();
-        rs
-    }
-
-    const HASH_ITER_BAD: &str = include_str!("../fixtures/hash_iter_bad.rs");
-    const HASH_ITER_ALLOWED: &str = include_str!("../fixtures/hash_iter_allowed.rs");
-    const HASH_ITER_SORTED: &str = include_str!("../fixtures/hash_iter_sorted.rs");
-    const WALL_CLOCK_BAD: &str = include_str!("../fixtures/wall_clock_bad.rs");
-    const WALL_CLOCK_ALLOWED: &str = include_str!("../fixtures/wall_clock_allowed.rs");
-    const ORDERING_BAD: &str = include_str!("../fixtures/ordering_bad.rs");
-    const ORDERING_OK: &str = include_str!("../fixtures/ordering_ok.rs");
-    const PANIC_BAD: &str = include_str!("../fixtures/panic_bad.rs");
-    const PANIC_ALLOWED: &str = include_str!("../fixtures/panic_allowed.rs");
-    const METRICS_LOOP_BAD: &str = include_str!("../fixtures/metrics_loop_bad.rs");
-    const METRICS_LOOP_ALLOWED: &str = include_str!("../fixtures/metrics_loop_allowed.rs");
-    const ALLOW_SYNTAX_BAD: &str = include_str!("../fixtures/allow_syntax_bad.rs");
-    const MEMO_BAD: &str = include_str!("../fixtures/memo_bad.rs");
-    const MEMO_ALLOWED: &str = include_str!("../fixtures/memo_allowed.rs");
-
-    #[test]
-    fn hash_iter_fires_in_deterministic_layers() {
-        assert_eq!(count("partition/fixture.rs", HASH_ITER_BAD, "hash-iter"), 2);
-        assert_eq!(count("drl/env.rs", HASH_ITER_BAD, "hash-iter"), 2);
-        assert_eq!(count("graph/fixture.rs", HASH_ITER_BAD, "hash-iter"), 2);
-    }
-
-    #[test]
-    fn hash_iter_is_scoped_to_deterministic_layers() {
-        assert_eq!(count("serving/fixture.rs", HASH_ITER_BAD, "hash-iter"), 0);
-        assert_eq!(count("util/fixture.rs", HASH_ITER_BAD, "hash-iter"), 0);
-        assert_eq!(count("drl/maddpg.rs", HASH_ITER_BAD, "hash-iter"), 0);
-    }
-
-    #[test]
-    fn hash_iter_allow_annotation_suppresses() {
-        assert_eq!(count("partition/fixture.rs", HASH_ITER_ALLOWED, "hash-iter"), 0);
-    }
-
-    #[test]
-    fn hash_iter_sorted_use_is_exonerated() {
-        assert_eq!(count("partition/fixture.rs", HASH_ITER_SORTED, "hash-iter"), 0);
-    }
-
-    #[test]
-    fn wall_clock_fires_outside_the_allowed_files() {
-        assert_eq!(count("drl/fixture.rs", WALL_CLOCK_BAD, "wall-clock"), 1);
-        assert_eq!(count("partition/hicut.rs", WALL_CLOCK_BAD, "wall-clock"), 1);
-    }
-
-    #[test]
-    fn wall_clock_allowed_files_and_annotations() {
-        assert_eq!(count("util/trace.rs", WALL_CLOCK_BAD, "wall-clock"), 0);
-        assert_eq!(count("util/metrics.rs", WALL_CLOCK_BAD, "wall-clock"), 0);
-        assert_eq!(count("serving/serve_loop.rs", WALL_CLOCK_BAD, "wall-clock"), 0);
-        assert_eq!(count("drl/fixture.rs", WALL_CLOCK_ALLOWED, "wall-clock"), 0);
-    }
-
-    #[test]
-    fn ordering_note_required_and_sufficient() {
-        assert_eq!(count("util/metrics.rs", ORDERING_BAD, "atomic-ordering"), 1);
-        assert_eq!(count("util/threadpool.rs", ORDERING_BAD, "atomic-ordering"), 1);
-        assert_eq!(count("util/metrics.rs", ORDERING_OK, "atomic-ordering"), 0);
-        // The audit only covers the lock-free util files.
-        assert_eq!(count("drl/fixture.rs", ORDERING_BAD, "atomic-ordering"), 0);
-    }
-
-    #[test]
-    fn panic_rule_skips_test_modules_and_honors_allow() {
-        assert_eq!(count("serving/fixture.rs", PANIC_BAD, "panic"), 1);
-        assert_eq!(count("partition/fixture.rs", PANIC_BAD, "panic"), 1);
-        assert_eq!(count("util/fixture.rs", PANIC_BAD, "panic"), 0);
-        assert_eq!(count("serving/fixture.rs", PANIC_ALLOWED, "panic"), 0);
-    }
-
-    #[test]
-    fn metrics_shim_only_fires_inside_loop_bodies() {
-        assert_eq!(count("runtime/mod.rs", METRICS_LOOP_BAD, "metrics-shim"), 1);
-        assert_eq!(count("runtime/mod.rs", METRICS_LOOP_ALLOWED, "metrics-shim"), 0);
-    }
-
-    #[test]
-    fn memo_fires_everywhere_except_the_substrate_file() {
-        // Both cell shapes, once each; the `#[cfg(test)]` module with a
-        // third cell is exempt.
-        assert_eq!(count("util/stats.rs", MEMO_BAD, "memo"), 2);
-        assert_eq!(count("drl/env.rs", MEMO_BAD, "memo"), 2);
-        assert_eq!(count("util/version.rs", MEMO_BAD, "memo"), 0);
-        assert_eq!(count("util/trace.rs", MEMO_ALLOWED, "memo"), 0);
-    }
-
-    #[test]
-    fn malformed_allow_is_reported_and_does_not_suppress() {
-        assert_eq!(count("drl/fixture.rs", ALLOW_SYNTAX_BAD, "allow-syntax"), 1);
-        assert_eq!(count("drl/fixture.rs", ALLOW_SYNTAX_BAD, "wall-clock"), 1);
-    }
-
-    #[test]
-    fn strings_and_comments_are_not_code() {
-        let src = concat!(
-            "pub fn f() -> &'static str {\n",
-            "    \"Instant::now()\"\n",
-            "}\n",
-            "// SystemTime in prose only\n",
-        );
-        assert!(rules("drl/fixture.rs", src).is_empty());
-    }
-
-    #[test]
-    fn allow_grammar_accepts_the_three_dash_forms() {
-        for dash in ["—", "--", "-"] {
-            let src = format!(
-                "pub fn f() {{\n    // lint:allow(wall-clock) {dash} reason.\n    \
-                 let _t = std::time::Instant::now();\n}}\n"
-            );
-            assert_eq!(count("drl/fixture.rs", &src, "wall-clock"), 0, "dash {dash:?}");
-        }
-    }
-
-    #[test]
-    fn unknown_rule_in_allow_is_reported() {
-        let src = "// lint:allow(no-such-rule) — typo.\npub fn f() {}\n";
-        assert_eq!(count("drl/fixture.rs", src, "allow-syntax"), 1);
-    }
-
     /// The linter's reason to exist: the shipped tree must be clean.
     /// This doubles as a check that the walker and every rule agree
     /// with the real codebase, not just the fixtures.
     #[test]
     fn the_real_tree_is_clean() {
-        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
-        let mut files = Vec::new();
-        collect_rs_files(&root, &mut files).expect("walk rust/src");
-        files.sort();
-        let mut findings = Vec::new();
-        for path in &files {
-            let rel =
-                path.strip_prefix(&root).unwrap_or(path).to_string_lossy().replace('\\', "/");
-            let src = std::fs::read_to_string(path).expect("read source");
-            findings.extend(lint_source(&rel, &src));
-        }
+        let findings: Vec<Finding> = tree_sources()
+            .iter()
+            .flat_map(|(rel, src)| lint::lint_source(rel, src))
+            .collect();
         assert!(findings.is_empty(), "lint findings in rust/src: {findings:#?}");
     }
 }

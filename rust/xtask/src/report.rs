@@ -1,0 +1,147 @@
+//! Shared finding type and reporting for `lint` and `analyze`.
+//!
+//! Both subcommands emit the same stable, machine-readable prefix —
+//! `file:line:rule: message` — sorted by (file, line, rule), so editor
+//! quickfix lists and CI logs link straight to the offending line, and
+//! `--format json` produces a diffable artifact for CI upload.
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Deterministic report order: (file, line, rule, msg).
+pub fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.msg.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.msg.as_str()))
+    });
+}
+
+/// One text line per finding: `file:line:rule: message`.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}:{}: {}\n", f.file, f.line, f.rule, f.msg));
+    }
+    out
+}
+
+/// The whole report as one JSON object (no dependencies, so the
+/// serialization is hand-rolled; strings are escaped per RFC 8259).
+pub fn render_json(tool: &str, files: usize, findings: &[Finding]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"tool\": {},\n", json_str(tool)));
+    out.push_str(&format!("  \"files\": {files},\n"));
+    out.push_str(&format!("  \"finding_count\": {},\n", findings.len()));
+    out.push_str("  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"msg\": {}}}",
+            json_str(&f.file),
+            f.line,
+            json_str(f.rule),
+            json_str(&f.msg)
+        ));
+    }
+    if !findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("]\n}\n");
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Output format for both subcommands.
+#[derive(Clone, Copy, PartialEq)]
+pub enum Format {
+    Text,
+    Json,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(rule: &'static str, file: &str, line: usize) -> Finding {
+        Finding { rule, file: file.to_string(), line, msg: "m".to_string() }
+    }
+
+    #[test]
+    fn findings_sort_by_file_then_line_then_rule() {
+        let mut v = vec![
+            f("panic", "b.rs", 3),
+            f("version", "a.rs", 9),
+            f("panic", "a.rs", 9),
+            f("panic", "a.rs", 2),
+        ];
+        sort_findings(&mut v);
+        let order: Vec<(String, usize, &str)> =
+            v.iter().map(|x| (x.file.clone(), x.line, x.rule)).collect();
+        assert_eq!(
+            order,
+            vec![
+                ("a.rs".to_string(), 2, "panic"),
+                ("a.rs".to_string(), 9, "panic"),
+                ("a.rs".to_string(), 9, "version"),
+                ("b.rs".to_string(), 3, "panic"),
+            ]
+        );
+    }
+
+    #[test]
+    fn text_prefix_is_stable() {
+        let out = render_text(&[f("stale-allow", "util/metrics.rs", 7)]);
+        assert_eq!(out, "util/metrics.rs:7:stale-allow: m\n");
+    }
+
+    #[test]
+    fn json_is_well_formed_and_escaped() {
+        let finding = Finding {
+            rule: "panic",
+            file: "serving/a.rs".to_string(),
+            line: 4,
+            msg: "chain \"x\" → y\tz".to_string(),
+        };
+        let out = render_json("xtask-analyze", 2, &[finding]);
+        assert!(out.contains("\"tool\": \"xtask-analyze\""));
+        assert!(out.contains("\"files\": 2"));
+        assert!(out.contains("\"finding_count\": 1"));
+        assert!(out.contains("\\\"x\\\""));
+        assert!(out.contains("\\t"));
+        // Exactly balanced braces/brackets (cheap well-formedness probe).
+        assert_eq!(out.matches('{').count(), out.matches('}').count());
+        assert_eq!(out.matches('[').count(), out.matches(']').count());
+    }
+
+    #[test]
+    fn empty_report_is_valid_json() {
+        let out = render_json("xtask-lint", 0, &[]);
+        assert!(out.contains("\"findings\": []"));
+    }
+}

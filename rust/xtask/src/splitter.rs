@@ -1,0 +1,239 @@
+//! Per-line code/comment split of Rust source — the lexical substrate
+//! every lint rule and analysis pass stands on.
+//!
+//! A small state machine tracks string literals, raw strings (with any
+//! number of `#` hashes), char literals vs lifetimes, and (nested)
+//! block comments, so a banned token inside a string never counts as
+//! code and an annotation inside a string never counts as a comment.
+//! Literal *contents* are dropped from the code lines (the delimiters
+//! stay, so tokens on either side cannot glue together); comment text
+//! goes to the comment lines.
+
+/// Per-line split of a source file into code-only and comment-only
+/// text.  `code[i]` + `comment[i]` correspond to source line `i`
+/// (0-based); string/char contents appear in neither.
+pub struct Split {
+    pub code: Vec<String>,
+    pub comment: Vec<String>,
+}
+
+pub fn split_code_comment(src: &str) -> Split {
+    enum State {
+        Code,
+        Str,
+        /// Raw string with this many `#` hashes in the delimiter.
+        RawStr(usize),
+        Char,
+        /// Block comment at this nesting depth (block comments nest).
+        Block(usize),
+    }
+    let ch: Vec<char> = src.chars().collect();
+    let n = ch.len();
+    let mut code = Vec::new();
+    let mut comment = Vec::new();
+    let mut cl = String::new();
+    let mut ml = String::new();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < n {
+        let c = ch[i];
+        if c == '\n' {
+            code.push(std::mem::take(&mut cl));
+            comment.push(std::mem::take(&mut ml));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '"' {
+                    state = State::Str;
+                    cl.push(c);
+                } else if c == 'r' && matches!(ch.get(i + 1), Some('"') | Some('#')) {
+                    let mut j = i + 1;
+                    let mut hashes = 0;
+                    while ch.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if ch.get(j) == Some(&'"') {
+                        state = State::RawStr(hashes);
+                        for &rc in &ch[i..=j] {
+                            cl.push(rc);
+                        }
+                        i = j;
+                    } else {
+                        cl.push(c);
+                    }
+                } else if c == '\'' {
+                    // char literal ('x', '\n') vs lifetime ('a>)
+                    if ch.get(i + 2) == Some(&'\'') || ch.get(i + 1) == Some(&'\\') {
+                        state = State::Char;
+                    }
+                    cl.push(c);
+                } else if c == '/' && ch.get(i + 1) == Some(&'/') {
+                    while i < n && ch[i] != '\n' {
+                        ml.push(ch[i]);
+                        i += 1;
+                    }
+                    continue;
+                } else if c == '/' && ch.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    i += 2;
+                    continue;
+                } else {
+                    cl.push(c);
+                }
+            }
+            // Literal contents are dropped: only the terminator (and,
+            // for escapes, nothing at all) reaches the code line.
+            State::Str | State::Char => {
+                let terminator = if matches!(state, State::Str) { '"' } else { '\'' };
+                if c == '\\' {
+                    i += 1;
+                } else if c == terminator {
+                    cl.push(c);
+                    state = State::Code;
+                }
+            }
+            State::RawStr(hashes) => {
+                let tail_ok = i + hashes < n && ch[i + 1..=i + hashes].iter().all(|&h| h == '#');
+                if c == '"' && tail_ok {
+                    cl.push(c);
+                    for _ in 0..hashes {
+                        cl.push('#');
+                    }
+                    i += hashes;
+                    state = State::Code;
+                }
+            }
+            State::Block(depth) => {
+                if c == '*' && ch.get(i + 1) == Some(&'/') {
+                    if depth == 1 {
+                        state = State::Code;
+                    } else {
+                        state = State::Block(depth - 1);
+                    }
+                    i += 1;
+                } else if c == '/' && ch.get(i + 1) == Some(&'*') {
+                    state = State::Block(depth + 1);
+                    ml.push('/');
+                    ml.push('*');
+                    i += 1;
+                } else {
+                    ml.push(c);
+                }
+            }
+        }
+        i += 1;
+    }
+    code.push(cl);
+    comment.push(ml);
+    Split { code, comment }
+}
+
+pub fn is_word(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offset of the next whole-word occurrence of (ASCII) `word` at
+/// or after byte `from`.
+pub fn find_word(s: &str, word: &str, from: usize) -> Option<usize> {
+    let mut start = from;
+    loop {
+        let at = start + s[start..].find(word)?;
+        let end = at + word.len();
+        if !s[..at].chars().next_back().is_some_and(is_word)
+            && !s[end..].chars().next().is_some_and(is_word)
+        {
+            return Some(at);
+        }
+        start = end;
+    }
+}
+
+pub fn leading_ident(s: &str) -> &str {
+    let end = s.find(|c: char| !is_word(c)).unwrap_or(s.len());
+    &s[..end]
+}
+
+pub fn trailing_ident(s: &str) -> &str {
+    let start = s
+        .char_indices()
+        .rev()
+        .take_while(|&(_, c)| is_word(c))
+        .last()
+        .map_or(s.len(), |(i, _)| i);
+    &s[start..]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        split_code_comment(src).code
+    }
+
+    #[test]
+    fn string_contents_never_reach_code_lines() {
+        let code = code_of("let s = \"Instant::now() [0] panic!\";\n");
+        assert_eq!(code[0], "let s = \"\";");
+    }
+
+    #[test]
+    fn escaped_quotes_stay_inside_the_literal() {
+        let code = code_of("let s = \"a\\\"b\"; x.unwrap();\n");
+        assert_eq!(code[0], "let s = \"\"; x.unwrap();");
+    }
+
+    #[test]
+    fn nested_block_comments_terminate_at_the_matching_close() {
+        let src = "a(); /* one /* two */ still comment */ b();\n/* /* x */ */ c();\n";
+        let s = split_code_comment(src);
+        assert_eq!(s.code[0], "a();  b();");
+        assert!(s.comment[0].contains("still comment"));
+        assert_eq!(s.code[1], " c();");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_are_opaque() {
+        // The `"#` inside the r##-string must not close it; contents
+        // (including a fake line comment) never reach code or comment.
+        let src = "let s = r##\"tail\"# // not a comment\"##; y();\n";
+        let s = split_code_comment(src);
+        assert_eq!(s.code[0], "let s = r##\"\"##; y();");
+        assert!(s.comment[0].is_empty());
+    }
+
+    #[test]
+    fn multiline_raw_string_swallows_banned_tokens() {
+        let src = "let s = r#\"\nInstant::now()\nx[0].unwrap()\n\"#;\n";
+        let s = split_code_comment(src);
+        assert_eq!(s.code[1], "");
+        assert_eq!(s.code[2], "");
+        assert_eq!(s.code[3], "\"#;");
+    }
+
+    #[test]
+    fn lifetimes_are_code_but_char_literals_are_opaque() {
+        let code = code_of("fn f<'a>(x: &'a str) -> char { 'a' }\n");
+        // The lifetime tick survives (generic syntax stays parseable);
+        // the char literal's content is dropped.
+        assert_eq!(code[0], "fn f<'a>(x: &'a str) -> char { '' }");
+        let code = code_of("let c = '\\n'; let d = '['; idx[c];\n");
+        assert_eq!(code[0], "let c = ''; let d = ''; idx[c];");
+    }
+
+    #[test]
+    fn line_comments_go_to_the_comment_half() {
+        let s = split_code_comment("x(); // lint:allow(memo) — reason\n");
+        assert_eq!(s.code[0], "x(); ");
+        assert!(s.comment[0].contains("lint:allow(memo)"));
+    }
+
+    #[test]
+    fn annotations_inside_strings_are_not_comments() {
+        let s = split_code_comment("let s = \"// lint:allow(panic) — no\";\n");
+        assert!(s.comment[0].is_empty());
+    }
+}

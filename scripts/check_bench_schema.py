@@ -7,9 +7,16 @@ each merge one top-level section into the shared results file.  This script fail
 when a bench stopped writing its section, dropped a key, or produced
 non-finite numbers — the failure modes of silent bench bit-rot.
 
-Usage: check_bench_schema.py [BENCH_partition.json]
+Usage: check_bench_schema.py [--require-runs] [BENCH_partition.json]
+
+By default an empty `runs` array passes (a bench may legitimately be
+configured down to zero sweep points locally); `--require-runs` makes
+empties fail, which is what CI uses — a bench whose sweep loop silently
+stopped emitting runs still "writes its section" and would otherwise
+pass the gate forever.
 """
 
+import argparse
 import json
 import math
 import sys
@@ -101,7 +108,15 @@ def require_number(section: str, key: str, value: object) -> None:
 
 
 def main() -> None:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_partition.json"
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("path", nargs="?", default="BENCH_partition.json")
+    parser.add_argument(
+        "--require-runs",
+        action="store_true",
+        help="fail when a runs array is empty (the CI bench-smoke mode)",
+    )
+    args = parser.parse_args()
+    path = args.path
     try:
         with open(path, encoding="utf-8") as fh:
             root = json.load(fh)
@@ -125,8 +140,10 @@ def main() -> None:
 
     for section, keys in RUN_KEYS.items():
         runs = root[section].get("runs")
-        if not isinstance(runs, list) or not runs:
-            fail(f"{section}.runs missing or empty")
+        if not isinstance(runs, list):
+            fail(f"{section}.runs missing or not an array")
+        if args.require_runs and not runs:
+            fail(f"{section}.runs is empty — the bench sweep emitted no runs")
         for i, run in enumerate(runs):
             if not isinstance(run, dict):
                 fail(f"{section}.runs[{i}] is not an object")
